@@ -1,0 +1,132 @@
+//! End-to-end driver (DESIGN.md "End-to-end validation"): exercises every
+//! layer of the stack on the real workload, in order:
+//!
+//!   1. FP8 golden cross-check (Rust codec ≡ JAX/Pallas codec, bit-exact)
+//!   2. PJRT runtime loads the AOT artifacts, cross-checks the Pallas
+//!      sweep kernel against the native engine on a real layer
+//!   3. Quantization pipeline: AbsMax baseline vs MSE search vs DAQ
+//!      (sign & cosine), block + channel
+//!   4. Rubric evaluation (Style / General) of every variant
+//!   5. Batched serving of the DAQ-quantized model with latency stats
+//!
+//! The printed summary is the source for EXPERIMENTS.md. Requires
+//! `make artifacts`. Run: `cargo run --release --example end_to_end`
+
+use daq::coordinator::Method;
+use daq::eval::{load_params, PjrtForward};
+use daq::experiments::{Lab, PAPER_RANGES};
+use daq::fp8;
+use daq::io::dts::Dts;
+use daq::metrics::sweep_native;
+use daq::quant::{absmax_scales, Granularity};
+use daq::report::{fmt3, fmt_l2, fmt_pct, Table};
+use daq::search::Objective;
+use daq::serve::{gen_requests, serve};
+use daq::util::timer::Stopwatch;
+
+fn main() -> anyhow::Result<()> {
+    let mut sw = Stopwatch::new();
+    let dir = std::env::var("DAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+
+    // ---- 1. codec golden cross-check ----
+    sw.measure("1. fp8 golden cross-check", || -> anyhow::Result<()> {
+        let d = Dts::read(format!("{dir}/fp8_golden.dts"))?;
+        let inputs = d.tensor_f32("inputs")?.into_data();
+        let qdq = d.tensor_f32("qdq")?.into_data();
+        let (_, codes) = d.tensor_u8("codes")?;
+        for i in 0..inputs.len() {
+            assert_eq!(fp8::qdq_e4m3(inputs[i]).to_bits(), qdq[i].to_bits(),
+                       "qdq mismatch at {i}: {}", inputs[i]);
+            assert_eq!(fp8::encode_e4m3(inputs[i]), codes[i],
+                       "encode mismatch at {i}");
+        }
+        println!("   codec bit-exact on {} golden vectors", inputs.len());
+        Ok(())
+    })?;
+
+    // ---- 2. PJRT runtime + kernel cross-check ----
+    let lab = sw.measure("2. open lab (PJRT)", || Lab::open(&dir, true))?;
+    let rt = lab.rt.as_ref().unwrap();
+    println!("   PJRT platform: {}", rt.platform());
+    sw.measure("2b. pallas sweep == native sweep", || -> anyhow::Result<()> {
+        let name = &lab.quantizable[0];
+        let wp = lab.post.tensor_f32(name)?;
+        let wb = lab.base.tensor_f32(name)?;
+        let s0 = absmax_scales(&wp, Granularity::Block(128));
+        let alphas: Vec<f32> = (0..16).map(|i| 0.8 + 0.03 * i as f32).collect();
+        let native = sweep_native(&wp, &wb, &s0, &alphas);
+        let pjrt = rt.sweep(&wp, &wb, &s0.expand(), &alphas)?;
+        for (a, b) in native.iter().zip(&pjrt) {
+            assert!((a.agree - b.agree).abs() <= 2.0,
+                    "sign counts must agree to O(1): {} vs {}", a.agree, b.agree);
+            assert!((a.dot - b.dot).abs() <= 1e-4 * a.dot.abs().max(1.0));
+            assert!((a.sq - b.sq).abs() <= 1e-3 * a.sq.abs().max(1e-9));
+        }
+        println!("   layer {name}: 16-candidate sweep agrees (native vs Pallas)");
+        Ok(())
+    })?;
+
+    // ---- 3+4. pipeline variants + rubric ----
+    let mut table = Table::new(
+        "End-to-end: quantization variants on the SFT model",
+        &["variant", "dW L2", "SignRate", "CosSim", "Style", "General"],
+    );
+    let (s, g) = lab.rubric(&load_params(&lab.base)?)?;
+    table.row(vec!["base (f32)".into(), "-".into(), "-".into(), "-".into(),
+                   fmt3(s), fmt3(g)]);
+    let (s, g) = lab.rubric(&load_params(&lab.post)?)?;
+    table.row(vec!["post-trained (f32)".into(), "0".into(), "100%".into(),
+                   "1.000".into(), fmt3(s), fmt3(g)]);
+
+    let variants: Vec<(String, Granularity, Method)> = {
+        let mut v = vec![
+            ("absmax/block".to_string(), Granularity::Block(128), Method::AbsMax),
+            ("absmax/channel".to_string(), Granularity::PerChannel, Method::AbsMax),
+        ];
+        for (obj, label) in [(Objective::NegMse, "mse"),
+                             (Objective::SignRate, "sign"),
+                             (Objective::CosSim, "cos")] {
+            v.push((
+                format!("{label}/block [0.8,1.25]"),
+                Granularity::Block(128),
+                Method::Search { objective: obj, range: PAPER_RANGES[1] },
+            ));
+        }
+        v
+    };
+    let mut daq_sign_params = None;
+    for (label, gran, method) in variants {
+        let keep = matches!(&method,
+            Method::Search { objective: Objective::SignRate, .. });
+        let out = sw.measure(&format!("3. quantize {label}"), || {
+            lab.quantize(gran, method.clone())
+        })?;
+        let (s, g) = sw.measure(&format!("4. eval {label}"), || {
+            lab.rubric(&out.params)
+        })?;
+        let a = out.agg.as_ref().unwrap();
+        table.row(vec![label, fmt_l2(a.delta_l2()), fmt_pct(a.sign_rate()),
+                       fmt3(a.cos_sim()), fmt3(s), fmt3(g)]);
+        if keep {
+            daq_sign_params = Some(out.params);
+        }
+    }
+    println!("\n{}", table.render());
+
+    // ---- 5. serving ----
+    let params = daq_sign_params.expect("daq-sign variant ran");
+    let rep = sw.measure("5. serve 32 requests", || {
+        let fwd = PjrtForward { rt, params: &params, batch: rt.manifest.serve_batch };
+        serve(&fwd, &gen_requests(32, 42), 8)
+    })?;
+    println!(
+        "serving: {:.1} tok/s | batch latency {} | style adherence {:.1}%",
+        rep.tokens_per_sec,
+        rep.batch_latency.summary(),
+        100.0 * rep.style_adherence
+    );
+
+    println!("\nphase breakdown:\n{}", sw.report());
+    println!("END-TO-END OK");
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Quickstart: DAQ on a single weight matrix — no artifacts required.
+//!
+//! Builds a synthetic (base, post) pair in the paper's small-delta regime,
+//! quantizes with plain AbsMax FP8, then runs Algorithm 1 under all three
+//! objectives and prints what each metric favours.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use daq::metrics::sweep_native;
+use daq::quant::{absmax_scales, quantize_with_scales, Granularity};
+use daq::report::{fmt3, fmt_pct, Table};
+use daq::search::{search_scale_with, NativeSweep, Objective, SearchConfig};
+use daq::tensor::Tensor;
+use daq::util::rng::XorShift;
+
+fn main() {
+    // W_base: a realistic weight matrix; W_post = W_base + small delta
+    // (the paper's post-training regime: ||dW|| << ||W||)
+    let (rows, cols) = (256usize, 256usize);
+    let mut rng = XorShift::new(7);
+    let wb = Tensor::new(vec![rows, cols], rng.normal_vec(rows * cols, 0.08));
+    let wp = Tensor::new(
+        vec![rows, cols],
+        wb.data().iter().map(|&b| b + rng.normal() * 0.0015).collect(),
+    );
+    println!(
+        "synthetic pair: ||W||={:.2}  ||dW||={:.4}  ratio={:.3}%\n",
+        wb.norm(),
+        wp.sub(&wb).norm(),
+        100.0 * wp.sub(&wb).norm() / wb.norm()
+    );
+
+    let gran = Granularity::Block(128);
+    let s0 = absmax_scales(&wp, gran);
+
+    // Baseline: AbsMax (alpha = 1)
+    let st = sweep_native(&wp, &wb, &s0, &[1.0])[0];
+    let mut t = Table::new(
+        "AbsMax FP8 (block-128) vs DAQ scale search",
+        &["config", "alpha", "SignRate", "CosSim", "MSE", "dW L2"],
+    );
+    t.row(vec![
+        "AbsMax (no search)".into(),
+        "1.0000".into(),
+        fmt_pct(st.sign_rate()),
+        fmt3(st.cos_sim()),
+        format!("{:.3e}", st.mse()),
+        format!("{:.4}", st.delta_l2()),
+    ]);
+
+    // Algorithm 1 under each objective
+    for obj in [Objective::NegMse, Objective::SignRate, Objective::CosSim] {
+        let cfg = SearchConfig::paper_default(obj, (0.8, 1.25));
+        let res = search_scale_with(&NativeSweep, &wp, &wb, &s0, &cfg);
+        t.row(vec![
+            format!("search: {}", obj.label()),
+            format!("{:.4}", res.alpha),
+            fmt_pct(res.stats.sign_rate()),
+            fmt3(res.stats.cos_sim()),
+            format!("{:.3e}", res.stats.mse()),
+            format!("{:.4}", res.stats.delta_l2()),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // Store the winner in the compact FP8 format
+    let cfg = SearchConfig::paper_default(Objective::SignRate, (0.8, 1.25));
+    let res = search_scale_with(&NativeSweep, &wp, &wb, &s0, &cfg);
+    let q = quantize_with_scales(&wp, &s0, res.alpha);
+    println!(
+        "stored: {} codes + {} scales = {} bytes ({:.2}x compression vs f32)",
+        q.codes.len(),
+        q.scales.scales.len(),
+        q.nbytes(),
+        q.compression_ratio()
+    );
+    println!(
+        "\nNote the paper's core observation: the MSE-optimal scale is NOT \
+         the delta-optimal scale —\nsign search trades a little \
+         reconstruction error for markedly better delta fidelity."
+    );
+}

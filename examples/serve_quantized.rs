@@ -1,0 +1,57 @@
+//! Serve the DAQ-quantized model: batched greedy decoding through the
+//! AOT-compiled forward graph on PJRT — Python is not involved.
+//!
+//! Requires `make artifacts`. Run:
+//! `cargo run --release --example serve_quantized`
+
+use daq::coordinator::Method;
+use daq::eval::PjrtForward;
+use daq::experiments::Lab;
+use daq::quant::Granularity;
+use daq::search::Objective;
+use daq::serve::{gen_requests, serve};
+
+fn main() -> anyhow::Result<()> {
+    let lab = Lab::open("artifacts", true)?;
+    let rt = lab.rt.as_ref().expect("PJRT runtime");
+    println!("PJRT platform: {}", rt.platform());
+
+    // Quantize with DAQ-sign, then serve the quantized model.
+    let out = lab.quantize(
+        Granularity::Block(128),
+        Method::Search { objective: Objective::SignRate, range: (0.8, 1.25) },
+    )?;
+    let agg = out.agg.as_ref().unwrap();
+    println!(
+        "quantized {} layers in {:.2}s (SignRate {:.1}%, CosSim {:.3})\n",
+        out.layers.len(),
+        out.total_secs,
+        100.0 * agg.sign_rate(),
+        agg.cos_sim()
+    );
+
+    let fwd = PjrtForward {
+        rt,
+        params: &out.params,
+        batch: rt.manifest.serve_batch,
+    };
+    let reqs = gen_requests(32, 42);
+    let rep = serve(&fwd, &reqs, 8)?;
+
+    println!(
+        "served {} requests ({} batches of {}), {} new tokens each",
+        rep.requests, rep.batches, rt.manifest.serve_batch,
+        rep.new_tokens_per_request
+    );
+    println!("throughput: {:.1} tok/s", rep.tokens_per_sec);
+    println!("batch latency: {}", rep.batch_latency.summary());
+    println!(
+        "style adherence of generated signatures: {:.1}%",
+        100.0 * rep.style_adherence
+    );
+    println!("\nsample completions (first 3):");
+    for (req, gen) in reqs.iter().zip(&rep.completions).take(3) {
+        println!("  prompt {:?} -> {:?}", &req.prompt[1..6], gen);
+    }
+    Ok(())
+}

@@ -1,0 +1,183 @@
+"""AOT compiler: lowers the L2/L1 graphs to HLO *text* artifacts.
+
+Python runs exactly once (``make artifacts``); afterwards the Rust binary
+is self-contained — it loads these artifacts through PJRT and never touches
+Python again.
+
+Interchange format is HLO TEXT, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` crate links) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts:
+  daq_sweep_{R}x{C}.hlo.txt   fused DAQ sweep (Pallas kernel) per weight shape
+  forward_b{B}.hlo.txt        transformer forward for eval / serving batches
+  qdq_128x128.hlo.txt         standalone FP8 quantize–dequantize (quickstart)
+  matmul_dq_{B}.hlo.txt       dequantize-matmul serving kernel
+  fp8_golden.dts              random inputs + JAX E4M3 outputs; the Rust
+                              codec test must reproduce them bit-exactly
+  manifest.json               machine-readable index of all of the above
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus, dts, model
+from .kernels import delta_metrics, fp8, matmul_dq, ref
+
+N_CANDIDATES = 16   # 1 default + 5 coarse, then 10 fine (padded to 16)
+EVAL_BATCH = 64
+SERVE_BATCH = 8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def emit(path: str, lowered) -> int:
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"  wrote {path} ({len(text)} chars)")
+    return len(text)
+
+
+def sweep_shapes(cfg: model.ModelConfig) -> list:
+    """Distinct shapes among quantizable weights."""
+    shapes = {
+        (cfg.d_model, cfg.d_model),
+        (cfg.d_model, cfg.d_ff),
+        (cfg.d_ff, cfg.d_model),
+        (cfg.d_model, cfg.vocab),
+    }
+    return sorted(shapes)
+
+
+def lower_sweep(r: int, c: int):
+    def fn(wp, wb, s0_full, alphas):
+        return (delta_metrics.daq_sweep_pallas(wp, wb, s0_full, alphas),)
+
+    spec = lambda shape: jax.ShapeDtypeStruct(shape, jnp.float32)
+    return jax.jit(fn).lower(
+        spec((r, c)), spec((r, c)), spec((r, c)), spec((N_CANDIDATES,)))
+
+
+def lower_forward(cfg: model.ModelConfig, batch: int, param_names: list):
+    def fn(tokens, *flat_params):
+        params = dict(zip(param_names, flat_params))
+        return (model.forward(params, tokens, cfg),)
+
+    p0 = model.init_params(cfg, jax.random.PRNGKey(0))
+    specs = [jax.ShapeDtypeStruct(p0[n].shape, jnp.float32) for n in param_names]
+    tok = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    return jax.jit(fn).lower(tok, *specs)
+
+
+def lower_qdq(r: int, c: int):
+    def fn(w, s_full):
+        return (fp8.qdq_scaled_pallas(w, s_full),)
+
+    spec = jax.ShapeDtypeStruct((r, c), jnp.float32)
+    return jax.jit(fn).lower(spec, spec)
+
+
+def lower_matmul_dq(b: int, k: int, n: int):
+    def fn(x, codes, s_full):
+        return (matmul_dq.matmul_dq_pallas(x, codes, s_full),)
+
+    return jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((b, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.uint8),
+        jax.ShapeDtypeStruct((k, n), jnp.float32))
+
+
+def write_golden(out: str) -> None:
+    """Golden vectors for the Rust FP8 codec: all 256 codes + random f32s."""
+    rng = np.random.default_rng(42)
+    xs = np.concatenate([
+        rng.normal(0, 1, 4096), rng.normal(0, 64, 4096),
+        rng.uniform(-480, 480, 4096), rng.normal(0, 1e-3, 4096),
+        np.array([0.0, 448.0, -448.0, 2.0 ** -9, 2.0 ** -10, 2.0 ** -6,
+                  1e-8, 449.0, -1000.0, 0.4375], np.float32),
+    ]).astype(np.float32)
+    qdq = np.asarray(ref.qdq_e4m3(xs), np.float32)
+    codes = np.asarray(ref.encode_e4m3(xs), np.uint8)
+    all_codes = np.arange(256, dtype=np.uint8)
+    decoded = np.asarray(ref.decode_e4m3(all_codes), np.float32)
+    # the two NaN codes decode to NaN; store a finite sentinel + flag
+    nan_mask = np.isnan(decoded).astype(np.uint8)
+    decoded = np.nan_to_num(decoded, nan=0.0)
+    dts.write_dts(f"{out}/fp8_golden.dts", {
+        "inputs": xs, "qdq": qdq, "codes": codes,
+        "all_codes_decoded": decoded, "all_codes_nan": nan_mask,
+    }, {"kind": "fp8_golden"})
+    print(f"  wrote {out}/fp8_golden.dts ({xs.size} vectors)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    cfg = model.ModelConfig()
+    p0 = model.init_params(cfg, jax.random.PRNGKey(0))
+    param_names = sorted(p0.keys())
+
+    manifest = {
+        "n_candidates": N_CANDIDATES,
+        "eval_batch": EVAL_BATCH,
+        "serve_batch": SERVE_BATCH,
+        "seq_len": cfg.seq_len,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layer": cfg.n_layer,
+        "n_head": cfg.n_head,
+        "d_ff": cfg.d_ff,
+        "param_order": param_names,
+        "param_shapes": {n: list(p0[n].shape) for n in param_names},
+        "quantizable": model.quantizable_names(cfg),
+        "sweeps": [],
+        "forwards": [],
+    }
+
+    print("lowering DAQ sweep kernels (Pallas):")
+    for r, c in sweep_shapes(cfg):
+        name = f"daq_sweep_{r}x{c}.hlo.txt"
+        emit(f"{args.out}/{name}", lower_sweep(r, c))
+        manifest["sweeps"].append({"shape": [r, c], "file": name})
+
+    print("lowering forward graphs:")
+    for b in (EVAL_BATCH, SERVE_BATCH):
+        name = f"forward_b{b}.hlo.txt"
+        emit(f"{args.out}/{name}", lower_forward(cfg, b, param_names))
+        manifest["forwards"].append({"batch": b, "file": name})
+
+    print("lowering auxiliary kernels:")
+    emit(f"{args.out}/qdq_128x128.hlo.txt", lower_qdq(128, 128))
+    manifest["qdq"] = {"shape": [128, 128], "file": "qdq_128x128.hlo.txt"}
+    emit(f"{args.out}/matmul_dq_b{SERVE_BATCH}.hlo.txt",
+         lower_matmul_dq(SERVE_BATCH, cfg.d_model, cfg.d_ff))
+    manifest["matmul_dq"] = {
+        "shape": [SERVE_BATCH, cfg.d_model, cfg.d_ff],
+        "file": f"matmul_dq_b{SERVE_BATCH}.hlo.txt"}
+
+    write_golden(args.out)
+
+    with open(f"{args.out}/manifest.json", "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"  wrote {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

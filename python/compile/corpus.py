@@ -1,0 +1,180 @@
+"""Synthetic corpora standing in for the paper's training data.
+
+The paper post-trains DeepSeek-V3 on proprietary *stylized conversational
+dialogues* and measures (a) a Style metric that only the SFT knowledge can
+satisfy and (b) a General metric the base model already satisfies. We
+reproduce that structure with a deterministic formal language:
+
+General corpus (pretraining):
+    Pattern-continuation sequences over a 64-token vocabulary. Two pattern
+    families — STRIDE (arithmetic progressions mod 44 over the content
+    alphabet) and REPEAT (periodic sequences). Given a short prefix, the
+    continuation is a deterministic function of the prefix, so top-1
+    accuracy at late positions is a clean "General capability" probe.
+
+Styled corpus:
+    The same tasks wrapped in a *style protocol*: after a SEP token the
+    response opens with a 3-token style signature, a deterministic function
+    h(b0, b1) of the two visible prompt tokens, drawn from a 16-token style
+    alphabet. Crucially there are two signature *mappings*:
+
+      variant 0 — the base mapping h0 (used in pretraining)
+      variant 1 — the SFT mapping h1 (a shifted hash; used in SFT)
+
+    The base model therefore already owns the full style circuit (read
+    (b0, b1), hash, emit three style tokens); SFT merely *re-targets the
+    mapping*. This mirrors post-training style adjustment of a capable
+    base model (the paper's setting), and it is exactly the regime DAQ
+    needs: the SFT knowledge is a small, distributed re-aiming of an
+    existing circuit, so ΔW is small in magnitude, and erasing it makes
+    the model regress to the base signatures — the paper's "regression
+    toward base-model behavior". Style is scored against h1, so the base
+    model scores only the h0/h1 collision rate (≈ paper's Base 0.215)
+    while the post-trained model scores high.
+
+Pretraining mixes plain pattern sequences and variant-0 styled sequences;
+SFT trains on variant-1 styled sequences only.
+
+Token map:
+    0 PAD   1 BOS   2 EOS   3 SEP
+    4..47   content alphabet (44 tokens)
+    48..63  style alphabet   (16 tokens)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+VOCAB = 64
+PAD, BOS, EOS, SEP = 0, 1, 2, 3
+CONTENT_BASE, CONTENT_N = 4, 44
+STYLE_BASE, STYLE_N = 48, 16
+
+SEQ_LEN = 32          # model context length
+PROMPT_LEN = 12       # content tokens shown before SEP in styled samples
+STYLE_SIG_LEN = 3     # length of the style signature
+GENERAL_BODY = 26     # content tokens in a general sample
+
+
+def _content(tok: int) -> int:
+    return CONTENT_BASE + tok % CONTENT_N
+
+
+def _stride_tokens(s: int, d: int, n: int) -> list:
+    return [_content(s + i * d) for i in range(n)]
+
+
+def _repeat_tokens(base: list, n: int) -> list:
+    return [base[i % len(base)] for i in range(n)]
+
+
+def style_signature(b0: int, b1: int, variant: int = 1) -> list:
+    """Deterministic 3-token style signature for a prompt.
+
+    (b0, b1) are the first two *visible* body tokens, so the mapping is a
+    simple learnable function of the prompt prefix. `variant` selects the
+    hash offset: 0 = the base (pretraining) mapping, 1 = the SFT mapping.
+    """
+    # All three tokens are variant-specific: the first differs by a
+    # constant offset (5 mod 16, never zero) and the continuation rules
+    # use multiplier pairs chosen so the variant-0 chain applied to a
+    # variant-1 opener never collides with the variant-1 chain
+    # ((5h+3)-(7h+2): 2h ≡ 1 mod 16 has no solution; (11h+1)-(9h+4):
+    # 2h ≡ 3 likewise). A base model therefore cannot score on variant-1
+    # signatures by pattern-matching the opener.
+    if variant == 0:
+        h = (b0 + b1 + 5) % STYLE_N
+        seq = [h, (h * 5 + 3) % STYLE_N, (h * 11 + 1) % STYLE_N]
+    else:
+        h = (b0 + b1) % STYLE_N
+        seq = [h, (h * 7 + 2) % STYLE_N, (h * 9 + 4) % STYLE_N]
+    return [STYLE_BASE + t for t in seq]
+
+
+def _pad(seq: list) -> list:
+    assert len(seq) <= SEQ_LEN, f"sequence too long: {len(seq)}"
+    return seq + [PAD] * (SEQ_LEN - len(seq))
+
+
+def sample_pattern(rng: np.random.Generator) -> tuple:
+    """Draw (kind, a, b, body_tokens)."""
+    if rng.integers(2) == 0:  # STRIDE
+        s = int(rng.integers(CONTENT_N))
+        d = int(rng.integers(1, 8))
+        return 0, s, d, _stride_tokens(s, d, GENERAL_BODY)
+    period = int(rng.integers(2, 6))
+    base = [_content(int(rng.integers(CONTENT_N))) for _ in range(period)]
+    # parameters hashed from the base tokens so the signature is prompt-derivable
+    a = sum(base) % CONTENT_N
+    b = (base[0] * 3 + period) % CONTENT_N
+    return 1, a, b, _repeat_tokens(base, GENERAL_BODY)
+
+
+def general_sample(rng: np.random.Generator) -> list:
+    _, _, _, body = sample_pattern(rng)
+    return _pad([BOS] + body + [EOS])
+
+
+def styled_sample(rng: np.random.Generator, variant: int = 1) -> list:
+    kind, a, b, body = sample_pattern(rng)
+    sig = style_signature(body[0], body[1], variant)
+    tail = body[PROMPT_LEN : PROMPT_LEN + SEQ_LEN - 2 - PROMPT_LEN - 1 - STYLE_SIG_LEN]
+    seq = [BOS] + body[:PROMPT_LEN] + [SEP] + sig + tail + [EOS]
+    return _pad(seq)
+
+
+def general_batch(rng: np.random.Generator, n: int) -> np.ndarray:
+    return np.array([general_sample(rng) for _ in range(n)], dtype=np.int32)
+
+
+def styled_batch(rng: np.random.Generator, n: int, variant: int = 1) -> np.ndarray:
+    return np.array([styled_sample(rng, variant) for _ in range(n)], dtype=np.int32)
+
+
+def pretrain_batch(rng: np.random.Generator, n: int) -> np.ndarray:
+    """Base-model training mixture: plain pattern sequences + variant-0
+    styled sequences (so the base model owns the style circuit)."""
+    rows = [
+        styled_sample(rng, variant=0) if rng.integers(2) == 0 else general_sample(rng)
+        for _ in range(n)
+    ]
+    return np.array(rows, dtype=np.int32)
+
+
+def sft_batch(rng: np.random.Generator, n: int) -> np.ndarray:
+    """SFT corpus: variant-1 styled sequences."""
+    return styled_batch(rng, n, variant=1)
+
+
+# ---------------------------------------------------------------------------
+# Evaluation sets. Each is (tokens, eval_mask) where eval_mask[i, t] == 1
+# marks positions whose NEXT-token prediction is scored. Targets are
+# tokens[i, t+1] (standard LM shift).
+# ---------------------------------------------------------------------------
+
+def general_eval_set(rng: np.random.Generator, n: int) -> tuple:
+    """Score continuation positions: late body positions where the pattern
+    is fully determined by the prefix."""
+    tokens = general_batch(rng, n)
+    mask = np.zeros_like(tokens)
+    # body occupies positions 1..GENERAL_BODY; score predictions for
+    # positions 12..GENERAL_BODY (i.e. mask at t predicts token t+1)
+    mask[:, 11 : GENERAL_BODY - 1] = 1
+    return tokens, mask
+
+
+def style_eval_set(rng: np.random.Generator, n: int, variant: int = 1) -> tuple:
+    """Score the 3 style-signature positions right after SEP (targets use
+    the given mapping variant; Style is defined against variant 1)."""
+    tokens = styled_batch(rng, n, variant)
+    mask = np.zeros_like(tokens)
+    sep_pos = 1 + PROMPT_LEN  # index of SEP
+    # predictions made AT positions sep_pos .. sep_pos+2 produce the
+    # signature tokens at sep_pos+1 .. sep_pos+3
+    mask[:, sep_pos : sep_pos + STYLE_SIG_LEN] = 1
+    return tokens, mask
+
+
+def accuracy_to_rubric(acc: float) -> float:
+    """Map top-1 accuracy in [0,1] to the paper's [0,2] rubric scale."""
+    return 2.0 * acc

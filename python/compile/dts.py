@@ -1,0 +1,123 @@
+"""DTS — Delta Tensor Store: the checkpoint interchange format.
+
+A tiny, dependency-free binary tensor container shared between the
+build-time Python side (producer: train.py, aot.py) and the run-time Rust
+side (consumer: rust/src/io/dts.rs). Format (all integers little-endian):
+
+    magic   : 4 bytes  b"DTS1"
+    version : u32      (currently 1)
+    n_meta  : u32      number of metadata key/value pairs
+    n_tensor: u32      number of tensors
+    --- metadata entries, repeated n_meta times ---
+    klen u16, key utf8, vlen u32, value utf8
+    --- index entries, repeated n_tensor times ---
+    nlen u16, name utf8, dtype u8, ndim u8, dims u64 * ndim,
+    offset u64 (from start of payload), nbytes u64
+    --- payload: raw tensor bytes, contiguous C-order ---
+
+dtypes: 0 = f32, 1 = u8, 2 = i32, 3 = f64 (reserved), 4 = i64 (reserved).
+
+The format is deliberately boring: no alignment games, no compression, no
+string table. The Rust reader streams the index and then mmap-free
+sequential-reads tensor payloads so multi-GB checkpoints never need to be
+resident at once.
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass
+
+import numpy as np
+
+MAGIC = b"DTS1"
+VERSION = 1
+
+DTYPE_CODES = {
+    np.dtype(np.float32): 0,
+    np.dtype(np.uint8): 1,
+    np.dtype(np.int32): 2,
+}
+CODE_DTYPES = {v: k for k, v in DTYPE_CODES.items()}
+
+
+@dataclass
+class TensorEntry:
+    name: str
+    dtype: np.dtype
+    shape: tuple
+    offset: int
+    nbytes: int
+
+
+def write_dts(path: str, tensors: dict, meta: dict | None = None) -> None:
+    """Write a dict of numpy arrays (and optional str->str metadata)."""
+    meta = meta or {}
+    index = []
+    payload = bytearray()
+    for name, arr in tensors.items():
+        arr = np.ascontiguousarray(arr)
+        if arr.dtype not in DTYPE_CODES:
+            raise ValueError(f"unsupported dtype {arr.dtype} for tensor {name!r}")
+        index.append((name, arr, len(payload)))
+        payload.extend(arr.tobytes())
+
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<III", VERSION, len(meta), len(index)))
+        for k, v in meta.items():
+            kb, vb = k.encode(), str(v).encode()
+            f.write(struct.pack("<H", len(kb)))
+            f.write(kb)
+            f.write(struct.pack("<I", len(vb)))
+            f.write(vb)
+        for name, arr, off in index:
+            nb = name.encode()
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", DTYPE_CODES[arr.dtype], arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<Q", d))
+            f.write(struct.pack("<QQ", off, arr.nbytes))
+        f.write(bytes(payload))
+
+
+def read_dts(path: str) -> tuple[dict, dict]:
+    """Read a DTS file; returns (tensors, meta)."""
+    with open(path, "rb") as f:
+        blob = f.read()
+    if blob[:4] != MAGIC:
+        raise ValueError(f"{path}: bad magic {blob[:4]!r}")
+    version, n_meta, n_tensor = struct.unpack_from("<III", blob, 4)
+    if version != VERSION:
+        raise ValueError(f"{path}: unsupported version {version}")
+    pos = 16
+    meta = {}
+    for _ in range(n_meta):
+        (klen,) = struct.unpack_from("<H", blob, pos)
+        pos += 2
+        key = blob[pos : pos + klen].decode()
+        pos += klen
+        (vlen,) = struct.unpack_from("<I", blob, pos)
+        pos += 4
+        meta[key] = blob[pos : pos + vlen].decode()
+        pos += vlen
+    entries = []
+    for _ in range(n_tensor):
+        (nlen,) = struct.unpack_from("<H", blob, pos)
+        pos += 2
+        name = blob[pos : pos + nlen].decode()
+        pos += nlen
+        dtype_code, ndim = struct.unpack_from("<BB", blob, pos)
+        pos += 2
+        dims = struct.unpack_from("<" + "Q" * ndim, blob, pos)
+        pos += 8 * ndim
+        offset, nbytes = struct.unpack_from("<QQ", blob, pos)
+        pos += 16
+        entries.append(TensorEntry(name, CODE_DTYPES[dtype_code], dims, offset, nbytes))
+    tensors = {}
+    base = pos
+    for e in entries:
+        raw = blob[base + e.offset : base + e.offset + e.nbytes]
+        tensors[e.name] = np.frombuffer(raw, dtype=e.dtype).reshape(e.shape).copy()
+    return tensors, meta

@@ -1,0 +1,92 @@
+"""Produce the full artifacts/ bundle reusing the cached pretrained base
+(/tmp/daq_base.dts from compile.tune) to avoid re-pretraining: runs SFT at
+the chosen hyperparameters, writes checkpoints + eval sets + calib, then
+invokes the AOT lowering.
+
+Usage: cd python && python -m compile.finalize --out ../artifacts \
+           --sft-steps 600 --sft-lr 3e-5
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, dts, model, train
+from .tune import BASE_CACHE
+
+
+def main():  # finalize
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--sft-steps", type=int, default=600)
+    ap.add_argument("--sft-lr", type=float, default=3e-4)
+    ap.add_argument("--prox-lambda", type=float, default=1.0)
+    ap.add_argument("--eval-n", type=int, default=512)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = model.ModelConfig()
+    base, _ = dts.read_dts(BASE_CACHE)
+    print(f"loaded cached base from {BASE_CACHE}")
+
+    params = {k: jnp.asarray(v) for k, v in base.items()}
+    params, sft_losses = train.train_phase(
+        params, cfg, corpus.sft_batch, args.sft_steps, 64, args.sft_lr, 20,
+        seed=2, label="sft", completion_only=True,
+        prox_ref={k: jnp.asarray(v) for k, v in base.items()},
+        prox_lambda=args.prox_lambda)
+    post = train.params_to_numpy(params)
+
+    dl2, wl2 = train.delta_summary(base, post)
+    print(f"delta: ||dW||={dl2:.4f} ||W||={wl2:.4f} ratio={dl2/wl2:.3%}")
+
+    erng = np.random.default_rng(1000)
+    style_tok, style_mask = corpus.style_eval_set(erng, args.eval_n)
+    gen_tok, gen_mask = corpus.general_eval_set(erng, args.eval_n)
+    evalsets = {"style": (style_tok, style_mask), "general": (gen_tok, gen_mask)}
+
+    sb = model.rubric_scores({k: jnp.asarray(v) for k, v in base.items()}, evalsets, cfg)
+    sp = model.rubric_scores({k: jnp.asarray(v) for k, v in post.items()}, evalsets, cfg)
+    print(f"base  scores: {sb}")
+    print(f"post  scores: {sp}")
+
+    crng = np.random.default_rng(2000)
+    calib_tok = np.concatenate([corpus.pretrain_batch(crng, 128),
+                                corpus.sft_batch(crng, 128)])
+    _, acts = model.forward({k: jnp.asarray(v) for k, v in post.items()},
+                            jnp.asarray(calib_tok), cfg, collect_acts=True)
+    calib = {k: np.asarray(v, np.float32) for k, v in acts.items()}
+
+    n_params = cfg.param_count({k: jnp.asarray(v) for k, v in post.items()})
+    meta_common = {
+        "d_model": cfg.d_model, "n_layer": cfg.n_layer, "n_head": cfg.n_head,
+        "d_ff": cfg.d_ff, "vocab": cfg.vocab, "seq_len": cfg.seq_len,
+        "n_params": n_params,
+    }
+    dts.write_dts(f"{args.out}/ckpt_base.dts", base,
+                  {**meta_common, "kind": "base",
+                   "style": f"{sb['style']:.4f}", "general": f"{sb['general']:.4f}"})
+    dts.write_dts(f"{args.out}/ckpt_post.dts", post,
+                  {**meta_common, "kind": "post",
+                   "style": f"{sp['style']:.4f}", "general": f"{sp['general']:.4f}"})
+    dts.write_dts(f"{args.out}/eval_style.dts",
+                  {"tokens": style_tok, "mask": style_mask}, {"kind": "eval_style"})
+    dts.write_dts(f"{args.out}/eval_general.dts",
+                  {"tokens": gen_tok, "mask": gen_mask}, {"kind": "eval_general"})
+    dts.write_dts(f"{args.out}/calib.dts", calib, {"kind": "calib"})
+    with open(f"{args.out}/train_summary.json", "w") as f:
+        json.dump({"n_params": n_params, "delta_l2": dl2, "weight_l2": wl2,
+                   "scores_base": sb, "scores_post": sp,
+                   "sft_steps": args.sft_steps, "sft_lr": args.sft_lr,
+                   "prox_lambda": args.prox_lambda,
+                   "sft_final_loss": sft_losses[-1]}, f, indent=2)
+    print("checkpoints + eval sets written")
+
+
+if __name__ == "__main__":
+    main()

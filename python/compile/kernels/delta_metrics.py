@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: the fused DAQ sweep — the paper's compute hot-spot.
+
+For every candidate scale multiplier alpha (Algorithm 1 lines 7–24), the
+search needs the three metrics of §2.3 evaluated on the full weight tensor.
+Done naively that is NC full quantize + 3 reduction passes. This kernel
+fuses everything into a single pass per tile: for one (128×128) VMEM tile
+of (W_post, W_base, s0) it quantizes under every candidate and accumulates
+the *sufficient statistics* of all three metrics simultaneously:
+
+    [ sign_agree_count, Δq·Δp, ‖Δq‖², ‖Δp‖², ‖Wq−Wp‖², N ]
+
+from which SignRate, CosSim, MSE and ΔW-L2 are all closed-form
+(ref.stats_to_metrics). The candidate axis is the innermost grid dimension,
+so each weight tile is fetched from HBM once and reused for all NC
+candidates — the TPU analogue of the shared-memory reuse a GPU
+implementation would get from a threadblock loop (DESIGN.md
+§Hardware-Adaptation).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .fp8 import _qdq_e4m3_inreg
+
+N_STATS = 6
+
+
+def _sweep_kernel(wp_ref, wb_ref, s0_ref, alpha_ref, out_ref):
+    r = pl.program_id(0)
+    c = pl.program_id(1)
+
+    @pl.when((r == 0) & (c == 0))
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    alpha = alpha_ref[0]
+    wp = wp_ref[...]
+    wb = wb_ref[...]
+    s = s0_ref[...] * alpha
+
+    wq = _qdq_e4m3_inreg(wp / s) * s
+    dp = wp - wb
+    dq = wq - wb
+    err = wq - wp
+
+    agree = jnp.sum((jnp.sign(dp) == jnp.sign(dq)).astype(jnp.float32))
+    dot = jnp.sum(dq * dp)
+    nq = jnp.sum(dq * dq)
+    npost = jnp.sum(dp * dp)
+    sq = jnp.sum(err * err)
+    n = jnp.float32(wp.size)
+
+    out_ref[...] += jnp.stack([agree, dot, nq, npost, sq, n]).reshape(1, N_STATS)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_c"))
+def daq_sweep_pallas(w_post, w_base, s0_full, alphas, block_r=128, block_c=128):
+    """Fused sweep: returns stats f32[NC, 6] for NC candidate multipliers.
+
+    `s0_full` is the default scale broadcast to w.shape (granularity-
+    agnostic, see fp8.qdq_scaled_pallas). Requires tensor dims divisible by
+    the tile dims (model dims are multiples of 64; tiles clamp to the dim).
+    """
+    r, c = w_post.shape
+    (nc,) = alphas.shape
+    br, bc = min(block_r, r), min(block_c, c)
+    assert r % br == 0 and c % bc == 0, (r, c, br, bc)
+    grid = (r // br, c // bc, nc)
+
+    tile = pl.BlockSpec((br, bc), lambda i, j, k: (i, j))
+    return pl.pallas_call(
+        _sweep_kernel,
+        grid=grid,
+        in_specs=[
+            tile,  # w_post
+            tile,  # w_base
+            tile,  # s0 (expanded)
+            pl.BlockSpec((1,), lambda i, j, k: (k,)),  # this candidate's alpha
+        ],
+        out_specs=pl.BlockSpec((1, N_STATS), lambda i, j, k: (k, 0)),
+        out_shape=jax.ShapeDtypeStruct((nc, N_STATS), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(
+        w_post.astype(jnp.float32),
+        w_base.astype(jnp.float32),
+        jnp.broadcast_to(s0_full, (r, c)).astype(jnp.float32),
+        alphas.astype(jnp.float32),
+    )

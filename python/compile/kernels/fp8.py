@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: FP8 (E4M3) quantize–dequantize.
+
+This is the numeric core of the paper's Q_s(W) operator (Eq. 4). The kernel
+tiles the weight into VMEM blocks and applies the saturating RNE
+quantize–dequantize in-register.
+
+TPU adaptation note (DESIGN.md §Hardware-Adaptation): on a real TPU the
+dequantized bf16 tile would stay VMEM-resident and feed the MXU; on the CPU
+PJRT plugin we must run interpret=True, which lowers to plain HLO — the
+BlockSpec structure (one HBM read per tile) is what carries over.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import E4M3_MANT_BITS, E4M3_MAX, E4M3_MIN_NORMAL_EXP
+
+
+def _qdq_e4m3_inreg(x):
+    """In-register E4M3 quantize–dequantize (same math as ref.qdq_e4m3)."""
+    a = jnp.clip(x, -E4M3_MAX, E4M3_MAX)
+    mag = jnp.abs(a)
+    _, e = jnp.frexp(mag)
+    exp = jnp.clip(e - 1, E4M3_MIN_NORMAL_EXP, None)
+    # ldexp not exp2: exact, fusion-context-independent (see ref.qdq_e4m3)
+    step = jnp.ldexp(jnp.float32(1.0), exp - E4M3_MANT_BITS)
+    q = jnp.round(a / step) * step
+    return jnp.where(mag == 0.0, jnp.zeros_like(q), q)
+
+
+def _qdq_kernel(w_ref, s_ref, o_ref):
+    """One tile: o = qdq(w / s) * s with s broadcast over the tile."""
+    s = s_ref[...]
+    w = w_ref[...]
+    o_ref[...] = _qdq_e4m3_inreg(w / s) * s
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "block_c"))
+def qdq_scaled_pallas(w, scale_full, block_r=128, block_c=128):
+    """Pallas quantize–dequantize of a 2-D weight with an elementwise scale.
+
+    `scale_full` must already be broadcast to w.shape (use
+    ref.expand_block_scale / jnp.broadcast_to); this keeps the kernel
+    granularity-agnostic — block-wise, per-channel and per-tensor all reduce
+    to an elementwise scale field.
+    """
+    r, c = w.shape
+    br, bc = min(block_r, r), min(block_c, c)
+    assert r % br == 0 and c % bc == 0, (r, c, br, bc)
+    grid = (r // br, c // bc)
+    return pl.pallas_call(
+        _qdq_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+            pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((r, c), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(w.astype(jnp.float32), jnp.broadcast_to(scale_full, (r, c)).astype(jnp.float32))

@@ -1,0 +1,66 @@
+"""L1 Pallas kernel: dequantize-matmul for the FP8 serving path.
+
+y[B,N] = x[B,K] @ (decode_e4m3(codes[K,N]) * scale[K,N])
+
+The weight stays in its 1-byte storage format in HBM; each VMEM tile is
+decoded in-register and immediately consumed by the matmul, so the f32
+weight never materializes in HBM — the memory-traffic win FP8 serving is
+about. Accumulation over the K grid axis happens in the f32 output tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _decode_e4m3_inreg(code):
+    code = code.astype(jnp.int32)
+    sign = (code >> 7) & 1
+    exp = (code >> 3) & 0xF
+    mant = code & 0x7
+    sub_val = mant.astype(jnp.float32) * 2.0 ** -9
+    norm_val = jnp.ldexp((8 + mant).astype(jnp.float32), exp - 10)
+    val = jnp.where(exp == 0, sub_val, norm_val)
+    return jnp.where(sign == 1, -val, val)
+
+
+def _matmul_dq_kernel(x_ref, codes_ref, s_ref, o_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = _decode_e4m3_inreg(codes_ref[...]) * s_ref[...]
+    o_ref[...] += x_ref[...] @ w
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_k", "block_n"))
+def matmul_dq_pallas(x, codes, scale_full, block_b=32, block_k=128, block_n=128):
+    """x f32[B,K] @ dequant(codes u8[K,N] · scale[K,N]) -> f32[B,N]."""
+    b, kdim = x.shape
+    k2, n = codes.shape
+    assert kdim == k2, (x.shape, codes.shape)
+    bb, bk, bn = min(block_b, b), min(block_k, kdim), min(block_n, n)
+    assert b % bb == 0 and kdim % bk == 0 and n % bn == 0
+    grid = (b // bb, n // bn, kdim // bk)
+    return pl.pallas_call(
+        _matmul_dq_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bb, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, n), jnp.float32),
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(
+        x.astype(jnp.float32),
+        codes.astype(jnp.uint8),
+        jnp.broadcast_to(scale_full, (kdim, n)).astype(jnp.float32),
+    )

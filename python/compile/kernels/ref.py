@@ -1,0 +1,159 @@
+"""Pure-jnp oracles for every Pallas kernel — the CORE correctness signal.
+
+These implementations favour obviousness over speed; pytest asserts the
+Pallas kernels (and, via golden files, the Rust implementations) match them
+exactly (FP8 codec) or to f32 tolerance (reductions).
+
+FP8 E4M3 follows the OCP "E4M3FN" convention used by the paper's FP8
+pipeline: 1 sign / 4 exponent (bias 7) / 3 mantissa bits, NO infinities,
+max finite ±448, subnormal step 2^-9, saturating round-to-nearest-even.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+E4M3_MAX = 448.0
+E4M3_MIN_NORMAL_EXP = -6   # smallest normal exponent
+E4M3_MANT_BITS = 3
+
+
+def qdq_e4m3(x):
+    """Quantize-dequantize x onto the E4M3 value grid.
+
+    Saturating round-to-nearest-even. Exact: within a binade the grid is
+    uniform with step 2^(e-3), and round-half-even in units of the step is
+    identical to RNE on the mantissa; exponent extraction uses frexp so no
+    log2 rounding hazards exist at binade boundaries.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    a = jnp.clip(x, -E4M3_MAX, E4M3_MAX)
+    mag = jnp.abs(a)
+    _, e = jnp.frexp(mag)              # mag = m * 2^e with m in [0.5, 1)
+    exp = jnp.clip(e - 1, E4M3_MIN_NORMAL_EXP, None)   # floor(log2 mag), subnormal floor
+    # ldexp (exact exponent manipulation) rather than exp2: XLA's vectorized
+    # exp2 is a polynomial approximation whose 1-ulp wobble can differ
+    # between fusion contexts, breaking bit-identity between the Pallas
+    # kernel and this oracle.
+    step = jnp.ldexp(jnp.float32(1.0), exp - E4M3_MANT_BITS)
+    q = jnp.round(a / step) * step
+    return jnp.where(mag == 0.0, jnp.zeros_like(q), q).astype(jnp.float32)
+
+
+def encode_e4m3(x) -> jnp.ndarray:
+    """f32 -> E4M3 byte codes (sign<<7 | biased_exp<<3 | mantissa)."""
+    q = qdq_e4m3(x)
+    sign = (q < 0).astype(jnp.uint32)
+    mag = jnp.abs(q)
+    _, e = jnp.frexp(mag)
+    exp = jnp.clip(e - 1, E4M3_MIN_NORMAL_EXP, 8)
+    sub = mag < 2.0 ** E4M3_MIN_NORMAL_EXP
+    mant = jnp.where(
+        sub,
+        mag * 512.0,                                  # subnormal: mag / 2^-9
+        jnp.ldexp(mag, -exp) * 8.0 - 8.0,
+    )
+    expf = jnp.where(sub, 0, exp + 7).astype(jnp.uint32)
+    code = (sign << 7) | (expf << 3) | jnp.round(mant).astype(jnp.uint32)
+    return code.astype(jnp.uint8)
+
+
+def decode_e4m3(code) -> jnp.ndarray:
+    """E4M3 byte codes -> f32. The NaN code (exp=15, mant=7) decodes to NaN."""
+    code = jnp.asarray(code, jnp.uint8).astype(jnp.int32)
+    sign = (code >> 7) & 1
+    exp = (code >> 3) & 0xF
+    mant = code & 0x7
+    sub_val = mant.astype(jnp.float32) * 2.0 ** -9
+    norm_val = jnp.ldexp((8 + mant).astype(jnp.float32), exp - 7 - E4M3_MANT_BITS)
+    val = jnp.where(exp == 0, sub_val, norm_val)
+    val = jnp.where((exp == 15) & (mant == 7), jnp.nan, val)
+    return jnp.where(sign == 1, -val, val).astype(jnp.float32)
+
+
+def qdq_scaled(w, scale):
+    """The paper's Q_s(W) = DeQuant(Quant(W, s), s) with broadcastable scale."""
+    return qdq_e4m3(w / scale) * scale
+
+
+# ---------------------------------------------------------------------------
+# Scale initialization (Algorithm 1 line 3: s0 = absmax / Qmax)
+# ---------------------------------------------------------------------------
+
+def absmax_scale_block(w, block=128):
+    """Block-wise s0 over `block`×`block` tiles; shape (ceil(R/b), ceil(C/b)).
+
+    Tiles at the edge cover the remainder. Scale of an all-zero block is 1
+    (any positive value works; 1 avoids div-by-zero)."""
+    r, c = w.shape
+    nr, nc = -(-r // block), -(-c // block)
+    pr, pc = nr * block - r, nc * block - c
+    wp = jnp.pad(jnp.abs(w), ((0, pr), (0, pc)))
+    tiles = wp.reshape(nr, block, nc, block)
+    amax = jnp.max(tiles, axis=(1, 3))
+    return jnp.where(amax > 0, amax / E4M3_MAX, 1.0).astype(jnp.float32)
+
+
+def absmax_scale_channel(w):
+    """Per-output-channel (column) s0; shape (1, C)."""
+    amax = jnp.max(jnp.abs(w), axis=0, keepdims=True)
+    return jnp.where(amax > 0, amax / E4M3_MAX, 1.0).astype(jnp.float32)
+
+
+def expand_block_scale(s0, shape, block=128):
+    """Broadcast a block-scale grid back to the full weight shape."""
+    r, c = shape
+    s = jnp.repeat(jnp.repeat(s0, block, axis=0), block, axis=1)
+    return s[:r, :c]
+
+
+# ---------------------------------------------------------------------------
+# Delta metrics (paper §2.3)
+# ---------------------------------------------------------------------------
+
+def delta_stats(w_post, w_base, w_quant):
+    """Sufficient statistics for all three metrics, as a length-6 vector:
+    [sign_agree_count, dot(dq,dp), ||dq||^2, ||dp||^2, sq_err, n]."""
+    dp = (w_post - w_base).ravel()
+    dq = (w_quant - w_base).ravel()
+    agree = jnp.sum(jnp.sign(dp) == jnp.sign(dq)).astype(jnp.float32)
+    dot = jnp.dot(dq, dp)
+    nq = jnp.dot(dq, dq)
+    npost = jnp.dot(dp, dp)
+    err = w_quant.ravel() - w_post.ravel()
+    sq = jnp.dot(err, err)
+    n = jnp.float32(dp.size)
+    return jnp.stack([agree, dot, nq, npost, sq, n])
+
+
+def stats_to_metrics(stats):
+    """stats (…,6) -> dict of SignRate / CosSim / MSE / delta L2."""
+    agree, dot, nq, npost, sq, n = [stats[..., i] for i in range(6)]
+    eps = 1e-30
+    return {
+        "sign_rate": agree / n,
+        "cos_sim": dot / jnp.sqrt(jnp.maximum(nq * npost, eps)),
+        "mse": sq / n,
+        "delta_l2": jnp.sqrt(nq),
+    }
+
+
+def sweep_ref(w_post, w_base, s0_full, alphas):
+    """Reference DAQ sweep: for each candidate alpha, quantize with
+    s = alpha * s0 and emit the 6 sufficient statistics. Returns (NC, 6)."""
+    outs = []
+    for a in np.asarray(alphas):
+        wq = qdq_scaled(w_post, s0_full * jnp.float32(a))
+        outs.append(delta_stats(w_post, w_base, wq))
+    return jnp.stack(outs)
+
+
+# ---------------------------------------------------------------------------
+# Dequantize-matmul (serving path)
+# ---------------------------------------------------------------------------
+
+def matmul_dq_ref(x, codes, scale_full):
+    """x f32[B,K] @ dequant(codes u8[K,N], scale) -> f32[B,N]."""
+    w = decode_e4m3(codes) * scale_full
+    return x @ w

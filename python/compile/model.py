@@ -1,0 +1,196 @@
+"""L2: the transformer compute graph (JAX, build-time only).
+
+A GPT-style decoder-only LM used three ways:
+  1. train.py optimizes it to produce the (base, post-trained) checkpoint
+     pair the DAQ experiments need;
+  2. aot.py lowers `forward` to HLO text so the Rust runtime can evaluate
+     and serve checkpoints via PJRT with Python off the request path;
+  3. the pytest suite uses it as the shape/numerics oracle.
+
+Parameters live in a flat {name: array} dict whose names match the tensor
+names in the DTS checkpoints (and therefore the names the Rust coordinator
+schedules). Quantizable tensors (2-D matmul weights) are listed by
+`quantizable_names`.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+
+
+# ---------------------------------------------------------------------------
+# Configuration
+# ---------------------------------------------------------------------------
+
+class ModelConfig:
+    """Transformer hyperparameters."""
+
+    def __init__(self, vocab=corpus.VOCAB, d_model=128, n_layer=2, n_head=4,
+                 d_ff=512, seq_len=corpus.SEQ_LEN):
+        self.vocab = vocab
+        self.d_model = d_model
+        self.n_layer = n_layer
+        self.n_head = n_head
+        self.d_ff = d_ff
+        self.seq_len = seq_len
+        assert d_model % n_head == 0
+
+    @property
+    def d_head(self):
+        return self.d_model // self.n_head
+
+    def param_count(self, params=None):
+        if params is None:
+            params = init_params(self, jax.random.PRNGKey(0))
+        return sum(int(np.prod(v.shape)) for v in params.values())
+
+
+def quantizable_names(cfg: ModelConfig) -> list:
+    """The 2-D linear weights DAQ quantizes (the paper quantizes matmul
+    weights; embeddings and norms stay high-precision)."""
+    names = []
+    for l in range(cfg.n_layer):
+        names += [f"l{l}.wq", f"l{l}.wk", f"l{l}.wv", f"l{l}.wo",
+                  f"l{l}.w1", f"l{l}.w2"]
+    names.append("head")
+    return names
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 2 + 6 * cfg.n_layer)
+    it = iter(ks)
+
+    def dense(key, fan_in, fan_out):
+        std = 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(key, (fan_in, fan_out)) * std).astype(jnp.float32)
+
+    p = {
+        "embed": (jax.random.normal(next(it), (cfg.vocab, cfg.d_model)) * 0.02
+                  ).astype(jnp.float32),
+        "pos": (jax.random.normal(next(it), (cfg.seq_len, cfg.d_model)) * 0.02
+                ).astype(jnp.float32),
+    }
+    for l in range(cfg.n_layer):
+        p[f"l{l}.ln1.g"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p[f"l{l}.ln1.b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p[f"l{l}.wq"] = dense(next(it), cfg.d_model, cfg.d_model)
+        p[f"l{l}.wk"] = dense(next(it), cfg.d_model, cfg.d_model)
+        p[f"l{l}.wv"] = dense(next(it), cfg.d_model, cfg.d_model)
+        p[f"l{l}.wo"] = dense(next(it), cfg.d_model, cfg.d_model)
+        p[f"l{l}.ln2.g"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p[f"l{l}.ln2.b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p[f"l{l}.w1"] = dense(next(it), cfg.d_model, cfg.d_ff)
+        p[f"l{l}.w2"] = dense(next(it), cfg.d_ff, cfg.d_model)
+    p["lnf.g"] = jnp.ones((cfg.d_model,), jnp.float32)
+    p["lnf.b"] = jnp.zeros((cfg.d_model,), jnp.float32)
+    # untied head so its delta is independently quantized
+    p["head"] = dense(jax.random.PRNGKey(1234), cfg.d_model, cfg.vocab)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(x, wq, wk, wv, wo, n_head):
+    B, T, D = x.shape
+    dh = D // n_head
+
+    def split(h):
+        return h.reshape(B, T, n_head, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = split(x @ wq), split(x @ wk), split(x @ wv)
+    att = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(dh)
+    causal = jnp.tril(jnp.ones((T, T), jnp.bool_))
+    att = jnp.where(causal[None, None], att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    out = (att @ v).transpose(0, 2, 1, 3).reshape(B, T, D)
+    return out @ wo
+
+
+def forward(params: dict, tokens, cfg: ModelConfig, collect_acts: bool = False):
+    """tokens i32[B, T] -> logits f32[B, T, V].
+
+    With collect_acts=True also returns {name: mean-|input activation| per
+    in-channel} for every quantizable weight — the calibration statistics
+    SmoothQuant/AWQ need.
+    """
+    B, T = tokens.shape
+    x = params["embed"][tokens] + params["pos"][None, :T]
+    acts = {}
+
+    def record(name, h):
+        if collect_acts:
+            acts[name] = jnp.mean(jnp.abs(h), axis=(0, 1))
+
+    for l in range(cfg.n_layer):
+        h = _layernorm(x, params[f"l{l}.ln1.g"], params[f"l{l}.ln1.b"])
+        for w in ("wq", "wk", "wv", "wo"):
+            record(f"l{l}.{w}", h)
+        x = x + _attention(h, params[f"l{l}.wq"], params[f"l{l}.wk"],
+                           params[f"l{l}.wv"], params[f"l{l}.wo"], cfg.n_head)
+        h = _layernorm(x, params[f"l{l}.ln2.g"], params[f"l{l}.ln2.b"])
+        record(f"l{l}.w1", h)
+        m = jax.nn.gelu(h @ params[f"l{l}.w1"])
+        record(f"l{l}.w2", m)
+        x = x + m @ params[f"l{l}.w2"]
+
+    x = _layernorm(x, params["lnf.g"], params["lnf.b"])
+    record("head", x)
+    logits = x @ params["head"]
+    if collect_acts:
+        return logits, acts
+    return logits
+
+
+def loss_fn(params: dict, tokens, cfg: ModelConfig, loss_mask=None):
+    """Next-token cross-entropy; PAD positions are never targets."""
+    logits = forward(params, tokens, cfg)
+    targets = tokens[:, 1:]
+    logits = logits[:, :-1]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    valid = (targets != corpus.PAD).astype(jnp.float32)
+    if loss_mask is not None:
+        valid = valid * loss_mask[:, 1:]
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)
+
+
+def masked_accuracy(params: dict, tokens, mask, cfg: ModelConfig) -> float:
+    """Top-1 accuracy of next-token predictions at masked positions.
+
+    mask[i, t] == 1 scores the prediction made at position t for token t+1
+    (the convention of corpus.*_eval_set).
+    """
+    logits = forward(params, tokens, cfg)
+    pred = jnp.argmax(logits[:, :-1], axis=-1)
+    targets = tokens[:, 1:]
+    m = mask[:, :-1].astype(jnp.float32)
+    correct = (pred == targets).astype(jnp.float32) * m
+    return float(jnp.sum(correct) / jnp.maximum(jnp.sum(m), 1.0))
+
+
+def rubric_scores(params: dict, evalsets: dict, cfg: ModelConfig) -> dict:
+    """Style / General scores on the paper's [0, 2] rubric scale."""
+    out = {}
+    for name, (tokens, mask) in evalsets.items():
+        acc = masked_accuracy(params, jnp.asarray(tokens), jnp.asarray(mask), cfg)
+        out[name] = corpus.accuracy_to_rubric(acc)
+    return out

@@ -1,0 +1,121 @@
+"""Pilot experiment: validate the DAQ effect end-to-end in Python before
+wiring the Rust pipeline. Trains base+SFT, quantizes the post model with
+(a) AbsMax FP8, (b) MSE-searched scales, (c) DAQ sign, (d) DAQ cosine, and
+prints the Style/General rubric for each — the Table 2/3/4/5 shape check.
+
+Usage: cd python && python -m compile.pilot [--pre-steps N] [--sft-steps N]
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, model, train
+from .kernels import ref
+
+
+def quantize_model(post, base, granularity, metric, alphas_ranges=None, block=128):
+    """Quantize all 2-D weights; returns (params, per-metric aggregates)."""
+    out = dict(post)
+    agg = {"agree": 0.0, "dot": 0.0, "nq": 0.0, "npost": 0.0, "sq": 0.0, "n": 0.0}
+    for k in post:
+        w = jnp.asarray(post[k])
+        if w.ndim != 2 or k in ("embed", "pos"):
+            continue
+        wb = jnp.asarray(base[k])
+        if granularity == "block":
+            s0 = ref.expand_block_scale(ref.absmax_scale_block(w, block), w.shape, block)
+        else:
+            s0 = jnp.broadcast_to(ref.absmax_scale_channel(w), w.shape)
+        if metric == "absmax":
+            best_alpha = 1.0
+        else:
+            lo, hi = alphas_ranges
+            cand = list(np.linspace(lo, hi, 5))
+            stats = ref.sweep_ref(w, wb, s0, np.array(cand, np.float32))
+            m = _metric_value(stats, metric)
+            best = int(np.argmax(m))
+            # fine stage around best
+            delta = (hi - lo) / 4
+            flo, fhi = max(lo, cand[best] - delta), min(hi, cand[best] + delta)
+            fcand = list(np.linspace(flo, fhi, 10))
+            fstats = ref.sweep_ref(w, wb, s0, np.array(fcand, np.float32))
+            fm = _metric_value(fstats, metric)
+            # include alpha=1 default as candidate (Algorithm 1 line 5-6)
+            all_c = [1.0] + cand + fcand
+            all_m = np.concatenate([
+                _metric_value(ref.sweep_ref(w, wb, s0, np.array([1.0], np.float32)), metric),
+                m, fm])
+            best_alpha = float(all_c[int(np.argmax(all_m))])
+        wq = ref.qdq_scaled(w, s0 * best_alpha)
+        st = np.asarray(ref.delta_stats(w, wb, wq))
+        for i, key in enumerate(["agree", "dot", "nq", "npost", "sq", "n"]):
+            agg[key] += float(st[i])
+        out[k] = np.asarray(wq)
+    summary = {
+        "sign_rate": agg["agree"] / agg["n"],
+        "cos_sim": agg["dot"] / np.sqrt(max(agg["nq"] * agg["npost"], 1e-30)),
+        "delta_l2": np.sqrt(agg["nq"]),
+        "mse": agg["sq"] / agg["n"],
+    }
+    return out, summary
+
+
+def _metric_value(stats, metric):
+    stats = np.asarray(stats)
+    m = ref.stats_to_metrics(jnp.asarray(stats))
+    if metric == "sign":
+        return np.asarray(m["sign_rate"])
+    if metric == "cos":
+        return np.asarray(m["cos_sim"])
+    if metric == "mse":
+        return -np.asarray(m["mse"])
+    raise ValueError(metric)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pre-steps", type=int, default=2000)
+    ap.add_argument("--sft-steps", type=int, default=250)
+    ap.add_argument("--sft-lr", type=float, default=1e-4)
+    ap.add_argument("--out", default="/tmp/daq_pilot")
+    args = ap.parse_args()
+    import os
+    os.makedirs(args.out, exist_ok=True)
+    train.run(args.out, args.pre_steps, args.sft_steps, args.sft_lr)
+
+    from .dts import read_dts
+    base, _ = read_dts(f"{args.out}/ckpt_base.dts")
+    post, _ = read_dts(f"{args.out}/ckpt_post.dts")
+    st, _ = read_dts(f"{args.out}/eval_style.dts")
+    ge, _ = read_dts(f"{args.out}/eval_general.dts")
+    evalsets = {"style": (st["tokens"], st["mask"]),
+                "general": (ge["tokens"], ge["mask"])}
+    cfg = model.ModelConfig()
+
+    def score(params):
+        return model.rubric_scores({k: jnp.asarray(v) for k, v in params.items()},
+                                   evalsets, cfg)
+
+    rows = []
+    for gran in ("block", "channel"):
+        q, s = quantize_model(post, base, gran, "absmax")
+        rows.append((f"AbsMax {gran}", s, score(q)))
+    for metric in ("mse", "sign", "cos"):
+        for gran in ("block", "channel"):
+            for rng_ in ((0.5, 2.0), (0.8, 1.25), (0.9, 1.11)):
+                q, s = quantize_model(post, base, gran, metric, rng_)
+                rows.append((f"{metric} {gran} {rng_}", s, score(q)))
+
+    print("\n=== PILOT RESULTS ===")
+    print(f"{'config':34s} {'dL2':>9s} {'sign%':>7s} {'cos':>6s} {'Style':>6s} {'Genrl':>6s}")
+    for name, s, sc in rows:
+        print(f"{name:34s} {s['delta_l2']:9.2f} {100*s['sign_rate']:6.2f}% "
+              f"{s['cos_sim']:6.3f} {sc['style']:6.3f} {sc['general']:6.3f}")
+
+
+if __name__ == "__main__":
+    main()

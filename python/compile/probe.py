@@ -1,0 +1,86 @@
+"""Probe: proximal-SFT sweep — find the (lambda, lr, steps) where the SFT
+delta is minimal-norm (FP8-fragile) but the style is still learned, and
+report per-position style accuracy + AbsMax-FP8 damage + DAQ recovery.
+
+Usage: cd python && PROX="3e-4,600,1e-2 3e-4,600,3e-2" python -m compile.probe
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, dts, model, train
+from .kernels import ref
+from .pilot import quantize_model
+from .tune import BASE_CACHE
+
+
+def per_position_style_acc(params, cfg, n=256):
+    rng = np.random.default_rng(1234)
+    tok, _ = corpus.style_eval_set(rng, n)
+    logits = model.forward({k: jnp.asarray(v) for k, v in params.items()},
+                           jnp.asarray(tok), cfg)
+    pred = np.asarray(jnp.argmax(logits[:, :-1], axis=-1))
+    tgt = tok[:, 1:]
+    sep = 1 + corpus.PROMPT_LEN
+    accs = []
+    for i in range(corpus.STYLE_SIG_LEN):
+        p = sep + i  # prediction position for sig token i+1
+        accs.append(float((pred[:, p - 1 + 1 - 1] == tgt[:, p - 1]).mean())
+                    if False else float((pred[:, p] == tgt[:, p]).mean()))
+    return accs
+
+
+def main():
+    cfg = model.ModelConfig()
+    base, _ = dts.read_dts(BASE_CACHE)
+    erng = np.random.default_rng(1000)
+    st = corpus.style_eval_set(erng, 384)
+    ge = corpus.general_eval_set(erng, 384)
+    evalsets = {"style": st, "general": ge}
+
+    def score(p):
+        return model.rubric_scores({k: jnp.asarray(v) for k, v in p.items()},
+                                   evalsets, cfg)
+
+    prox_ref = {k: jnp.asarray(v) for k, v in base.items()}
+    configs = os.environ.get("PROX", "3e-4,600,1e-2").split()
+    for spec in configs:
+        lr, steps, lam = spec.split(",")
+        lr, steps, lam = float(lr), int(steps), float(lam)
+        params = {k: jnp.asarray(v) for k, v in base.items()}
+        params, losses = train.train_phase(
+            params, cfg, corpus.sft_batch, steps, 64, lr, 20, seed=2,
+            label=f"sft[lr={lr:g},lam={lam:g}]", completion_only=True,
+            prox_ref=prox_ref, prox_lambda=lam, log_every=300)
+        post = train.params_to_numpy(params)
+        dl2, wl2 = train.delta_summary(base, post)
+        sp = score(post)
+        pp = per_position_style_acc(post, cfg)
+        print(f"PROX lr={lr:g} steps={steps} lam={lam:g}: "
+              f"style={sp['style']:.3f} general={sp['general']:.3f} "
+              f"dRatio={dl2/wl2:.3%} per-pos={['%.2f' % a for a in pp]}",
+              flush=True)
+        if sp["style"] < 1.0:
+            print("  -> style too low", flush=True)
+            continue
+        q, s = quantize_model(post, base, "block", "absmax")
+        sq = score(q)
+        print(f"  AbsMax block: style={sq['style']:.3f} "
+              f"general={sq['general']:.3f} sign={100*s['sign_rate']:.1f}% "
+              f"cos={s['cos_sim']:.3f}", flush=True)
+        damage = sp["style"] - sq["style"]
+        if damage > 0.15:
+            for metric in ("sign", "cos", "mse"):
+                q2, s2 = quantize_model(post, base, "block", metric, (0.8, 1.25))
+                sq2 = score(q2)
+                print(f"  {metric:4s} block [0.8,1.25]: style={sq2['style']:.3f} "
+                      f"general={sq2['general']:.3f} "
+                      f"sign={100*s2['sign_rate']:.1f}%", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,218 @@
+"""Build-time trainer: produces the (W_base, W_post) checkpoint pair.
+
+This is the substrate the paper takes for granted (DeepSeek-V3 + an SFT run
+on stylized dialogues). We pretrain a small decoder-only LM on the general
+corpus (→ ckpt_base.dts), then SFT it on the styled corpus with a low
+learning rate and few steps (→ ckpt_post.dts) so the style knowledge lives
+in small-magnitude deltas — the regime DAQ targets (paper §1, §5).
+
+Also emits:
+  eval_style.dts / eval_general.dts — held-out rubric eval sets
+  calib.dts                         — per-channel |activation| means for
+                                      SmoothQuant / AWQ baselines
+All outputs are deterministic given the seeds.
+
+Usage:  cd python && python -m compile.train --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, dts, model
+
+
+# ---------------------------------------------------------------------------
+# Manual Adam (optax is not available in the offline image)
+# ---------------------------------------------------------------------------
+
+def adam_init(params):
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()},
+            "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = {k: b1 * state["m"][k] + (1 - b1) * grads[k] for k in params}
+    v = {k: b2 * state["v"][k] + (1 - b2) * jnp.square(grads[k]) for k in params}
+    bc1 = 1 - b1 ** t.astype(jnp.float32)
+    bc2 = 1 - b2 ** t.astype(jnp.float32)
+    new = {k: params[k] - lr * (m[k] / bc1) / (jnp.sqrt(v[k] / bc2) + eps)
+           for k in params}
+    return new, {"m": m, "v": v, "t": t}
+
+
+@partial(jax.jit, static_argnums=(3,))
+def _train_step(params, opt, batch, cfg, lr, loss_mask=None, prox_ref=None,
+                prox_lambda=0.0):
+    def objective(p):
+        loss = model.loss_fn(p, batch, cfg, loss_mask)
+        if prox_ref is not None:
+            # proximal SFT: penalize distance to the base checkpoint so the
+            # optimizer finds the minimal-norm delta that achieves the SFT
+            # behaviour (the paper's "small yet semantically critical"
+            # regime; standard KL/L2-regularized fine-tuning practice)
+            prox = sum(jnp.sum(jnp.square(p[k] - prox_ref[k])) for k in prox_ref)
+            loss = loss + prox_lambda * prox
+        return loss
+
+    loss, grads = jax.value_and_grad(objective)(params)
+    params, opt = adam_update(params, grads, opt, lr)
+    return params, opt, loss
+
+
+def train_phase(params, cfg, sampler, steps, batch_size, lr_peak, warmup,
+                seed, label, log_every=200, completion_only=False,
+                prox_ref=None, prox_lambda=0.0):
+    """One optimization phase (pretrain or SFT) with linear warmup + cosine
+    decay. `completion_only` masks the loss to positions at/after SEP —
+    standard SFT practice; it also concentrates the delta in the response
+    behaviour, matching the paper's setting. `prox_ref`/`prox_lambda` add
+    an L2-to-base proximal term (see _train_step)."""
+    rng = np.random.default_rng(seed)
+    opt = adam_init(params)
+    losses = []
+    t0 = time.time()
+    mask = None
+    if completion_only:
+        m = np.zeros((batch_size, cfg.seq_len), np.float32)
+        m[:, 1 + corpus.PROMPT_LEN:] = 1.0  # SEP onward
+        mask = jnp.asarray(m)
+    for step in range(steps):
+        if step < warmup:
+            lr = lr_peak * (step + 1) / warmup
+        else:
+            prog = (step - warmup) / max(steps - warmup, 1)
+            lr = lr_peak * 0.5 * (1 + np.cos(np.pi * prog))
+        batch = jnp.asarray(sampler(rng, batch_size))
+        params, opt, loss = _train_step(params, opt, batch, cfg, jnp.float32(lr),
+                                        mask, prox_ref, prox_lambda)
+        losses.append(float(loss))
+        if step % log_every == 0 or step == steps - 1:
+            print(f"[{label}] step {step:5d} loss {float(loss):.4f} "
+                  f"lr {lr:.2e} ({time.time()-t0:.1f}s)", flush=True)
+    return params, losses
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint production
+# ---------------------------------------------------------------------------
+
+def params_to_numpy(params):
+    return {k: np.asarray(v, np.float32) for k, v in params.items()}
+
+
+def delta_summary(base, post):
+    """Global ‖ΔW‖ vs ‖W‖ over quantizable tensors — sanity check that we
+    are in the paper's small-delta regime."""
+    tot_d, tot_w = 0.0, 0.0
+    for k in base:
+        if base[k].ndim != 2:
+            continue
+        d = post[k] - base[k]
+        tot_d += float(np.sum(d * d))
+        tot_w += float(np.sum(base[k] * base[k]))
+    return float(np.sqrt(tot_d)), float(np.sqrt(tot_w))
+
+
+def run(out_dir: str, pre_steps: int, sft_steps: int, sft_lr: float,
+        seed: int = 0, eval_n: int = 512) -> dict:
+    cfg = model.ModelConfig()
+    key = jax.random.PRNGKey(seed)
+    params = model.init_params(cfg, key)
+    n_params = cfg.param_count(params)
+    print(f"model: {n_params/1e6:.2f}M params "
+          f"(d={cfg.d_model} L={cfg.n_layer} h={cfg.n_head} ff={cfg.d_ff})")
+
+    # --- pretrain (base model): pattern mixture incl. variant-0 style ---
+    params, pre_losses = train_phase(
+        params, cfg, corpus.pretrain_batch, pre_steps, 64, 1.5e-3, 100,
+        seed=seed + 1, label="pretrain")
+    base = params_to_numpy(params)
+
+    # --- SFT (post-trained model): low LR, completion-only loss => small,
+    # behaviourally-focused deltas (the paper's regime) ---
+    params, sft_losses = train_phase(
+        params, cfg, corpus.sft_batch, sft_steps, 64, sft_lr, 20,
+        seed=seed + 2, label="sft", completion_only=True)
+    post = params_to_numpy(params)
+
+    dl2, wl2 = delta_summary(base, post)
+    print(f"delta check: ||dW||={dl2:.4f}  ||W||={wl2:.4f}  ratio={dl2/wl2:.4%}")
+
+    # --- eval sets (held-out seeds) ---
+    erng = np.random.default_rng(seed + 1000)
+    style_tok, style_mask = corpus.style_eval_set(erng, eval_n)
+    gen_tok, gen_mask = corpus.general_eval_set(erng, eval_n)
+    evalsets = {"style": (style_tok, style_mask), "general": (gen_tok, gen_mask)}
+
+    scores_base = model.rubric_scores({k: jnp.asarray(v) for k, v in base.items()},
+                                      evalsets, cfg)
+    scores_post = model.rubric_scores({k: jnp.asarray(v) for k, v in post.items()},
+                                      evalsets, cfg)
+    print(f"base  scores: {scores_base}")
+    print(f"post  scores: {scores_post}")
+
+    # --- calibration activations (for SmoothQuant / AWQ) ---
+    crng = np.random.default_rng(seed + 2000)
+    calib_tok = np.concatenate([corpus.general_batch(crng, 128),
+                                corpus.styled_batch(crng, 128)])
+    _, acts = model.forward(
+        {k: jnp.asarray(v) for k, v in post.items()},
+        jnp.asarray(calib_tok), cfg, collect_acts=True)
+    calib = {k: np.asarray(v, np.float32) for k, v in acts.items()}
+
+    # --- write everything ---
+    meta_common = {
+        "d_model": cfg.d_model, "n_layer": cfg.n_layer, "n_head": cfg.n_head,
+        "d_ff": cfg.d_ff, "vocab": cfg.vocab, "seq_len": cfg.seq_len,
+        "n_params": n_params,
+    }
+    dts.write_dts(f"{out_dir}/ckpt_base.dts", base,
+                  {**meta_common, "kind": "base",
+                   "style": f"{scores_base['style']:.4f}",
+                   "general": f"{scores_base['general']:.4f}"})
+    dts.write_dts(f"{out_dir}/ckpt_post.dts", post,
+                  {**meta_common, "kind": "post",
+                   "style": f"{scores_post['style']:.4f}",
+                   "general": f"{scores_post['general']:.4f}"})
+    dts.write_dts(f"{out_dir}/eval_style.dts",
+                  {"tokens": style_tok, "mask": style_mask}, {"kind": "eval_style"})
+    dts.write_dts(f"{out_dir}/eval_general.dts",
+                  {"tokens": gen_tok, "mask": gen_mask}, {"kind": "eval_general"})
+    dts.write_dts(f"{out_dir}/calib.dts", calib, {"kind": "calib"})
+
+    summary = {
+        "n_params": n_params,
+        "delta_l2": dl2, "weight_l2": wl2,
+        "scores_base": scores_base, "scores_post": scores_post,
+        "pretrain_final_loss": pre_losses[-1], "sft_final_loss": sft_losses[-1],
+    }
+    with open(f"{out_dir}/train_summary.json", "w") as f:
+        json.dump(summary, f, indent=2)
+    return summary
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--pre-steps", type=int, default=3000)
+    ap.add_argument("--sft-steps", type=int, default=250)
+    ap.add_argument("--sft-lr", type=float, default=1e-4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    import os
+    os.makedirs(args.out, exist_ok=True)
+    run(args.out, args.pre_steps, args.sft_steps, args.sft_lr, args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Fast SFT/quantization tuning loop: pretrain once (cached), then sweep
+SFT hyperparameters and measure the DAQ effect sizes.
+
+We are looking for the paper's operating regime:
+  - post-trained Style high (>= 1.6/2)
+  - AbsMax FP8 quantization degrades Style substantially
+  - DAQ sign/cos scale search recovers it; MSE search does not
+
+Usage: cd python && python -m compile.tune
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus, dts, model, train
+from .kernels import ref
+from .pilot import quantize_model
+
+BASE_CACHE = "/tmp/daq_base.dts"
+
+
+def get_base(cfg, pre_steps=1500):
+    if os.path.exists(BASE_CACHE):
+        base, meta = dts.read_dts(BASE_CACHE)
+        if int(meta.get("n_layer", -1)) == cfg.n_layer and \
+           int(meta.get("pre_steps", -1)) == pre_steps:
+            print("using cached base")
+            return base
+    params = model.init_params(cfg, jax.random.PRNGKey(0))
+    params, _ = train.train_phase(params, cfg, corpus.pretrain_batch,
+                                  pre_steps, 64, 1.5e-3, 100, seed=1,
+                                  label="pretrain")
+    base = train.params_to_numpy(params)
+    dts.write_dts(BASE_CACHE, base, {"n_layer": cfg.n_layer,
+                                     "pre_steps": pre_steps})
+    return base
+
+
+def main():
+    cfg = model.ModelConfig()
+    pre_steps = int(os.environ.get("PRE_STEPS", "1500"))
+    base = get_base(cfg, pre_steps)
+
+    erng = np.random.default_rng(1000)
+    st_tok, st_mask = corpus.style_eval_set(erng, 384)
+    ge_tok, ge_mask = corpus.general_eval_set(erng, 384)
+    evalsets = {"style": (st_tok, st_mask), "general": (ge_tok, ge_mask)}
+
+    def score(p):
+        return model.rubric_scores({k: jnp.asarray(v) for k, v in p.items()},
+                                   evalsets, cfg)
+
+    sb = score(base)
+    print(f"BASE: style={sb['style']:.3f} general={sb['general']:.3f}", flush=True)
+
+    configs = [(s, lr) for s in (int(x) for x in
+                os.environ.get("SFT_STEPS", "600").split(","))
+               for lr in (float(x) for x in
+                os.environ.get("SFT_LR", "3e-4").split(","))]
+    for sft_steps, sft_lr in configs:
+        params = {k: jnp.asarray(v) for k, v in base.items()}
+        params, losses = train.train_phase(
+            params, cfg, corpus.sft_batch, sft_steps, 64, sft_lr, 20,
+            seed=2, label=f"sft[{sft_steps},{sft_lr:g}]",
+            completion_only=True)
+        post = train.params_to_numpy(params)
+        dl2, wl2 = train.delta_summary(base, post)
+        sp = score(post)
+        print(f"SFT steps={sft_steps} lr={sft_lr:g}: style={sp['style']:.3f} "
+              f"general={sp['general']:.3f} dRatio={dl2/wl2:.3%}", flush=True)
+        if sp["style"] < 1.2:
+            print("  -> style too low, skipping quant check", flush=True)
+            continue
+        for gran in ("block", "channel"):
+            q, s = quantize_model(post, base, gran, "absmax")
+            sq = score(q)
+            print(f"  AbsMax {gran}: style={sq['style']:.3f} "
+                  f"general={sq['general']:.3f} sign={100*s['sign_rate']:.1f}% "
+                  f"cos={s['cos_sim']:.3f}", flush=True)
+        for metric in ("mse", "sign", "cos"):
+            q, s = quantize_model(post, base, "block", metric, (0.8, 1.25))
+            sq = score(q)
+            print(f"  {metric:4s} block [0.8,1.25]: style={sq['style']:.3f} "
+                  f"general={sq['general']:.3f} sign={100*s['sign_rate']:.1f}% "
+                  f"cos={s['cos_sim']:.3f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

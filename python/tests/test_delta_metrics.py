@@ -1,0 +1,122 @@
+"""Fused DAQ sweep kernel (Pallas) vs pure-jnp reference."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import delta_metrics, ref
+
+
+def _pair(shape, delta_scale=0.002, seed=0):
+    rng = np.random.default_rng(seed)
+    wb = rng.normal(0, 0.1, shape).astype(np.float32)
+    wp = wb + rng.normal(0, delta_scale, shape).astype(np.float32)
+    return wp, wb
+
+
+class TestSweepKernel:
+    @pytest.mark.parametrize("shape", [(128, 128), (128, 512), (512, 128), (128, 64)])
+    def test_matches_ref_block(self, shape):
+        wp, wb = _pair(shape, seed=shape[1])
+        s0 = ref.expand_block_scale(ref.absmax_scale_block(jnp.asarray(wp)), shape)
+        alphas = jnp.linspace(0.5, 2.0, 16)
+        got = np.asarray(delta_metrics.daq_sweep_pallas(
+            jnp.asarray(wp), jnp.asarray(wb), s0, alphas))
+        want = np.asarray(ref.sweep_ref(
+            jnp.asarray(wp), jnp.asarray(wb), s0, np.asarray(alphas)))
+        # sign-agreement counts may differ by O(1) element in 64k: XLA is
+        # free to fuse/contract f32 chains differently between the pallas
+        # interpret context and the jitted reference, and a weight sitting
+        # exactly on a rounding boundary can flip. Allow 2 counts; the
+        # continuous statistics must match to f32 accumulation tolerance.
+        np.testing.assert_allclose(got[:, 0], want[:, 0], atol=2.0)
+        np.testing.assert_allclose(got[:, 1:], want[:, 1:], rtol=1e-5, atol=1e-3)
+
+    def test_matches_ref_channel(self):
+        wp, wb = _pair((128, 128), seed=11)
+        s0 = jnp.broadcast_to(ref.absmax_scale_channel(jnp.asarray(wp)), (128, 128))
+        alphas = jnp.linspace(0.8, 1.25, 16)
+        got = delta_metrics.daq_sweep_pallas(jnp.asarray(wp), jnp.asarray(wb), s0, alphas)
+        want = ref.sweep_ref(jnp.asarray(wp), jnp.asarray(wb), s0, np.asarray(alphas))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-3)
+
+    def test_stats_semantics(self):
+        """Cross-check the 6 statistics against hand-rolled numpy."""
+        wp, wb = _pair((128, 128), seed=2)
+        s0 = np.full((128, 128), np.abs(wp).max() / 448.0, np.float32)
+        alpha = np.float32(1.0)
+        got = np.asarray(delta_metrics.daq_sweep_pallas(
+            jnp.asarray(wp), jnp.asarray(wb), jnp.asarray(s0),
+            jnp.asarray([alpha])))[0]
+        wq = np.asarray(ref.qdq_scaled(jnp.asarray(wp), jnp.asarray(s0)))
+        dp, dq = (wp - wb).ravel(), (wq - wb).ravel()
+        assert got[0] == np.sum(np.sign(dp) == np.sign(dq))
+        np.testing.assert_allclose(got[1], dq @ dp, rtol=1e-4)
+        np.testing.assert_allclose(got[2], dq @ dq, rtol=1e-4)
+        np.testing.assert_allclose(got[3], dp @ dp, rtol=1e-4)
+        np.testing.assert_allclose(got[4], ((wq - wp).ravel() ** 2).sum(),
+                                   rtol=1e-4, atol=1e-6)
+        assert got[5] == wp.size
+
+    def test_identity_eq7(self):
+        """Paper Eq. 7: ||dq - dp||^2 == ||Wq - Wp||^2 — the base-model-
+        agnosticism of MSE. Verified through the kernel's statistics:
+        ||dq-dp||^2 = nq - 2 dot + npost must equal sq."""
+        wp, wb = _pair((128, 256), seed=3)
+        s0 = ref.expand_block_scale(ref.absmax_scale_block(jnp.asarray(wp)), wp.shape)
+        stats = np.asarray(delta_metrics.daq_sweep_pallas(
+            jnp.asarray(wp), jnp.asarray(wb), s0, jnp.asarray([0.9, 1.0, 1.1])))
+        for row in stats:
+            agree, dot, nq, npost, sq, n = row
+            np.testing.assert_allclose(nq - 2 * dot + npost, sq, rtol=1e-3, atol=1e-4)
+
+    def test_alpha_one_slot_padding(self):
+        """Padding candidates with duplicates must give duplicate rows —
+        the Rust coordinator relies on this to reuse the NC=16 artifact."""
+        wp, wb = _pair((128, 128), seed=4)
+        s0 = ref.expand_block_scale(ref.absmax_scale_block(jnp.asarray(wp)), wp.shape)
+        alphas = jnp.asarray([1.0, 1.1, 1.0, 1.1], jnp.float32)
+        stats = np.asarray(delta_metrics.daq_sweep_pallas(
+            jnp.asarray(wp), jnp.asarray(wb), s0, alphas))
+        np.testing.assert_array_equal(stats[0], stats[2])
+        np.testing.assert_array_equal(stats[1], stats[3])
+
+    def test_metrics_ranges(self):
+        wp, wb = _pair((128, 128), seed=5)
+        s0 = ref.expand_block_scale(ref.absmax_scale_block(jnp.asarray(wp)), wp.shape)
+        stats = delta_metrics.daq_sweep_pallas(
+            jnp.asarray(wp), jnp.asarray(wb), s0, jnp.linspace(0.5, 2.0, 16))
+        m = ref.stats_to_metrics(stats)
+        assert (np.asarray(m["sign_rate"]) >= 0).all()
+        assert (np.asarray(m["sign_rate"]) <= 1).all()
+        assert (np.asarray(m["cos_sim"]) >= -1 - 1e-6).all()
+        assert (np.asarray(m["cos_sim"]) <= 1 + 1e-6).all()
+        assert (np.asarray(m["mse"]) >= 0).all()
+
+    @given(
+        shape=st.sampled_from([(64, 64), (128, 128), (64, 128), (128, 512)]),
+        delta=st.floats(min_value=1e-4, max_value=0.05),
+        nc=st.integers(min_value=1, max_value=16),
+    )
+    @settings(max_examples=15, deadline=None)
+    def test_hypothesis_sweep(self, shape, delta, nc):
+        wp, wb = _pair(shape, delta_scale=delta, seed=shape[0] + nc)
+        s0 = ref.expand_block_scale(ref.absmax_scale_block(jnp.asarray(wp)), shape)
+        alphas = jnp.linspace(0.7, 1.4, nc)
+        got = delta_metrics.daq_sweep_pallas(jnp.asarray(wp), jnp.asarray(wb), s0, alphas)
+        want = ref.sweep_ref(jnp.asarray(wp), jnp.asarray(wb), s0, np.asarray(alphas))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3)
+
+    def test_zero_delta_perfect_sign_rate_at_exact_repr(self):
+        """If W_post == W_base and quantization is exact (weights already on
+        the grid), SignRate must be 1 (0 == 0 everywhere)."""
+        w = np.asarray(ref.decode_e4m3(
+            np.random.default_rng(0).integers(1, 126, (128, 128)).astype(np.uint8)))
+        s0 = np.ones((128, 128), np.float32)
+        stats = np.asarray(delta_metrics.daq_sweep_pallas(
+            jnp.asarray(w), jnp.asarray(w), jnp.asarray(s0), jnp.asarray([1.0])))[0]
+        m = ref.stats_to_metrics(jnp.asarray(stats[None]))
+        assert float(np.asarray(m["sign_rate"])[0]) == 1.0
+        assert stats[4] == 0.0  # zero reconstruction error

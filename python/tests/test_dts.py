@@ -1,0 +1,71 @@
+"""DTS checkpoint container round-trip."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import dts
+
+
+class TestDts:
+    def test_roundtrip_mixed_dtypes(self, tmp_path):
+        t = {
+            "w": np.random.default_rng(0).normal(0, 1, (17, 31)).astype(np.float32),
+            "codes": np.arange(256, dtype=np.uint8).reshape(16, 16),
+            "tokens": np.arange(60, dtype=np.int32).reshape(3, 20),
+            "scalar": np.float32([3.5]),
+        }
+        meta = {"kind": "test", "answer": "42"}
+        p = str(tmp_path / "t.dts")
+        dts.write_dts(p, t, meta)
+        t2, m2 = dts.read_dts(p)
+        assert m2 == meta
+        assert set(t2) == set(t)
+        for k in t:
+            assert t2[k].dtype == t[k].dtype
+            np.testing.assert_array_equal(t2[k], t[k])
+
+    def test_empty_meta(self, tmp_path):
+        p = str(tmp_path / "t.dts")
+        dts.write_dts(p, {"x": np.zeros((2, 2), np.float32)})
+        t2, m2 = dts.read_dts(p)
+        assert m2 == {}
+        assert t2["x"].shape == (2, 2)
+
+    def test_bad_magic(self, tmp_path):
+        p = str(tmp_path / "bad.dts")
+        with open(p, "wb") as f:
+            f.write(b"NOPE" + b"\x00" * 32)
+        with pytest.raises(ValueError, match="bad magic"):
+            dts.read_dts(p)
+
+    def test_unsupported_dtype(self, tmp_path):
+        with pytest.raises(ValueError, match="unsupported dtype"):
+            dts.write_dts(str(tmp_path / "t.dts"), {"x": np.zeros(2, np.float64)})
+
+    def test_preserves_order_and_names(self, tmp_path):
+        names = [f"l{i}.w{j}" for i in range(4) for j in range(3)] + ["head", "embed"]
+        t = {n: np.full((2,), i, np.float32) for i, n in enumerate(names)}
+        p = str(tmp_path / "t.dts")
+        dts.write_dts(p, t)
+        t2, _ = dts.read_dts(p)
+        assert list(t2.keys()) == names
+
+    @given(
+        r=st.integers(min_value=1, max_value=64),
+        c=st.integers(min_value=1, max_value=64),
+        dt=st.sampled_from([np.float32, np.uint8, np.int32]),
+    )
+    @settings(max_examples=25, deadline=None)
+    def test_hypothesis_roundtrip(self, r, c, dt, tmp_path_factory):
+        tmp = tmp_path_factory.mktemp("dts")
+        rng = np.random.default_rng(r * 100 + c)
+        if dt is np.float32:
+            arr = rng.normal(0, 1, (r, c)).astype(dt)
+        else:
+            arr = rng.integers(0, 100, (r, c)).astype(dt)
+        p = str(tmp / "t.dts")
+        dts.write_dts(p, {"a": arr})
+        t2, _ = dts.read_dts(p)
+        np.testing.assert_array_equal(t2["a"], arr)

@@ -1,0 +1,160 @@
+"""FP8 E4M3 codec: Pallas kernel vs pure-jnp ref vs ml_dtypes oracle."""
+
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import fp8, ref
+
+
+def _rand(shape, scale=1.0, seed=0):
+    return (np.random.default_rng(seed).normal(0, scale, shape)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Reference codec properties
+# ---------------------------------------------------------------------------
+
+class TestRefCodec:
+    def test_all_256_codes_roundtrip(self):
+        """decode is a right-inverse of encode on every non-NaN code."""
+        codes = np.arange(256, dtype=np.uint8)
+        vals = np.asarray(ref.decode_e4m3(codes))
+        finite = ~np.isnan(vals)
+        re = np.asarray(ref.encode_e4m3(vals[finite]))
+        # -0 encodes to +0 code by design (sign of zero dropped)
+        expect = codes[finite].copy()
+        expect[vals[finite] == 0.0] = 0
+        assert (re == expect).all()
+
+    def test_grid_values_are_fixed_points(self):
+        codes = np.arange(256, dtype=np.uint8)
+        vals = np.asarray(ref.decode_e4m3(codes))
+        vals = vals[~np.isnan(vals)]
+        q = np.asarray(ref.qdq_e4m3(vals))
+        assert (q == vals).all()
+
+    def test_matches_ml_dtypes_in_range(self):
+        """ml_dtypes.float8_e4m3fn is an independent implementation; we must
+        agree on every value that does not overflow (|x| < 464 where
+        ml_dtypes produces NaN and we saturate)."""
+        rng = np.random.default_rng(7)
+        x = np.concatenate([
+            rng.normal(0, 1, 50000), rng.normal(0, 100, 50000),
+            rng.uniform(-463.9, 463.9, 50000), rng.normal(0, 1e-3, 50000),
+        ]).astype(np.float32)
+        x = x[np.abs(x) < 464.0]
+        ours = np.asarray(ref.qdq_e4m3(x))
+        oracle = x.astype(ml_dtypes.float8_e4m3fn).astype(np.float32)
+        np.testing.assert_array_equal(ours, oracle)
+
+    def test_saturation(self):
+        x = np.array([1e9, -1e9, 448.0, -448.0, 465.0], np.float32)
+        q = np.asarray(ref.qdq_e4m3(x))
+        np.testing.assert_array_equal(q, [448.0, -448.0, 448.0, -448.0, 448.0])
+
+    def test_subnormals(self):
+        # subnormal grid: k * 2^-9 for k = 0..7
+        ks = np.arange(8, dtype=np.float32)
+        x = ks * 2.0 ** -9
+        np.testing.assert_array_equal(np.asarray(ref.qdq_e4m3(x)), x)
+        # halfway points round to even
+        half = (ks[:-1] + 0.5) * 2.0 ** -9
+        q = np.asarray(ref.qdq_e4m3(half))
+        expect = np.round(half * 512.0) * 2.0 ** -9  # numpy round is RNE
+        np.testing.assert_array_equal(q, expect)
+
+    def test_zero_and_tiny(self):
+        x = np.array([0.0, -0.0, 1e-12, -1e-12, 2.0 ** -10], np.float32)
+        q = np.asarray(ref.qdq_e4m3(x))
+        assert q[0] == 0 and q[1] == 0 and q[2] == 0 and q[3] == 0
+        assert q[4] == 0.0  # 2^-10 is below half the subnormal step? No: step 2^-9, half-step 2^-10 ties to even -> 0
+        # one ulp above the tie rounds up to the first subnormal
+        q2 = float(np.asarray(ref.qdq_e4m3(np.float32(2.0 ** -10 * 1.001))))
+        assert q2 == 2.0 ** -9
+
+    def test_rne_tie_breaking(self):
+        # 0.4375 = halfway between 0.4375-? choose within binade [0.25,0.5):
+        # step = 2^-2/8? exp(-2): step=2^-5=0.03125; grid ...0.40625,0.4375 on-grid
+        assert float(np.asarray(ref.qdq_e4m3(np.float32(0.4375)))) == 0.4375
+        # 17 lies between 16 and 18 (step 2 at exp 4); midpoint 17 ties -> 16 (even multiple)
+        assert float(np.asarray(ref.qdq_e4m3(np.float32(17.0)))) == 16.0
+        # 19 ties between 18 and 20 -> 20 (even multiple: 20/2=10)
+        assert float(np.asarray(ref.qdq_e4m3(np.float32(19.0)))) == 20.0
+
+    @given(st.floats(min_value=-448, max_value=448, width=32))
+    @settings(max_examples=300, deadline=None)
+    def test_hypothesis_idempotent_and_near(self, v):
+        x = np.float32(v)
+        q = float(np.asarray(ref.qdq_e4m3(x)))
+        # idempotent
+        assert float(np.asarray(ref.qdq_e4m3(np.float32(q)))) == q
+        # relative error bound: half ulp = 2^-4 relative, or absolute 2^-10 in subnormals
+        assert abs(q - float(x)) <= max(abs(float(x)) * 2.0 ** -4, 2.0 ** -10) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel vs ref
+# ---------------------------------------------------------------------------
+
+class TestPallasQdq:
+    @pytest.mark.parametrize("shape", [(128, 128), (128, 512), (512, 128),
+                                       (128, 64), (64, 64), (256, 256)])
+    def test_matches_ref_block_scale(self, shape):
+        w = _rand(shape, 0.1, seed=shape[0] + shape[1])
+        s0 = ref.expand_block_scale(ref.absmax_scale_block(jnp.asarray(w)), shape)
+        got = fp8.qdq_scaled_pallas(jnp.asarray(w), s0)
+        want = ref.qdq_scaled(jnp.asarray(w), s0)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("shape", [(128, 128), (128, 64)])
+    def test_matches_ref_channel_scale(self, shape):
+        w = _rand(shape, 0.5, seed=3)
+        s0 = jnp.broadcast_to(ref.absmax_scale_channel(jnp.asarray(w)), shape)
+        got = fp8.qdq_scaled_pallas(jnp.asarray(w), s0)
+        want = ref.qdq_scaled(jnp.asarray(w), s0)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @given(
+        r=st.sampled_from([32, 64, 128, 256]),
+        c=st.sampled_from([32, 64, 128, 512]),
+        scale=st.floats(min_value=1e-4, max_value=10.0),
+    )
+    @settings(max_examples=20, deadline=None)
+    def test_hypothesis_shapes_scales(self, r, c, scale):
+        w = _rand((r, c), scale, seed=r * 1000 + c)
+        s = jnp.full((r, c), np.float32(max(np.abs(w).max(), 1e-6) / 448.0))
+        got = fp8.qdq_scaled_pallas(jnp.asarray(w), s)
+        want = ref.qdq_scaled(jnp.asarray(w), s)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+class TestScaleInit:
+    def test_block_scale_shape_and_value(self):
+        w = _rand((256, 384), 1.0, seed=5)
+        s0 = np.asarray(ref.absmax_scale_block(jnp.asarray(w), 128))
+        assert s0.shape == (2, 3)
+        blk = np.abs(w[:128, :128]).max()
+        assert np.isclose(s0[0, 0], blk / 448.0)
+
+    def test_block_scale_zero_block(self):
+        w = np.zeros((128, 128), np.float32)
+        s0 = np.asarray(ref.absmax_scale_block(jnp.asarray(w)))
+        assert (s0 == 1.0).all()
+
+    def test_channel_scale(self):
+        w = _rand((64, 32), 1.0, seed=6)
+        s0 = np.asarray(ref.absmax_scale_channel(jnp.asarray(w)))
+        assert s0.shape == (1, 32)
+        np.testing.assert_allclose(s0[0], np.abs(w).max(axis=0) / 448.0, rtol=1e-6)
+
+    def test_expand_block_scale_roundtrip(self):
+        w = _rand((256, 256), 1.0, seed=8)
+        s0 = ref.absmax_scale_block(jnp.asarray(w), 128)
+        full = np.asarray(ref.expand_block_scale(s0, (256, 256), 128))
+        assert full.shape == (256, 256)
+        assert (full[:128, :128] == np.asarray(s0)[0, 0]).all()
+        assert (full[128:, 128:] == np.asarray(s0)[1, 1]).all()

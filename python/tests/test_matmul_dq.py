@@ -1,0 +1,68 @@
+"""Dequantize-matmul Pallas kernel vs reference."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import matmul_dq, ref
+
+
+def _quantized_weight(k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 0.1, (k, n)).astype(np.float32)
+    s0 = np.asarray(ref.expand_block_scale(
+        ref.absmax_scale_block(jnp.asarray(w)), (k, n)))
+    codes = np.asarray(ref.encode_e4m3(w / s0))
+    return codes, s0
+
+
+class TestMatmulDq:
+    @pytest.mark.parametrize("b,k,n", [(8, 128, 512), (8, 128, 128),
+                                       (32, 128, 128), (8, 512, 128)])
+    def test_matches_ref(self, b, k, n):
+        codes, s0 = _quantized_weight(k, n, seed=k + n)
+        x = np.random.default_rng(1).normal(0, 1, (b, k)).astype(np.float32)
+        got = matmul_dq.matmul_dq_pallas(jnp.asarray(x), jnp.asarray(codes),
+                                         jnp.asarray(s0))
+        want = ref.matmul_dq_ref(jnp.asarray(x), jnp.asarray(codes), jnp.asarray(s0))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_decode_consistency_with_codec(self):
+        """The kernel's in-register decoder must equal ref.decode_e4m3 on
+        every non-NaN code."""
+        codes = np.arange(256, dtype=np.uint8)
+        nan = (codes & 0x7F) == 0x7F
+        x = np.eye(256, dtype=np.float32)[:8]  # selects rows
+        got = np.asarray(matmul_dq.matmul_dq_pallas(
+            jnp.asarray(x), jnp.asarray(codes[:, None] * np.ones((1, 128), np.uint8)),
+            jnp.ones((256, 128), jnp.float32)))
+        want = np.asarray(ref.decode_e4m3(codes[:8]))[:, None] * np.ones((1, 128))
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+        assert not nan[:8].any()
+
+    def test_identity_weight(self):
+        """dequant(encode(I)) == I (0 and 1 are exactly representable)."""
+        eye = np.eye(128, dtype=np.float32)
+        codes = np.asarray(ref.encode_e4m3(eye))
+        x = np.random.default_rng(2).normal(0, 1, (8, 128)).astype(np.float32)
+        got = np.asarray(matmul_dq.matmul_dq_pallas(
+            jnp.asarray(x), jnp.asarray(codes), jnp.ones((128, 128), jnp.float32)))
+        np.testing.assert_allclose(got, x, rtol=1e-6)
+
+    @given(
+        b=st.sampled_from([1, 4, 8]),
+        k=st.sampled_from([64, 128]),
+        n=st.sampled_from([64, 128, 256]),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_hypothesis_shapes(self, b, k, n):
+        codes, s0 = _quantized_weight(k, n, seed=b * 7 + k + n)
+        x = np.random.default_rng(3).normal(0, 1, (b, k)).astype(np.float32)
+        got = matmul_dq.matmul_dq_pallas(jnp.asarray(x), jnp.asarray(codes),
+                                         jnp.asarray(s0))
+        want = ref.matmul_dq_ref(jnp.asarray(x), jnp.asarray(codes), jnp.asarray(s0))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-4)

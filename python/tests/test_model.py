@@ -1,0 +1,134 @@
+"""Model shapes, loss behaviour, corpus invariants, rubric semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import corpus, model
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return model.ModelConfig()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    return model.init_params(cfg, jax.random.PRNGKey(0))
+
+
+class TestModel:
+    def test_forward_shape(self, cfg, params):
+        tok = jnp.zeros((4, cfg.seq_len), jnp.int32)
+        logits = model.forward(params, tok, cfg)
+        assert logits.shape == (4, cfg.seq_len, cfg.vocab)
+
+    def test_forward_finite(self, cfg, params):
+        rng = np.random.default_rng(0)
+        tok = jnp.asarray(corpus.general_batch(rng, 4))
+        logits = model.forward(params, tok, cfg)
+        assert bool(jnp.isfinite(logits).all())
+
+    def test_causality(self, cfg, params):
+        """Changing a future token must not change past logits."""
+        rng = np.random.default_rng(1)
+        tok = corpus.general_batch(rng, 2)
+        l1 = model.forward(params, jnp.asarray(tok), cfg)
+        tok2 = tok.copy()
+        tok2[:, -1] = (tok2[:, -1] + 5) % corpus.VOCAB
+        l2 = model.forward(params, jnp.asarray(tok2), cfg)
+        np.testing.assert_allclose(np.asarray(l1[:, :-1]), np.asarray(l2[:, :-1]),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_quantizable_names_exist(self, cfg, params):
+        for n in model.quantizable_names(cfg):
+            assert n in params
+            assert params[n].ndim == 2
+
+    def test_param_count(self, cfg, params):
+        n = cfg.param_count(params)
+        assert n > 300_000  # sanity for the default 2-layer config
+
+    def test_loss_positive_and_decreasing_on_overfit(self, cfg):
+        """A few Adam steps on one batch must reduce loss (substrate works)."""
+        from compile.train import adam_init, adam_update
+        p = model.init_params(cfg, jax.random.PRNGKey(1))
+        rng = np.random.default_rng(2)
+        batch = jnp.asarray(corpus.general_batch(rng, 16))
+        opt = adam_init(p)
+        l0 = float(model.loss_fn(p, batch, cfg))
+        step = jax.jit(
+            lambda p, o: (lambda lg: adam_update(p, lg[1], o, 1e-3) + (lg[0],))(
+                jax.value_and_grad(model.loss_fn)(p, batch, cfg)))
+        for _ in range(30):
+            p, opt, loss = step(p, opt)
+        assert l0 > 0
+        assert float(loss) < l0 * 0.9
+
+    def test_collect_acts(self, cfg, params):
+        tok = jnp.zeros((2, cfg.seq_len), jnp.int32)
+        _, acts = model.forward(params, tok, cfg, collect_acts=True)
+        assert set(acts) == set(model.quantizable_names(cfg))
+        assert acts["l0.wq"].shape == (cfg.d_model,)
+        assert acts["l0.w2"].shape == (cfg.d_ff,)
+
+    def test_masked_accuracy_bounds(self, cfg, params):
+        rng = np.random.default_rng(3)
+        tok, mask = corpus.general_eval_set(rng, 8)
+        acc = model.masked_accuracy(params, jnp.asarray(tok), jnp.asarray(mask), cfg)
+        assert 0.0 <= acc <= 1.0
+
+
+class TestCorpus:
+    def test_general_sample_structure(self):
+        rng = np.random.default_rng(0)
+        s = corpus.general_sample(rng)
+        assert len(s) == corpus.SEQ_LEN
+        assert s[0] == corpus.BOS
+        assert corpus.EOS in s
+        # no style tokens ever in the general corpus
+        assert all(t < corpus.STYLE_BASE for t in s)
+
+    def test_styled_sample_structure(self):
+        rng = np.random.default_rng(1)
+        s = corpus.styled_sample(rng)
+        assert s[0] == corpus.BOS
+        sep = s.index(corpus.SEP)
+        assert sep == 1 + corpus.PROMPT_LEN
+        sig = s[sep + 1 : sep + 1 + corpus.STYLE_SIG_LEN]
+        assert all(corpus.STYLE_BASE <= t < corpus.VOCAB for t in sig)
+        # signature is the deterministic function of the first two body tokens
+        assert sig == corpus.style_signature(s[1], s[2])
+
+    def test_stride_pattern_deterministic_continuation(self):
+        toks = corpus._stride_tokens(5, 3, 10)
+        for i in range(2, 10):
+            assert toks[i] == corpus._content(5 + 3 * i)
+
+    def test_eval_sets_masks(self):
+        rng = np.random.default_rng(2)
+        tok, mask = corpus.style_eval_set(rng, 16)
+        assert tok.shape == mask.shape == (16, corpus.SEQ_LEN)
+        assert (mask.sum(axis=1) == corpus.STYLE_SIG_LEN).all()
+        tok2, mask2 = corpus.general_eval_set(rng, 16)
+        assert (mask2.sum(axis=1) > 0).all()
+
+    def test_masked_positions_predict_style_tokens(self):
+        """Every scored style position's target must be a style token."""
+        rng = np.random.default_rng(3)
+        tok, mask = corpus.style_eval_set(rng, 32)
+        for i in range(32):
+            for t in range(corpus.SEQ_LEN - 1):
+                if mask[i, t]:
+                    assert tok[i, t + 1] >= corpus.STYLE_BASE
+
+    def test_rubric_mapping(self):
+        assert corpus.accuracy_to_rubric(0.0) == 0.0
+        assert corpus.accuracy_to_rubric(1.0) == 2.0
+        assert corpus.accuracy_to_rubric(0.5) == 1.0
+
+    def test_determinism(self):
+        a = corpus.general_batch(np.random.default_rng(7), 8)
+        b = corpus.general_batch(np.random.default_rng(7), 8)
+        np.testing.assert_array_equal(a, b)

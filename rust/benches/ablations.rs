@@ -1,0 +1,132 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//!  A1. Search strategy: Algorithm 1 (coarse-to-fine) vs exhaustive grid
+//!      vs golden-section, at matched and unmatched evaluation budgets.
+//!      (Why the paper's grid search is the right default: SignRate is
+//!      piecewise-constant, so golden-section's unimodality assumption
+//!      fails.)
+//!  A2. Numeric format: E4M3 vs E5M2 (paper §5 "lower bit-widths" /
+//!      format generality) — delta fidelity at matched storage cost.
+//!  A3. Granularity sweep: per-tensor vs per-channel vs block {32,64,128}.
+//!
+//! Runs on synthetic small-delta pairs (no artifacts needed), and on the
+//! real checkpoints when present.
+
+use daq::fp8;
+use daq::metrics::{delta_stats, DeltaStats};
+use daq::quant::{absmax_scales, qdq, Granularity};
+use daq::report::{fmt3, fmt_pct, Table};
+use daq::search::{
+    search_exhaustive, search_golden, search_scale_with, NativeSweep, Objective,
+    SearchConfig,
+};
+use daq::tensor::Tensor;
+use daq::util::rng::XorShift;
+
+fn pair(r: usize, c: usize, delta: f32, seed: u64) -> (Tensor, Tensor) {
+    let mut rng = XorShift::new(seed);
+    let wb = Tensor::new(vec![r, c], rng.normal_vec(r * c, 0.1));
+    let wp = Tensor::new(
+        vec![r, c],
+        wb.data().iter().map(|&b| b + rng.normal() * delta).collect(),
+    );
+    (wp, wb)
+}
+
+fn main() {
+    let (wp, wb) = pair(256, 256, 0.0015, 11);
+    let s0 = absmax_scales(&wp, Granularity::Block(128));
+
+    // ---- A1: search strategies ----
+    let mut t = Table::new(
+        "A1: search strategy (objective = SignRate, range [0.8, 1.25])",
+        &["strategy", "evals", "alpha*", "SignRate"],
+    );
+    let cfg = SearchConfig::paper_default(Objective::SignRate, (0.8, 1.25));
+    let ctf = search_scale_with(&NativeSweep, &wp, &wb, &s0, &cfg);
+    t.row(vec!["coarse-to-fine (Algorithm 1)".into(), ctf.evals.to_string(),
+               format!("{:.4}", ctf.alpha), fmt_pct(ctf.stats.sign_rate())]);
+    for n in [16usize, 64, 256] {
+        let ex = search_exhaustive(&NativeSweep, &wp, &wb, &s0,
+                                   Objective::SignRate, (0.8, 1.25), n);
+        t.row(vec![format!("exhaustive grid (n={n})"), ex.evals.to_string(),
+                   format!("{:.4}", ex.alpha), fmt_pct(ex.stats.sign_rate())]);
+    }
+    let gold = search_golden(&NativeSweep, &wp, &wb, &s0,
+                             Objective::SignRate, (0.8, 1.25), 14);
+    t.row(vec!["golden-section (unimodal assumption)".into(),
+               gold.evals.to_string(), format!("{:.4}", gold.alpha),
+               fmt_pct(gold.stats.sign_rate())]);
+    println!("{}", t.render());
+
+    // ---- A2: numeric format ----
+    let mut t = Table::new(
+        "A2: format ablation at alpha=1 (same scale machinery)",
+        &["format", "SignRate", "CosSim", "MSE"],
+    );
+    let stats_for = |f: &dyn Fn(f32) -> f32| -> DeltaStats {
+        let (rows, cols) = (wp.rows(), wp.cols());
+        let mut wq = Tensor::zeros(vec![rows, cols]);
+        for r in 0..rows {
+            for c in 0..cols {
+                let s = s0.at(r, c);
+                wq.set2(r, c, f(wp.at2(r, c) / s) * s);
+            }
+        }
+        delta_stats(&wp, &wb, &wq)
+    };
+    // E5M2 shares the absmax scale convention: rescale to its own max
+    let ratio = fp8::e5m2_ratio();
+    let e4 = stats_for(&fp8::qdq_e4m3);
+    let e5 = stats_for(&|x| fp8::qdq_e5m2(x * ratio) / ratio);
+    t.row(vec!["E4M3 (paper)".into(), fmt_pct(e4.sign_rate()),
+               fmt3(e4.cos_sim()), format!("{:.3e}", e4.mse())]);
+    t.row(vec!["E5M2".into(), fmt_pct(e5.sign_rate()),
+               fmt3(e5.cos_sim()), format!("{:.3e}", e5.mse())]);
+    println!("{}", t.render());
+
+    // ---- A3: granularity ----
+    let mut t = Table::new(
+        "A3: granularity (AbsMax, alpha = 1)",
+        &["granularity", "scales stored", "SignRate", "CosSim"],
+    );
+    for gran in [
+        Granularity::PerTensor,
+        Granularity::PerChannel,
+        Granularity::Block(128),
+        Granularity::Block(64),
+        Granularity::Block(32),
+    ] {
+        let s = absmax_scales(&wp, gran);
+        let wq = qdq(&wp, &s, 1.0);
+        let st = delta_stats(&wp, &wb, &wq);
+        t.row(vec![gran.label(), s.scales.len().to_string(),
+                   fmt_pct(st.sign_rate()), fmt3(st.cos_sim())]);
+    }
+    println!("{}", t.render());
+
+    // ---- real checkpoints (optional) ----
+    if let Ok(lab) = daq::experiments::Lab::open(
+        &std::env::var("DAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+        false,
+    ) {
+        let mut t = Table::new(
+            "A1 on real checkpoints: per-layer alpha histogram (sign, [0.8,1.25])",
+            &["layer", "alpha*", "SignRate"],
+        );
+        for name in lab.quantizable.iter().take(8) {
+            let wp = lab.post.tensor_f32(name).unwrap();
+            let wb = lab.base.tensor_f32(name).unwrap();
+            let s0 = absmax_scales(&wp, Granularity::Block(128));
+            let res = search_scale_with(
+                &NativeSweep, &wp, &wb, &s0,
+                &SearchConfig::paper_default(Objective::SignRate, (0.8, 1.25)),
+            );
+            t.row(vec![name.clone(), format!("{:.4}", res.alpha),
+                       fmt_pct(res.stats.sign_rate())]);
+        }
+        println!("{}", t.render());
+    } else {
+        eprintln!("real-checkpoint section skipped (no artifacts)");
+    }
+}

@@ -1,0 +1,118 @@
+//! Bench: §Perf — hot-path profiling across the stack:
+//!   L3 native fused sweep throughput (the coordinator's hot loop),
+//!   thread-pool scaling, PJRT sweep vs native (when artifacts exist),
+//!   and end-to-end pipeline latency.
+
+use daq::experiments::Lab;
+use daq::coordinator::Method;
+use daq::metrics::{sweep_native, sweep_native_regions};
+use daq::quant::{absmax_scales, Granularity};
+use daq::report::Table;
+use daq::search::Objective;
+use daq::tensor::Tensor;
+use daq::util::bench::bench;
+use daq::util::rng::XorShift;
+
+fn pair(r: usize, c: usize, seed: u64) -> (Tensor, Tensor) {
+    let mut rng = XorShift::new(seed);
+    let wb = Tensor::new(vec![r, c], rng.normal_vec(r * c, 0.1));
+    let wp = Tensor::new(
+        vec![r, c],
+        wb.data().iter().map(|&b| b + rng.normal() * 0.002).collect(),
+    );
+    (wp, wb)
+}
+
+fn main() {
+    // --- §Perf iteration 1: naive elementwise sweep vs region-hoisted ---
+    {
+        let (wp, wb) = pair(512, 512, 3);
+        let alphas: Vec<f32> = (0..16).map(|i| 0.8 + 0.028 * i as f32).collect();
+        let mut t = Table::new(
+            "Sweep optimization (512x512, 16 candidates)",
+            &["variant", "granularity", "mean ms", "speedup"],
+        );
+        for gran in [Granularity::Block(128), Granularity::PerChannel] {
+            let s0 = absmax_scales(&wp, gran);
+            let naive = bench("naive", 1, 5, || sweep_native(&wp, &wb, &s0, &alphas));
+            let fast = bench("optimized", 1, 5, || sweep_native_regions(&wp, &wb, &s0, &alphas));
+            t.row(vec!["naive (per-element scale lookup)".into(), gran.label(),
+                       format!("{:.2}", naive.mean_s * 1e3), "1.00x".into()]);
+            t.row(vec!["optimized (region-hoisted)".into(), gran.label(),
+                       format!("{:.2}", fast.mean_s * 1e3),
+                       format!("{:.2}x", naive.mean_s / fast.mean_s)]);
+        }
+        println!("{}", t.render());
+    }
+
+    // --- L3 native sweep throughput across shapes/granularities ---
+    let mut t = Table::new(
+        "Native fused sweep throughput (16 candidates)",
+        &["shape", "granularity", "mean ms", "Melem/s (xNC)"],
+    );
+    let alphas: Vec<f32> = (0..16).map(|i| 0.8 + 0.028 * i as f32).collect();
+    for (r, c) in [(128usize, 128usize), (128, 512), (512, 512), (1024, 1024)] {
+        let (wp, wb) = pair(r, c, (r + c) as u64);
+        for gran in [Granularity::Block(128), Granularity::PerChannel] {
+            let s0 = absmax_scales(&wp, gran);
+            let res = bench(&format!("{r}x{c}/{}", gran.label()), 1, 5, || {
+                sweep_native(&wp, &wb, &s0, &alphas)
+            });
+            let melem = (r * c * 16) as f64 / res.mean_s / 1e6;
+            t.row(vec![format!("{r}x{c}"), gran.label(),
+                       format!("{:.2}", res.mean_s * 1e3),
+                       format!("{melem:.1}")]);
+        }
+    }
+    println!("{}", t.render());
+
+    // --- full-pipeline latency on the real checkpoints (if present) ---
+    let dir = std::env::var("DAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let lab_native = Lab::open(&dir, false);
+    if let Ok(lab) = &lab_native {
+        let mut t = Table::new(
+            "End-to-end pipeline latency (quantize all layers)",
+            &["method", "engine", "secs"],
+        );
+        for (label, method) in [
+            ("absmax", Method::AbsMax),
+            ("daq-sign [0.8,1.25]",
+             Method::Search { objective: Objective::SignRate, range: (0.8, 1.25) }),
+        ] {
+            let res = bench(label, 0, 3, || {
+                lab.quantize_native(Granularity::Block(128), method.clone()).unwrap()
+            });
+            t.row(vec![label.into(), "native".into(),
+                       format!("{:.3}", res.mean_s)]);
+        }
+        println!("{}", t.render());
+    } else {
+        eprintln!("pipeline section skipped (no artifacts)");
+    }
+
+    // --- PJRT sweep vs native on one layer ---
+    if std::env::var("DAQ_ENGINE").as_deref() == Ok("pjrt") {
+        if let Ok(lab) = Lab::open(&dir, true) {
+            let rt = lab.rt.as_ref().unwrap();
+            let name = &lab.quantizable[0];
+            let wp = lab.post.tensor_f32(name).unwrap();
+            let wb = lab.base.tensor_f32(name).unwrap();
+            let s0 = absmax_scales(&wp, Granularity::Block(128));
+            let s0_full = s0.expand();
+            let mut t = Table::new(
+                &format!("Sweep engines on layer {name} ({:?})", wp.shape()),
+                &["engine", "mean ms"],
+            );
+            let rn = bench("native", 1, 5, || sweep_native(&wp, &wb, &s0, &alphas));
+            t.row(vec!["native".into(), format!("{:.2}", rn.mean_s * 1e3)]);
+            let rp = bench("pjrt", 1, 5, || {
+                rt.sweep(&wp, &wb, &s0_full, &alphas).unwrap()
+            });
+            t.row(vec!["pjrt (Pallas artifact)".into(),
+                       format!("{:.2}", rp.mean_s * 1e3)]);
+            println!("{}", t.render());
+        }
+    } else {
+        eprintln!("PJRT section skipped (set DAQ_ENGINE=pjrt to include)");
+    }
+}

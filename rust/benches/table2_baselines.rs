@@ -1,0 +1,29 @@
+//! Bench: Table 2 — baseline comparison (Base, Post, AbsMax FP8 block &
+//! channel, SmoothQuant, AWQ) with the paper's columns (ΔW L2, SignRate,
+//! CosSim, Style, General).
+//!
+//! Requires `make artifacts`. Engine: native by default; set
+//! DAQ_ENGINE=pjrt to run metric sweeps + eval through the AOT artifacts.
+
+use daq::experiments::{table2, Lab};
+
+fn main() {
+    let dir = std::env::var("DAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let use_pjrt = std::env::var("DAQ_ENGINE").as_deref() == Ok("pjrt");
+    let lab = match Lab::open(&dir, use_pjrt) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("table2 bench skipped: {e:#}\n(run `make artifacts` first)");
+            return;
+        }
+    };
+    let t0 = std::time::Instant::now();
+    match table2(&lab) {
+        Ok(t) => {
+            println!("{}", t.render());
+            println!("[total {:.1}s, engine={}]", t0.elapsed().as_secs_f64(),
+                     if use_pjrt { "pjrt" } else { "native" });
+        }
+        Err(e) => eprintln!("table2 failed: {e:#}"),
+    }
+}

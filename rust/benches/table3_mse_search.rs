@@ -1,0 +1,25 @@
+//! Bench: Table 3 — coarse-to-fine scale search with the MSE metric
+//! (the paper's negative result: delta-unaware search degrades Style).
+
+use daq::experiments::{table_search, Lab};
+use daq::search::Objective;
+
+fn main() {
+    let dir = std::env::var("DAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let use_pjrt = std::env::var("DAQ_ENGINE").as_deref() == Ok("pjrt");
+    let lab = match Lab::open(&dir, use_pjrt) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("table3 bench skipped: {e:#}\n(run `make artifacts` first)");
+            return;
+        }
+    };
+    let t0 = std::time::Instant::now();
+    match table_search(&lab, Objective::NegMse) {
+        Ok(t) => {
+            println!("{}", t.render());
+            println!("[total {:.1}s]", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => eprintln!("table3 failed: {e:#}"),
+    }
+}

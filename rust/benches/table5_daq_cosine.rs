@@ -1,0 +1,26 @@
+//! Bench: Table 5 — DAQ with the Cosine Similarity metric, plus the §3.5
+//! monotonicity analysis (cosine improves near-monotonically as the
+//! search range narrows; sign is peakier).
+
+use daq::experiments::{table_search, Lab};
+use daq::search::Objective;
+
+fn main() {
+    let dir = std::env::var("DAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let use_pjrt = std::env::var("DAQ_ENGINE").as_deref() == Ok("pjrt");
+    let lab = match Lab::open(&dir, use_pjrt) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("table5 bench skipped: {e:#}\n(run `make artifacts` first)");
+            return;
+        }
+    };
+    let t0 = std::time::Instant::now();
+    match table_search(&lab, Objective::CosSim) {
+        Ok(t) => {
+            println!("{}", t.render());
+            println!("[total {:.1}s]", t0.elapsed().as_secs_f64());
+        }
+        Err(e) => eprintln!("table5 failed: {e:#}"),
+    }
+}

@@ -1,0 +1,250 @@
+//! PTQ baselines from the paper's Table 2: AbsMax (no search), MSE-guided
+//! search (Table 3), SmoothQuant, and AWQ.
+//!
+//! SmoothQuant and AWQ operate through an *equivalent per-channel
+//! transformation*: the weight is rescaled per input channel and the
+//! inverse scaling is folded into the preceding LayerNorm's affine
+//! parameters, so the network function is unchanged (up to quantization).
+//! As the paper notes (Table 2 footnote ‡), the transformed weights no
+//! longer share the base model's numerical space, so the delta metrics
+//! are undefined for these baselines — our pipeline reports them as such.
+
+use std::collections::BTreeMap;
+
+use crate::quant::{absmax_scales, quantize_with_scales, Granularity, QuantizedTensor};
+use crate::tensor::Tensor;
+
+/// Per-input-channel smoothing factors for one GEMM:
+/// `s_j = max(|X_j|)^alpha / max(|W_j|)^(1-alpha)` (SmoothQuant Eq. 4).
+///
+/// `act_stat[j]` is the calibration statistic of input channel j (we use
+/// the mean |activation| collected by the trainer; SmoothQuant's max works
+/// the same way at these shapes). `w` is `[in, out]`; `max|W_j|` reduces
+/// over the output dim for each input channel (row).
+pub fn smoothquant_factors(w: &Tensor, act_stat: &[f32], alpha: f32) -> Vec<f32> {
+    let (rows, cols) = (w.rows(), w.cols());
+    assert_eq!(act_stat.len(), rows, "act stat per input channel");
+    let mut wmax = vec![0.0f32; rows];
+    for r in 0..rows {
+        for c in 0..cols {
+            wmax[r] = wmax[r].max(w.at2(r, c).abs());
+        }
+    }
+    (0..rows)
+        .map(|r| {
+            let a = act_stat[r].max(1e-8).powf(alpha);
+            let wpow = wmax[r].max(1e-8).powf(1.0 - alpha);
+            (a / wpow).max(1e-6)
+        })
+        .collect()
+}
+
+/// Apply row scaling: `W'[r, c] = W[r, c] * s[r]` (the weight absorbs the
+/// activation difficulty; activations would be divided by `s` — which the
+/// caller folds into the preceding normalization layer).
+pub fn scale_rows(w: &Tensor, s: &[f32]) -> Tensor {
+    let (rows, cols) = (w.rows(), w.cols());
+    assert_eq!(s.len(), rows);
+    let mut out = w.clone();
+    for r in 0..rows {
+        for c in 0..cols {
+            let v = out.at2(r, c) * s[r];
+            out.set2(r, c, v);
+        }
+    }
+    out
+}
+
+/// SmoothQuant baseline for one GEMM: smooth, then AbsMax-quantize.
+/// Returns the quantized transformed weight and the factors the caller
+/// must fold into the upstream affine (divide gain/bias by `s`).
+pub fn smoothquant_gemm(
+    w: &Tensor,
+    act_stat: &[f32],
+    alpha: f32,
+    granularity: Granularity,
+) -> (QuantizedTensor, Vec<f32>) {
+    let s = smoothquant_factors(w, act_stat, alpha);
+    let w2 = scale_rows(w, &s);
+    let s0 = absmax_scales(&w2, granularity);
+    (quantize_with_scales(&w2, &s0, 1.0), s)
+}
+
+/// AWQ-style baseline for one GEMM: grid-search the salience exponent
+/// `alpha ∈ {0, 0.25, .., 1}` minimizing an activation-weighted
+/// reconstruction proxy `sum_j act_j * ||W_j - Q(W'_j)/s_j||²`
+/// (per-channel scaling protects activation-salient channels).
+pub fn awq_gemm(
+    w: &Tensor,
+    act_stat: &[f32],
+    granularity: Granularity,
+) -> (QuantizedTensor, Vec<f32>, f32) {
+    let (rows, cols) = (w.rows(), w.cols());
+    let mut best: Option<(f64, f32, QuantizedTensor, Vec<f32>)> = None;
+    for step in 0..5 {
+        let alpha = step as f32 * 0.25;
+        let s: Vec<f32> = act_stat
+            .iter()
+            .map(|a| a.max(1e-8).powf(alpha).max(1e-6))
+            .collect();
+        let w2 = scale_rows(w, &s);
+        let s0 = absmax_scales(&w2, granularity);
+        let q = quantize_with_scales(&w2, &s0, 1.0);
+        let deq = q.dequantize();
+        // reconstruction in the ORIGINAL space: W ≈ deq / s (rows)
+        let mut err = 0.0f64;
+        for r in 0..rows {
+            let a = act_stat[r] as f64;
+            for c in 0..cols {
+                let rec = deq.at2(r, c) / s[r];
+                let d = (rec - w.at2(r, c)) as f64;
+                err += a * d * d;
+            }
+        }
+        if best.as_ref().map(|(e, ..)| err < *e).unwrap_or(true) {
+            best = Some((err, alpha, q, s));
+        }
+    }
+    let (_, alpha, q, s) = best.unwrap();
+    (q, s, alpha)
+}
+
+/// A transformed-and-quantized model layer set with the affine folds the
+/// serving path must apply. Keyed by tensor name.
+#[derive(Default)]
+pub struct TransformedModel {
+    /// name -> dequantized weight in the *transformed* space
+    pub weights: BTreeMap<String, Tensor>,
+    /// layernorm-param name -> per-channel divisor folded into it
+    pub ln_folds: BTreeMap<String, Vec<f32>>,
+}
+
+/// Fold the inverse smoothing into a layernorm's gain and bias so the
+/// network function is preserved: ln'(x) = ln(x) / s.
+pub fn fold_into_layernorm(gain: &mut [f32], bias: &mut [f32], s: &[f32]) {
+    assert_eq!(gain.len(), s.len());
+    assert_eq!(bias.len(), s.len());
+    for j in 0..s.len() {
+        gain[j] /= s[j];
+        bias[j] /= s[j];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops::matmul;
+    use crate::util::rng::XorShift;
+
+    fn rand_w(r: usize, c: usize, seed: u64) -> Tensor {
+        let mut rng = XorShift::new(seed);
+        Tensor::new(vec![r, c], rng.normal_vec(r * c, 0.1))
+    }
+
+    fn rand_acts(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = XorShift::new(seed);
+        (0..n).map(|_| rng.f32() * 2.0 + 0.05).collect()
+    }
+
+    #[test]
+    fn smoothquant_factors_balance_scales() {
+        let w = rand_w(32, 16, 1);
+        let mut acts = rand_acts(32, 2);
+        acts[3] = 100.0; // an activation outlier channel
+        let s = smoothquant_factors(&w, &acts, 0.5);
+        // the outlier channel gets the largest smoothing factor
+        let max_idx = s
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(max_idx, 3);
+        assert!(s.iter().all(|&v| v > 0.0));
+    }
+
+    #[test]
+    fn equivalent_transformation_preserves_function() {
+        // (x / s) @ (W * s) == x @ W exactly in math; verify to f32 tol
+        let w = rand_w(16, 8, 3);
+        let acts = rand_acts(16, 4);
+        let s = smoothquant_factors(&w, &acts, 0.5);
+        let w2 = scale_rows(&w, &s);
+        let mut rng = XorShift::new(5);
+        let x = Tensor::new(vec![4, 16], rng.normal_vec(64, 1.0));
+        let xs = Tensor::new(
+            vec![4, 16],
+            x.data()
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| v / s[i % 16])
+                .collect(),
+        );
+        let y1 = matmul(&x, &w);
+        let y2 = matmul(&xs, &w2);
+        for (a, b) in y1.data().iter().zip(y2.data()) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn smoothquant_alpha0_is_weight_only() {
+        // alpha = 0: s_j = 1 / max|W_j| — balances weight rows only
+        let w = rand_w(8, 8, 6);
+        let acts = rand_acts(8, 7);
+        let s = smoothquant_factors(&w, &acts, 0.0);
+        for r in 0..8 {
+            let wmax = (0..8).map(|c| w.at2(r, c).abs()).fold(0.0f32, f32::max);
+            assert!((s[r] - 1.0 / wmax).abs() / s[r] < 1e-4);
+        }
+    }
+
+    #[test]
+    fn awq_picks_nonnegative_alpha_and_improves_weighted_error() {
+        let w = rand_w(64, 32, 8);
+        let mut acts = rand_acts(64, 9);
+        acts[0] = 50.0; // salient channel
+        let (q, s, alpha) = awq_gemm(&w, &acts, Granularity::PerChannel);
+        assert!((0.0..=1.0).contains(&alpha));
+        assert_eq!(q.shape, (64, 32));
+        assert_eq!(s.len(), 64);
+        // reconstruct and compare weighted error vs plain absmax
+        let deq = q.dequantize();
+        let mut err_awq = 0.0f64;
+        for r in 0..64 {
+            for c in 0..32 {
+                let rec = deq.at2(r, c) / s[r];
+                let d = (rec - w.at2(r, c)) as f64;
+                err_awq += acts[r] as f64 * d * d;
+            }
+        }
+        let plain = crate::quant::quantize(&w, Granularity::PerChannel, 1.0).dequantize();
+        let mut err_plain = 0.0f64;
+        for r in 0..64 {
+            for c in 0..32 {
+                let d = (plain.at2(r, c) - w.at2(r, c)) as f64;
+                err_plain += acts[r] as f64 * d * d;
+            }
+        }
+        assert!(err_awq <= err_plain * 1.0001,
+                "awq {err_awq} vs plain {err_plain}");
+    }
+
+    #[test]
+    fn fold_into_layernorm_inverts_scaling() {
+        let s = vec![2.0f32, 0.5, 1.0];
+        let mut g = vec![1.0f32, 1.0, 1.0];
+        let mut b = vec![0.2f32, -0.4, 0.0];
+        fold_into_layernorm(&mut g, &mut b, &s);
+        assert_eq!(g, vec![0.5, 2.0, 1.0]);
+        assert_eq!(b, vec![0.1, -0.8, 0.0]);
+    }
+
+    #[test]
+    fn scale_rows_shape_guard() {
+        let w = rand_w(4, 4, 10);
+        let s = vec![1.0f32; 4];
+        let w2 = scale_rows(&w, &s);
+        assert_eq!(w2, w);
+    }
+}

@@ -1,0 +1,303 @@
+//! CLI subcommand implementations (`daq <cmd> ...`).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::coordinator::Method;
+use crate::eval::load_params;
+use crate::experiments::{table1, table2, table_search, Lab};
+use crate::io::dts::Dts;
+use crate::quant::Granularity;
+use crate::search::Objective;
+use crate::tensor::Tensor;
+use crate::util::cliargs::Args;
+use crate::util::rng::XorShift;
+
+pub const USAGE: &str = "\
+daq — Delta-Aware Quantization pipeline (paper reproduction)
+
+USAGE: daq <command> [options]
+
+COMMANDS:
+  quantize   Quantize a post-trained checkpoint against its base
+             --artifacts DIR (default artifacts)
+             --metric absmax|sign|cos|mse (default sign)
+             --gran block|channel|tensor|blockN (default block)
+             --range lo,hi (default 0.8,1.25)
+             --engine native|pjrt (default native)
+             --out FILE (write quantized checkpoint)
+  eval       Score a checkpoint on the Style/General rubric
+             --ckpt FILE --artifacts DIR --engine native|pjrt
+  tables     Regenerate the paper's tables (1-5)
+             --artifacts DIR --only N --engine native|pjrt
+  serve      Serve the quantized model on a synthetic request load
+             --artifacts DIR --requests N (default 32)
+             --new-tokens N (default 8) [--quantize]
+  inspect    Print a DTS container's metadata and tensor index
+             <file.dts>
+  golden     Cross-check the Rust FP8 codec against the JAX golden file
+             --artifacts DIR
+  help       Show this message
+";
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("quantize") => cmd_quantize(args),
+        Some("eval") => cmd_eval(args),
+        Some("tables") => cmd_tables(args),
+        Some("serve") => cmd_serve(args),
+        Some("inspect") => cmd_inspect(args),
+        Some("golden") => cmd_golden(args),
+        Some("help") | None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        Some(other) => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn parse_method(args: &Args) -> Result<Method> {
+    let metric = args.str_or("metric", "sign");
+    let range = args.range_or("range", (0.8, 1.25)).map_err(|e| anyhow!(e))?;
+    Ok(match metric.as_str() {
+        "absmax" => Method::AbsMax,
+        "smoothquant" => Method::SmoothQuant { alpha: 0.5 },
+        "awq" => Method::Awq,
+        m => Method::Search { objective: Objective::parse(m).map_err(|e| anyhow!(e))?, range },
+    })
+}
+
+fn open_lab(args: &Args) -> Result<Lab> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let use_pjrt = args.str_or("engine", "native") == "pjrt";
+    Lab::open(&dir, use_pjrt)
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let lab = open_lab(args)?;
+    let gran = Granularity::parse(&args.str_or("gran", "block")).map_err(|e| anyhow!(e))?;
+    let method = parse_method(args)?;
+    println!(
+        "quantizing {} layers  method={}  gran={}  engine={}",
+        lab.quantizable.len(),
+        method.label(),
+        gran.label(),
+        if lab.rt.is_some() { "pjrt" } else { "native" }
+    );
+    let out = lab.quantize(gran, method.clone())?;
+
+    let mut t = crate::report::Table::new(
+        "per-layer results",
+        &["layer", "shape", "alpha", "evals", "SignRate", "CosSim", "ms"],
+    );
+    for l in &out.layers {
+        t.row(vec![
+            l.name.clone(),
+            format!("{}x{}", l.shape.0, l.shape.1),
+            format!("{:.4}", l.alpha),
+            l.evals.to_string(),
+            l.stats.map(|s| crate::report::fmt_pct(s.sign_rate()))
+                .unwrap_or_else(crate::report::na),
+            l.stats.map(|s| crate::report::fmt3(s.cos_sim()))
+                .unwrap_or_else(crate::report::na),
+            format!("{:.1}", l.secs * 1e3),
+        ]);
+    }
+    println!("{}", t.render());
+    if let Some(a) = &out.agg {
+        println!(
+            "aggregate: dW_L2={:.2} SignRate={:.2}% CosSim={:.4} MSE={:.3e} ({:.2}s total)",
+            a.delta_l2(),
+            100.0 * a.sign_rate(),
+            a.cos_sim(),
+            a.mse(),
+            out.total_secs
+        );
+    }
+    let (s, g) = lab.rubric(&out.params)?;
+    println!("rubric: Style={s:.3} General={g:.3}");
+
+    if let Some(path) = args.get("out") {
+        out.write_checkpoint(path, &lab.post.meta)?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let lab = open_lab(args)?;
+    let params = match args.get("ckpt") {
+        Some(path) => load_params(&Dts::read(path)?)?,
+        None => load_params(&lab.post)?,
+    };
+    let (s, g) = lab.rubric(&params)?;
+    println!("Style={s:.3} General={g:.3}");
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let lab = open_lab(args)?;
+    let only = args.get("only").map(|s| s.parse::<usize>().unwrap_or(0));
+    let want = |n: usize| only.is_none() || only == Some(n);
+
+    if want(1) {
+        let wp = lab.post.tensor_f32(&lab.quantizable[0])?;
+        let wb = lab.base.tensor_f32(&lab.quantizable[0])?;
+        println!("{}", table1(&wp, &wb)?.render());
+    }
+    if want(2) {
+        println!("{}", table2(&lab)?.render());
+    }
+    if want(3) {
+        println!("{}", table_search(&lab, Objective::NegMse)?.render());
+    }
+    if want(4) {
+        println!("{}", table_search(&lab, Objective::SignRate)?.render());
+    }
+    if want(5) {
+        println!("{}", table_search(&lab, Objective::CosSim)?.render());
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let lab = open_lab(args)?;
+    let rt = lab
+        .rt
+        .as_ref()
+        .ok_or_else(|| anyhow!("serve requires --engine pjrt"))?;
+    let n = args.usize_or("requests", 32).map_err(|e| anyhow!(e))?;
+    let new_tokens = args.usize_or("new-tokens", 8).map_err(|e| anyhow!(e))?;
+
+    let params = if args.flag("quantize") {
+        let out = lab.quantize(Granularity::Block(128), Method::Search {
+            objective: Objective::SignRate,
+            range: (0.8, 1.25),
+        })?;
+        out.params
+    } else {
+        load_params(&lab.post)?
+    };
+
+    let fwd = crate::eval::PjrtForward {
+        rt,
+        params: &params,
+        batch: rt.manifest.serve_batch,
+    };
+    let reqs = crate::serve::gen_requests(n, 42);
+    let rep = crate::serve::serve(&fwd, &reqs, new_tokens)?;
+    println!(
+        "served {} requests in {} batches of {} | {:.1} tok/s | style adherence {:.1}%",
+        rep.requests,
+        rep.batches,
+        rt.manifest.serve_batch,
+        rep.tokens_per_sec,
+        100.0 * rep.style_adherence
+    );
+    println!("batch latency: {}", rep.batch_latency.summary());
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .or_else(|| args.options.get("ckpt"))
+        .ok_or_else(|| anyhow!("usage: daq inspect <file.dts>"))?;
+    let d = Dts::read(path)?;
+    println!("{path}:");
+    for (k, v) in &d.meta {
+        println!("  meta {k} = {v}");
+    }
+    for name in d.names() {
+        let t = d.get(name).unwrap();
+        println!("  tensor {name:<24} shape {:?}", t.shape());
+    }
+    Ok(())
+}
+
+fn cmd_golden(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let d = Dts::read(format!("{dir}/fp8_golden.dts"))?;
+    let (_, inputs) = {
+        let t = d.tensor_f32("inputs")?;
+        (t.shape().to_vec(), t.into_data())
+    };
+    let qdq = d.tensor_f32("qdq")?.into_data();
+    let (_, codes) = d.tensor_u8("codes")?;
+    let mut bad = 0usize;
+    for i in 0..inputs.len() {
+        if crate::fp8::qdq_e4m3(inputs[i]).to_bits() != qdq[i].to_bits() {
+            bad += 1;
+        }
+        if crate::fp8::encode_e4m3(inputs[i]) != codes[i] {
+            bad += 1;
+        }
+    }
+    let decoded = d.tensor_f32("all_codes_decoded")?.into_data();
+    let (_, nan_mask) = d.tensor_u8("all_codes_nan")?;
+    for c in 0..256usize {
+        let v = crate::fp8::decode_e4m3(c as u8);
+        if nan_mask[c] == 1 {
+            if !v.is_nan() {
+                bad += 1;
+            }
+        } else if v.to_bits() != decoded[c].to_bits() {
+            bad += 1;
+        }
+    }
+    if bad > 0 {
+        bail!("FP8 golden cross-check FAILED: {bad} mismatches");
+    }
+    println!(
+        "FP8 golden cross-check OK ({} vectors + 256 codes, bit-exact)",
+        inputs.len()
+    );
+    Ok(())
+}
+
+/// Quick self-contained demo tensor for docs/smoke flows.
+pub fn demo_tensor(rows: usize, cols: usize, seed: u64) -> Tensor {
+    let mut rng = XorShift::new(seed);
+    Tensor::new(vec![rows, cols], rng.normal_vec(rows * cols, 0.1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn usage_mentions_all_commands() {
+        for cmd in ["quantize", "eval", "tables", "serve", "inspect", "golden"] {
+            assert!(USAGE.contains(cmd), "{cmd} missing from usage");
+        }
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        let args = Args::parse(["frobnicate".to_string()]).unwrap();
+        assert!(dispatch(&args).is_err());
+    }
+
+    #[test]
+    fn help_works() {
+        let args = Args::parse(["help".to_string()]).unwrap();
+        dispatch(&args).unwrap();
+    }
+
+    #[test]
+    fn parse_method_variants() {
+        let m = |s: &str| {
+            parse_method(&Args::parse([
+                "quantize".to_string(),
+                "--metric".into(),
+                s.into(),
+            ]).unwrap())
+        };
+        assert!(matches!(m("absmax").unwrap(), Method::AbsMax));
+        assert!(matches!(m("sign").unwrap(),
+            Method::Search { objective: Objective::SignRate, .. }));
+        assert!(matches!(m("smoothquant").unwrap(), Method::SmoothQuant { .. }));
+        assert!(matches!(m("awq").unwrap(), Method::Awq));
+        assert!(m("nonsense").is_err());
+    }
+}

@@ -1,0 +1,578 @@
+//! The quantization pipeline coordinator — L3's center: streams the
+//! (base, post) checkpoint pair, schedules per-layer scale search over a
+//! worker pool (or serially through the PJRT engine), folds baseline
+//! transformations, aggregates model-level delta statistics, and emits the
+//! quantized checkpoint.
+//!
+//! This is the AngelSlim-shaped driver the paper's method ships in: the
+//! DAQ objective (§2) is one `Method` among the baselines it must be
+//! compared against (Tables 2–5).
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::baselines;
+use crate::eval::Params;
+use crate::io::dts::{Dts, DtsTensor};
+use crate::metrics::DeltaStats;
+use crate::quant::{absmax_scales, quantize_with_scales, Granularity, QuantizedTensor};
+use crate::runtime::{PjrtSweep, Runtime};
+use crate::search::{search_scale_with, NativeSweep, Objective, SearchConfig};
+use crate::tensor::Tensor;
+use crate::util::threadpool::par_map;
+use crate::util::timer::time;
+
+/// Which engine evaluates candidate scales.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// In-process fused sweep over a thread pool.
+    Native { workers: usize },
+    /// The AOT-compiled Pallas kernel through PJRT (serial — the PJRT
+    /// client is not Sync; on this testbed parallelism is moot anyway).
+    Pjrt,
+}
+
+/// Quantization method for the pipeline run.
+#[derive(Clone, Debug)]
+pub enum Method {
+    /// Plain AbsMax FP8 (α = 1, no search) — Table 2 baseline.
+    AbsMax,
+    /// Coarse-to-fine scale search under a metric (Tables 3–5).
+    Search { objective: Objective, range: (f32, f32) },
+    /// SmoothQuant α-migration + AbsMax (Table 2 baseline).
+    SmoothQuant { alpha: f32 },
+    /// AWQ-style activation-salience rescaling (Table 2 baseline).
+    Awq,
+}
+
+impl Method {
+    pub fn label(&self) -> String {
+        match self {
+            Method::AbsMax => "absmax".into(),
+            Method::Search { objective, range } => {
+                format!("{}[{},{}]", objective.label(), range.0, range.1)
+            }
+            Method::SmoothQuant { alpha } => format!("smoothquant(a={alpha})"),
+            Method::Awq => "awq".into(),
+        }
+    }
+
+    /// Delta metrics are undefined for methods that leave the base model's
+    /// numerical space (paper Table 2 footnote ‡).
+    pub fn delta_defined(&self) -> bool {
+        !matches!(self, Method::SmoothQuant { .. } | Method::Awq)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub granularity: Granularity,
+    pub method: Method,
+    pub engine: Engine,
+}
+
+/// Per-layer outcome.
+#[derive(Clone, Debug)]
+pub struct LayerOutcome {
+    pub name: String,
+    pub shape: (usize, usize),
+    /// Chosen scale multiplier (1.0 for no-search methods).
+    pub alpha: f32,
+    /// Candidate evaluations performed.
+    pub evals: usize,
+    /// Delta statistics at the chosen scale (None when undefined).
+    pub stats: Option<DeltaStats>,
+    pub secs: f64,
+}
+
+/// Whole-pipeline outcome.
+pub struct PipelineOutcome {
+    pub layers: Vec<LayerOutcome>,
+    /// Model-level aggregate of per-layer stats (None when undefined).
+    pub agg: Option<DeltaStats>,
+    /// Full parameter set with quantized weights dequantized in place —
+    /// ready for evaluation / serving.
+    pub params: Params,
+    /// Storage-format quantized tensors.
+    pub quantized: BTreeMap<String, QuantizedTensor>,
+    pub total_secs: f64,
+}
+
+impl PipelineOutcome {
+    /// Persist as a DTS checkpoint: dequantized f32 weights (for the eval
+    /// path) plus `<name>.codes` / `<name>.scales` sidecars (the compact
+    /// storage form) and per-layer α in metadata.
+    pub fn write_checkpoint(&self, path: &str, src_meta: &BTreeMap<String, String>)
+        -> Result<()> {
+        let mut d = Dts::new();
+        d.meta = src_meta.clone();
+        d.meta.insert("quantized".into(), "fp8_e4m3".into());
+        for (name, q) in &self.quantized {
+            d.meta.insert(
+                format!("alpha.{name}"),
+                format!("{}", self.layers.iter()
+                    .find(|l| &l.name == name).map(|l| l.alpha).unwrap_or(1.0)),
+            );
+            d.insert(&format!("{name}.codes"), DtsTensor::U8 {
+                shape: vec![q.shape.0, q.shape.1],
+                data: q.codes.clone(),
+            });
+            d.insert(&format!("{name}.scales"), DtsTensor::F32 {
+                shape: vec![q.scales.grid_rows, q.scales.grid_cols],
+                data: q.scales.scales.clone(),
+            });
+        }
+        // dequantized weights + untouched params, in a stable order
+        let mut names: Vec<&String> = self.params.keys().collect();
+        names.sort();
+        for name in names {
+            d.insert_f32(name, &self.params[name]);
+        }
+        d.write(path)
+    }
+}
+
+/// Upstream layernorm whose affine can absorb an equivalent per-channel
+/// transformation for a given GEMM (None = not foldable; such layers fall
+/// back to plain AbsMax under SmoothQuant/AWQ).
+fn upstream_ln(name: &str) -> Option<String> {
+    if name == "head" {
+        return Some("lnf".to_string());
+    }
+    let (layer, w) = name.split_once('.')?;
+    match w {
+        "wq" | "wk" | "wv" => Some(format!("{layer}.ln1")),
+        "w1" => Some(format!("{layer}.ln2")),
+        _ => None, // wo, w2: preceded by attention / GELU, not foldable
+    }
+}
+
+/// Run the pipeline over all quantizable tensors.
+///
+/// `calib` supplies per-layer activation statistics (required by
+/// SmoothQuant/AWQ); `rt` supplies the PJRT engine when selected.
+pub fn run_pipeline(
+    post: &Dts,
+    base: &Dts,
+    quantizable: &[String],
+    calib: Option<&Dts>,
+    cfg: &PipelineConfig,
+    rt: Option<&Runtime>,
+) -> Result<PipelineOutcome> {
+    // start from the post-trained parameters; quantized layers get
+    // replaced below
+    let mut params = Params::new();
+    for name in post.names() {
+        params.insert(name.clone(), post.tensor_f32(name)?);
+    }
+
+    let (out, total_secs) = time(|| -> Result<_> {
+        match &cfg.method {
+            Method::SmoothQuant { alpha } => run_transformed(
+                &mut params, post, quantizable, calib, cfg,
+                Transform::Smooth { alpha: *alpha },
+            ),
+            Method::Awq => run_transformed(
+                &mut params, post, quantizable, calib, cfg, Transform::Awq,
+            ),
+            _ => run_delta_methods(&mut params, post, base, quantizable, cfg, rt),
+        }
+    });
+    let (layers, quantized) = out?;
+
+    let agg = if cfg.method.delta_defined() {
+        let mut a = DeltaStats::default();
+        for l in &layers {
+            a = a.merge(l.stats.as_ref().expect("stats defined"));
+        }
+        Some(a)
+    } else {
+        None
+    };
+
+    Ok(PipelineOutcome { layers, agg, params, quantized, total_secs })
+}
+
+type LayerBundle = (Vec<LayerOutcome>, BTreeMap<String, QuantizedTensor>);
+
+/// AbsMax + scale-search methods: per-layer independent jobs.
+fn run_delta_methods(
+    params: &mut Params,
+    post: &Dts,
+    base: &Dts,
+    quantizable: &[String],
+    cfg: &PipelineConfig,
+    rt: Option<&Runtime>,
+) -> Result<LayerBundle> {
+    struct Job {
+        name: String,
+        wp: Tensor,
+        wb: Tensor,
+    }
+    let jobs: Vec<Job> = quantizable
+        .iter()
+        .map(|name| {
+            Ok(Job {
+                name: name.clone(),
+                wp: post.tensor_f32(name)?,
+                wb: base.tensor_f32(name)?,
+            })
+        })
+        .collect::<Result<_>>()?;
+    for j in &jobs {
+        if j.wp.shape() != j.wb.shape() {
+            bail!("{}: post {:?} vs base {:?}", j.name, j.wp.shape(), j.wb.shape());
+        }
+    }
+
+    let gran = cfg.granularity;
+    let method = cfg.method.clone();
+
+    let work = move |j: Job, engine: &dyn crate::search::SweepEngine| -> (LayerOutcome, QuantizedTensor) {
+        let ((alpha, evals, stats, q), secs) = time(|| {
+            let s0 = absmax_scales(&j.wp, gran);
+            match &method {
+                Method::AbsMax => {
+                    let st = engine.sweep(&j.wp, &j.wb, &s0, &[1.0])[0];
+                    let q = quantize_with_scales(&j.wp, &s0, 1.0);
+                    (1.0f32, 1usize, st, q)
+                }
+                Method::Search { objective, range } => {
+                    let scfg = SearchConfig::paper_default(*objective, *range);
+                    let res = search_scale_with(engine, &j.wp, &j.wb, &s0, &scfg);
+                    let q = quantize_with_scales(&j.wp, &s0, res.alpha);
+                    (res.alpha, res.evals, res.stats, q)
+                }
+                _ => unreachable!("transformed methods handled elsewhere"),
+            }
+        });
+        (
+            LayerOutcome {
+                name: j.name,
+                shape: q.shape,
+                alpha,
+                evals,
+                stats: Some(stats),
+                secs,
+            },
+            q,
+        )
+    };
+
+    let results: Vec<(LayerOutcome, QuantizedTensor)> = match cfg.engine {
+        Engine::Native { workers } => {
+            let work = std::sync::Arc::new(work);
+            par_map(workers, jobs, move |j| work(j, &NativeSweep))
+        }
+        Engine::Pjrt => {
+            let rt = rt.ok_or_else(|| anyhow!("PJRT engine requires a Runtime"))?;
+            let engine = PjrtSweep { rt };
+            jobs.into_iter().map(|j| work(j, &engine)).collect()
+        }
+    };
+
+    let mut layers = Vec::new();
+    let mut quantized = BTreeMap::new();
+    for (outcome, q) in results {
+        params.insert(outcome.name.clone(), q.dequantize());
+        quantized.insert(outcome.name.clone(), q);
+        layers.push(outcome);
+    }
+    Ok((layers, quantized))
+}
+
+enum Transform {
+    Smooth { alpha: f32 },
+    Awq,
+}
+
+/// SmoothQuant / AWQ: equivalent per-channel transformation folded into
+/// the upstream layernorm, then AbsMax quantization of the transformed
+/// weight. Layers with no foldable upstream affine quantize plainly.
+fn run_transformed(
+    params: &mut Params,
+    post: &Dts,
+    quantizable: &[String],
+    calib: Option<&Dts>,
+    cfg: &PipelineConfig,
+    tf: Transform,
+) -> Result<LayerBundle> {
+    let calib = calib.ok_or_else(|| anyhow!("{} requires calibration stats",
+                                            cfg.method.label()))?;
+    let mut layers = Vec::new();
+    let mut quantized = BTreeMap::new();
+
+    // group the qkv triplets so they share one smoothing vector (they
+    // share the same layernormed input)
+    let mut groups: BTreeMap<String, Vec<String>> = BTreeMap::new();
+    let mut plain: Vec<String> = Vec::new();
+    for name in quantizable {
+        match upstream_ln(name) {
+            Some(ln) => groups.entry(ln).or_default().push(name.clone()),
+            None => plain.push(name.clone()),
+        }
+    }
+
+    for (ln, members) in groups {
+        // combined per-input-channel |W| max over group members
+        let first = post.tensor_f32(&members[0])?;
+        let rows = first.rows();
+        let act = match calib.tensor_f32(&members[0]) {
+            Ok(t) => t.into_data(),
+            Err(e) => bail!("calib stats for {}: {e}", members[0]),
+        };
+        if act.len() != rows {
+            bail!("calib stat len {} != in-dim {rows} for {}", act.len(), members[0]);
+        }
+
+        let s: Vec<f32> = match tf {
+            Transform::Smooth { alpha } => {
+                let mut wmax = vec![0.0f32; rows];
+                for m in &members {
+                    let w = post.tensor_f32(m)?;
+                    for r in 0..rows {
+                        for c in 0..w.cols() {
+                            wmax[r] = wmax[r].max(w.at2(r, c).abs());
+                        }
+                    }
+                }
+                (0..rows)
+                    .map(|r| {
+                        (act[r].max(1e-8).powf(alpha)
+                            / wmax[r].max(1e-8).powf(1.0 - alpha))
+                        .max(1e-6)
+                    })
+                    .collect()
+            }
+            Transform::Awq => {
+                // one shared AWQ alpha per group, searched on the first member
+                let (_, s, _) = baselines::awq_gemm(&first, &act, cfg.granularity);
+                s
+            }
+        };
+
+        for m in &members {
+            let w = post.tensor_f32(m)?;
+            let ((q, secs_inner), secs) = time(|| {
+                let w2 = baselines::scale_rows(&w, &s);
+                let s0 = absmax_scales(&w2, cfg.granularity);
+                (quantize_with_scales(&w2, &s0, 1.0), 0.0f64)
+            });
+            let _ = secs_inner;
+            params.insert(m.clone(), q.dequantize());
+            layers.push(LayerOutcome {
+                name: m.clone(),
+                shape: q.shape,
+                alpha: 1.0,
+                evals: 1,
+                stats: None,
+                secs,
+            });
+            quantized.insert(m.clone(), q);
+        }
+
+        // fold the inverse into the upstream layernorm affine
+        let gname = format!("{ln}.g");
+        let bname = format!("{ln}.b");
+        let mut g = params
+            .get(&gname)
+            .ok_or_else(|| anyhow!("missing {gname}"))?
+            .clone();
+        let mut b = params
+            .get(&bname)
+            .ok_or_else(|| anyhow!("missing {bname}"))?
+            .clone();
+        baselines::fold_into_layernorm(g.data_mut(), b.data_mut(), &s);
+        params.insert(gname, g);
+        params.insert(bname, b);
+    }
+
+    // non-foldable layers: plain AbsMax
+    for name in plain {
+        let w = post.tensor_f32(&name)?;
+        let (q, secs) = time(|| {
+            let s0 = absmax_scales(&w, cfg.granularity);
+            quantize_with_scales(&w, &s0, 1.0)
+        });
+        params.insert(name.clone(), q.dequantize());
+        layers.push(LayerOutcome {
+            name,
+            shape: q.shape,
+            alpha: 1.0,
+            evals: 1,
+            stats: None,
+            secs,
+        });
+        quantized.insert(layers.last().unwrap().name.clone(), q);
+    }
+    Ok((layers, quantized))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift;
+
+    fn fake_ckpts(seed: u64) -> (Dts, Dts, Vec<String>) {
+        let mut rng = XorShift::new(seed);
+        let mut base = Dts::new();
+        let mut post = Dts::new();
+        let names = vec!["l0.wq".to_string(), "l0.w1".to_string(), "head".to_string()];
+        let shapes = [(32usize, 32usize), (32, 64), (32, 16)];
+        for (n, &(r, c)) in names.iter().zip(&shapes) {
+            let wb = Tensor::new(vec![r, c], rng.normal_vec(r * c, 0.1));
+            let wp = Tensor::new(
+                vec![r, c],
+                wb.data().iter().map(|&b| b + rng.normal() * 0.002).collect(),
+            );
+            base.insert_f32(n, &wb);
+            post.insert_f32(n, &wp);
+        }
+        // layernorm params referenced by transformed methods
+        for ln in ["l0.ln1", "l0.ln2", "lnf"] {
+            let g = Tensor::full(vec![32], 1.0);
+            let b = Tensor::zeros(vec![32]);
+            base.insert_f32(&format!("{ln}.g"), &g);
+            base.insert_f32(&format!("{ln}.b"), &b);
+            post.insert_f32(&format!("{ln}.g"), &g);
+            post.insert_f32(&format!("{ln}.b"), &b);
+        }
+        (post, base, names)
+    }
+
+    fn fake_calib(names: &[String], post: &Dts) -> Dts {
+        let mut c = Dts::new();
+        for n in names {
+            let rows = post.tensor_f32(n).unwrap().rows();
+            c.insert_f32(n, &Tensor::full(vec![rows], 0.5));
+        }
+        c
+    }
+
+    #[test]
+    fn absmax_pipeline_quantizes_every_layer_once() {
+        let (post, base, names) = fake_ckpts(1);
+        let cfg = PipelineConfig {
+            granularity: Granularity::Block(16),
+            method: Method::AbsMax,
+            engine: Engine::Native { workers: 2 },
+        };
+        let out = run_pipeline(&post, &base, &names, None, &cfg, None).unwrap();
+        assert_eq!(out.layers.len(), names.len());
+        assert_eq!(out.quantized.len(), names.len());
+        let agg = out.agg.unwrap();
+        assert_eq!(agg.n as usize, 32 * 32 + 32 * 64 + 32 * 16);
+        // dequantized weights replaced in params
+        for n in &names {
+            let deq = out.quantized[n].dequantize();
+            assert_eq!(out.params[n], deq);
+        }
+    }
+
+    #[test]
+    fn search_pipeline_beats_or_matches_absmax_objective() {
+        let (post, base, names) = fake_ckpts(2);
+        let mk = |method| PipelineConfig {
+            granularity: Granularity::PerChannel,
+            method,
+            engine: Engine::Native { workers: 1 },
+        };
+        let absmax =
+            run_pipeline(&post, &base, &names, None, &mk(Method::AbsMax), None).unwrap();
+        let daq = run_pipeline(
+            &post, &base, &names, None,
+            &mk(Method::Search {
+                objective: Objective::SignRate,
+                range: (0.8, 1.25),
+            }),
+            None,
+        )
+        .unwrap();
+        assert!(
+            daq.agg.unwrap().sign_rate() >= absmax.agg.unwrap().sign_rate() - 1e-12
+        );
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let (post, base, names) = fake_ckpts(3);
+        let mk = |workers| PipelineConfig {
+            granularity: Granularity::Block(16),
+            method: Method::Search {
+                objective: Objective::CosSim,
+                range: (0.9, 1.11),
+            },
+            engine: Engine::Native { workers },
+        };
+        let a = run_pipeline(&post, &base, &names, None, &mk(1), None).unwrap();
+        let b = run_pipeline(&post, &base, &names, None, &mk(4), None).unwrap();
+        for (x, y) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.alpha, y.alpha);
+        }
+    }
+
+    #[test]
+    fn smoothquant_requires_calib() {
+        let (post, base, names) = fake_ckpts(4);
+        let cfg = PipelineConfig {
+            granularity: Granularity::PerChannel,
+            method: Method::SmoothQuant { alpha: 0.5 },
+            engine: Engine::Native { workers: 1 },
+        };
+        assert!(run_pipeline(&post, &base, &names, None, &cfg, None).is_err());
+    }
+
+    #[test]
+    fn smoothquant_folds_layernorm_and_has_no_delta_stats() {
+        let (post, base, names) = fake_ckpts(5);
+        let calib = fake_calib(&names, &post);
+        let cfg = PipelineConfig {
+            granularity: Granularity::PerChannel,
+            method: Method::SmoothQuant { alpha: 0.5 },
+            engine: Engine::Native { workers: 1 },
+        };
+        let out = run_pipeline(&post, &base, &names, Some(&calib), &cfg, None).unwrap();
+        assert!(out.agg.is_none());
+        assert!(out.layers.iter().all(|l| l.stats.is_none()));
+        // ln gains actually changed
+        let g = &out.params["l0.ln1.g"];
+        assert!(g.data().iter().any(|&v| (v - 1.0).abs() > 1e-6));
+    }
+
+    #[test]
+    fn awq_pipeline_runs() {
+        let (post, base, names) = fake_ckpts(6);
+        let calib = fake_calib(&names, &post);
+        let cfg = PipelineConfig {
+            granularity: Granularity::PerChannel,
+            method: Method::Awq,
+            engine: Engine::Native { workers: 1 },
+        };
+        let out = run_pipeline(&post, &base, &names, Some(&calib), &cfg, None).unwrap();
+        assert_eq!(out.layers.len(), names.len());
+        assert!(out.agg.is_none());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let (post, base, names) = fake_ckpts(7);
+        let cfg = PipelineConfig {
+            granularity: Granularity::Block(16),
+            method: Method::AbsMax,
+            engine: Engine::Native { workers: 1 },
+        };
+        let out = run_pipeline(&post, &base, &names, None, &cfg, None).unwrap();
+        let path = std::env::temp_dir().join(format!("daq_ckpt_{}.dts", std::process::id()));
+        out.write_checkpoint(path.to_str().unwrap(), &post.meta).unwrap();
+        let rd = Dts::read(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert_eq!(rd.meta.get("quantized").map(|s| s.as_str()), Some("fp8_e4m3"));
+        for n in &names {
+            assert!(rd.contains(n));
+            assert!(rd.contains(&format!("{n}.codes")));
+            assert!(rd.contains(&format!("{n}.scales")));
+        }
+    }
+}

@@ -1,0 +1,249 @@
+//! Evaluation harness: the paper's rubric — Style and General scores on
+//! the [0, 2] scale — computed over the held-out eval sets produced by
+//! `make artifacts`.
+//!
+//! Two interchangeable forward paths:
+//! - **PJRT** (default): the AOT-lowered L2 graph via `runtime::Runtime`.
+//! - **native**: a from-scratch Rust reimplementation of the transformer
+//!   (`forward_native`), used to cross-check the artifact and in tests.
+
+pub mod model_native;
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::io::dts::Dts;
+use crate::tensor::Tensor;
+
+/// A loaded model checkpoint: name → f32 tensor.
+pub type Params = HashMap<String, Tensor>;
+
+/// Load all f32 tensors of a DTS checkpoint as model parameters.
+pub fn load_params(d: &Dts) -> Result<Params> {
+    let mut p = Params::new();
+    for name in d.names() {
+        p.insert(name.clone(), d.tensor_f32(name)?);
+    }
+    Ok(p)
+}
+
+/// Like [`load_params`] but skips non-f32 tensors and quantization
+/// sidecars (`*.codes`, `*.scales`) — the loader for quantized
+/// checkpoints written by `PipelineOutcome::write_checkpoint`.
+pub fn load_params_filtered(d: &Dts) -> Result<Params> {
+    let mut p = Params::new();
+    for name in d.names() {
+        if name.ends_with(".codes") || name.ends_with(".scales") {
+            continue;
+        }
+        if let Ok(t) = d.tensor_f32(name) {
+            p.insert(name.clone(), t);
+        }
+    }
+    Ok(p)
+}
+
+/// One eval set: tokens `[n, seq]` and a 0/1 mask of scored positions
+/// (mask at t scores the prediction of token t+1 — the corpus convention).
+pub struct EvalSet {
+    pub n: usize,
+    pub seq: usize,
+    pub tokens: Vec<i32>,
+    pub mask: Vec<i32>,
+}
+
+impl EvalSet {
+    pub fn load(path: &str) -> Result<EvalSet> {
+        let d = Dts::read(path)?;
+        let (tshape, tokens) = d.tensor_i32("tokens")?;
+        let (mshape, mask) = d.tensor_i32("mask")?;
+        if tshape != mshape || tshape.len() != 2 {
+            bail!("eval set {path}: tokens {tshape:?} vs mask {mshape:?}");
+        }
+        Ok(EvalSet { n: tshape[0], seq: tshape[1], tokens, mask })
+    }
+}
+
+/// Accuracy of argmax next-token predictions at masked positions, given
+/// logits `[n, seq, vocab]` flattened row-major.
+pub fn masked_accuracy(set: &EvalSet, logits: &[f32], vocab: usize) -> f64 {
+    let (n, seq) = (set.n, set.seq);
+    assert_eq!(logits.len(), n * seq * vocab);
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for i in 0..n {
+        for t in 0..seq - 1 {
+            if set.mask[i * seq + t] == 0 {
+                continue;
+            }
+            let target = set.tokens[i * seq + t + 1];
+            let row = &logits[(i * seq + t) * vocab..(i * seq + t + 1) * vocab];
+            let mut best = 0usize;
+            for v in 1..vocab {
+                if row[v] > row[best] {
+                    best = v;
+                }
+            }
+            total += 1;
+            if best as i32 == target {
+                correct += 1;
+            }
+        }
+    }
+    if total == 0 {
+        return 0.0;
+    }
+    correct as f64 / total as f64
+}
+
+/// Map accuracy to the paper's [0, 2] rubric scale.
+pub fn accuracy_to_rubric(acc: f64) -> f64 {
+    2.0 * acc
+}
+
+/// A forward function: (batch, tokens, params) -> logits.
+pub trait ForwardFn {
+    fn forward(&self, batch: usize, tokens: &[i32], params: &Params) -> Result<Vec<f32>>;
+    fn vocab(&self) -> usize;
+    fn seq_len(&self) -> usize;
+    fn batch(&self) -> usize;
+}
+
+/// Evaluate one eval set in fixed-size batches (padding the last batch by
+/// repeating row 0; padded rows carry zero masks so they never score).
+pub fn eval_rubric(fwd: &dyn ForwardFn, set: &EvalSet) -> Result<f64> {
+    let b = fwd.batch();
+    let seq = fwd.seq_len();
+    if seq != set.seq {
+        bail!("eval set seq {} != model seq {seq}", set.seq);
+    }
+    let vocab = fwd.vocab();
+    let mut correct_total = (0usize, 0usize);
+    let mut i = 0;
+    while i < set.n {
+        let take = (set.n - i).min(b);
+        let mut tokens = vec![0i32; b * seq];
+        let mut mask = vec![0i32; b * seq];
+        for j in 0..take {
+            let src = (i + j) * seq;
+            tokens[j * seq..(j + 1) * seq]
+                .copy_from_slice(&set.tokens[src..src + seq]);
+            mask[j * seq..(j + 1) * seq].copy_from_slice(&set.mask[src..src + seq]);
+        }
+        for j in take..b {
+            let src = i * seq; // repeat a real row; mask stays zero
+            tokens[j * seq..(j + 1) * seq]
+                .copy_from_slice(&set.tokens[src..src + seq]);
+        }
+        let logits = fwd.forward(b, &tokens, &dummy_params_guard())?;
+        // note: ForwardFn implementations close over params; the guard is
+        // only for the trait signature symmetry (see PjrtForward below).
+        let batch_set = EvalSet { n: b, seq, tokens, mask };
+        let (mut c, mut t) = correct_total;
+        let acc = masked_accuracy(&batch_set, &logits, vocab);
+        let scored: usize = batch_set.mask.iter().map(|&m| m as usize).sum();
+        c += (acc * scored as f64).round() as usize;
+        t += scored;
+        correct_total = (c, t);
+        i += take;
+    }
+    let (c, t) = correct_total;
+    Ok(accuracy_to_rubric(if t == 0 { 0.0 } else { c as f64 / t as f64 }))
+}
+
+fn dummy_params_guard() -> Params {
+    Params::new()
+}
+
+/// PJRT-backed forward (params bound at construction).
+pub struct PjrtForward<'a> {
+    pub rt: &'a crate::runtime::Runtime,
+    pub params: &'a Params,
+    pub batch: usize,
+}
+
+impl ForwardFn for PjrtForward<'_> {
+    fn forward(&self, batch: usize, tokens: &[i32], _unused: &Params) -> Result<Vec<f32>> {
+        let mut hp: HashMap<String, Tensor> = HashMap::new();
+        for (k, v) in self.params.iter() {
+            hp.insert(k.clone(), v.clone());
+        }
+        self.rt.forward(batch, tokens, &hp)
+    }
+
+    fn vocab(&self) -> usize {
+        self.rt.manifest.vocab
+    }
+
+    fn seq_len(&self) -> usize {
+        self.rt.manifest.seq_len
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+}
+
+/// Native-Rust forward (params + config bound at construction).
+pub struct NativeForward<'a> {
+    pub params: &'a Params,
+    pub cfg: model_native::ModelCfg,
+    pub batch: usize,
+}
+
+impl ForwardFn for NativeForward<'_> {
+    fn forward(&self, batch: usize, tokens: &[i32], _unused: &Params) -> Result<Vec<f32>> {
+        model_native::forward_native(self.params, &self.cfg, batch, tokens)
+    }
+
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    fn seq_len(&self) -> usize {
+        self.cfg.seq_len
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masked_accuracy_counts_only_masked() {
+        // n=1, seq=3, vocab=2; predictions: pos0 -> token1, pos1 -> token0
+        let set = EvalSet {
+            n: 1,
+            seq: 3,
+            tokens: vec![0, 1, 0],
+            mask: vec![1, 1, 0],
+        };
+        // logits at t=0 favour 1 (correct: target tokens[1]=1),
+        // at t=1 favour 1 (wrong: target tokens[2]=0)
+        let logits = vec![
+            0.0, 1.0, // t=0
+            0.0, 1.0, // t=1
+            0.0, 0.0, // t=2 (unscored)
+        ];
+        let acc = masked_accuracy(&set, &logits, 2);
+        assert!((acc - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rubric_scale() {
+        assert_eq!(accuracy_to_rubric(0.0), 0.0);
+        assert_eq!(accuracy_to_rubric(1.0), 2.0);
+        assert_eq!(accuracy_to_rubric(0.75), 1.5);
+    }
+
+    #[test]
+    fn empty_mask_gives_zero() {
+        let set = EvalSet { n: 1, seq: 2, tokens: vec![0, 0], mask: vec![0, 0] };
+        assert_eq!(masked_accuracy(&set, &[0.0; 4], 2), 0.0);
+    }
+}

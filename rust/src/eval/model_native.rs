@@ -1,0 +1,231 @@
+//! Native-Rust transformer forward — an independent reimplementation of
+//! `python/compile/model.py` used to cross-check the AOT artifact (the
+//! integration test asserts argmax agreement) and as a PJRT-free fallback.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::tensor::ops::{gelu, layernorm_rows, matmul, softmax_rows};
+use crate::tensor::Tensor;
+
+/// Model configuration (mirrors `model.ModelConfig`; read from the
+/// checkpoint metadata or the artifact manifest).
+#[derive(Clone, Copy, Debug)]
+pub struct ModelCfg {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+}
+
+impl ModelCfg {
+    pub fn from_meta(meta: &std::collections::BTreeMap<String, String>) -> Result<ModelCfg> {
+        let get = |k: &str| -> Result<usize> {
+            meta.get(k)
+                .ok_or_else(|| anyhow!("checkpoint meta missing {k}"))?
+                .parse()
+                .map_err(|_| anyhow!("checkpoint meta {k} not an integer"))
+        };
+        Ok(ModelCfg {
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layer: get("n_layer")?,
+            n_head: get("n_head")?,
+            d_ff: get("d_ff")?,
+            seq_len: get("seq_len")?,
+        })
+    }
+}
+
+fn p<'a>(params: &'a HashMap<String, Tensor>, name: &str) -> Result<&'a Tensor> {
+    params.get(name).ok_or_else(|| anyhow!("missing param {name:?}"))
+}
+
+/// Forward pass: tokens `[batch * seq]` → logits `[batch * seq * vocab]`.
+///
+/// Matches the JAX graph: learned positional embeddings, pre-LN blocks,
+/// causal softmax attention, tanh-approximated GELU, final LN, untied head.
+pub fn forward_native(
+    params: &HashMap<String, Tensor>,
+    cfg: &ModelCfg,
+    batch: usize,
+    tokens: &[i32],
+) -> Result<Vec<f32>> {
+    let (t_len, d, v) = (cfg.seq_len, cfg.d_model, cfg.vocab);
+    assert_eq!(tokens.len(), batch * t_len);
+    let embed = p(params, "embed")?;
+    let pos = p(params, "pos")?;
+
+    // x: [batch*seq, d]
+    let mut x = Tensor::zeros(vec![batch * t_len, d]);
+    for i in 0..batch {
+        for t in 0..t_len {
+            let tok = tokens[i * t_len + t] as usize;
+            for j in 0..d {
+                x.set2(i * t_len + t, j, embed.at2(tok, j) + pos.at2(t, j));
+            }
+        }
+    }
+
+    let n_head = cfg.n_head;
+    let dh = d / n_head;
+    let scale = 1.0 / (dh as f32).sqrt();
+
+    for l in 0..cfg.n_layer {
+        // --- attention block ---
+        let g1 = p(params, &format!("l{l}.ln1.g"))?;
+        let b1 = p(params, &format!("l{l}.ln1.b"))?;
+        let h = layernorm_rows(&x, g1.data(), b1.data(), 1e-5);
+        let q = matmul(&h, p(params, &format!("l{l}.wq"))?);
+        let k = matmul(&h, p(params, &format!("l{l}.wk"))?);
+        let vv = matmul(&h, p(params, &format!("l{l}.wv"))?);
+
+        let mut att_out = Tensor::zeros(vec![batch * t_len, d]);
+        for i in 0..batch {
+            for hd in 0..n_head {
+                // scores [t_len, t_len] for this (sample, head)
+                let mut scores = Tensor::zeros(vec![t_len, t_len]);
+                for tq in 0..t_len {
+                    for tk in 0..=tq {
+                        let mut s = 0.0f32;
+                        let qrow = q.row(i * t_len + tq);
+                        let krow = k.row(i * t_len + tk);
+                        for j in 0..dh {
+                            s += qrow[hd * dh + j] * krow[hd * dh + j];
+                        }
+                        scores.set2(tq, tk, s * scale);
+                    }
+                    for tk in tq + 1..t_len {
+                        scores.set2(tq, tk, -1e9);
+                    }
+                }
+                softmax_rows(&mut scores);
+                for tq in 0..t_len {
+                    for j in 0..dh {
+                        let mut acc = 0.0f32;
+                        for tk in 0..=tq {
+                            acc += scores.at2(tq, tk)
+                                * vv.at2(i * t_len + tk, hd * dh + j);
+                        }
+                        att_out.set2(i * t_len + tq, hd * dh + j, acc);
+                    }
+                }
+            }
+        }
+        let proj = matmul(&att_out, p(params, &format!("l{l}.wo"))?);
+        x = x.add(&proj);
+
+        // --- MLP block ---
+        let g2 = p(params, &format!("l{l}.ln2.g"))?;
+        let b2 = p(params, &format!("l{l}.ln2.b"))?;
+        let h2 = layernorm_rows(&x, g2.data(), b2.data(), 1e-5);
+        let mut m = matmul(&h2, p(params, &format!("l{l}.w1"))?);
+        for vmut in m.data_mut() {
+            *vmut = gelu(*vmut);
+        }
+        let m2 = matmul(&m, p(params, &format!("l{l}.w2"))?);
+        x = x.add(&m2);
+    }
+
+    let gf = p(params, "lnf.g")?;
+    let bf = p(params, "lnf.b")?;
+    let xf = layernorm_rows(&x, gf.data(), bf.data(), 1e-5);
+    let logits = matmul(&xf, p(params, "head")?);
+    debug_assert_eq!(logits.shape(), &[batch * t_len, v]);
+    Ok(logits.into_data())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift;
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg { vocab: 16, d_model: 8, n_layer: 1, n_head: 2, d_ff: 16, seq_len: 4 }
+    }
+
+    fn tiny_params(cfg: &ModelCfg, seed: u64) -> HashMap<String, Tensor> {
+        let mut rng = XorShift::new(seed);
+        let mut p = HashMap::new();
+        let mut add = |p: &mut HashMap<String, Tensor>, name: &str, r: usize, c: usize,
+                       rng: &mut XorShift| {
+            p.insert(name.into(), Tensor::new(vec![r, c], rng.normal_vec(r * c, 0.1)));
+        };
+        add(&mut p, "embed", cfg.vocab, cfg.d_model, &mut rng);
+        add(&mut p, "pos", cfg.seq_len, cfg.d_model, &mut rng);
+        for l in 0..cfg.n_layer {
+            for w in ["wq", "wk", "wv", "wo"] {
+                add(&mut p, &format!("l{l}.{w}"), cfg.d_model, cfg.d_model, &mut rng);
+            }
+            add(&mut p, &format!("l{l}.w1"), cfg.d_model, cfg.d_ff, &mut rng);
+            add(&mut p, &format!("l{l}.w2"), cfg.d_ff, cfg.d_model, &mut rng);
+            p.insert(format!("l{l}.ln1.g"), Tensor::full(vec![1, cfg.d_model], 1.0));
+            p.insert(format!("l{l}.ln1.b"), Tensor::zeros(vec![1, cfg.d_model]));
+            p.insert(format!("l{l}.ln2.g"), Tensor::full(vec![1, cfg.d_model], 1.0));
+            p.insert(format!("l{l}.ln2.b"), Tensor::zeros(vec![1, cfg.d_model]));
+        }
+        p.insert("lnf.g".into(), Tensor::full(vec![1, cfg.d_model], 1.0));
+        p.insert("lnf.b".into(), Tensor::zeros(vec![1, cfg.d_model]));
+        add(&mut p, "head", cfg.d_model, cfg.vocab, &mut rng);
+        p
+    }
+
+    #[test]
+    fn forward_shape_and_finiteness() {
+        let cfg = tiny_cfg();
+        let params = tiny_params(&cfg, 1);
+        let tokens = vec![1i32, 2, 3, 4, 5, 6, 7, 8];
+        let logits = forward_native(&params, &cfg, 2, &tokens).unwrap();
+        assert_eq!(logits.len(), 2 * cfg.seq_len * cfg.vocab);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causality() {
+        // changing the last token must not change logits at earlier positions
+        let cfg = tiny_cfg();
+        let params = tiny_params(&cfg, 2);
+        let a = forward_native(&params, &cfg, 1, &[1, 2, 3, 4]).unwrap();
+        let b = forward_native(&params, &cfg, 1, &[1, 2, 3, 9]).unwrap();
+        let v = cfg.vocab;
+        for t in 0..cfg.seq_len - 1 {
+            for j in 0..v {
+                assert!(
+                    (a[t * v + j] - b[t * v + j]).abs() < 1e-5,
+                    "t={t} j={j}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batch_consistency() {
+        // running two samples in one batch == running them separately
+        let cfg = tiny_cfg();
+        let params = tiny_params(&cfg, 3);
+        let s1 = [1i32, 2, 3, 4];
+        let s2 = [5i32, 6, 7, 8];
+        let joint = forward_native(&params, &cfg, 2,
+                                   &[s1.as_slice(), s2.as_slice()].concat()).unwrap();
+        let a = forward_native(&params, &cfg, 1, &s1).unwrap();
+        let b = forward_native(&params, &cfg, 1, &s2).unwrap();
+        let half = joint.len() / 2;
+        for (x, y) in joint[..half].iter().zip(&a) {
+            assert!((x - y).abs() < 1e-5);
+        }
+        for (x, y) in joint[half..].iter().zip(&b) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn missing_param_is_error() {
+        let cfg = tiny_cfg();
+        let mut params = tiny_params(&cfg, 4);
+        params.remove("head");
+        assert!(forward_native(&params, &cfg, 1, &[0, 1, 2, 3]).is_err());
+    }
+}

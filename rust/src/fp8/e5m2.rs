@@ -1,0 +1,120 @@
+//! E5M2 codec — the second OCP FP8 format, provided for the bit-width
+//! ablation the paper lists as future work (§5: "exploring lower
+//! bit-widths"). Same saturating-RNE semantics as E4M3.
+//!
+//! Layout: 1 sign / 5 exponent (bias 15) / 2 mantissa. Max finite ±57344;
+//! subnormal step 2⁻¹⁶. We treat the IEEE-style inf/NaN codes (exp = 31)
+//! as NaN and saturate on encode, mirroring the E4M3FN convention so both
+//! formats behave identically in the quantizer.
+
+/// Largest finite E5M2 value.
+pub const E5M2_MAX: f32 = 57344.0;
+const MIN_NORMAL_EXP: i32 = -14;
+const MANT_BITS: i32 = 2;
+
+#[inline(always)]
+fn exp2i(e: i32) -> f32 {
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+/// Encode an `f32` to its nearest E5M2 code (saturating RNE).
+#[inline]
+pub fn encode_e5m2(x: f32) -> u8 {
+    if x.is_nan() {
+        return 0x7F;
+    }
+    let sign = if x < 0.0 { 0x80u8 } else { 0 };
+    let mag = x.abs().min(E5M2_MAX);
+    if mag == 0.0 {
+        return 0;
+    }
+    let e = ((mag.to_bits() >> 23) as i32 - 127).max(MIN_NORMAL_EXP);
+    let step = exp2i(e - MANT_BITS);
+    let n = (mag / step).round_ties_even() as u32; // [0, 8]
+    if n == 0 {
+        return 0;
+    }
+    let (n, e) = if n == 8 { (4, e + 1) } else { (n, e) };
+    debug_assert!(e <= 15);
+    if n >= 4 {
+        sign | (((e + 15) as u8) << 2) | ((n - 4) as u8)
+    } else {
+        sign | n as u8
+    }
+}
+
+/// Decode an E5M2 code to `f32`; exp=31 codes decode to NaN (inf treated
+/// as NaN under the saturating convention).
+#[inline]
+pub fn decode_e5m2(code: u8) -> f32 {
+    let sign = if code & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let e = ((code >> 2) & 0x1F) as i32;
+    let m = (code & 0x3) as i32;
+    if e == 31 {
+        return f32::NAN;
+    }
+    let v = if e == 0 {
+        m as f32 * exp2i(-16)
+    } else {
+        (4 + m) as f32 * exp2i(e - 17)
+    };
+    sign * v
+}
+
+/// Quantize–dequantize onto the E5M2 grid.
+#[inline]
+pub fn qdq_e5m2(x: f32) -> f32 {
+    let a = x.clamp(-E5M2_MAX, E5M2_MAX);
+    let mag = a.abs();
+    if mag == 0.0 {
+        return 0.0;
+    }
+    let e = ((mag.to_bits() >> 23) as i32 - 127).max(MIN_NORMAL_EXP);
+    let step = exp2i(e - MANT_BITS);
+    (a / step).round_ties_even() * step
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_codes() {
+        for c in 0u16..256 {
+            let c = c as u8;
+            let v = decode_e5m2(c);
+            if v.is_nan() {
+                continue;
+            }
+            let expect = if v == 0.0 { 0 } else { c };
+            assert_eq!(encode_e5m2(v), expect, "code {c:#04x}");
+        }
+    }
+
+    #[test]
+    fn qdq_fixed_points() {
+        for c in 0u16..256 {
+            let v = decode_e5m2(c as u8);
+            if v.is_nan() {
+                continue;
+            }
+            assert_eq!(qdq_e5m2(v), v);
+        }
+    }
+
+    #[test]
+    fn saturation_and_range() {
+        assert_eq!(qdq_e5m2(1e9), E5M2_MAX);
+        assert_eq!(qdq_e5m2(-1e9), -E5M2_MAX);
+        // wider dynamic range than E4M3 but coarser mantissa
+        assert_eq!(qdq_e5m2(448.0), 448.0); // power-of-two multiple fits
+        assert_eq!(qdq_e5m2(17.0), 16.0); // tie to even (grid 16, 20)
+    }
+
+    #[test]
+    fn coarser_than_e4m3_near_one() {
+        // E5M2 step at 1.0 is 0.25; E4M3 step is 0.125
+        assert_eq!(qdq_e5m2(1.124), 1.0);
+        assert_eq!(crate::fp8::qdq_e4m3(1.124), 1.125);
+    }
+}

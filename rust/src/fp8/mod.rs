@@ -1,0 +1,227 @@
+//! Software FP8 codecs: E4M3 (OCP "E4M3FN") and E5M2.
+//!
+//! The numeric substrate of the whole pipeline. Bit-exact with the JAX
+//! reference (`python/compile/kernels/ref.py`): the cross-layer golden test
+//! (`tests/golden_fp8.rs`) decodes `artifacts/fp8_golden.dts` and compares
+//! every vector bit-for-bit.
+//!
+//! E4M3FN layout: 1 sign / 4 exponent (bias 7) / 3 mantissa. No infinities;
+//! `S.1111.111` is NaN; max finite ±448; subnormal step 2⁻⁹. Conversion is
+//! *saturating* round-to-nearest-even (the semantics quantization pipelines
+//! use — out-of-range values clamp to ±448 rather than becoming NaN).
+
+mod e5m2;
+pub use e5m2::{decode_e5m2, encode_e5m2, qdq_e5m2};
+
+/// Largest finite E4M3 value.
+pub const E4M3_MAX: f32 = 448.0;
+/// The canonical E4M3 NaN code.
+pub const E4M3_NAN: u8 = 0x7F;
+/// Smallest normal exponent (unbiased).
+const MIN_NORMAL_EXP: i32 = -6;
+
+/// Encode an `f32` to its nearest E4M3 code (saturating RNE).
+///
+/// Zero encodes to `0x00` regardless of input sign, matching the JAX
+/// reference (sign of zero carries no information for weights).
+#[inline]
+pub fn encode_e4m3(x: f32) -> u8 {
+    if x.is_nan() {
+        return E4M3_NAN;
+    }
+    let sign = if x < 0.0 { 0x80u8 } else { 0 };
+    let mag = x.abs().min(E4M3_MAX);
+    if mag == 0.0 {
+        return 0;
+    }
+    // floor(log2(mag)) via exponent bits; f32 subnormal inputs have biased
+    // exponent 0 -> e = -127, clamped to the E4M3 subnormal regime below.
+    let e = ((mag.to_bits() >> 23) as i32 - 127).max(MIN_NORMAL_EXP);
+    let step = exp2i(e - 3);
+    let n = (mag / step).round_ties_even() as u32; // grid index in [0, 16]
+    if n == 0 {
+        return 0; // rounded down to zero: drop sign, matching the reference
+    }
+    let (n, e) = if n == 16 { (8, e + 1) } else { (n, e) }; // crossed binade
+    debug_assert!(e <= 8, "saturation must have clamped e (mag={mag})");
+    if n >= 8 {
+        sign | (((e + 7) as u8) << 3) | ((n - 8) as u8)
+    } else {
+        sign | n as u8 // subnormal: e == -6, exponent field 0
+    }
+}
+
+/// Decode an E4M3 code to `f32`. The NaN codes (`0x7F`/`0xFF`) decode to NaN.
+#[inline]
+pub fn decode_e4m3(code: u8) -> f32 {
+    let sign = if code & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let e = ((code >> 3) & 0xF) as i32;
+    let m = (code & 0x7) as i32;
+    if e == 15 && m == 7 {
+        return f32::NAN;
+    }
+    let v = if e == 0 {
+        m as f32 * exp2i(-9)
+    } else {
+        (8 + m) as f32 * exp2i(e - 10)
+    };
+    sign * v
+}
+
+/// Quantize–dequantize: project onto the E4M3 value grid (saturating RNE).
+///
+/// Direct computation (no table) — this is the hot path of the scale
+/// search; see `metrics::sweep` for the fused loop built on it.
+#[inline]
+pub fn qdq_e4m3(x: f32) -> f32 {
+    let a = x.clamp(-E4M3_MAX, E4M3_MAX);
+    let mag = a.abs();
+    if mag == 0.0 {
+        return 0.0;
+    }
+    let e = ((mag.to_bits() >> 23) as i32 - 127).max(MIN_NORMAL_EXP);
+    let step = exp2i(e - 3);
+    (a / step).round_ties_even() * step
+}
+
+/// Exact power of two for small integer exponents (|e| < 127).
+#[inline(always)]
+fn exp2i(e: i32) -> f32 {
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+/// Ratio between the two formats' maxima — rescales an E4M3-convention
+/// absmax scale (`|W|max/448`) into the E5M2 range for format ablations.
+pub fn e5m2_ratio() -> f32 {
+    e5m2::E5M2_MAX / E4M3_MAX
+}
+
+/// Decode table for fast bulk dequantization (NaN codes decode to NaN).
+pub fn decode_table() -> [f32; 256] {
+    let mut t = [0.0f32; 256];
+    for (c, slot) in t.iter_mut().enumerate() {
+        *slot = decode_e4m3(c as u8);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_codes_roundtrip() {
+        for c in 0u16..256 {
+            let c = c as u8;
+            let v = decode_e4m3(c);
+            if v.is_nan() {
+                assert!(c == 0x7F || c == 0xFF);
+                continue;
+            }
+            let back = encode_e4m3(v);
+            // -0 re-encodes to +0 by design
+            let expect = if v == 0.0 { 0 } else { c };
+            assert_eq!(back, expect, "code {c:#04x} -> {v} -> {back:#04x}");
+        }
+    }
+
+    #[test]
+    fn grid_values_are_qdq_fixed_points() {
+        for c in 0u16..256 {
+            let v = decode_e4m3(c as u8);
+            if v.is_nan() {
+                continue;
+            }
+            assert_eq!(qdq_e4m3(v), v, "code {c:#04x}");
+        }
+    }
+
+    #[test]
+    fn saturation() {
+        assert_eq!(qdq_e4m3(1e9), 448.0);
+        assert_eq!(qdq_e4m3(-1e9), -448.0);
+        assert_eq!(qdq_e4m3(449.0), 448.0);
+        assert_eq!(encode_e4m3(1e9), 0x7E);
+        assert_eq!(encode_e4m3(-1e9), 0xFE);
+    }
+
+    #[test]
+    fn max_finite() {
+        assert_eq!(decode_e4m3(0x7E), 448.0);
+        assert_eq!(decode_e4m3(0xFE), -448.0);
+    }
+
+    #[test]
+    fn subnormal_grid() {
+        for k in 0..8 {
+            let v = k as f32 * exp2i(-9);
+            assert_eq!(qdq_e4m3(v), v);
+        }
+        // below half the smallest subnormal rounds to zero
+        assert_eq!(qdq_e4m3(exp2i(-11)), 0.0);
+        // exactly half ties to even (zero)
+        assert_eq!(qdq_e4m3(exp2i(-10)), 0.0);
+        // just above half rounds up
+        assert_eq!(qdq_e4m3(exp2i(-10) * 1.001), exp2i(-9));
+    }
+
+    #[test]
+    fn rne_tie_breaking() {
+        // 17 ties between 16 and 18 -> 16 (even grid index)
+        assert_eq!(qdq_e4m3(17.0), 16.0);
+        // 19 ties between 18 and 20 -> 20 (even grid index)
+        assert_eq!(qdq_e4m3(19.0), 20.0);
+    }
+
+    #[test]
+    fn nan_handling() {
+        assert_eq!(encode_e4m3(f32::NAN), E4M3_NAN);
+        assert!(decode_e4m3(E4M3_NAN).is_nan());
+        assert!(decode_e4m3(0xFF).is_nan());
+    }
+
+    #[test]
+    fn zero_sign_dropped() {
+        assert_eq!(encode_e4m3(0.0), 0);
+        assert_eq!(encode_e4m3(-0.0), 0);
+        assert_eq!(qdq_e4m3(-0.0), 0.0);
+        assert_eq!(encode_e4m3(-1e-12), 0); // rounds to zero, sign dropped
+    }
+
+    #[test]
+    fn monotone_on_grid() {
+        // decode must be strictly increasing over positive non-NaN codes
+        let mut prev = -1.0f32;
+        for c in 0u8..0x7F {
+            let v = decode_e4m3(c);
+            assert!(v > prev, "code {c:#04x}: {v} <= {prev}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn qdq_equals_decode_encode() {
+        // the fast qdq path must agree with the table path on random values
+        let mut rng = crate::util::rng::XorShift::new(7);
+        for _ in 0..100_000 {
+            let x = (rng.f32() - 0.5) * 1000.0;
+            let fast = qdq_e4m3(x);
+            let slow = decode_e4m3(encode_e4m3(x));
+            assert_eq!(fast.to_bits(), slow.to_bits(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn relative_error_bound() {
+        let mut rng = crate::util::rng::XorShift::new(9);
+        for _ in 0..50_000 {
+            let x = (rng.f32() - 0.5) * 800.0;
+            let q = qdq_e4m3(x);
+            let in_range = x.abs() <= 448.0;
+            if in_range && x.abs() >= exp2i(-6) {
+                assert!((q - x).abs() <= x.abs() * exp2i(-4) + 1e-12,
+                        "x={x} q={q}");
+            }
+        }
+    }
+}

@@ -1,0 +1,388 @@
+//! DTS — Delta Tensor Store reader/writer (Rust side).
+//!
+//! Binary-compatible with `python/compile/dts.py`; see that file for the
+//! on-disk layout. The reader parses the index first and then reads tensor
+//! payloads sequentially, so checkpoints stream without being resident
+//! twice; the writer is the mirror image, used to persist quantized
+//! checkpoints and sidecar scale tensors.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 4] = b"DTS1";
+const VERSION: u32 = 1;
+
+/// A tensor as stored in a DTS container.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DtsTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    U8 { shape: Vec<usize>, data: Vec<u8> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl DtsTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            DtsTensor::F32 { shape, .. }
+            | DtsTensor::U8 { shape, .. }
+            | DtsTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape().iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn dtype_code(&self) -> u8 {
+        match self {
+            DtsTensor::F32 { .. } => 0,
+            DtsTensor::U8 { .. } => 1,
+            DtsTensor::I32 { .. } => 2,
+        }
+    }
+
+    fn nbytes(&self) -> usize {
+        match self {
+            DtsTensor::F32 { data, .. } => data.len() * 4,
+            DtsTensor::U8 { data, .. } => data.len(),
+            DtsTensor::I32 { data, .. } => data.len() * 4,
+        }
+    }
+}
+
+/// An in-memory DTS container: ordered tensors + string metadata.
+#[derive(Default, Debug)]
+pub struct Dts {
+    pub meta: BTreeMap<String, String>,
+    names: Vec<String>,
+    tensors: BTreeMap<String, DtsTensor>,
+}
+
+impl Dts {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert (or replace) a tensor, preserving first-insertion order.
+    pub fn insert(&mut self, name: &str, t: DtsTensor) {
+        if !self.tensors.contains_key(name) {
+            self.names.push(name.to_string());
+        }
+        self.tensors.insert(name.to_string(), t);
+    }
+
+    pub fn insert_f32(&mut self, name: &str, t: &Tensor) {
+        self.insert(name, DtsTensor::F32 {
+            shape: t.shape().to_vec(),
+            data: t.data().to_vec(),
+        });
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn get(&self, name: &str) -> Option<&DtsTensor> {
+        self.tensors.get(name)
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.tensors.contains_key(name)
+    }
+
+    /// Fetch an f32 tensor as a `Tensor` (errors on missing or wrong dtype).
+    pub fn tensor_f32(&self, name: &str) -> Result<Tensor> {
+        match self.get(name) {
+            Some(DtsTensor::F32 { shape, data }) => {
+                Ok(Tensor::new(shape.clone(), data.clone()))
+            }
+            Some(other) => bail!("tensor {name:?} has dtype {:?}, wanted f32",
+                                 other.dtype_code()),
+            None => bail!("tensor {name:?} not found"),
+        }
+    }
+
+    pub fn tensor_i32(&self, name: &str) -> Result<(Vec<usize>, Vec<i32>)> {
+        match self.get(name) {
+            Some(DtsTensor::I32 { shape, data }) => Ok((shape.clone(), data.clone())),
+            Some(_) => bail!("tensor {name:?} is not i32"),
+            None => bail!("tensor {name:?} not found"),
+        }
+    }
+
+    pub fn tensor_u8(&self, name: &str) -> Result<(Vec<usize>, Vec<u8>)> {
+        match self.get(name) {
+            Some(DtsTensor::U8 { shape, data }) => Ok((shape.clone(), data.clone())),
+            Some(_) => bail!("tensor {name:?} is not u8"),
+            None => bail!("tensor {name:?} not found"),
+        }
+    }
+
+    // -- serialization ----------------------------------------------------
+
+    pub fn read(path: impl AsRef<Path>) -> Result<Dts> {
+        let path = path.as_ref();
+        let f = File::open(path).with_context(|| format!("open {path:?}"))?;
+        let mut r = BufReader::new(f);
+
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?}: bad magic {magic:?}");
+        }
+        let version = read_u32(&mut r)?;
+        if version != VERSION {
+            bail!("{path:?}: unsupported version {version}");
+        }
+        let n_meta = read_u32(&mut r)? as usize;
+        let n_tensor = read_u32(&mut r)? as usize;
+
+        let mut dts = Dts::new();
+        for _ in 0..n_meta {
+            let klen = read_u16(&mut r)? as usize;
+            let key = read_string(&mut r, klen)?;
+            let vlen = read_u32(&mut r)? as usize;
+            let val = read_string(&mut r, vlen)?;
+            dts.meta.insert(key, val);
+        }
+
+        struct Entry {
+            name: String,
+            dtype: u8,
+            shape: Vec<usize>,
+            offset: u64,
+            nbytes: u64,
+        }
+        let mut entries = Vec::with_capacity(n_tensor);
+        for _ in 0..n_tensor {
+            let nlen = read_u16(&mut r)? as usize;
+            let name = read_string(&mut r, nlen)?;
+            let mut db = [0u8; 2];
+            r.read_exact(&mut db)?;
+            let (dtype, ndim) = (db[0], db[1] as usize);
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u64(&mut r)? as usize);
+            }
+            let offset = read_u64(&mut r)?;
+            let nbytes = read_u64(&mut r)?;
+            entries.push(Entry { name, dtype, shape, offset, nbytes });
+        }
+
+        // payload: entries were written sequentially; verify and stream
+        let mut cursor = 0u64;
+        for e in &entries {
+            if e.offset != cursor {
+                bail!("{path:?}: non-sequential payload at {:?} \
+                       (offset {} expected {cursor})", e.name, e.offset);
+            }
+            let mut raw = vec![0u8; e.nbytes as usize];
+            r.read_exact(&mut raw)
+                .with_context(|| format!("payload of {:?}", e.name))?;
+            let n: usize = e.shape.iter().product();
+            let t = match e.dtype {
+                0 => {
+                    if raw.len() != n * 4 {
+                        bail!("{:?}: f32 payload size mismatch", e.name);
+                    }
+                    let data = raw
+                        .chunks_exact(4)
+                        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                        .collect();
+                    DtsTensor::F32 { shape: e.shape.clone(), data }
+                }
+                1 => DtsTensor::U8 { shape: e.shape.clone(), data: raw },
+                2 => {
+                    let data = raw
+                        .chunks_exact(4)
+                        .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                        .collect();
+                    DtsTensor::I32 { shape: e.shape.clone(), data }
+                }
+                d => bail!("{:?}: unsupported dtype code {d}", e.name),
+            };
+            dts.insert(&e.name, t);
+            cursor += e.nbytes;
+        }
+        Ok(dts)
+    }
+
+    pub fn write(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let f = File::create(path).with_context(|| format!("create {path:?}"))?;
+        let mut w = BufWriter::new(f);
+
+        w.write_all(MAGIC)?;
+        w.write_all(&VERSION.to_le_bytes())?;
+        w.write_all(&(self.meta.len() as u32).to_le_bytes())?;
+        w.write_all(&(self.names.len() as u32).to_le_bytes())?;
+
+        for (k, v) in &self.meta {
+            w.write_all(&(k.len() as u16).to_le_bytes())?;
+            w.write_all(k.as_bytes())?;
+            w.write_all(&(v.len() as u32).to_le_bytes())?;
+            w.write_all(v.as_bytes())?;
+        }
+
+        let mut offset = 0u64;
+        for name in &self.names {
+            let t = &self.tensors[name];
+            w.write_all(&(name.len() as u16).to_le_bytes())?;
+            w.write_all(name.as_bytes())?;
+            w.write_all(&[t.dtype_code(), t.shape().len() as u8])?;
+            for &d in t.shape() {
+                w.write_all(&(d as u64).to_le_bytes())?;
+            }
+            w.write_all(&offset.to_le_bytes())?;
+            w.write_all(&(t.nbytes() as u64).to_le_bytes())?;
+            offset += t.nbytes() as u64;
+        }
+
+        for name in &self.names {
+            match &self.tensors[name] {
+                DtsTensor::F32 { data, .. } => {
+                    for v in data {
+                        w.write_all(&v.to_le_bytes())?;
+                    }
+                }
+                DtsTensor::U8 { data, .. } => w.write_all(data)?,
+                DtsTensor::I32 { data, .. } => {
+                    for v in data {
+                        w.write_all(&v.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+        w.flush()?;
+        Ok(())
+    }
+}
+
+fn read_u16(r: &mut impl Read) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_string(r: &mut impl Read, len: usize) -> Result<String> {
+    let mut b = vec![0u8; len];
+    r.read_exact(&mut b)?;
+    Ok(String::from_utf8(b)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("daq_test_{name}_{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip_mixed() {
+        let mut d = Dts::new();
+        d.meta.insert("kind".into(), "test".into());
+        d.insert("w", DtsTensor::F32 {
+            shape: vec![2, 3],
+            data: vec![1.0, -2.5, 3.25, 0.0, 5.0, -6.125],
+        });
+        d.insert("codes", DtsTensor::U8 { shape: vec![4], data: vec![0, 127, 128, 255] });
+        d.insert("tok", DtsTensor::I32 { shape: vec![2, 2], data: vec![-1, 0, 7, 42] });
+
+        let p = tmpfile("roundtrip");
+        d.write(&p).unwrap();
+        let d2 = Dts::read(&p).unwrap();
+        std::fs::remove_file(&p).unwrap();
+
+        assert_eq!(d2.meta.get("kind").map(|s| s.as_str()), Some("test"));
+        assert_eq!(d2.names(), d.names());
+        assert_eq!(d2.get("w"), d.get("w"));
+        assert_eq!(d2.get("codes"), d.get("codes"));
+        assert_eq!(d2.get("tok"), d.get("tok"));
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let p = tmpfile("badmagic");
+        std::fs::write(&p, b"NOPE\x01\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00").unwrap();
+        let err = Dts::read(&p).unwrap_err().to_string();
+        std::fs::remove_file(&p).unwrap();
+        assert!(err.contains("bad magic"), "{err}");
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let d = Dts::new();
+        assert!(d.tensor_f32("nope").is_err());
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let mut d = Dts::new();
+        d.insert("codes", DtsTensor::U8 { shape: vec![1], data: vec![1] });
+        assert!(d.tensor_f32("codes").is_err());
+        assert!(d.tensor_u8("codes").is_ok());
+    }
+
+    #[test]
+    fn insertion_order_preserved() {
+        let mut d = Dts::new();
+        for name in ["z", "a", "m"] {
+            d.insert(name, DtsTensor::U8 { shape: vec![1], data: vec![0] });
+        }
+        assert_eq!(d.names(), &["z", "a", "m"]);
+        let p = tmpfile("order");
+        d.write(&p).unwrap();
+        let d2 = Dts::read(&p).unwrap();
+        std::fs::remove_file(&p).unwrap();
+        assert_eq!(d2.names(), &["z", "a", "m"]);
+    }
+
+    #[test]
+    fn proptest_roundtrip_f32() {
+        use crate::util::proptest::{run, Config};
+        run("dts f32 roundtrip", Config { cases: 16, ..Config::default() }, |g| {
+            let r = g.usize_range(1, 16);
+            let c = g.usize_range(1, 16);
+            let data = g.normal_vec(r * c, 2.0);
+            let mut d = Dts::new();
+            d.insert("t", DtsTensor::F32 { shape: vec![r, c], data: data.clone() });
+            let p = std::env::temp_dir().join(format!(
+                "daq_prop_{}_{}", std::process::id(), g.u64()));
+            d.write(&p).unwrap();
+            let d2 = Dts::read(&p).unwrap();
+            std::fs::remove_file(&p).unwrap();
+            match d2.get("t").unwrap() {
+                DtsTensor::F32 { shape, data: data2 } => {
+                    assert_eq!(shape, &vec![r, c]);
+                    assert_eq!(&data, data2);
+                }
+                _ => panic!("wrong dtype"),
+            }
+        });
+    }
+}

@@ -1,0 +1,3 @@
+//! Checkpoint and artifact I/O.
+
+pub mod dts;

@@ -1,0 +1,53 @@
+//! # DAQ — Delta-Aware Quantization for Post-Training LLM Weight Compression
+//!
+//! A full-stack reproduction of the DAQ paper (Yuanbao & Hunyuan AI Infra
+//! Team, 2026): a **data-free post-training quantization pipeline** that
+//! optimizes the FP8 scale per layer for *directional fidelity of the
+//! post-training delta* `ΔW = W_post − W_base` (Sign Preservation Rate /
+//! Cosine Similarity) instead of reconstruction error.
+//!
+//! ## Architecture
+//!
+//! This crate is Layer 3 of a three-layer stack (see `DESIGN.md`):
+//!
+//! - **L1** Pallas kernels (`python/compile/kernels/`) implement the FP8
+//!   quantize–dequantize and the fused delta-metric sweep; they are lowered
+//!   at build time.
+//! - **L2** JAX graphs (`python/compile/model.py`) provide the transformer
+//!   forward used for evaluation and serving.
+//! - **L3** (this crate) owns everything at run time: checkpoint streaming,
+//!   the layer-parallel scale-search coordinator, the PJRT runtime that
+//!   executes the AOT artifacts, evaluation, serving, and reporting.
+//!   Python never runs on the request path.
+//!
+//! ## Quick tour
+//!
+//! ```no_run
+//! use daq::io::dts::Dts;
+//! use daq::quant::{Granularity, quantize};
+//! use daq::search::{SearchConfig, Objective, search_scale};
+//!
+//! let post = Dts::read("artifacts/ckpt_post.dts").unwrap();
+//! let base = Dts::read("artifacts/ckpt_base.dts").unwrap();
+//! let wp = post.tensor_f32("l0.wq").unwrap();
+//! let wb = base.tensor_f32("l0.wq").unwrap();
+//! let cfg = SearchConfig::paper_default(Objective::SignRate, (0.8, 1.25));
+//! let res = search_scale(&wp, &wb, Granularity::Block(128), &cfg);
+//! let q = quantize(&wp, Granularity::Block(128), res.alpha);
+//! ```
+
+pub mod baselines;
+pub mod cli;
+pub mod coordinator;
+pub mod experiments;
+pub mod eval;
+pub mod fp8;
+pub mod io;
+pub mod metrics;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod search;
+pub mod serve;
+pub mod tensor;
+pub mod util;

@@ -1,0 +1,28 @@
+//! `daq` — the L3 coordinator binary.
+//!
+//! See `daq help` (or cli::USAGE) for the subcommands. Typical flow:
+//!
+//! ```text
+//! make artifacts                       # python: train + AOT-lower (once)
+//! daq quantize --metric sign --range 0.8,1.25 --engine pjrt --out q.dts
+//! daq eval --ckpt q.dts --engine pjrt
+//! daq tables                           # regenerate paper tables 1-5
+//! daq serve --engine pjrt --quantize   # serve the DAQ-quantized model
+//! ```
+
+use daq::cli;
+use daq::util::cliargs::Args;
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{}", cli::USAGE);
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = cli::dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

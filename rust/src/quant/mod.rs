@@ -1,0 +1,326 @@
+//! Quantizer core: scale granularities, AbsMax scale initialization, and
+//! the scale-parameterized quantize–dequantize operator `Q_s(W)` (paper
+//! Eq. 4) in its FP8 E4M3 instantiation.
+//!
+//! Granularities match the paper's setup (§3.1): block-wise with block
+//! size 128 (the DeepSeek-V3 FP8 convention) and per-channel
+//! (per output column). Per-tensor is included for ablations.
+
+use crate::fp8;
+use crate::tensor::Tensor;
+
+/// Scale granularity for `Q_s`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Granularity {
+    /// One scale for the whole tensor.
+    PerTensor,
+    /// One scale per output channel (column of `W[in, out]`).
+    PerChannel,
+    /// One scale per `b`×`b` block (paper uses 128).
+    Block(usize),
+}
+
+impl Granularity {
+    pub fn parse(s: &str) -> Result<Granularity, String> {
+        match s {
+            "tensor" => Ok(Granularity::PerTensor),
+            "channel" => Ok(Granularity::PerChannel),
+            "block" => Ok(Granularity::Block(128)),
+            other => {
+                if let Some(b) = other.strip_prefix("block") {
+                    b.parse()
+                        .map(Granularity::Block)
+                        .map_err(|_| format!("bad granularity {other:?}"))
+                } else {
+                    Err(format!(
+                        "bad granularity {other:?} (tensor|channel|block|blockN)"
+                    ))
+                }
+            }
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Granularity::PerTensor => "tensor".into(),
+            Granularity::PerChannel => "channel".into(),
+            Granularity::Block(b) => format!("block{b}"),
+        }
+    }
+}
+
+/// A scale field attached to a 2-D weight: the `s0` of Algorithm 1, stored
+/// at its natural granularity with O(1) per-element lookup.
+#[derive(Clone, Debug)]
+pub struct ScaleGrid {
+    pub granularity: Granularity,
+    /// Weight dims this grid was built for.
+    pub rows: usize,
+    pub cols: usize,
+    /// Grid dims (1×1, 1×cols, or ⌈rows/b⌉×⌈cols/b⌉).
+    pub grid_rows: usize,
+    pub grid_cols: usize,
+    pub scales: Vec<f32>,
+}
+
+impl ScaleGrid {
+    /// Per-element scale lookup.
+    #[inline(always)]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        match self.granularity {
+            Granularity::PerTensor => self.scales[0],
+            Granularity::PerChannel => self.scales[c],
+            Granularity::Block(b) => {
+                self.scales[(r / b) * self.grid_cols + (c / b)]
+            }
+        }
+    }
+
+    /// Expand to a dense rows×cols field (the layout the PJRT sweep
+    /// artifact takes, mirroring `ref.expand_block_scale`).
+    pub fn expand(&self) -> Tensor {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[r * self.cols + c] = self.at(r, c);
+            }
+        }
+        Tensor::new(vec![self.rows, self.cols], out)
+    }
+
+    /// Multiply every scale by `alpha` (Algorithm 1 line 8: s = α·s0).
+    pub fn scaled(&self, alpha: f32) -> ScaleGrid {
+        let mut g = self.clone();
+        for s in &mut g.scales {
+            *s *= alpha;
+        }
+        g
+    }
+}
+
+/// AbsMax scale initialization (Algorithm 1 line 3: s0 = max|W| / Qmax).
+/// All-zero groups get scale 1 to avoid division by zero.
+pub fn absmax_scales(w: &Tensor, granularity: Granularity) -> ScaleGrid {
+    let (rows, cols) = (w.rows(), w.cols());
+    let (grid_rows, grid_cols, mut scales) = match granularity {
+        Granularity::PerTensor => (1, 1, vec![0.0f32; 1]),
+        Granularity::PerChannel => (1, cols, vec![0.0f32; cols]),
+        Granularity::Block(b) => {
+            let gr = rows.div_ceil(b);
+            let gc = cols.div_ceil(b);
+            (gr, gc, vec![0.0f32; gr * gc])
+        }
+    };
+    for r in 0..rows {
+        for c in 0..cols {
+            let v = w.at2(r, c).abs();
+            let idx = match granularity {
+                Granularity::PerTensor => 0,
+                Granularity::PerChannel => c,
+                Granularity::Block(b) => (r / b) * grid_cols + (c / b),
+            };
+            if v > scales[idx] {
+                scales[idx] = v;
+            }
+        }
+    }
+    for s in &mut scales {
+        *s = if *s > 0.0 { *s / fp8::E4M3_MAX } else { 1.0 };
+    }
+    ScaleGrid { granularity, rows, cols, grid_rows, grid_cols, scales }
+}
+
+/// A quantized tensor: E4M3 codes + final scales (storage format, the
+/// `Ŵ, (s*)⁻¹` pair Algorithm 1 returns).
+#[derive(Clone, Debug)]
+pub struct QuantizedTensor {
+    pub shape: (usize, usize),
+    pub codes: Vec<u8>,
+    pub scales: ScaleGrid,
+}
+
+impl QuantizedTensor {
+    pub fn dequantize(&self) -> Tensor {
+        let (rows, cols) = self.shape;
+        let table = fp8::decode_table();
+        let mut out = vec![0.0f32; rows * cols];
+        for r in 0..rows {
+            for c in 0..cols {
+                out[r * cols + c] =
+                    table[self.codes[r * cols + c] as usize] * self.scales.at(r, c);
+            }
+        }
+        Tensor::new(vec![rows, cols], out)
+    }
+
+    /// Storage footprint in bytes (codes + scales).
+    pub fn nbytes(&self) -> usize {
+        self.codes.len() + self.scales.scales.len() * 4
+    }
+
+    /// Compression ratio vs f32 storage.
+    pub fn compression_ratio(&self) -> f64 {
+        (self.shape.0 * self.shape.1 * 4) as f64 / self.nbytes() as f64
+    }
+}
+
+/// Quantize `w` with scales `s0·alpha`, returning the storage form.
+pub fn quantize_with_scales(w: &Tensor, s0: &ScaleGrid, alpha: f32) -> QuantizedTensor {
+    let (rows, cols) = (w.rows(), w.cols());
+    let mut codes = vec![0u8; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            let s = s0.at(r, c) * alpha;
+            codes[r * cols + c] = fp8::encode_e4m3(w.at2(r, c) / s);
+        }
+    }
+    QuantizedTensor { shape: (rows, cols), codes, scales: s0.scaled(alpha) }
+}
+
+/// Convenience: AbsMax-initialize and quantize in one step.
+pub fn quantize(w: &Tensor, granularity: Granularity, alpha: f32) -> QuantizedTensor {
+    let s0 = absmax_scales(w, granularity);
+    quantize_with_scales(w, &s0, alpha)
+}
+
+/// Quantize–dequantize without storing codes (the `Q_s(W)` used by metric
+/// evaluation): out[i] = qdq_e4m3(w[i] / s[i]) * s[i].
+pub fn qdq(w: &Tensor, s0: &ScaleGrid, alpha: f32) -> Tensor {
+    let (rows, cols) = (w.rows(), w.cols());
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            let s = s0.at(r, c) * alpha;
+            out[r * cols + c] = fp8::qdq_e4m3(w.at2(r, c) / s) * s;
+        }
+    }
+    Tensor::new(vec![rows, cols], out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::XorShift;
+
+    fn rand_w(r: usize, c: usize, seed: u64) -> Tensor {
+        let mut rng = XorShift::new(seed);
+        Tensor::new(vec![r, c], rng.normal_vec(r * c, 0.1))
+    }
+
+    #[test]
+    fn granularity_parse() {
+        assert_eq!(Granularity::parse("block").unwrap(), Granularity::Block(128));
+        assert_eq!(Granularity::parse("block64").unwrap(), Granularity::Block(64));
+        assert_eq!(Granularity::parse("channel").unwrap(), Granularity::PerChannel);
+        assert_eq!(Granularity::parse("tensor").unwrap(), Granularity::PerTensor);
+        assert!(Granularity::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn absmax_per_tensor() {
+        let w = Tensor::new(vec![2, 2], vec![1.0, -2.0, 0.5, 1.5]);
+        let s = absmax_scales(&w, Granularity::PerTensor);
+        assert_eq!(s.scales.len(), 1);
+        assert!((s.at(0, 0) - 2.0 / 448.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn absmax_per_channel() {
+        let w = Tensor::new(vec![2, 3], vec![1., 2., 3., -4., 0.5, 1.]);
+        let s = absmax_scales(&w, Granularity::PerChannel);
+        assert_eq!(s.scales.len(), 3);
+        assert!((s.at(0, 0) - 4.0 / 448.0).abs() < 1e-9);
+        assert!((s.at(1, 1) - 2.0 / 448.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn absmax_block_and_edges() {
+        // 130x130 with block 128 -> 2x2 grid with ragged edges
+        let mut w = Tensor::zeros(vec![130, 130]);
+        w.set2(0, 0, 10.0);
+        w.set2(129, 129, 20.0); // lives in block (1,1)
+        let s = absmax_scales(&w, Granularity::Block(128));
+        assert_eq!((s.grid_rows, s.grid_cols), (2, 2));
+        assert!((s.at(0, 0) - 10.0 / 448.0).abs() < 1e-9);
+        assert!((s.at(129, 129) - 20.0 / 448.0).abs() < 1e-9);
+        // all-zero blocks get scale 1
+        assert_eq!(s.at(0, 129), 1.0);
+    }
+
+    #[test]
+    fn expand_matches_at() {
+        let w = rand_w(64, 96, 1);
+        let s = absmax_scales(&w, Granularity::Block(32));
+        let full = s.expand();
+        for r in (0..64).step_by(7) {
+            for c in (0..96).step_by(11) {
+                assert_eq!(full.at2(r, c), s.at(r, c));
+            }
+        }
+    }
+
+    #[test]
+    fn quantize_dequantize_consistency() {
+        // dequantize(quantize(w)) == qdq(w) elementwise
+        let w = rand_w(64, 64, 2);
+        let s0 = absmax_scales(&w, Granularity::Block(32));
+        let q = quantize_with_scales(&w, &s0, 1.0);
+        let deq = q.dequantize();
+        let direct = qdq(&w, &s0, 1.0);
+        for (a, b) in deq.data().iter().zip(direct.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn alpha_one_absmax_never_saturates_destructively() {
+        // with s0 = absmax/448 every |w/s| <= 448, so qdq error is bounded
+        // by the E4M3 half-ulp
+        let w = rand_w(32, 32, 3);
+        let s0 = absmax_scales(&w, Granularity::PerTensor);
+        let q = qdq(&w, &s0, 1.0);
+        for (x, y) in w.data().iter().zip(q.data()) {
+            assert!((x - y).abs() <= x.abs() * 0.0625 + s0.at(0, 0) * 0.002,
+                    "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn compression_ratio() {
+        let w = rand_w(128, 128, 4);
+        let q = quantize(&w, Granularity::Block(128), 1.0);
+        // 1 byte/elem + one f32 scale for the single block: ~4x
+        assert!(q.compression_ratio() > 3.9 && q.compression_ratio() <= 4.0);
+        let qc = quantize(&w, Granularity::PerChannel, 1.0);
+        assert!(qc.compression_ratio() > 3.8);
+    }
+
+    #[test]
+    fn alpha_scales_the_grid() {
+        let w = rand_w(16, 16, 5);
+        let s0 = absmax_scales(&w, Granularity::PerTensor);
+        let s2 = s0.scaled(2.0);
+        assert!((s2.at(0, 0) - 2.0 * s0.at(0, 0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn proptest_qdq_idempotent() {
+        use crate::util::proptest::{run, Config};
+        run("qdq idempotent", Config { cases: 24, ..Config::default() }, |g| {
+            let r = g.usize_range(1, 40);
+            let c = g.usize_range(1, 40);
+            let w = Tensor::new(vec![r, c], g.normal_vec(r * c, 0.5));
+            let gran = *g.pick(&[
+                Granularity::PerTensor,
+                Granularity::PerChannel,
+                Granularity::Block(16),
+            ]);
+            let s0 = absmax_scales(&w, gran);
+            let q1 = qdq(&w, &s0, 1.0);
+            let q2 = qdq(&q1, &s0, 1.0);
+            for (a, b) in q1.data().iter().zip(q2.data()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        });
+    }
+}

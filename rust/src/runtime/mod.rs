@@ -1,0 +1,295 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts (`make artifacts`)
+//! and executes them from the Rust hot path. Python never runs here.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `PjRtClient::compile` → `execute`. Compiled executables are cached per
+//! artifact so each graph compiles once per process.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::metrics::DeltaStats;
+use crate::quant::ScaleGrid;
+use crate::search::SweepEngine;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+
+/// Parsed `artifacts/manifest.json` — the machine-readable index of what
+/// aot.py lowered, including the model configuration and parameter order
+/// the forward graphs expect.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub n_candidates: usize,
+    pub eval_batch: usize,
+    pub serve_batch: usize,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layer: usize,
+    pub n_head: usize,
+    pub d_ff: usize,
+    pub param_order: Vec<String>,
+    pub param_shapes: HashMap<String, Vec<usize>>,
+    pub quantizable: Vec<String>,
+    /// (rows, cols) -> sweep artifact file
+    pub sweeps: HashMap<(usize, usize), String>,
+    /// batch -> forward artifact file
+    pub forwards: HashMap<usize, String>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} (run `make artifacts` first)"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        let usize_of = |key: &str| -> Result<usize> {
+            j.get(key)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("manifest missing {key}"))
+        };
+        let mut sweeps = HashMap::new();
+        for s in j.get("sweeps").and_then(Json::as_arr).unwrap_or(&[]) {
+            let shape = s.get("shape").and_then(Json::as_arr).unwrap();
+            let file = s.get("file").and_then(Json::as_str).unwrap().to_string();
+            sweeps.insert(
+                (shape[0].as_usize().unwrap(), shape[1].as_usize().unwrap()),
+                file,
+            );
+        }
+        let mut forwards = HashMap::new();
+        for f in j.get("forwards").and_then(Json::as_arr).unwrap_or(&[]) {
+            forwards.insert(
+                f.get("batch").and_then(Json::as_usize).unwrap(),
+                f.get("file").and_then(Json::as_str).unwrap().to_string(),
+            );
+        }
+        let param_order: Vec<String> = j
+            .get("param_order")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect();
+        let mut param_shapes = HashMap::new();
+        if let Some(Json::Obj(m)) = j.get("param_shapes") {
+            for (k, v) in m {
+                let dims: Vec<usize> = v
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .filter_map(Json::as_usize)
+                    .collect();
+                param_shapes.insert(k.clone(), dims);
+            }
+        }
+        let quantizable = j
+            .get("quantizable")
+            .and_then(Json::as_arr)
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|v| v.as_str().map(String::from))
+            .collect();
+        Ok(Manifest {
+            n_candidates: usize_of("n_candidates")?,
+            eval_batch: usize_of("eval_batch")?,
+            serve_batch: usize_of("serve_batch")?,
+            seq_len: usize_of("seq_len")?,
+            vocab: usize_of("vocab")?,
+            d_model: usize_of("d_model")?,
+            n_layer: usize_of("n_layer")?,
+            n_head: usize_of("n_head")?,
+            d_ff: usize_of("d_ff")?,
+            param_order,
+            param_shapes,
+            quantizable,
+            sweeps,
+            forwards,
+        })
+    }
+}
+
+/// The PJRT runtime: CPU client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (must contain manifest.json).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile (cached) an HLO-text artifact by file name.
+    pub fn executable(&self, file: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.borrow().get(file) {
+            return Ok(Rc::clone(exe));
+        }
+        let path = self.dir.join(file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {file}: {e:?}"))?,
+        );
+        self.cache.borrow_mut().insert(file.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    fn literal_f32(t: &Tensor) -> Result<xla::Literal> {
+        let dims: Vec<i64> = t.shape().iter().map(|&d| d as i64).collect();
+        xla::Literal::vec1(t.data())
+            .reshape(&dims)
+            .map_err(|e| anyhow!("reshape literal: {e:?}"))
+    }
+
+    fn run_tuple1(
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[xla::Literal],
+    ) -> Result<Vec<f32>> {
+        let bufs = exe
+            .execute::<xla::Literal>(args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let out = lit.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Execute the fused DAQ sweep kernel for one weight. `alphas` is
+    /// padded with 1.0 to the artifact's fixed candidate count.
+    pub fn sweep(
+        &self,
+        w_post: &Tensor,
+        w_base: &Tensor,
+        s0_full: &Tensor,
+        alphas: &[f32],
+    ) -> Result<Vec<DeltaStats>> {
+        let (r, c) = (w_post.rows(), w_post.cols());
+        let nc = self.manifest.n_candidates;
+        if alphas.len() > nc {
+            bail!("{} candidates > artifact capacity {nc}", alphas.len());
+        }
+        let file = self
+            .manifest
+            .sweeps
+            .get(&(r, c))
+            .ok_or_else(|| anyhow!("no sweep artifact for shape {r}x{c}"))?
+            .clone();
+        let exe = self.executable(&file)?;
+        let mut padded = alphas.to_vec();
+        padded.resize(nc, 1.0);
+        let args = [
+            Self::literal_f32(w_post)?,
+            Self::literal_f32(w_base)?,
+            Self::literal_f32(s0_full)?,
+            xla::Literal::vec1(&padded),
+        ];
+        let flat = Self::run_tuple1(&exe, &args)?;
+        if flat.len() != nc * 6 {
+            bail!("sweep output len {} != {nc}*6", flat.len());
+        }
+        Ok(flat[..alphas.len() * 6]
+            .chunks_exact(6)
+            .map(DeltaStats::from_row)
+            .collect())
+    }
+
+    /// Execute the transformer forward: tokens `[batch, seq]` (row-major)
+    /// plus parameters in manifest order → logits `[batch, seq, vocab]`.
+    pub fn forward(
+        &self,
+        batch: usize,
+        tokens: &[i32],
+        params: &HashMap<String, Tensor>,
+    ) -> Result<Vec<f32>> {
+        let m = &self.manifest;
+        if tokens.len() != batch * m.seq_len {
+            bail!("tokens len {} != {batch}x{}", tokens.len(), m.seq_len);
+        }
+        let file = m
+            .forwards
+            .get(&batch)
+            .ok_or_else(|| anyhow!("no forward artifact for batch {batch}"))?
+            .clone();
+        let exe = self.executable(&file)?;
+        let mut args = Vec::with_capacity(1 + m.param_order.len());
+        args.push(
+            xla::Literal::vec1(tokens)
+                .reshape(&[batch as i64, m.seq_len as i64])
+                .map_err(|e| anyhow!("tokens literal: {e:?}"))?,
+        );
+        for name in &m.param_order {
+            let t = params
+                .get(name)
+                .ok_or_else(|| anyhow!("forward missing param {name:?}"))?;
+            args.push(Self::literal_f32(t)?);
+        }
+        let flat = Self::run_tuple1(&exe, &args)?;
+        let want = batch * m.seq_len * m.vocab;
+        if flat.len() != want {
+            bail!("logits len {} != {want}", flat.len());
+        }
+        Ok(flat)
+    }
+
+    /// Execute the standalone Pallas quantize–dequantize artifact
+    /// (quickstart / integration-test path).
+    pub fn qdq_128(&self, w: &Tensor, s_full: &Tensor) -> Result<Tensor> {
+        let exe = self.executable("qdq_128x128.hlo.txt")?;
+        let args = [Self::literal_f32(w)?, Self::literal_f32(s_full)?];
+        let flat = Self::run_tuple1(&exe, &args)?;
+        Ok(Tensor::new(vec![128, 128], flat))
+    }
+}
+
+/// `search::SweepEngine` implementation backed by the PJRT sweep artifact,
+/// making Algorithm 1 run its metric evaluations on the L1 Pallas kernel.
+pub struct PjrtSweep<'a> {
+    pub rt: &'a Runtime,
+}
+
+impl SweepEngine for PjrtSweep<'_> {
+    fn sweep(
+        &self,
+        w_post: &Tensor,
+        w_base: &Tensor,
+        s0: &ScaleGrid,
+        alphas: &[f32],
+    ) -> Vec<DeltaStats> {
+        let s0_full = s0.expand();
+        let nc = self.rt.manifest.n_candidates;
+        let mut out = Vec::with_capacity(alphas.len());
+        for chunk in alphas.chunks(nc) {
+            out.extend(
+                self.rt
+                    .sweep(w_post, w_base, &s0_full, chunk)
+                    .expect("PJRT sweep failed"),
+            );
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}

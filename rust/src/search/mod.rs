@@ -1,0 +1,439 @@
+//! Scale optimization (paper §2.4, Algorithm 1): coarse-to-fine search for
+//! the scale multiplier α* that maximizes a chosen objective, plus
+//! exhaustive and golden-section variants for the ablation benches.
+//!
+//! The search is generic over a [`SweepEngine`] so the same Algorithm 1
+//! control flow can run on either the native Rust fused sweep
+//! (`metrics::sweep_native`) or the AOT-compiled Pallas kernel through
+//! PJRT (`runtime::PjrtSweep`).
+
+use crate::metrics::{sweep_native, DeltaStats};
+use crate::quant::ScaleGrid;
+use crate::tensor::Tensor;
+
+/// Which metric drives the arg-max (paper Eq. 3/5; MSE is negated so every
+/// objective is maximized).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Objective {
+    SignRate,
+    CosSim,
+    NegMse,
+    /// Equal-weight blend of SignRate and (rescaled) CosSim — the hybrid
+    /// metric the paper's §3.5(3) suggests exploring: the sign term
+    /// provides the higher peaks, the cosine term the smoothness that
+    /// tames the binary metric's non-monotonicity across ranges.
+    Hybrid,
+}
+
+impl Objective {
+    pub fn parse(s: &str) -> Result<Objective, String> {
+        match s {
+            "sign" | "signrate" => Ok(Objective::SignRate),
+            "cos" | "cosine" | "cossim" => Ok(Objective::CosSim),
+            "mse" | "negmse" => Ok(Objective::NegMse),
+            "hybrid" => Ok(Objective::Hybrid),
+            other => Err(format!("bad metric {other:?} (sign|cos|mse|hybrid)")),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Objective::SignRate => "sign",
+            Objective::CosSim => "cos",
+            Objective::NegMse => "mse",
+            Objective::Hybrid => "hybrid",
+        }
+    }
+
+    /// Evaluate the objective on a stats row (higher is better).
+    pub fn value(&self, s: &DeltaStats) -> f64 {
+        match self {
+            Objective::SignRate => s.sign_rate(),
+            Objective::CosSim => s.cos_sim(),
+            Objective::NegMse => -s.mse(),
+            // both terms mapped to [0, 1] before blending
+            Objective::Hybrid => 0.5 * s.sign_rate() + 0.5 * (s.cos_sim() + 1.0) / 2.0,
+        }
+    }
+}
+
+/// Engine evaluating a batch of candidate multipliers (the fused sweep).
+pub trait SweepEngine {
+    fn sweep(
+        &self,
+        w_post: &Tensor,
+        w_base: &Tensor,
+        s0: &ScaleGrid,
+        alphas: &[f32],
+    ) -> Vec<DeltaStats>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// The in-process scalar engine.
+pub struct NativeSweep;
+
+impl SweepEngine for NativeSweep {
+    fn sweep(
+        &self,
+        w_post: &Tensor,
+        w_base: &Tensor,
+        s0: &ScaleGrid,
+        alphas: &[f32],
+    ) -> Vec<DeltaStats> {
+        sweep_native(w_post, w_base, s0, alphas)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Search hyperparameters (paper §3.1: ranges {[0.5,2],[0.8,1.25],
+/// [0.9,1.11]}, 5 coarse + 10 fine candidates).
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    pub objective: Objective,
+    pub range: (f32, f32),
+    pub n_coarse: usize,
+    pub n_fine: usize,
+    /// Half-width of the fine stage around the best coarse α, as a
+    /// fraction of the coarse spacing (1.0 = one coarse step either side).
+    pub fine_halfwidth_steps: f32,
+}
+
+impl SearchConfig {
+    pub fn paper_default(objective: Objective, range: (f32, f32)) -> Self {
+        Self {
+            objective,
+            range,
+            n_coarse: 5,
+            n_fine: 10,
+            fine_halfwidth_steps: 1.0,
+        }
+    }
+}
+
+/// Search outcome for one tensor.
+#[derive(Clone, Debug)]
+pub struct SearchResult {
+    /// Best multiplier α* (1.0 = the AbsMax default).
+    pub alpha: f32,
+    /// Objective value at α*.
+    pub objective_value: f64,
+    /// Full statistics at α*.
+    pub stats: DeltaStats,
+    /// Total candidate evaluations.
+    pub evals: usize,
+    /// (α, objective) for every candidate evaluated, in evaluation order.
+    pub history: Vec<(f32, f64)>,
+}
+
+fn linspace(lo: f32, hi: f32, n: usize) -> Vec<f32> {
+    if n == 1 {
+        return vec![(lo + hi) / 2.0];
+    }
+    (0..n)
+        .map(|i| lo + (hi - lo) * i as f32 / (n - 1) as f32)
+        .collect()
+}
+
+/// Algorithm 1: coarse-to-fine scale search over `[lo, hi]·s0`.
+///
+/// The default α = 1 (plain AbsMax) is always a candidate (lines 5–6), so
+/// the search never does worse than no search under its own objective.
+pub fn search_scale_with(
+    engine: &dyn SweepEngine,
+    w_post: &Tensor,
+    w_base: &Tensor,
+    s0: &ScaleGrid,
+    cfg: &SearchConfig,
+) -> SearchResult {
+    let (lo, hi) = cfg.range;
+    let mut history = Vec::new();
+    let mut best_alpha = 1.0f32;
+    let mut best_val = f64::NEG_INFINITY;
+    let mut best_stats = DeltaStats::default();
+
+    let mut eval_batch = |alphas: &[f32],
+                          history: &mut Vec<(f32, f64)>,
+                          best_alpha: &mut f32,
+                          best_val: &mut f64,
+                          best_stats: &mut DeltaStats| {
+        let stats = engine.sweep(w_post, w_base, s0, alphas);
+        for (&a, st) in alphas.iter().zip(&stats) {
+            let v = cfg.objective.value(st);
+            history.push((a, v));
+            if v > *best_val {
+                *best_val = v;
+                *best_alpha = a;
+                *best_stats = *st;
+            }
+        }
+    };
+
+    // default + coarse stage in one batch
+    let mut coarse = vec![1.0f32];
+    coarse.extend(linspace(lo, hi, cfg.n_coarse));
+    eval_batch(&coarse, &mut history, &mut best_alpha, &mut best_val, &mut best_stats);
+
+    // fine stage around the best coarse candidate
+    let step = if cfg.n_coarse > 1 {
+        (hi - lo) / (cfg.n_coarse - 1) as f32
+    } else {
+        hi - lo
+    };
+    let delta = step * cfg.fine_halfwidth_steps;
+    let flo = (best_alpha - delta).max(lo);
+    let fhi = (best_alpha + delta).min(hi);
+    let fine = linspace(flo, fhi, cfg.n_fine);
+    eval_batch(&fine, &mut history, &mut best_alpha, &mut best_val, &mut best_stats);
+
+    SearchResult {
+        alpha: best_alpha,
+        objective_value: best_val,
+        stats: best_stats,
+        evals: history.len(),
+        history,
+    }
+}
+
+/// Convenience wrapper using the native engine and AbsMax s0.
+pub fn search_scale(
+    w_post: &Tensor,
+    w_base: &Tensor,
+    granularity: crate::quant::Granularity,
+    cfg: &SearchConfig,
+) -> SearchResult {
+    let s0 = crate::quant::absmax_scales(w_post, granularity);
+    search_scale_with(&NativeSweep, w_post, w_base, &s0, cfg)
+}
+
+/// Ablation: exhaustive uniform grid (upper bound on what coarse-to-fine
+/// can find at matched evaluation budget ×N).
+pub fn search_exhaustive(
+    engine: &dyn SweepEngine,
+    w_post: &Tensor,
+    w_base: &Tensor,
+    s0: &ScaleGrid,
+    objective: Objective,
+    range: (f32, f32),
+    n: usize,
+) -> SearchResult {
+    let alphas = linspace(range.0, range.1, n);
+    let stats = engine.sweep(w_post, w_base, s0, &alphas);
+    let mut history = Vec::with_capacity(n);
+    let mut best = (1.0f32, f64::NEG_INFINITY, DeltaStats::default());
+    for (&a, st) in alphas.iter().zip(&stats) {
+        let v = objective.value(st);
+        history.push((a, v));
+        if v > best.1 {
+            best = (a, v, *st);
+        }
+    }
+    SearchResult {
+        alpha: best.0,
+        objective_value: best.1,
+        stats: best.2,
+        evals: history.len(),
+        history,
+    }
+}
+
+/// Ablation: golden-section search. Assumes (incorrectly, for SignRate —
+/// which is piecewise constant) a unimodal objective; included to show why
+/// the paper's grid search is the right default.
+pub fn search_golden(
+    engine: &dyn SweepEngine,
+    w_post: &Tensor,
+    w_base: &Tensor,
+    s0: &ScaleGrid,
+    objective: Objective,
+    range: (f32, f32),
+    iters: usize,
+) -> SearchResult {
+    const PHI: f32 = 0.618_034;
+    let (mut lo, mut hi) = range;
+    let mut history = Vec::new();
+    let mut eval1 = |a: f32, history: &mut Vec<(f32, f64)>| {
+        let st = engine.sweep(w_post, w_base, s0, &[a]);
+        let v = objective.value(&st[0]);
+        history.push((a, v));
+        (v, st[0])
+    };
+    let mut x1 = hi - PHI * (hi - lo);
+    let mut x2 = lo + PHI * (hi - lo);
+    let (mut f1, mut s1) = eval1(x1, &mut history);
+    let (mut f2, mut s2) = eval1(x2, &mut history);
+    for _ in 0..iters {
+        if f1 < f2 {
+            lo = x1;
+            x1 = x2;
+            f1 = f2;
+            s1 = s2;
+            x2 = lo + PHI * (hi - lo);
+            let r = eval1(x2, &mut history);
+            f2 = r.0;
+            s2 = r.1;
+        } else {
+            hi = x2;
+            x2 = x1;
+            f2 = f1;
+            s2 = s1;
+            x1 = hi - PHI * (hi - lo);
+            let r = eval1(x1, &mut history);
+            f1 = r.0;
+            s1 = r.1;
+        }
+    }
+    let (alpha, val, stats) = if f1 >= f2 { (x1, f1, s1) } else { (x2, f2, s2) };
+    SearchResult {
+        alpha,
+        objective_value: val,
+        stats,
+        evals: history.len(),
+        history,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{absmax_scales, Granularity};
+    use crate::util::rng::XorShift;
+
+    fn pair(r: usize, c: usize, delta: f32, seed: u64) -> (Tensor, Tensor) {
+        let mut rng = XorShift::new(seed);
+        let wb = Tensor::new(vec![r, c], rng.normal_vec(r * c, 0.1));
+        let wp = Tensor::new(
+            vec![r, c],
+            wb.data().iter().map(|&b| b + rng.normal() * delta).collect(),
+        );
+        (wp, wb)
+    }
+
+    #[test]
+    fn objective_parse() {
+        assert_eq!(Objective::parse("sign").unwrap(), Objective::SignRate);
+        assert_eq!(Objective::parse("cos").unwrap(), Objective::CosSim);
+        assert_eq!(Objective::parse("mse").unwrap(), Objective::NegMse);
+        assert_eq!(Objective::parse("hybrid").unwrap(), Objective::Hybrid);
+        assert!(Objective::parse("foo").is_err());
+    }
+
+    #[test]
+    fn hybrid_objective_bounds_and_blend() {
+        // perfect preservation: sign_rate 1, cos 1 -> hybrid 1
+        let perfect = DeltaStats { agree: 10.0, dot: 1.0, nq: 1.0,
+                                   npost: 1.0, sq: 0.0, n: 10.0 };
+        assert!((Objective::Hybrid.value(&perfect) - 1.0).abs() < 1e-12);
+        // fully reversed: sign_rate 0, cos -1 -> hybrid 0
+        let reversed = DeltaStats { agree: 0.0, dot: -1.0, nq: 1.0,
+                                    npost: 1.0, sq: 4.0, n: 10.0 };
+        assert!(Objective::Hybrid.value(&reversed).abs() < 1e-12);
+        // hybrid search is never worse than its own objective's default
+        let (wp, wb) = pair(32, 32, 0.002, 9);
+        let s0 = absmax_scales(&wp, Granularity::Block(16));
+        let cfg = SearchConfig::paper_default(Objective::Hybrid, (0.8, 1.25));
+        let res = search_scale_with(&NativeSweep, &wp, &wb, &s0, &cfg);
+        let default = Objective::Hybrid.value(&sweep_native(&wp, &wb, &s0, &[1.0])[0]);
+        assert!(res.objective_value >= default - 1e-12);
+    }
+
+    #[test]
+    fn search_never_worse_than_default() {
+        // Algorithm 1 lines 5-6: α=1 is a candidate, so the found objective
+        // is >= the default's objective under every metric and range.
+        let (wp, wb) = pair(64, 64, 0.001, 1);
+        let s0 = absmax_scales(&wp, Granularity::Block(32));
+        for obj in [Objective::SignRate, Objective::CosSim, Objective::NegMse] {
+            for range in [(0.5, 2.0), (0.8, 1.25), (0.9, 1.11f32)] {
+                let cfg = SearchConfig::paper_default(obj, range);
+                let res = search_scale_with(&NativeSweep, &wp, &wb, &s0, &cfg);
+                let default =
+                    obj.value(&sweep_native(&wp, &wb, &s0, &[1.0])[0]);
+                assert!(
+                    res.objective_value >= default - 1e-12,
+                    "{obj:?} {range:?}: {} < {default}",
+                    res.objective_value
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eval_budget_matches_paper() {
+        let (wp, wb) = pair(32, 32, 0.002, 2);
+        let s0 = absmax_scales(&wp, Granularity::PerTensor);
+        let cfg = SearchConfig::paper_default(Objective::SignRate, (0.8, 1.25));
+        let res = search_scale_with(&NativeSweep, &wp, &wb, &s0, &cfg);
+        // 1 default + 5 coarse + 10 fine
+        assert_eq!(res.evals, 16);
+    }
+
+    #[test]
+    fn alpha_stays_in_range() {
+        use crate::util::proptest::{run, Config};
+        run("alpha in range", Config { cases: 16, ..Config::default() }, |g| {
+            let (wp, wb) = pair(16, 16, 0.01, g.u64());
+            let s0 = absmax_scales(&wp, Granularity::PerTensor);
+            let lo = g.f32_range(0.5, 0.9);
+            let hi = lo + g.f32_range(0.2, 1.0);
+            let cfg = SearchConfig::paper_default(Objective::CosSim, (lo, hi));
+            let res = search_scale_with(&NativeSweep, &wp, &wb, &s0, &cfg);
+            // α=1 default may sit outside [lo,hi]; otherwise in range
+            assert!(
+                res.alpha == 1.0 || (lo..=hi).contains(&res.alpha),
+                "alpha {} not in [{lo},{hi}]",
+                res.alpha
+            );
+        });
+    }
+
+    #[test]
+    fn exhaustive_at_least_as_good_on_same_grid() {
+        let (wp, wb) = pair(48, 48, 0.003, 3);
+        let s0 = absmax_scales(&wp, Granularity::PerChannel);
+        let obj = Objective::CosSim;
+        let res = search_exhaustive(&NativeSweep, &wp, &wb, &s0, obj, (0.8, 1.25), 64);
+        let cfg = SearchConfig::paper_default(obj, (0.8, 1.25));
+        let ctf = search_scale_with(&NativeSweep, &wp, &wb, &s0, &cfg);
+        // dense exhaustive search with 4x the budget should not lose badly
+        assert!(res.objective_value >= ctf.objective_value - 0.01);
+    }
+
+    #[test]
+    fn golden_runs_and_reports() {
+        let (wp, wb) = pair(32, 32, 0.002, 4);
+        let s0 = absmax_scales(&wp, Granularity::PerTensor);
+        let res = search_golden(&NativeSweep, &wp, &wb, &s0,
+                                Objective::CosSim, (0.8, 1.25), 10);
+        assert!(res.evals == 12);
+        assert!((0.8..=1.25).contains(&res.alpha));
+    }
+
+    #[test]
+    fn history_covers_all_evals() {
+        let (wp, wb) = pair(16, 16, 0.005, 5);
+        let s0 = absmax_scales(&wp, Granularity::PerTensor);
+        let cfg = SearchConfig::paper_default(Objective::NegMse, (0.5, 2.0));
+        let res = search_scale_with(&NativeSweep, &wp, &wb, &s0, &cfg);
+        assert_eq!(res.history.len(), res.evals);
+        // best value appears in the history
+        assert!(res
+            .history
+            .iter()
+            .any(|&(a, v)| a == res.alpha && v == res.objective_value));
+    }
+
+    #[test]
+    fn mse_objective_prefers_small_reconstruction_error() {
+        // For pure reconstruction, α=1 (AbsMax) should be near-optimal and
+        // extreme α clearly worse.
+        let (wp, wb) = pair(64, 64, 0.001, 6);
+        let s0 = absmax_scales(&wp, Granularity::PerTensor);
+        let stats = sweep_native(&wp, &wb, &s0, &[0.5, 1.0, 2.0]);
+        assert!(stats[1].mse() <= stats[0].mse());
+        assert!(stats[1].mse() <= stats[2].mse());
+    }
+}

@@ -1,0 +1,190 @@
+//! Minimal dense f32 tensor substrate.
+//!
+//! The coordinator, baselines and the native evaluation path need a small
+//! set of dense ops (matmul, layernorm, softmax, reductions). This is a
+//! deliberately simple row-major implementation — the *fast* path for
+//! model execution is the AOT-compiled HLO via PJRT (`runtime`); this type
+//! exists for the quantizer itself, the baselines' calibration math, and
+//! as an independent cross-check of the PJRT forward.
+
+pub mod ops;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} incompatible with {} elements",
+            data.len()
+        );
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: vec![v; n] }
+    }
+
+    pub fn from_fn(shape: Vec<usize>, mut f: impl FnMut(usize) -> f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape, data: (0..n).map(&mut f).collect() }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_data(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// 2-D accessors ------------------------------------------------------
+
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.ndim(), 2);
+        self.shape[0]
+    }
+
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.ndim(), 2);
+        self.shape[1]
+    }
+
+    #[inline]
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.shape[1] + c]
+    }
+
+    #[inline]
+    pub fn set2(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.shape[1] + c] = v;
+    }
+
+    pub fn row(&self, r: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[r * c..(r + 1) * c]
+    }
+
+    /// Reshape (must preserve element count).
+    pub fn reshape(mut self, shape: Vec<usize>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    /// Frobenius norm.
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Largest absolute value.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// Elementwise map into a new tensor.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Elementwise binary op (shapes must match).
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.shape, other.shape);
+        Tensor {
+            shape: self.shape.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a - b)
+    }
+
+    pub fn add(&self, other: &Tensor) -> Tensor {
+        self.zip(other, |a, b| a + b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.at2(1, 2), 6.0);
+        assert_eq!(t.row(0), &[1., 2., 3.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "incompatible")]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn norms() {
+        let t = Tensor::new(vec![2, 2], vec![3., 4., 0., 0.]);
+        assert_eq!(t.norm(), 5.0);
+        assert_eq!(t.abs_max(), 4.0);
+    }
+
+    #[test]
+    fn map_zip_sub() {
+        let a = Tensor::new(vec![3], vec![1., 2., 3.]);
+        let b = Tensor::new(vec![3], vec![3., 2., 1.]);
+        assert_eq!(a.sub(&b).data(), &[-2., 0., 2.]);
+        assert_eq!(a.map(|x| x * 2.0).data(), &[2., 4., 6.]);
+        assert_eq!(a.zip(&b, |x, y| x * y).data(), &[3., 4., 3.]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|i| i as f32).collect());
+        let r = t.reshape(vec![3, 2]);
+        assert_eq!(r.shape(), &[3, 2]);
+        assert_eq!(r.at2(2, 1), 5.0);
+    }
+}

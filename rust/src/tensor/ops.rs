@@ -1,0 +1,233 @@
+//! Dense ops for the native evaluation path and baseline calibration math.
+//!
+//! `matmul` carries the native transformer forward (used to cross-check
+//! PJRT and as fallback when artifacts are absent); it is blocked for
+//! cache reuse but deliberately scalar — the performance-critical model
+//! execution path is the AOT HLO, not this.
+
+use super::Tensor;
+
+/// C[M,N] = A[M,K] @ B[K,N], i-k-j loop order with 64-wide j blocking.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.ndim(), 2);
+    assert_eq!(b.ndim(), 2);
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "matmul inner dims: {k} vs {k2}");
+    let mut c = vec![0.0f32; m * n];
+    let ad = a.data();
+    let bd = b.data();
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for kk in 0..k {
+            let aik = ad[i * k + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let brow = &bd[kk * n..(kk + 1) * n];
+            for (cj, bj) in crow.iter_mut().zip(brow) {
+                *cj += aik * bj;
+            }
+        }
+    }
+    Tensor::new(vec![m, n], c)
+}
+
+/// Transpose a 2-D tensor.
+pub fn transpose(a: &Tensor) -> Tensor {
+    let (m, n) = (a.rows(), a.cols());
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            out[j * m + i] = a.at2(i, j);
+        }
+    }
+    Tensor::new(vec![n, m], out)
+}
+
+/// Row-wise softmax in place.
+pub fn softmax_rows(a: &mut Tensor) {
+    let (m, n) = (a.rows(), a.cols());
+    let d = a.data_mut();
+    for i in 0..m {
+        let row = &mut d[i * n..(i + 1) * n];
+        let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - max).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+}
+
+/// Row-wise layernorm: (x - mu) / sqrt(var + eps) * g + b.
+pub fn layernorm_rows(a: &Tensor, g: &[f32], b: &[f32], eps: f32) -> Tensor {
+    let (m, n) = (a.rows(), a.cols());
+    assert_eq!(g.len(), n);
+    assert_eq!(b.len(), n);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let row = a.row(i);
+        let mu = row.iter().sum::<f32>() / n as f32;
+        let var = row.iter().map(|x| (x - mu) * (x - mu)).sum::<f32>() / n as f32;
+        let inv = 1.0 / (var + eps).sqrt();
+        for j in 0..n {
+            out[i * n + j] = (row[j] - mu) * inv * g[j] + b[j];
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// Exact GELU (erf form), matching `jax.nn.gelu(approximate=True)`?
+/// No — JAX defaults to the tanh approximation; we match that so the
+/// native forward agrees with the AOT graph.
+#[inline]
+pub fn gelu(x: f32) -> f32 {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_6;
+    0.5 * x * (1.0 + (SQRT_2_OVER_PI * (x + 0.044715 * x * x * x)).tanh())
+}
+
+/// Row-wise argmax.
+pub fn argmax_rows(a: &Tensor) -> Vec<usize> {
+    let (m, n) = (a.rows(), a.cols());
+    (0..m)
+        .map(|i| {
+            let row = a.row(i);
+            let mut best = 0;
+            for j in 1..n {
+                if row[j] > row[best] {
+                    best = j;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+/// Mean of |x| along rows (per-column statistic), used for calibration.
+pub fn col_abs_mean(a: &Tensor) -> Vec<f32> {
+    let (m, n) = (a.rows(), a.cols());
+    let mut out = vec![0.0f32; n];
+    for i in 0..m {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o += a.at2(i, j).abs();
+        }
+    }
+    for o in &mut out {
+        *o /= m as f32;
+    }
+    out
+}
+
+/// Per-column absolute maximum.
+pub fn col_abs_max(a: &Tensor) -> Vec<f32> {
+    let (m, n) = (a.rows(), a.cols());
+    let mut out = vec![0.0f32; n];
+    for i in 0..m {
+        for (j, o) in out.iter_mut().enumerate() {
+            *o = o.max(a.at2(i, j).abs());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{run, Config};
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(vec![2, 2], vec![1., 1., 1., 1.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let n = 16;
+        let eye = Tensor::from_fn(vec![n, n], |i| if i / n == i % n { 1.0 } else { 0.0 });
+        let a = Tensor::from_fn(vec![n, n], |i| i as f32 * 0.1);
+        assert_eq!(matmul(&a, &eye), a);
+        assert_eq!(matmul(&eye, &a), a);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = Tensor::from_fn(vec![3, 5], |i| i as f32);
+        assert_eq!(transpose(&transpose(&a)), a);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut a = Tensor::new(vec![2, 3], vec![1., 2., 3., -1., 0., 1.]);
+        softmax_rows(&mut a);
+        for i in 0..2 {
+            let s: f32 = a.row(i).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn softmax_handles_large_values() {
+        let mut a = Tensor::new(vec![1, 3], vec![1000., 1000., 1000.]);
+        softmax_rows(&mut a);
+        for &v in a.row(0) {
+            assert!((v - 1.0 / 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let a = Tensor::new(vec![1, 4], vec![1., 2., 3., 4.]);
+        let g = vec![1.0; 4];
+        let b = vec![0.0; 4];
+        let out = layernorm_rows(&a, &g, &b, 1e-5);
+        let mu: f32 = out.row(0).iter().sum::<f32>() / 4.0;
+        let var: f32 = out.row(0).iter().map(|x| (x - mu) * (x - mu)).sum::<f32>() / 4.0;
+        assert!(mu.abs() < 1e-6);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        assert!(gelu(0.0).abs() < 1e-7);
+        assert!((gelu(1.0) - 0.841192).abs() < 1e-4); // tanh approximation
+        assert!(gelu(-10.0).abs() < 1e-4);
+        assert!((gelu(10.0) - 10.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn argmax_rows_works() {
+        let a = Tensor::new(vec![2, 3], vec![1., 5., 2., 9., 0., 3.]);
+        assert_eq!(argmax_rows(&a), vec![1, 0]);
+    }
+
+    #[test]
+    fn calibration_stats() {
+        let a = Tensor::new(vec![2, 2], vec![1., -2., 3., -4.]);
+        assert_eq!(col_abs_mean(&a), vec![2.0, 3.0]);
+        assert_eq!(col_abs_max(&a), vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn prop_matmul_distributes_over_add() {
+        run("A(B+C) == AB + AC", Config { cases: 24, ..Config::default() }, |g| {
+            let m = g.usize_range(1, 8);
+            let k = g.usize_range(1, 8);
+            let n = g.usize_range(1, 8);
+            let a = Tensor::new(vec![m, k], g.normal_vec(m * k, 1.0));
+            let b = Tensor::new(vec![k, n], g.normal_vec(k * n, 1.0));
+            let c = Tensor::new(vec![k, n], g.normal_vec(k * n, 1.0));
+            let lhs = matmul(&a, &b.add(&c));
+            let rhs = matmul(&a, &b).add(&matmul(&a, &c));
+            for (x, y) in lhs.data().iter().zip(rhs.data()) {
+                assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+            }
+        });
+    }
+}

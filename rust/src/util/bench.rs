@@ -1,0 +1,100 @@
+//! Micro-benchmark harness (criterion is not in the offline registry).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that uses
+//! [`Bench`] for warmed-up, repeated measurements with simple statistics,
+//! and the `report` module for the paper-shaped tables.
+
+use std::time::Instant;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+    pub stddev_s: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items: f64) -> f64 {
+        items / self.mean_s
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<44} {:>10.3}ms  min {:>9.3}ms  max {:>9.3}ms  sd {:>8.3}ms  ({} iters)",
+            self.name,
+            self.mean_s * 1e3,
+            self.min_s * 1e3,
+            self.max_s * 1e3,
+            self.stddev_s * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured iterations, then `iters`
+/// measured ones.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T)
+    -> BenchResult {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>()
+        / samples.len() as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: mean,
+        min_s: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        max_s: samples.iter().cloned().fold(0.0, f64::max),
+        stddev_s: var.sqrt(),
+    }
+}
+
+/// Auto-calibrating variant: picks an iteration count so the measured
+/// phase lasts roughly `target_s` seconds.
+pub fn bench_auto<T>(name: &str, target_s: f64, mut f: impl FnMut() -> T)
+    -> BenchResult {
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((target_s / once).ceil() as usize).clamp(3, 10_000);
+    bench(name, 1, iters, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let r = bench("noop-ish", 2, 5, || {
+            (0..1000).map(|i: u64| i.wrapping_mul(7)).sum::<u64>()
+        });
+        assert_eq!(r.iters, 5);
+        assert!(r.mean_s >= 0.0);
+        assert!(r.min_s <= r.mean_s && r.mean_s <= r.max_s);
+    }
+
+    #[test]
+    fn auto_calibrates() {
+        let r = bench_auto("sleepy", 0.02, || {
+            std::thread::sleep(std::time::Duration::from_millis(2))
+        });
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn line_formats() {
+        let r = bench("fmt", 0, 3, || 1 + 1);
+        assert!(r.line().contains("fmt"));
+    }
+}

@@ -1,0 +1,151 @@
+//! Tiny CLI argument parser (clap is not in the offline registry).
+//!
+//! Grammar: `daq <subcommand> [--flag] [--key value] ...`.
+//! Collects flags/options into maps; typed accessors with defaults.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args, String> {
+        let mut args = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err("empty option name '--'".into());
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    args.options.insert(name.to_string(), v);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else if args.subcommand.is_none() && args.positional.is_empty() {
+                args.subcommand = Some(a);
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args, String> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| format!("--{name}: expected number, got {v:?}")),
+        }
+    }
+
+    /// Parse "--range lo,hi".
+    pub fn range_or(&self, name: &str, default: (f32, f32)) -> Result<(f32, f32), String> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => {
+                let (lo, hi) = v
+                    .split_once(',')
+                    .ok_or_else(|| format!("--{name}: expected 'lo,hi', got {v:?}"))?;
+                let lo: f32 = lo.trim().parse().map_err(|_| format!("--{name}: bad lo"))?;
+                let hi: f32 = hi.trim().parse().map_err(|_| format!("--{name}: bad hi"))?;
+                if lo >= hi || lo <= 0.0 {
+                    return Err(format!("--{name}: need 0 < lo < hi, got {lo},{hi}"));
+                }
+                Ok((lo, hi))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("quantize --metric sign --range 0.8,1.25 --verbose");
+        assert_eq!(a.subcommand.as_deref(), Some("quantize"));
+        assert_eq!(a.get("metric"), Some("sign"));
+        assert_eq!(a.range_or("range", (0.5, 2.0)).unwrap(), (0.8, 1.25));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("eval --ckpt=foo.dts");
+        assert_eq!(a.get("ckpt"), Some("foo.dts"));
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let a = parse("bench");
+        assert_eq!(a.usize_or("iters", 10).unwrap(), 10);
+        assert_eq!(a.f64_or("alpha", 1.5).unwrap(), 1.5);
+        assert_eq!(a.str_or("out", "x"), "x");
+    }
+
+    #[test]
+    fn bad_values_error() {
+        let a = parse("bench --iters ten");
+        assert!(a.usize_or("iters", 10).is_err());
+        let b = parse("q --range 2,1");
+        assert!(b.range_or("range", (0.5, 2.0)).is_err());
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse("inspect file1.dts file2.dts");
+        assert_eq!(a.subcommand.as_deref(), Some("inspect"));
+        assert_eq!(a.positional, vec!["file1.dts", "file2.dts"]);
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("serve --pjrt");
+        assert!(a.flag("pjrt"));
+    }
+}

@@ -1,0 +1,14 @@
+//! In-repo substrates for everything the offline crate registry lacks:
+//! PRNG, property testing, CLI parsing, JSON, timing, and a thread pool.
+//!
+//! The offline registry only carries the `xla` crate closure, so the usual
+//! suspects (rand, proptest, clap, serde_json, criterion, rayon/tokio) are
+//! reimplemented here at the scale this project needs.
+
+pub mod bench;
+pub mod cliargs;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod threadpool;
+pub mod timer;

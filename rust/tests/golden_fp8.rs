@@ -1,0 +1,57 @@
+//! Cross-layer golden test: the Rust FP8 codec must reproduce the JAX
+//! reference bit-for-bit on the vectors `aot.py` exported. Skips politely
+//! when artifacts have not been built yet.
+
+use daq::fp8::{decode_e4m3, encode_e4m3, qdq_e4m3};
+use daq::io::dts::Dts;
+
+fn golden() -> Option<Dts> {
+    let dir = std::env::var("DAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    Dts::read(format!("{dir}/fp8_golden.dts")).ok()
+}
+
+#[test]
+fn qdq_matches_jax_bit_exact() {
+    let Some(d) = golden() else {
+        eprintln!("skipped: run `make artifacts` first");
+        return;
+    };
+    let inputs = d.tensor_f32("inputs").unwrap().into_data();
+    let qdq = d.tensor_f32("qdq").unwrap().into_data();
+    for (i, (&x, &want)) in inputs.iter().zip(&qdq).enumerate() {
+        let got = qdq_e4m3(x);
+        assert_eq!(got.to_bits(), want.to_bits(),
+                   "vector {i}: qdq({x}) = {got} want {want}");
+    }
+}
+
+#[test]
+fn encode_matches_jax_bit_exact() {
+    let Some(d) = golden() else {
+        eprintln!("skipped: run `make artifacts` first");
+        return;
+    };
+    let inputs = d.tensor_f32("inputs").unwrap().into_data();
+    let (_, codes) = d.tensor_u8("codes").unwrap();
+    for (i, (&x, &want)) in inputs.iter().zip(&codes).enumerate() {
+        assert_eq!(encode_e4m3(x), want, "vector {i}: encode({x})");
+    }
+}
+
+#[test]
+fn decode_matches_jax_on_all_256_codes() {
+    let Some(d) = golden() else {
+        eprintln!("skipped: run `make artifacts` first");
+        return;
+    };
+    let decoded = d.tensor_f32("all_codes_decoded").unwrap().into_data();
+    let (_, nan_mask) = d.tensor_u8("all_codes_nan").unwrap();
+    for c in 0..256usize {
+        let got = decode_e4m3(c as u8);
+        if nan_mask[c] == 1 {
+            assert!(got.is_nan(), "code {c:#04x} should be NaN");
+        } else {
+            assert_eq!(got.to_bits(), decoded[c].to_bits(), "code {c:#04x}");
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! Integration test: the full quantization pipeline on the real trained
+//! checkpoints (native engine — no PJRT dependency), asserting the
+//! invariants the paper's tables rely on. Skips politely when artifacts
+//! are missing.
+
+use daq::coordinator::Method;
+use daq::experiments::{Lab, PAPER_RANGES};
+use daq::io::dts::Dts;
+use daq::quant::Granularity;
+use daq::search::Objective;
+
+fn open_lab() -> Option<Lab> {
+    match Lab::open(
+        &std::env::var("DAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+        false,
+    ) {
+        Ok(l) => Some(l),
+        Err(e) => {
+            eprintln!("skipped: {e:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn small_delta_regime_holds() {
+    let Some(lab) = open_lab() else { return };
+    // the trained pair must be in the paper's operative regime:
+    // ||dW|| well below ||W||
+    let mut d2 = 0.0f64;
+    let mut w2 = 0.0f64;
+    for name in &lab.quantizable {
+        let wp = lab.post.tensor_f32(name).unwrap();
+        let wb = lab.base.tensor_f32(name).unwrap();
+        d2 += (wp.sub(&wb).norm() as f64).powi(2);
+        w2 += (wb.norm() as f64).powi(2);
+    }
+    let ratio = (d2 / w2).sqrt();
+    assert!(ratio < 0.25, "delta ratio {ratio:.3} too large for the DAQ regime");
+    assert!(ratio > 1e-4, "delta ratio {ratio:.6} suspiciously small — did SFT run?");
+}
+
+#[test]
+fn search_objectives_improve_their_own_metric() {
+    let Some(lab) = open_lab() else { return };
+    let gran = Granularity::Block(128);
+    let absmax = lab.quantize_native(gran, Method::AbsMax).unwrap();
+    let a0 = absmax.agg.unwrap();
+
+    for (obj, check) in [
+        (Objective::SignRate, "sign"),
+        (Objective::CosSim, "cos"),
+    ] {
+        let out = lab
+            .quantize_native(gran, Method::Search { objective: obj, range: PAPER_RANGES[1] })
+            .unwrap();
+        let a = out.agg.unwrap();
+        match check {
+            "sign" => assert!(
+                a.sign_rate() >= a0.sign_rate() - 1e-9,
+                "sign search must not reduce model-level sign rate: {} vs {}",
+                a.sign_rate(), a0.sign_rate()
+            ),
+            _ => assert!(
+                a.cos_sim() >= a0.cos_sim() - 1e-9,
+                "cos search must not reduce model-level cos: {} vs {}",
+                a.cos_sim(), a0.cos_sim()
+            ),
+        }
+    }
+}
+
+#[test]
+fn mse_search_reduces_mse_but_not_delta_fidelity() {
+    let Some(lab) = open_lab() else { return };
+    let gran = Granularity::PerChannel;
+    let absmax = lab.quantize_native(gran, Method::AbsMax).unwrap();
+    let mse = lab
+        .quantize_native(gran, Method::Search {
+            objective: Objective::NegMse,
+            range: PAPER_RANGES[0],
+        })
+        .unwrap();
+    let (a0, a1) = (absmax.agg.unwrap(), mse.agg.unwrap());
+    // Eq. 3 under -MSE: reconstruction error must not get worse
+    assert!(a1.mse() <= a0.mse() + 1e-12);
+}
+
+#[test]
+fn quantized_checkpoint_roundtrip_and_eval() {
+    let Some(lab) = open_lab() else { return };
+    let out = lab
+        .quantize_native(Granularity::Block(128), Method::Search {
+            objective: Objective::SignRate,
+            range: PAPER_RANGES[1],
+        })
+        .unwrap();
+    assert_eq!(out.layers.len(), lab.quantizable.len());
+
+    // every quantizable layer quantized exactly once, alpha within range
+    // (or the α=1 default)
+    for l in &out.layers {
+        assert!(
+            l.alpha == 1.0 || (0.8..=1.25).contains(&l.alpha),
+            "{}: alpha {}", l.name, l.alpha
+        );
+        assert_eq!(l.evals, 16, "paper budget: 1 default + 5 coarse + 10 fine");
+    }
+
+    let tmp = std::env::temp_dir().join(format!("daq_e2e_{}.dts", std::process::id()));
+    out.write_checkpoint(tmp.to_str().unwrap(), &lab.post.meta).unwrap();
+    let rd = Dts::read(&tmp).unwrap();
+    std::fs::remove_file(&tmp).unwrap();
+
+    // the checkpoint contains dequantized weights + sidecars, and scores
+    // must be computable from the reloaded params
+    let params = daq::eval::load_params_filtered(&rd).unwrap();
+    let (style, general) = lab.rubric(&params).unwrap();
+    assert!((0.0..=2.0).contains(&style));
+    assert!((0.0..=2.0).contains(&general));
+}
+
+#[test]
+fn baseline_rows_are_reproducible() {
+    let Some(lab) = open_lab() else { return };
+    let a = lab.quantize_native(Granularity::Block(128), Method::AbsMax).unwrap();
+    let b = lab.quantize_native(Granularity::Block(128), Method::AbsMax).unwrap();
+    let (sa, sb) = (a.agg.unwrap(), b.agg.unwrap());
+    assert_eq!(sa.agree, sb.agree);
+    assert_eq!(sa.sq, sb.sq);
+}

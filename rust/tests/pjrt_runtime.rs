@@ -1,0 +1,139 @@
+//! Integration tests over the PJRT runtime + AOT artifacts: the Pallas
+//! kernels executed through PJRT must agree with the native Rust
+//! implementations, and the forward artifact must agree with the native
+//! transformer. Skips politely when artifacts are missing.
+
+use daq::eval::model_native::{forward_native, ModelCfg};
+use daq::eval::load_params;
+use daq::io::dts::Dts;
+use daq::metrics::sweep_native;
+use daq::quant::{absmax_scales, qdq, Granularity};
+use daq::runtime::Runtime;
+use daq::tensor::Tensor;
+use daq::util::rng::XorShift;
+
+fn open() -> Option<(Runtime, String)> {
+    let dir = std::env::var("DAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    match Runtime::open(&dir) {
+        Ok(rt) => Some((rt, dir)),
+        Err(e) => {
+            eprintln!("skipped: {e:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn qdq_artifact_matches_native_codec() {
+    let Some((rt, _)) = open() else { return };
+    let mut rng = XorShift::new(3);
+    let w = Tensor::new(vec![128, 128], rng.normal_vec(128 * 128, 0.1));
+    let s0 = absmax_scales(&w, Granularity::Block(128));
+    let s_full = s0.expand();
+    let got = rt.qdq_128(&w, &s_full).unwrap();
+    let want = qdq(&w, &s0, 1.0);
+    let mut diff = 0usize;
+    for (a, b) in got.data().iter().zip(want.data()) {
+        if a.to_bits() != b.to_bits() {
+            diff += 1;
+        }
+    }
+    assert_eq!(diff, 0, "{diff} of {} elements differ", w.len());
+}
+
+#[test]
+fn sweep_artifact_matches_native_engine() {
+    let Some((rt, dir)) = open() else { return };
+    let post = Dts::read(format!("{dir}/ckpt_post.dts")).unwrap();
+    let base = Dts::read(format!("{dir}/ckpt_base.dts")).unwrap();
+    for name in rt.manifest.quantizable.iter().take(3) {
+        let wp = post.tensor_f32(name).unwrap();
+        let wb = base.tensor_f32(name).unwrap();
+        for gran in [Granularity::Block(128), Granularity::PerChannel] {
+            let s0 = absmax_scales(&wp, gran);
+            let alphas: Vec<f32> = (0..16).map(|i| 0.7 + 0.04 * i as f32).collect();
+            let native = sweep_native(&wp, &wb, &s0, &alphas);
+            let pjrt = rt.sweep(&wp, &wb, &s0.expand(), &alphas).unwrap();
+            for (k, (a, b)) in native.iter().zip(&pjrt).enumerate() {
+                // sign counts: XLA may fuse f32 chains differently from
+                // the sequential Rust codec, flipping boundary elements —
+                // allow O(1) of 64k disagreements
+                assert!((a.agree - b.agree).abs() <= 2.0,
+                        "{name}/{}: candidate {k} sign counts {} vs {}",
+                        gran.label(), a.agree, b.agree);
+                assert_eq!(a.n, b.n);
+                let rel = |x: f64, y: f64| (x - y).abs() / x.abs().max(1e-9);
+                assert!(rel(a.dot, b.dot) < 1e-3, "{name} dot {} vs {}", a.dot, b.dot);
+                assert!(rel(a.nq, b.nq) < 1e-3);
+                assert!(rel(a.sq, b.sq) < 1e-2, "{name} sq {} vs {}", a.sq, b.sq);
+            }
+        }
+    }
+}
+
+#[test]
+fn forward_artifact_matches_native_transformer() {
+    let Some((rt, dir)) = open() else { return };
+    let post = Dts::read(format!("{dir}/ckpt_post.dts")).unwrap();
+    let params = load_params(&post).unwrap();
+    let cfg = ModelCfg::from_meta(&post.meta).unwrap();
+    let b = rt.manifest.serve_batch;
+
+    // real eval tokens, first batch
+    let eset = daq::eval::EvalSet::load(&format!("{dir}/eval_style.dts")).unwrap();
+    let tokens: Vec<i32> = eset.tokens[..b * cfg.seq_len].to_vec();
+
+    let pjrt_logits = rt.forward(b, &tokens, &params).unwrap();
+    let native_logits = forward_native(&params, &cfg, b, &tokens).unwrap();
+    assert_eq!(pjrt_logits.len(), native_logits.len());
+
+    // numeric agreement (different op orders): moderate tolerance, and
+    // argmax agreement at every position
+    let v = cfg.vocab;
+    let mut max_abs = 0.0f32;
+    let mut argmax_mismatch = 0usize;
+    for i in 0..pjrt_logits.len() / v {
+        let pr = &pjrt_logits[i * v..(i + 1) * v];
+        let nr = &native_logits[i * v..(i + 1) * v];
+        for (a, b) in pr.iter().zip(nr) {
+            max_abs = max_abs.max((a - b).abs());
+        }
+        let am = |r: &[f32]| {
+            let mut b = 0;
+            for j in 1..r.len() {
+                if r[j] > r[b] {
+                    b = j;
+                }
+            }
+            b
+        };
+        if am(pr) != am(nr) {
+            argmax_mismatch += 1;
+        }
+    }
+    assert!(max_abs < 2e-2, "max |logit diff| = {max_abs}");
+    let total = pjrt_logits.len() / v;
+    assert!(
+        argmax_mismatch * 100 <= total,
+        "{argmax_mismatch}/{total} argmax mismatches (>1%)"
+    );
+}
+
+#[test]
+fn manifest_is_consistent_with_checkpoints() {
+    let Some((rt, dir)) = open() else { return };
+    let post = Dts::read(format!("{dir}/ckpt_post.dts")).unwrap();
+    for name in &rt.manifest.param_order {
+        assert!(post.contains(name), "manifest param {name} missing in ckpt");
+        let shape = rt.manifest.param_shapes.get(name).unwrap();
+        assert_eq!(post.get(name).unwrap().shape(), shape.as_slice(),
+                   "shape mismatch for {name}");
+    }
+    for name in &rt.manifest.quantizable {
+        let t = post.get(name).unwrap();
+        assert_eq!(t.shape().len(), 2);
+        let key = (t.shape()[0], t.shape()[1]);
+        assert!(rt.manifest.sweeps.contains_key(&key),
+                "no sweep artifact for {name} {key:?}");
+    }
+}
