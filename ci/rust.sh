@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 gate for the rust/ crate: release build + tests, then the style
+# gates (rustfmt, clippy with warnings denied). Run from anywhere.
+set -euo pipefail
+cd "$(dirname "$0")/../rust"
+
+cargo build --release
+cargo test -q
+cargo fmt --check
+cargo clippy --all-targets -- -D warnings

@@ -43,7 +43,11 @@ def _sweep_kernel(wp_ref, wb_ref, s0_ref, alpha_ref, out_ref):
     wb = wb_ref[...]
     s = s0_ref[...] * alpha
 
-    wq = _qdq_e4m3_inreg(wp / s) * s
+    # reciprocal-multiply qdq with saturating reciprocal: same canonical
+    # form as ref.qdq_scaled and the Rust sweep engines (bit-exact
+    # cross-engine sign counts)
+    s_inv = jnp.minimum(1.0 / s, jnp.float32(jnp.finfo(jnp.float32).max))
+    wq = _qdq_e4m3_inreg(wp * s_inv) * s
     dp = wp - wb
     dq = wq - wb
     err = wq - wp

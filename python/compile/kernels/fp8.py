@@ -34,10 +34,16 @@ def _qdq_e4m3_inreg(x):
 
 
 def _qdq_kernel(w_ref, s_ref, o_ref):
-    """One tile: o = qdq(w / s) * s with s broadcast over the tile."""
+    """One tile: o = qdq(w · s⁻¹) * s with s broadcast over the tile.
+
+    Reciprocal-multiply, matching ref.qdq_scaled and the Rust
+    `fp8::qdq_e4m3_scaled` bit-for-bit (the cross-layer golden contract).
+    """
     s = s_ref[...]
     w = w_ref[...]
-    o_ref[...] = _qdq_e4m3_inreg(w / s) * s
+    # saturating reciprocal (see ref.qdq_scaled / Rust fp8::recip_scale)
+    s_inv = jnp.minimum(1.0 / s, jnp.float32(jnp.finfo(jnp.float32).max))
+    o_ref[...] = _qdq_e4m3_inreg(w * s_inv) * s
 
 
 @functools.partial(jax.jit, static_argnames=("block_r", "block_c"))

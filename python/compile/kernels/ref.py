@@ -73,8 +73,16 @@ def decode_e4m3(code) -> jnp.ndarray:
 
 
 def qdq_scaled(w, scale):
-    """The paper's Q_s(W) = DeQuant(Quant(W, s), s) with broadcastable scale."""
-    return qdq_e4m3(w / scale) * scale
+    """The paper's Q_s(W) = DeQuant(Quant(W, s), s) with broadcastable scale.
+
+    Reciprocal-multiply form (w · s⁻¹, not w / s): the canonical scaled
+    projection shared bit-for-bit with the Rust engines
+    (`fp8::qdq_e4m3_scaled`), whose sweep hot loop hoists the reciprocal
+    out of the inner loop. The reciprocal saturates at f32 max (Rust
+    `fp8::recip_scale`) so a subnormal s·α cannot turn zero weights into
+    0·∞ = NaN."""
+    scale_inv = jnp.minimum(1.0 / scale, jnp.float32(jnp.finfo(jnp.float32).max))
+    return qdq_e4m3(w * scale_inv) * scale
 
 
 # ---------------------------------------------------------------------------

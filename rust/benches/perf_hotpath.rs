@@ -1,11 +1,17 @@
 //! Bench: §Perf — hot-path profiling across the stack:
 //!   L3 native fused sweep throughput (the coordinator's hot loop),
-//!   thread-pool scaling, PJRT sweep vs native (when artifacts exist),
-//!   and end-to-end pipeline latency.
+//!   the planned tiled engine vs the naive reference, tile-worker
+//!   scaling, PJRT sweep vs native (when artifacts exist), and
+//!   end-to-end pipeline latency.
+//!
+//! Emits a machine-readable `BENCH_sweep.json` (path overridable via
+//! `DAQ_BENCH_OUT`) so the sweep-throughput trajectory is tracked across
+//! PRs: one record per (shape, granularity, variant, workers) with
+//! Melem/s and speedup vs the naive sweep.
 
-use daq::experiments::Lab;
 use daq::coordinator::Method;
-use daq::metrics::{sweep_native, sweep_native_regions};
+use daq::experiments::Lab;
+use daq::metrics::{sweep_native, sweep_native_regions, SweepPlan};
 use daq::quant::{absmax_scales, Granularity};
 use daq::report::Table;
 use daq::search::Objective;
@@ -23,34 +29,117 @@ fn pair(r: usize, c: usize, seed: u64) -> (Tensor, Tensor) {
     (wp, wb)
 }
 
+/// One machine-readable bench record.
+struct Record {
+    shape: String,
+    granularity: String,
+    variant: String,
+    workers: usize,
+    mean_ms: f64,
+    melem_per_s: f64,
+    speedup_vs_naive: f64,
+}
+
+impl Record {
+    fn json(&self) -> String {
+        format!(
+            "{{\"shape\": \"{}\", \"granularity\": \"{}\", \"variant\": \"{}\", \
+             \"workers\": {}, \"mean_ms\": {:.4}, \"melem_per_s\": {:.2}, \
+             \"speedup_vs_naive\": {:.3}}}",
+            self.shape,
+            self.granularity,
+            self.variant,
+            self.workers,
+            self.mean_ms,
+            self.melem_per_s,
+            self.speedup_vs_naive
+        )
+    }
+}
+
 fn main() {
-    // --- §Perf iteration 1: naive elementwise sweep vs region-hoisted ---
-    {
-        let (wp, wb) = pair(512, 512, 3);
-        let alphas: Vec<f32> = (0..16).map(|i| 0.8 + 0.028 * i as f32).collect();
+    let n_candidates = 16usize;
+    let alphas: Vec<f32> = (0..n_candidates).map(|i| 0.8 + 0.028 * i as f32).collect();
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let mut records: Vec<Record> = Vec::new();
+
+    // --- §Perf: sweep variants — naive / region-hoisted (negative
+    //     result, kept for the record) / planned tiled / planned + workers
+    for (r, c) in [(512usize, 512usize), (1024, 1024)] {
+        let (wp, wb) = pair(r, c, (r + c) as u64);
         let mut t = Table::new(
-            "Sweep optimization (512x512, 16 candidates)",
-            &["variant", "granularity", "mean ms", "speedup"],
+            &format!("Sweep engines ({r}x{c}, {n_candidates} candidates)"),
+            &["variant", "granularity", "workers", "mean ms", "Melem/s (xNC)", "speedup"],
         );
         for gran in [Granularity::Block(128), Granularity::PerChannel] {
             let s0 = absmax_scales(&wp, gran);
+            let evals = (r * c * n_candidates) as f64;
+            let shape = format!("{r}x{c}");
+
             let naive = bench("naive", 1, 5, || sweep_native(&wp, &wb, &s0, &alphas));
-            let fast = bench("optimized", 1, 5, || sweep_native_regions(&wp, &wb, &s0, &alphas));
-            t.row(vec!["naive (per-element scale lookup)".into(), gran.label(),
-                       format!("{:.2}", naive.mean_s * 1e3), "1.00x".into()]);
-            t.row(vec!["optimized (region-hoisted)".into(), gran.label(),
-                       format!("{:.2}", fast.mean_s * 1e3),
-                       format!("{:.2}x", naive.mean_s / fast.mean_s)]);
+            let naive_mean_s = naive.mean_s;
+            let mut push = |variant: &str, workers: usize, mean_s: f64| {
+                let rec = Record {
+                    shape: shape.clone(),
+                    granularity: gran.label(),
+                    variant: variant.into(),
+                    workers,
+                    mean_ms: mean_s * 1e3,
+                    melem_per_s: evals / mean_s / 1e6,
+                    speedup_vs_naive: naive_mean_s / mean_s,
+                };
+                t.row(vec![
+                    variant.into(),
+                    gran.label(),
+                    workers.to_string(),
+                    format!("{:.2}", rec.mean_ms),
+                    format!("{:.1}", rec.melem_per_s),
+                    format!("{:.2}x", rec.speedup_vs_naive),
+                ]);
+                records.push(rec);
+            };
+            push("naive (per-element recompute)", 1, naive_mean_s);
+
+            let regions =
+                bench("regions", 1, 5, || sweep_native_regions(&wp, &wb, &s0, &alphas));
+            push("region-hoisted (superseded)", 1, regions.mean_s);
+
+            // plan amortized across batches, as Algorithm 1 uses it
+            let plan = SweepPlan::new(&wp, &wb, &s0);
+            let planned =
+                bench("planned", 1, 5, || plan.eval_with_workers(&alphas, 1));
+            push("planned tiled", 1, planned.mean_s);
+
+            for workers in [2usize, 4, 8] {
+                if workers > cores {
+                    continue;
+                }
+                let res = bench(&format!("planned x{workers}"), 1, 5, || {
+                    plan.eval_with_workers(&alphas, workers)
+                });
+                push("planned tiled", workers, res.mean_s);
+            }
+
+            // the plan build itself, for the amortization story (built
+            // once per layer, reused for all 16+ candidate evaluations)
+            let build = bench("plan build", 1, 5, || SweepPlan::new(&wp, &wb, &s0));
+            t.row(vec![
+                "  (plan build, once per layer)".into(),
+                gran.label(),
+                "1".into(),
+                format!("{:.2}", build.mean_s * 1e3),
+                "-".into(),
+                "-".into(),
+            ]);
         }
         println!("{}", t.render());
     }
 
-    // --- L3 native sweep throughput across shapes/granularities ---
+    // --- L3 native sweep throughput across shapes (reference engine) ---
     let mut t = Table::new(
-        "Native fused sweep throughput (16 candidates)",
+        "Naive fused sweep throughput (16 candidates)",
         &["shape", "granularity", "mean ms", "Melem/s (xNC)"],
     );
-    let alphas: Vec<f32> = (0..16).map(|i| 0.8 + 0.028 * i as f32).collect();
     for (r, c) in [(128usize, 128usize), (128, 512), (512, 512), (1024, 1024)] {
         let (wp, wb) = pair(r, c, (r + c) as u64);
         for gran in [Granularity::Block(128), Granularity::PerChannel] {
@@ -58,13 +147,31 @@ fn main() {
             let res = bench(&format!("{r}x{c}/{}", gran.label()), 1, 5, || {
                 sweep_native(&wp, &wb, &s0, &alphas)
             });
-            let melem = (r * c * 16) as f64 / res.mean_s / 1e6;
-            t.row(vec![format!("{r}x{c}"), gran.label(),
-                       format!("{:.2}", res.mean_s * 1e3),
-                       format!("{melem:.1}")]);
+            let melem = (r * c * n_candidates) as f64 / res.mean_s / 1e6;
+            t.row(vec![
+                format!("{r}x{c}"),
+                gran.label(),
+                format!("{:.2}", res.mean_s * 1e3),
+                format!("{melem:.1}"),
+            ]);
         }
     }
     println!("{}", t.render());
+
+    // --- machine-readable perf trajectory ---
+    let out_path =
+        std::env::var("DAQ_BENCH_OUT").unwrap_or_else(|_| "BENCH_sweep.json".into());
+    let body: Vec<String> = records.iter().map(|r| format!("  {}", r.json())).collect();
+    let json = format!(
+        "{{\"bench\": \"sweep\", \"candidates\": {}, \"cores\": {}, \"rows\": [\n{}\n]}}\n",
+        n_candidates,
+        cores,
+        body.join(",\n")
+    );
+    match std::fs::write(&out_path, &json) {
+        Ok(()) => println!("wrote {out_path} ({} records)", records.len()),
+        Err(e) => eprintln!("could not write {out_path}: {e}"),
+    }
 
     // --- full-pipeline latency on the real checkpoints (if present) ---
     let dir = std::env::var("DAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
@@ -76,14 +183,15 @@ fn main() {
         );
         for (label, method) in [
             ("absmax", Method::AbsMax),
-            ("daq-sign [0.8,1.25]",
-             Method::Search { objective: Objective::SignRate, range: (0.8, 1.25) }),
+            (
+                "daq-sign [0.8,1.25]",
+                Method::Search { objective: Objective::SignRate, range: (0.8, 1.25) },
+            ),
         ] {
             let res = bench(label, 0, 3, || {
                 lab.quantize_native(Granularity::Block(128), method.clone()).unwrap()
             });
-            t.row(vec![label.into(), "native".into(),
-                       format!("{:.3}", res.mean_s)]);
+            t.row(vec![label.into(), "native".into(), format!("{:.3}", res.mean_s)]);
         }
         println!("{}", t.render());
     } else {
@@ -108,8 +216,10 @@ fn main() {
             let rp = bench("pjrt", 1, 5, || {
                 rt.sweep(&wp, &wb, &s0_full, &alphas).unwrap()
             });
-            t.row(vec!["pjrt (Pallas artifact)".into(),
-                       format!("{:.2}", rp.mean_s * 1e3)]);
+            t.row(vec![
+                "pjrt (Pallas artifact)".into(),
+                format!("{:.2}", rp.mean_s * 1e3),
+            ]);
             println!("{}", t.render());
         }
     } else {

@@ -3,7 +3,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::Method;
-use crate::eval::load_params;
+use crate::eval::{load_params, load_params_dequant};
 use crate::experiments::{table1, table2, table_search, Lab};
 use crate::io::dts::Dts;
 use crate::quant::Granularity;
@@ -126,7 +126,9 @@ fn cmd_quantize(args: &Args) -> Result<()> {
 fn cmd_eval(args: &Args) -> Result<()> {
     let lab = open_lab(args)?;
     let params = match args.get("ckpt") {
-        Some(path) => load_params(&Dts::read(path)?)?,
+        // quantized checkpoints dequantize from the compact sidecars
+        // through the shared decode table; plain checkpoints load as-is
+        Some(path) => load_params_dequant(&Dts::read(path)?)?,
         None => load_params(&lab.post)?,
     };
     let (s, g) = lab.rubric(&params)?;

@@ -18,7 +18,7 @@ use crate::io::dts::{Dts, DtsTensor};
 use crate::metrics::DeltaStats;
 use crate::quant::{absmax_scales, quantize_with_scales, Granularity, QuantizedTensor};
 use crate::runtime::{PjrtSweep, Runtime};
-use crate::search::{search_scale_with, NativeSweep, Objective, SearchConfig};
+use crate::search::{search_scale_with, Objective, SearchConfig, TiledSweep};
 use crate::tensor::Tensor;
 use crate::util::threadpool::par_map;
 use crate::util::timer::time;
@@ -26,7 +26,11 @@ use crate::util::timer::time;
 /// Which engine evaluates candidate scales.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Engine {
-    /// In-process fused sweep over a thread pool.
+    /// In-process planned tiled sweep over a thread pool. The worker
+    /// budget splits between layer-level parallelism and tile-level
+    /// parallelism inside each layer's sweep, so both many-small-layer
+    /// and few-large-layer workloads use every core. Results are
+    /// bitwise-independent of the split (fixed-order tile merge).
     Native { workers: usize },
     /// The AOT-compiled Pallas kernel through PJRT (serial — the PJRT
     /// client is not Sync; on this testbed parallelism is moot anyway).
@@ -113,6 +117,12 @@ impl PipelineOutcome {
                 format!("alpha.{name}"),
                 format!("{}", self.layers.iter()
                     .find(|l| &l.name == name).map(|l| l.alpha).unwrap_or(1.0)),
+            );
+            // granularity label so loaders can rebuild the ScaleGrid from
+            // the sidecars alone (block size is ambiguous from grid dims)
+            d.meta.insert(
+                format!("gran.{name}"),
+                q.scales.granularity.label(),
             );
             d.insert(&format!("{name}.codes"), DtsTensor::U8 {
                 shape: vec![q.shape.0, q.shape.1],
@@ -262,8 +272,23 @@ fn run_delta_methods(
 
     let results: Vec<(LayerOutcome, QuantizedTensor)> = match cfg.engine {
         Engine::Native { workers } => {
+            // split the pool: up to one worker per layer at the outer
+            // level, the rest fanned out over each layer's sweep tiles —
+            // a single large layer still occupies the whole budget. The
+            // division remainder goes to the first `extra` layers (one
+            // more tile worker each) so no core idles; at most `outer`
+            // layers run at once, of which at most `extra` are boosted,
+            // so live tile workers never exceed `workers`. Results are
+            // bitwise-independent of the per-layer worker count.
+            let outer = workers.clamp(1, jobs.len().max(1));
+            let intra = (workers / outer).max(1);
+            let extra = workers.saturating_sub(intra * outer);
             let work = std::sync::Arc::new(work);
-            par_map(workers, jobs, move |j| work(j, &NativeSweep))
+            let indexed: Vec<(usize, Job)> = jobs.into_iter().enumerate().collect();
+            par_map(outer, indexed, move |(i, j)| {
+                let w = intra + usize::from(i < extra);
+                work(j, &TiledSweep::new(w))
+            })
         }
         Engine::Pjrt => {
             let rt = rt.ok_or_else(|| anyhow!("PJRT engine requires a Runtime"))?;
@@ -573,6 +598,47 @@ mod tests {
             assert!(rd.contains(n));
             assert!(rd.contains(&format!("{n}.codes")));
             assert!(rd.contains(&format!("{n}.scales")));
+            assert_eq!(
+                rd.meta.get(&format!("gran.{n}")).map(|s| s.as_str()),
+                Some("block16")
+            );
+        }
+    }
+
+    #[test]
+    fn sidecar_dequant_loader_matches_pipeline_params() {
+        // the serving-path loader (bulk LUT dequantization of the codes)
+        // must reproduce the coordinator's dequantized weights bit-for-bit
+        let (post, base, names) = fake_ckpts(8);
+        for gran in [Granularity::Block(16), Granularity::PerChannel] {
+            let cfg = PipelineConfig {
+                granularity: gran,
+                method: Method::Search {
+                    objective: Objective::SignRate,
+                    range: (0.8, 1.25),
+                },
+                engine: Engine::Native { workers: 2 },
+            };
+            let out = run_pipeline(&post, &base, &names, None, &cfg, None).unwrap();
+            let path = std::env::temp_dir().join(format!(
+                "daq_ckpt_dequant_{}_{}.dts",
+                std::process::id(),
+                gran.label()
+            ));
+            out.write_checkpoint(path.to_str().unwrap(), &post.meta).unwrap();
+            let rd = Dts::read(&path).unwrap();
+            std::fs::remove_file(&path).unwrap();
+            let params = crate::eval::load_params_dequant(&rd).unwrap();
+            for n in &names {
+                let got = &params[n];
+                let want = &out.params[n];
+                assert_eq!(got.shape(), want.shape(), "{n}");
+                for (a, b) in got.data().iter().zip(want.data()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{n}");
+                }
+            }
+            // non-quantized params (layernorms) still load
+            assert!(params.contains_key("l0.ln1.g"));
         }
     }
 }

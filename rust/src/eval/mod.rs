@@ -11,9 +11,10 @@ pub mod model_native;
 
 use std::collections::HashMap;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::io::dts::Dts;
+use crate::quant::{Granularity, QuantizedTensor, ScaleGrid};
 use crate::tensor::Tensor;
 
 /// A loaded model checkpoint: name → f32 tensor.
@@ -39,6 +40,74 @@ pub fn load_params_filtered(d: &Dts) -> Result<Params> {
         }
         if let Ok(t) = d.tensor_f32(name) {
             p.insert(name.clone(), t);
+        }
+    }
+    Ok(p)
+}
+
+/// Load a checkpoint preferring the compact quantized sidecars: every
+/// `<name>.codes` / `<name>.scales` pair is bulk-dequantized through the
+/// shared E4M3 decode table (`fp8::decode_lut`) instead of trusting (or
+/// even requiring) a stored f32 copy — the serving-path loader. Tensors
+/// without sidecars load as plain f32; non-f32 extras are skipped.
+pub fn load_params_dequant(d: &Dts) -> Result<Params> {
+    let mut p = Params::new();
+    // base names come from both plain tensors AND the stems of `.codes`
+    // sidecars: a compact checkpoint may store only codes+scales with no
+    // f32 copy at all. A `.codes`/`.scales` suffix only counts as a
+    // sidecar when its counterpart exists — a plain parameter that merely
+    // happens to end in `.scales` must still load as itself.
+    let mut names: Vec<String> = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for name in d.names() {
+        let base = if let Some(stem) = name.strip_suffix(".codes") {
+            if d.contains(&format!("{stem}.scales")) {
+                stem.to_string()
+            } else {
+                name.clone()
+            }
+        } else if let Some(stem) = name.strip_suffix(".scales") {
+            if d.contains(&format!("{stem}.codes")) {
+                continue;
+            }
+            name.clone()
+        } else {
+            name.clone()
+        };
+        if seen.insert(base.clone()) {
+            names.push(base);
+        }
+    }
+    for name in &names {
+        let codes_name = format!("{name}.codes");
+        let scales_name = format!("{name}.scales");
+        let has_codes = d.contains(&codes_name);
+        let gran_label = d.meta.get(&format!("gran.{name}"));
+        if has_codes && d.contains(&scales_name) && gran_label.is_some() {
+            let (cshape, codes) = d.tensor_u8(&codes_name)?;
+            if cshape.len() != 2 {
+                bail!("{codes_name}: expected 2-D codes, got {cshape:?}");
+            }
+            let (rows, cols) = (cshape[0], cshape[1]);
+            let gran =
+                Granularity::parse(gran_label.expect("checked")).map_err(|e| anyhow!(e))?;
+            let scales = d.tensor_f32(&scales_name)?.into_data();
+            let grid = ScaleGrid::from_sidecar(gran, rows, cols, scales)
+                .map_err(|e| anyhow!("{name}: {e}"))?;
+            let q = QuantizedTensor { shape: (rows, cols), codes, scales: grid };
+            p.insert(name.clone(), q.dequantize());
+        } else if let Ok(t) = d.tensor_f32(name) {
+            // pre-metadata checkpoints (codes but no `gran.<name>` meta)
+            // and plain tensors: use the stored f32 copy
+            p.insert(name.clone(), t);
+        } else if has_codes {
+            // codes exist but neither a complete sidecar set nor an f32
+            // copy — a silently missing weight would fail far from here
+            bail!(
+                "{name}: {codes_name} present but cannot dequantize \
+                 (missing {scales_name} or gran.{name} metadata) and no \
+                 f32 copy is stored"
+            );
         }
     }
     Ok(p)
@@ -245,5 +314,37 @@ mod tests {
     fn empty_mask_gives_zero() {
         let set = EvalSet { n: 1, seq: 2, tokens: vec![0, 0], mask: vec![0, 0] };
         assert_eq!(masked_accuracy(&set, &[0.0; 4], 2), 0.0);
+    }
+
+    #[test]
+    fn dequant_loader_handles_codes_only_checkpoint() {
+        // a compact checkpoint: sidecars + metadata, NO stored f32 copy
+        use crate::io::dts::DtsTensor;
+        use crate::quant::{quantize, Granularity};
+        use crate::util::rng::XorShift;
+
+        let mut rng = XorShift::new(31);
+        let w = Tensor::new(vec![8, 12], rng.normal_vec(96, 0.1));
+        let q = quantize(&w, Granularity::PerChannel, 1.0);
+        let mut d = Dts::new();
+        d.meta.insert("gran.w".into(), "channel".into());
+        d.insert(
+            "w.codes",
+            DtsTensor::U8 { shape: vec![8, 12], data: q.codes.clone() },
+        );
+        d.insert(
+            "w.scales",
+            DtsTensor::F32 {
+                shape: vec![q.scales.grid_rows, q.scales.grid_cols],
+                data: q.scales.scales.clone(),
+            },
+        );
+        let p = load_params_dequant(&d).unwrap();
+        let got = &p["w"];
+        let want = q.dequantize();
+        assert_eq!(got.shape(), want.shape());
+        for (a, b) in got.data().iter().zip(want.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 }

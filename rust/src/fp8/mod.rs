@@ -84,6 +84,35 @@ pub fn qdq_e4m3(x: f32) -> f32 {
     (a / step).round_ties_even() * step
 }
 
+/// Reciprocal-scale quantize–dequantize: `qdq_e4m3(x · s⁻¹) · s`.
+///
+/// The canonical *scaled* projection of the whole pipeline: division-free,
+/// so the sweep hot loop hoists `s⁻¹ = 1/s` once per candidate × scale
+/// region instead of dividing per element. Every scaled qdq/encode path
+/// (`quant::qdq`, `quantize_with_scales`, `metrics::sweep_native`, the
+/// tiled `metrics::SweepPlan`) goes through this same form, which is what
+/// keeps the fused sweep, the pointwise metrics, and the storage quantizer
+/// bit-identical to each other.
+///
+/// `inv_s` must be finite (use [`recip_scale`]) or `x == 0` turns into
+/// `0 · ∞ = NaN`.
+#[inline(always)]
+pub fn qdq_e4m3_scaled(x: f32, inv_s: f32, s: f32) -> f32 {
+    qdq_e4m3(x * inv_s) * s
+}
+
+/// Saturating scale reciprocal: `min(1/s, f32::MAX)`. The one blessed way
+/// to build the `inv_s` for [`qdq_e4m3_scaled`] — if `s·α` goes subnormal
+/// (tiny group absmax × small α), a raw `1/s` overflows to `+∞` and zero
+/// weights would quantize to NaN; saturating at `f32::MAX` keeps zeros at
+/// zero and everything else cleanly clamping to ±448, matching the old
+/// division semantics. Every caller must use this same form so the
+/// engines stay bit-identical to each other.
+#[inline(always)]
+pub fn recip_scale(s: f32) -> f32 {
+    (1.0 / s).min(f32::MAX)
+}
+
 /// Exact power of two for small integer exponents (|e| < 127).
 #[inline(always)]
 fn exp2i(e: i32) -> f32 {
@@ -103,6 +132,16 @@ pub fn decode_table() -> [f32; 256] {
         *slot = decode_e4m3(c as u8);
     }
     t
+}
+
+static DECODE_LUT: std::sync::OnceLock<[f32; 256]> = std::sync::OnceLock::new();
+
+/// Process-wide decode table, built once on first use — the bulk
+/// dequantization path (`quant::QuantizedTensor::dequantize`, the
+/// sidecar checkpoint loader) indexes this instead of calling
+/// [`decode_e4m3`] per element or rebuilding the table per tensor.
+pub fn decode_lut() -> &'static [f32; 256] {
+    DECODE_LUT.get_or_init(decode_table)
 }
 
 #[cfg(test)]
@@ -208,6 +247,48 @@ mod tests {
             let fast = qdq_e4m3(x);
             let slow = decode_e4m3(encode_e4m3(x));
             assert_eq!(fast.to_bits(), slow.to_bits(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn decode_lut_matches_decode() {
+        let lut = decode_lut();
+        for c in 0u16..256 {
+            let want = decode_e4m3(c as u8);
+            let got = lut[c as usize];
+            if want.is_nan() {
+                assert!(got.is_nan());
+            } else {
+                assert_eq!(got.to_bits(), want.to_bits());
+            }
+        }
+        // the static is shared, not rebuilt
+        assert!(std::ptr::eq(lut, decode_lut()));
+    }
+
+    #[test]
+    fn scaled_qdq_is_plain_qdq_at_unit_scale() {
+        let mut rng = crate::util::rng::XorShift::new(11);
+        for _ in 0..10_000 {
+            let x = (rng.f32() - 0.5) * 1000.0;
+            assert_eq!(
+                qdq_e4m3_scaled(x, 1.0, 1.0).to_bits(),
+                qdq_e4m3(x).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn scaled_qdq_projects_onto_scaled_grid() {
+        // every output must be (grid value) * s exactly
+        let s = 0.037f32;
+        let inv = 1.0 / s;
+        let mut rng = crate::util::rng::XorShift::new(13);
+        for _ in 0..10_000 {
+            let x = (rng.f32() - 0.5) * 30.0;
+            let q = qdq_e4m3_scaled(x, inv, s);
+            let grid = qdq_e4m3(x * inv);
+            assert_eq!(q.to_bits(), (grid * s).to_bits());
         }
     }
 

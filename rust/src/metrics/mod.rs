@@ -7,6 +7,11 @@
 //! (`python/compile/kernels/delta_metrics.py`), so the native engine and
 //! the PJRT engine are interchangeable inside the search.
 
+pub mod sweep;
+pub mod tile;
+
+pub use sweep::SweepPlan;
+
 use crate::fp8;
 use crate::quant::ScaleGrid;
 use crate::tensor::Tensor;
@@ -80,16 +85,13 @@ impl DeltaStats {
     }
 }
 
+/// `jnp.sign`-semantics sign in {−1, 0, 1} (NaN → 0) — delegates to the
+/// branchless [`tile::sign_i8`] so the reference sweeps and the tiled
+/// engine share one implementation of the contract the cross-engine
+/// bit-exactness tests depend on.
 #[inline(always)]
 fn sign(x: f32) -> i8 {
-    // matches jnp.sign semantics: sign(0) = 0
-    if x > 0.0 {
-        1
-    } else if x < 0.0 {
-        -1
-    } else {
-        0
-    }
+    tile::sign_i8(x)
 }
 
 /// One-pass statistics of a given quantized tensor vs (post, base).
@@ -126,10 +128,13 @@ pub fn delta_stats(w_post: &Tensor, w_base: &Tensor, w_quant: &Tensor) -> DeltaS
 /// element (and its scale lookup) is loaded once — the scalar-CPU analogue
 /// of the kernel's HBM-tile reuse.
 ///
-/// This straightforward layout measured FASTEST on the testbed (the loop
-/// is accumulation-bound; see the §Perf log) — the region-hoisted variant
-/// [`sweep_native_regions`] is kept for the ablation bench and verified
-/// identical in tests.
+/// This is the *reference* sweep: straightforward, recomputing everything
+/// per call. The production engine is the planned, tiled
+/// [`SweepPlan`](sweep::SweepPlan), which hoists all candidate-invariant
+/// state out of the loop and is verified against this function across
+/// every granularity. Both use the canonical reciprocal-multiply scaled
+/// projection [`fp8::qdq_e4m3_scaled`] (`qdq(p·s⁻¹)·s`), so their sign
+/// counts match bit-for-bit.
 pub fn sweep_native(
     w_post: &Tensor,
     w_base: &Tensor,
@@ -153,7 +158,8 @@ pub fn sweep_native(
             let s_base = s0.at(r, c);
             for (k, &alpha) in alphas.iter().enumerate() {
                 let s = s_base * alpha;
-                let q = fp8::qdq_e4m3(p / s) * s;
+                let inv_s = fp8::recip_scale(s);
+                let q = fp8::qdq_e4m3_scaled(p, inv_s, s);
                 let dq = q - b;
                 let err = q - p;
                 let st = &mut stats[k];
@@ -187,7 +193,10 @@ pub fn sweep_native(
 /// Measured 0.93-0.95x vs the straightforward loop on the 1-core testbed
 /// (the division + f64 accumulation dominate; hoisting the lookup does
 /// not pay for the extra indirection) — kept as the documented negative
-/// result of the perf pass and exercised by perf_hotpath.
+/// result of the perf pass and exercised by perf_hotpath. Superseded as
+/// the fast path by the planned, tiled [`SweepPlan`](sweep::SweepPlan),
+/// which additionally removes the per-element division and precomputes
+/// Δp/sign(Δp) across candidate batches (see ROADMAP §Perf log).
 pub fn sweep_native_regions(
     w_post: &Tensor,
     w_base: &Tensor,
@@ -209,10 +218,12 @@ pub fn sweep_native_regions(
     let mut nq = vec![0.0f64; nc];
     let mut sq = vec![0.0f64; nc];
     let mut scales = vec![0.0f32; nc];
+    let mut inv_scales = vec![0.0f32; nc];
 
     let mut do_region = |r0: usize, r1: usize, c0: usize, c1: usize, s_base: f32| {
         for (k, &alpha) in alphas.iter().enumerate() {
             scales[k] = s_base * alpha;
+            inv_scales[k] = fp8::recip_scale(scales[k]);
         }
         for r in r0..r1 {
             let row_p = &wp[r * cols + c0..r * cols + c1];
@@ -223,8 +234,7 @@ pub fn sweep_native_regions(
                 let dp64 = dp as f64;
                 npost_total += dp64 * dp64;
                 for k in 0..nc {
-                    let s = scales[k];
-                    let q = fp8::qdq_e4m3(p / s) * s;
+                    let q = fp8::qdq_e4m3_scaled(p, inv_scales[k], scales[k]);
                     let dq = q - b;
                     let err = q - p;
                     agree[k] += (sign(dq) == sp) as u64;
@@ -244,9 +254,12 @@ pub fn sweep_native_regions(
             // row-major traversal with a precomputed (candidate × column)
             // scale table — column-regions would stride the cache
             let mut col_scales = vec![0.0f32; nc * cols];
+            let mut inv_col_scales = vec![0.0f32; nc * cols];
             for (k, &alpha) in alphas.iter().enumerate() {
                 for c in 0..cols {
-                    col_scales[k * cols + c] = s0.scales[c] * alpha;
+                    let s = s0.scales[c] * alpha;
+                    col_scales[k * cols + c] = s;
+                    inv_col_scales[k * cols + c] = fp8::recip_scale(s);
                 }
             }
             for r in 0..rows {
@@ -260,8 +273,11 @@ pub fn sweep_native_regions(
                     let dp64 = dp as f64;
                     npost_total += dp64 * dp64;
                     for k in 0..nc {
-                        let s = col_scales[k * cols + c];
-                        let q = fp8::qdq_e4m3(p / s) * s;
+                        let q = fp8::qdq_e4m3_scaled(
+                            p,
+                            inv_col_scales[k * cols + c],
+                            col_scales[k * cols + c],
+                        );
                         let dq = q - b;
                         let err = q - p;
                         agree[k] += (sign(dq) == sp) as u64;

@@ -1,0 +1,315 @@
+//! The planned, tiled sweep — the production engine under Algorithm 1's
+//! hot loop.
+//!
+//! `sweep_native` recomputes everything per candidate batch: Δp, sign(Δp),
+//! the per-element scale lookup, and a reciprocal per (element ×
+//! candidate). Algorithm 1 runs 16 candidate evaluations per layer per
+//! objective over the *same* (layer, granularity), so all of that state is
+//! candidate-invariant. A [`SweepPlan`] computes it once:
+//!
+//! * Δp, sign(Δp), and the per-element index into the compact scale table
+//!   (the `ScaleGrid` resolved to a flat, granularity-free lookup);
+//! * the global ‖Δp‖² and N totals (identical for every candidate);
+//! * a tile decomposition of the element stream ([`tile::DEFAULT_TILE`]).
+//!
+//! Evaluating a candidate batch then reduces to: build the per-candidate
+//! `scales·α` / reciprocal tables (one division per candidate × region —
+//! thousands, not millions), and stream every tile through the branchless
+//! division-free kernel [`tile::eval_tile`]. Tiles are independent, so
+//! they fan out over `util::threadpool::par_map_slice`; partials merge in
+//! fixed tile order, making the result bitwise-identical for every worker
+//! count.
+
+use super::tile::{self, eval_tile, sign_i8, TileView};
+use super::DeltaStats;
+use crate::quant::ScaleGrid;
+use crate::tensor::Tensor;
+use crate::util::threadpool::par_map_slice;
+
+/// Precomputed candidate-invariant sweep state for one (layer,
+/// granularity); build once, evaluate any number of candidate batches.
+pub struct SweepPlan {
+    rows: usize,
+    cols: usize,
+    /// Post-trained weights (flat row-major copy).
+    p: Vec<f32>,
+    /// Base weights.
+    b: Vec<f32>,
+    /// Δp = p − b.
+    dp: Vec<f32>,
+    /// sign(Δp) in {−1, 0, 1}.
+    sp: Vec<i8>,
+    /// Per-element index into `scales`.
+    scale_idx: Vec<u32>,
+    /// Compact per-region base scales (copied from the `ScaleGrid`).
+    scales: Vec<f32>,
+    /// Σ Δp² — candidate-invariant, accumulated in element order (bitwise
+    /// identical to `sweep_native`'s per-candidate accumulation).
+    npost: f64,
+    /// Elements per tile.
+    tile: usize,
+}
+
+impl SweepPlan {
+    /// Build a plan with the default tile size.
+    pub fn new(w_post: &Tensor, w_base: &Tensor, s0: &ScaleGrid) -> SweepPlan {
+        Self::with_tile(w_post, w_base, s0, tile::DEFAULT_TILE)
+    }
+
+    /// Build a plan with an explicit tile size (elements per tile).
+    pub fn with_tile(
+        w_post: &Tensor,
+        w_base: &Tensor,
+        s0: &ScaleGrid,
+        tile: usize,
+    ) -> SweepPlan {
+        assert_eq!(w_post.shape(), w_base.shape());
+        assert!(tile > 0, "tile size must be positive");
+        let (rows, cols) = (w_post.rows(), w_post.cols());
+        assert_eq!((s0.rows, s0.cols), (rows, cols), "ScaleGrid shape mismatch");
+        let p = w_post.data().to_vec();
+        let b = w_base.data().to_vec();
+        let n = rows * cols;
+        let mut dp = Vec::with_capacity(n);
+        let mut sp = Vec::with_capacity(n);
+        let mut scale_idx = Vec::with_capacity(n);
+        let mut npost = 0.0f64;
+        for r in 0..rows {
+            for c in 0..cols {
+                let d = p[r * cols + c] - b[r * cols + c];
+                dp.push(d);
+                sp.push(sign_i8(d));
+                npost += (d * d) as f64;
+                scale_idx.push(s0.region_index(r, c) as u32);
+            }
+        }
+        SweepPlan {
+            rows,
+            cols,
+            p,
+            b,
+            dp,
+            sp,
+            scale_idx,
+            scales: s0.scales.clone(),
+            npost,
+            tile,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Candidate-invariant ‖Δp‖².
+    pub fn npost(&self) -> f64 {
+        self.npost
+    }
+
+    /// Number of tiles the element stream splits into.
+    pub fn tile_count(&self) -> usize {
+        self.p.len().div_ceil(self.tile)
+    }
+
+    /// Evaluate one candidate batch single-threaded.
+    pub fn eval(&self, alphas: &[f32]) -> Vec<DeltaStats> {
+        self.eval_with_workers(alphas, 1)
+    }
+
+    /// Evaluate one candidate batch with tile-level parallelism.
+    ///
+    /// Bitwise-deterministic across `workers`: tiles are fixed by the
+    /// plan, each tile's partial is computed independently, and partials
+    /// merge in tile order regardless of which thread ran them.
+    pub fn eval_with_workers(&self, alphas: &[f32], workers: usize) -> Vec<DeltaStats> {
+        let nc = alphas.len();
+        if nc == 0 {
+            return Vec::new();
+        }
+        let nr = self.scales.len();
+        // per-candidate scale and reciprocal tables: the only divisions in
+        // the whole evaluation (candidates × regions, not × elements)
+        let mut s_tab = vec![0.0f32; nc * nr];
+        let mut inv_tab = vec![0.0f32; nc * nr];
+        for (k, &alpha) in alphas.iter().enumerate() {
+            for (r, &s0) in self.scales.iter().enumerate() {
+                let s = s0 * alpha;
+                s_tab[k * nr + r] = s;
+                inv_tab[k * nr + r] = crate::fp8::recip_scale(s);
+            }
+        }
+
+        let n_elems = self.p.len();
+        let tiles: Vec<(usize, usize)> = (0..n_elems)
+            .step_by(self.tile)
+            .map(|lo| (lo, (lo + self.tile).min(n_elems)))
+            .collect();
+        let parts = par_map_slice(workers, &tiles, |&(lo, hi)| {
+            eval_tile(
+                &TileView {
+                    p: &self.p[lo..hi],
+                    b: &self.b[lo..hi],
+                    dp: &self.dp[lo..hi],
+                    sp: &self.sp[lo..hi],
+                    scale_idx: &self.scale_idx[lo..hi],
+                },
+                &s_tab,
+                &inv_tab,
+                nr,
+                nc,
+            )
+        });
+
+        // deterministic fixed-order merge across tiles
+        let mut stats = vec![DeltaStats::default(); nc];
+        for (part, &(lo, hi)) in parts.iter().zip(&tiles) {
+            let tile_n = (hi - lo) as f64;
+            for (k, st) in stats.iter_mut().enumerate() {
+                *st = st.merge(&DeltaStats {
+                    agree: part.agree[k] as f64,
+                    dot: part.dot[k],
+                    nq: part.nq[k],
+                    npost: 0.0,
+                    sq: part.sq[k],
+                    n: tile_n,
+                });
+            }
+        }
+        for st in &mut stats {
+            st.npost = self.npost;
+        }
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::sweep_native;
+    use crate::quant::{absmax_scales, Granularity};
+    use crate::util::rng::XorShift;
+
+    fn pair(r: usize, c: usize, delta: f32, seed: u64) -> (Tensor, Tensor) {
+        let mut rng = XorShift::new(seed);
+        let wb = Tensor::new(vec![r, c], rng.normal_vec(r * c, 0.1));
+        let wp = Tensor::new(
+            vec![r, c],
+            wb.data().iter().map(|&b| b + rng.normal() * delta).collect(),
+        );
+        (wp, wb)
+    }
+
+    fn assert_close(x: f64, y: f64, what: &str) {
+        assert!(
+            (x - y).abs() <= 1e-9 * x.abs().max(1e-9),
+            "{what}: {x} vs {y}"
+        );
+    }
+
+    #[test]
+    fn planned_matches_sweep_native_all_granularities() {
+        // 96x160 makes Block(128) ragged (1x2 grid with edge blocks)
+        let (wp, wb) = pair(96, 160, 0.003, 21);
+        let alphas = [0.5f32, 0.8, 1.0, 1.11, 2.0];
+        for gran in [
+            Granularity::PerTensor,
+            Granularity::PerChannel,
+            Granularity::Block(32),
+            Granularity::Block(128),
+        ] {
+            let s0 = absmax_scales(&wp, gran);
+            let want = sweep_native(&wp, &wb, &s0, &alphas);
+            let plan = SweepPlan::new(&wp, &wb, &s0);
+            for workers in [1usize, 4] {
+                let got = plan.eval_with_workers(&alphas, workers);
+                for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+                    let tag = format!("{gran:?} cand {k} workers {workers}");
+                    assert_eq!(g.agree, w.agree, "{tag} agree");
+                    assert_eq!(g.n, w.n, "{tag} n");
+                    // npost is accumulated in the same element order as the
+                    // reference: bitwise equal, not merely close
+                    assert_eq!(g.npost.to_bits(), w.npost.to_bits(), "{tag} npost");
+                    assert_close(g.dot, w.dot, &format!("{tag} dot"));
+                    assert_close(g.nq, w.nq, &format!("{tag} nq"));
+                    assert_close(g.sq, w.sq, &format!("{tag} sq"));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bitwise_deterministic_across_worker_counts() {
+        let (wp, wb) = pair(128, 96, 0.004, 22);
+        let alphas: Vec<f32> = (0..16).map(|i| 0.8 + 0.028 * i as f32).collect();
+        for gran in [Granularity::PerChannel, Granularity::Block(32)] {
+            let s0 = absmax_scales(&wp, gran);
+            // small tile so several tiles exist per worker
+            let plan = SweepPlan::with_tile(&wp, &wb, &s0, 512);
+            let base = plan.eval_with_workers(&alphas, 1);
+            for workers in [2usize, 8] {
+                let got = plan.eval_with_workers(&alphas, workers);
+                // DeltaStats is PartialEq over f64 fields: exact equality
+                // IS the bitwise-determinism assertion
+                assert_eq!(got, base, "{gran:?} workers {workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn tile_size_changes_only_rounding() {
+        let (wp, wb) = pair(64, 80, 0.002, 23);
+        let s0 = absmax_scales(&wp, Granularity::Block(16));
+        let alphas = [0.9f32, 1.0, 1.1];
+        let want = SweepPlan::with_tile(&wp, &wb, &s0, tile::DEFAULT_TILE).eval(&alphas);
+        for tile in [1usize, 7, 509] {
+            let got = SweepPlan::with_tile(&wp, &wb, &s0, tile).eval(&alphas);
+            for (k, (g, w)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(g.agree, w.agree, "tile {tile} cand {k}");
+                assert_eq!(g.n, w.n);
+                assert_close(g.dot, w.dot, "dot");
+                assert_close(g.nq, w.nq, "nq");
+                assert_close(g.sq, w.sq, "sq");
+            }
+        }
+    }
+
+    #[test]
+    fn plan_reuse_is_stateless() {
+        let (wp, wb) = pair(32, 48, 0.005, 24);
+        let s0 = absmax_scales(&wp, Granularity::PerChannel);
+        let plan = SweepPlan::new(&wp, &wb, &s0);
+        let coarse = [0.8f32, 1.0, 1.25];
+        let fine = [0.95f32, 1.0, 1.05];
+        let a1 = plan.eval(&coarse);
+        let b1 = plan.eval(&fine);
+        // evaluating again (other batch in between) must reproduce exactly
+        assert_eq!(plan.eval(&coarse), a1);
+        assert_eq!(plan.eval(&fine), b1);
+        // and match a fresh plan
+        assert_eq!(SweepPlan::new(&wp, &wb, &s0).eval(&coarse), a1);
+    }
+
+    #[test]
+    fn empty_and_degenerate_shapes() {
+        let e = Tensor::new(vec![0, 4], vec![]);
+        let s0 = absmax_scales(&e, Granularity::PerTensor);
+        let plan = SweepPlan::new(&e, &e, &s0);
+        let st = plan.eval(&[1.0]);
+        assert_eq!(st.len(), 1);
+        assert_eq!(st[0].n, 0.0);
+        assert_eq!(st[0].npost, 0.0);
+        assert!(plan.eval(&[]).is_empty());
+
+        let one = Tensor::new(vec![1, 1], vec![0.5]);
+        let s1 = absmax_scales(&one, Granularity::Block(128));
+        let plan1 = SweepPlan::new(&one, &one, &s1);
+        let st1 = plan1.eval_with_workers(&[1.0], 8);
+        assert_eq!(st1[0].n, 1.0);
+        assert_eq!(st1[0].npost, 0.0); // identical pair: delta is zero
+        assert!(st1[0].sq < 1e-12, "near-exact reconstruction: {}", st1[0].sq);
+    }
+}

@@ -64,16 +64,22 @@ pub struct ScaleGrid {
 }
 
 impl ScaleGrid {
+    /// Index into `scales` for element (r, c) — the single source of
+    /// truth for the granularity dispatch ([`Self::at`] and the tiled
+    /// sweep plan's per-element index array both use it).
+    #[inline(always)]
+    pub fn region_index(&self, r: usize, c: usize) -> usize {
+        match self.granularity {
+            Granularity::PerTensor => 0,
+            Granularity::PerChannel => c,
+            Granularity::Block(b) => (r / b) * self.grid_cols + (c / b),
+        }
+    }
+
     /// Per-element scale lookup.
     #[inline(always)]
     pub fn at(&self, r: usize, c: usize) -> f32 {
-        match self.granularity {
-            Granularity::PerTensor => self.scales[0],
-            Granularity::PerChannel => self.scales[c],
-            Granularity::Block(b) => {
-                self.scales[(r / b) * self.grid_cols + (c / b)]
-            }
-        }
+        self.scales[self.region_index(r, c)]
     }
 
     /// Expand to a dense rows×cols field (the layout the PJRT sweep
@@ -96,10 +102,41 @@ impl ScaleGrid {
         }
         g
     }
+
+    /// Rebuild a grid from checkpoint sidecar data: the granularity (from
+    /// the `gran.<name>` metadata `write_checkpoint` stores) plus the
+    /// compact scales. Validates that the grid dims implied by the
+    /// granularity match the sidecar length.
+    pub fn from_sidecar(
+        granularity: Granularity,
+        rows: usize,
+        cols: usize,
+        scales: Vec<f32>,
+    ) -> Result<ScaleGrid, String> {
+        let (grid_rows, grid_cols) = match granularity {
+            Granularity::PerTensor => (1, 1),
+            Granularity::PerChannel => (1, cols),
+            Granularity::Block(b) => (rows.div_ceil(b), cols.div_ceil(b)),
+        };
+        if scales.len() != grid_rows * grid_cols {
+            return Err(format!(
+                "scale sidecar has {} entries; {granularity:?} over \
+                 {rows}x{cols} needs {}",
+                scales.len(),
+                grid_rows * grid_cols
+            ));
+        }
+        Ok(ScaleGrid { granularity, rows, cols, grid_rows, grid_cols, scales })
+    }
 }
 
 /// AbsMax scale initialization (Algorithm 1 line 3: s0 = max|W| / Qmax).
-/// All-zero groups get scale 1 to avoid division by zero.
+/// All-zero groups get scale 1 to avoid division by zero, and scales are
+/// floored at `f32::MIN_POSITIVE` (smallest normal): the pipeline's
+/// canonical projection multiplies by the reciprocal
+/// ([`fp8::qdq_e4m3_scaled`]), and a subnormal scale would make `1/s`
+/// overflow to infinity (NaN stats, saturated codes). Groups that small
+/// (max|W| ≲ 5e-36) carry no usable signal either way.
 pub fn absmax_scales(w: &Tensor, granularity: Granularity) -> ScaleGrid {
     let (rows, cols) = (w.rows(), w.cols());
     let (grid_rows, grid_cols, mut scales) = match granularity {
@@ -125,7 +162,11 @@ pub fn absmax_scales(w: &Tensor, granularity: Granularity) -> ScaleGrid {
         }
     }
     for s in &mut scales {
-        *s = if *s > 0.0 { *s / fp8::E4M3_MAX } else { 1.0 };
+        *s = if *s > 0.0 {
+            (*s / fp8::E4M3_MAX).max(f32::MIN_POSITIVE)
+        } else {
+            1.0
+        };
     }
     ScaleGrid { granularity, rows, cols, grid_rows, grid_cols, scales }
 }
@@ -142,7 +183,7 @@ pub struct QuantizedTensor {
 impl QuantizedTensor {
     pub fn dequantize(&self) -> Tensor {
         let (rows, cols) = self.shape;
-        let table = fp8::decode_table();
+        let table = fp8::decode_lut();
         let mut out = vec![0.0f32; rows * cols];
         for r in 0..rows {
             for c in 0..cols {
@@ -165,13 +206,18 @@ impl QuantizedTensor {
 }
 
 /// Quantize `w` with scales `s0·alpha`, returning the storage form.
+///
+/// Uses the canonical reciprocal-multiply projection (`encode(w·s⁻¹)`,
+/// see [`fp8::qdq_e4m3_scaled`]) so the stored codes are bit-identical to
+/// what the fused sweep scored during the scale search.
 pub fn quantize_with_scales(w: &Tensor, s0: &ScaleGrid, alpha: f32) -> QuantizedTensor {
     let (rows, cols) = (w.rows(), w.cols());
     let mut codes = vec![0u8; rows * cols];
     for r in 0..rows {
         for c in 0..cols {
             let s = s0.at(r, c) * alpha;
-            codes[r * cols + c] = fp8::encode_e4m3(w.at2(r, c) / s);
+            let inv_s = fp8::recip_scale(s);
+            codes[r * cols + c] = fp8::encode_e4m3(w.at2(r, c) * inv_s);
         }
     }
     QuantizedTensor { shape: (rows, cols), codes, scales: s0.scaled(alpha) }
@@ -184,14 +230,17 @@ pub fn quantize(w: &Tensor, granularity: Granularity, alpha: f32) -> QuantizedTe
 }
 
 /// Quantize–dequantize without storing codes (the `Q_s(W)` used by metric
-/// evaluation): out[i] = qdq_e4m3(w[i] / s[i]) * s[i].
+/// evaluation): out[i] = qdq_e4m3(w[i] · s[i]⁻¹) · s[i] — the same
+/// reciprocal-multiply form as the fused sweep, so pointwise stats and
+/// sweep stats agree bit-for-bit.
 pub fn qdq(w: &Tensor, s0: &ScaleGrid, alpha: f32) -> Tensor {
     let (rows, cols) = (w.rows(), w.cols());
     let mut out = vec![0.0f32; rows * cols];
     for r in 0..rows {
         for c in 0..cols {
             let s = s0.at(r, c) * alpha;
-            out[r * cols + c] = fp8::qdq_e4m3(w.at2(r, c) / s) * s;
+            let inv_s = fp8::recip_scale(s);
+            out[r * cols + c] = fp8::qdq_e4m3_scaled(w.at2(r, c), inv_s, s);
         }
     }
     Tensor::new(vec![rows, cols], out)
@@ -293,6 +342,46 @@ mod tests {
         assert!(q.compression_ratio() > 3.9 && q.compression_ratio() <= 4.0);
         let qc = quantize(&w, Granularity::PerChannel, 1.0);
         assert!(qc.compression_ratio() > 3.8);
+    }
+
+    #[test]
+    fn tiny_weights_never_produce_nan() {
+        // a tiny-but-nonzero group must not subnormalize the scale: the
+        // reciprocal projection would turn 1/s infinite (0·inf = NaN)
+        let w = Tensor::new(vec![2, 2], vec![1e-38, -1e-38, 5e-39, 0.0]);
+        let s0 = absmax_scales(&w, Granularity::PerTensor);
+        assert!(s0.at(0, 0) >= f32::MIN_POSITIVE);
+        assert!((1.0 / s0.at(0, 0)).is_finite());
+        let q = qdq(&w, &s0, 1.0);
+        assert!(q.data().iter().all(|v| v.is_finite()), "{:?}", q.data());
+        let st = crate::metrics::delta_stats(&w, &Tensor::zeros(vec![2, 2]), &q);
+        assert!(st.sq.is_finite() && st.nq.is_finite());
+        // even a small alpha that re-subnormalizes s·α must stay NaN-free
+        // (the saturating recip_scale): zeros stay zero, stats finite
+        let sw = crate::metrics::sweep_native(&w, &Tensor::zeros(vec![2, 2]), &s0, &[0.1, 1.0]);
+        assert!(sw.iter().all(|s| s.sq.is_finite() && s.nq.is_finite()));
+    }
+
+    #[test]
+    fn sidecar_roundtrip_rebuilds_grid() {
+        let w = rand_w(70, 50, 6);
+        for gran in [
+            Granularity::PerTensor,
+            Granularity::PerChannel,
+            Granularity::Block(32), // ragged: 3x2 grid
+        ] {
+            let s = absmax_scales(&w, gran);
+            let back =
+                ScaleGrid::from_sidecar(gran, 70, 50, s.scales.clone()).unwrap();
+            assert_eq!((back.grid_rows, back.grid_cols), (s.grid_rows, s.grid_cols));
+            for r in (0..70).step_by(9) {
+                for c in (0..50).step_by(7) {
+                    assert_eq!(back.at(r, c), s.at(r, c), "{gran:?} ({r},{c})");
+                }
+            }
+        }
+        // wrong length rejected
+        assert!(ScaleGrid::from_sidecar(Granularity::PerChannel, 4, 4, vec![1.0]).is_err());
     }
 
     #[test]

@@ -1,8 +1,10 @@
-//! Work-queue thread pool for the coordinator (rayon/tokio are not in the
-//! offline registry; the coordinator's needs — a bounded pool draining a
-//! job queue with results collected in completion order — fit in ~100
-//! lines of std).
+//! Work-queue thread pool for the coordinator and the tiled sweep
+//! (rayon/tokio are not in the offline registry; the needs here — a
+//! bounded pool draining a job queue with results in input order, plus a
+//! scoped borrow-friendly parallel map — fit in a couple hundred lines of
+//! std).
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::thread;
@@ -49,7 +51,10 @@ where
         match res {
             Ok(v) => slots[idx] = Some(v),
             Err(e) => {
-                // drain workers before propagating
+                // clear the pending queue first so panic propagation only
+                // waits for the jobs already in flight, not for every
+                // remaining queued job to run to completion
+                queue.lock().unwrap().clear();
                 for h in handles.drain(..) {
                     let _ = h.join();
                 }
@@ -79,6 +84,63 @@ where
         })
         .collect();
     run_jobs(workers, jobs)
+}
+
+/// Scoped parallel map over a slice: unlike [`par_map`], the items and
+/// the closure may *borrow* (no `'static` bound) — the workers run inside
+/// `std::thread::scope`. Results come back in input order, and because
+/// each result is computed independently and placed by index, the output
+/// is bitwise-deterministic for any `workers` value.
+///
+/// This is the engine under `metrics::SweepPlan`'s tile evaluation: tiles
+/// are cheap range descriptors borrowing the plan's arrays.
+pub fn par_map_slice<I, T, F>(workers: usize, items: &[I], f: F) -> Vec<T>
+where
+    I: Sync,
+    T: Send,
+    F: Fn(&I) -> T + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return items.iter().map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let chunks: Vec<Vec<(usize, T)>> = thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                s.spawn(|| {
+                    let mut out = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        out.push((i, f(&items[i])));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(v) => v,
+                Err(e) => std::panic::resume_unwind(e),
+            })
+            .collect()
+    });
+    let mut slots: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    for (i, v) in chunks.into_iter().flatten() {
+        slots[i] = Some(v);
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("missing job result"))
+        .collect()
 }
 
 #[cfg(test)]
@@ -115,6 +177,73 @@ mod tests {
         par_map(2, vec![1, 2, 3], |i| {
             if i == 2 {
                 panic!("boom");
+            }
+            i
+        });
+    }
+
+    #[test]
+    fn panic_clears_pending_queue() {
+        use std::time::Duration;
+        let ran = Arc::new(AtomicUsize::new(0));
+        let jobs: Vec<_> = (0..200usize)
+            .map(|i| {
+                let ran = Arc::clone(&ran);
+                move || {
+                    if i == 0 {
+                        panic!("boom");
+                    }
+                    thread::sleep(Duration::from_millis(5));
+                    ran.fetch_add(1, Ordering::SeqCst);
+                }
+            })
+            .collect();
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_jobs(2, jobs)
+        }));
+        assert!(res.is_err());
+        // without queue clearing the drain runs ALL 199 remaining sleep
+        // jobs before propagating; with it only the jobs popped before
+        // the collector clears the queue run. Counter-based (not
+        // wall-clock) so a loaded CI box can't flake the assertion.
+        let ran = ran.load(Ordering::SeqCst);
+        assert!(ran < 150, "queue was not cleared on panic: {ran} jobs ran");
+    }
+
+    #[test]
+    fn slice_map_matches_serial_and_preserves_order() {
+        let items: Vec<u64> = (0..257).collect();
+        let serial: Vec<u64> = items.iter().map(|&i| i * i + 1).collect();
+        for workers in [1, 2, 5, 16] {
+            let out = par_map_slice(workers, &items, |&i| i * i + 1);
+            assert_eq!(out, serial, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn slice_map_borrows_environment() {
+        // the whole point vs par_map: no 'static — borrow a local buffer
+        let data: Vec<f64> = (0..1000).map(|i| i as f64 * 0.25).collect();
+        let tiles: Vec<(usize, usize)> = vec![(0, 400), (400, 900), (900, 1000)];
+        let sums = par_map_slice(4, &tiles, |&(lo, hi)| {
+            data[lo..hi].iter().sum::<f64>()
+        });
+        let total: f64 = sums.iter().sum();
+        assert_eq!(total, data.iter().sum::<f64>());
+    }
+
+    #[test]
+    fn slice_map_empty() {
+        let out: Vec<u8> = par_map_slice(4, &[] as &[u8], |&b| b);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn slice_map_propagates_panics() {
+        par_map_slice(3, &[1, 2, 3, 4], |&i| {
+            if i == 3 {
+                panic!("tile boom");
             }
             i
         });
