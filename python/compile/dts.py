@@ -59,6 +59,9 @@ def write_dts(path: str, tensors: dict, meta: dict | None = None) -> None:
         arr = np.ascontiguousarray(arr)
         if arr.dtype not in DTYPE_CODES:
             raise ValueError(f"unsupported dtype {arr.dtype} for tensor {name!r}")
+        if len(name.encode()) > 0xFFFF:
+            raise ValueError(f"tensor name of {len(name.encode())} bytes "
+                             "exceeds the u16 length prefix")
         index.append((name, arr, len(payload)))
         payload.extend(arr.tobytes())
 
@@ -67,6 +70,12 @@ def write_dts(path: str, tensors: dict, meta: dict | None = None) -> None:
         f.write(struct.pack("<III", VERSION, len(meta), len(index)))
         for k, v in meta.items():
             kb, vb = k.encode(), str(v).encode()
+            if len(kb) > 0xFFFF:
+                raise ValueError(f"meta key of {len(kb)} bytes exceeds "
+                                 "the u16 length prefix")
+            if len(vb) > 0xFFFFFFFF:
+                raise ValueError(f"meta value for {k!r} ({len(vb)} bytes) "
+                                 "exceeds the u32 length prefix")
             f.write(struct.pack("<H", len(kb)))
             f.write(kb)
             f.write(struct.pack("<I", len(vb)))
@@ -80,6 +89,84 @@ def write_dts(path: str, tensors: dict, meta: dict | None = None) -> None:
                 f.write(struct.pack("<Q", d))
             f.write(struct.pack("<QQ", off, arr.nbytes))
         f.write(bytes(payload))
+
+
+SHARD_MANIFEST = "manifest.json"
+SHARD_FORMAT = "daq-sharded-dts"
+DEFAULT_SHARD_BUDGET = 256 << 20
+
+
+def write_sharded_dts(dir_path: str, tensors: dict, meta: dict | None = None,
+                      shard_budget_bytes: int = DEFAULT_SHARD_BUDGET) -> str:
+    """Split tensors into DTS1 shard files by byte budget + manifest.json.
+
+    Mirrors rust/src/io/shard.rs (`ShardWriter`): shards are complete
+    standalone DTS containers named shard_NNNNN.dts; a shard rolls once its
+    payload reaches the budget (so it may overshoot by one tensor). Returns
+    the manifest path.
+    """
+    import json
+    import os
+
+    meta = meta or {}
+    os.makedirs(dir_path, exist_ok=True)
+    shards: list[dict] = []
+    cur: dict = {}
+    cur_bytes = 0
+
+    def flush():
+        nonlocal cur, cur_bytes
+        if not cur:
+            return
+        fname = f"shard_{len(shards):05d}.dts"
+        write_dts(os.path.join(dir_path, fname), cur,
+                  {"shard_index": str(len(shards))})
+        shards.append({"file": fname, "tensors": len(cur), "bytes": cur_bytes})
+        cur, cur_bytes = {}, 0
+
+    for name, arr in tensors.items():
+        arr = np.ascontiguousarray(arr)
+        cur[name] = arr
+        cur_bytes += arr.nbytes
+        if cur_bytes >= shard_budget_bytes:
+            flush()
+    flush()
+
+    manifest = {
+        "format": SHARD_FORMAT,
+        "version": 1,
+        "shard_budget_bytes": int(shard_budget_bytes),
+        "meta": {k: str(v) for k, v in meta.items()},
+        "shards": shards,
+    }
+    manifest_path = os.path.join(dir_path, SHARD_MANIFEST)
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f)
+        f.write("\n")
+    return manifest_path
+
+
+def read_sharded_dts(path: str) -> tuple[dict, dict]:
+    """Read a sharded store (manifest path or directory); returns
+    (tensors, meta) like read_dts."""
+    import json
+    import os
+
+    if os.path.isdir(path):
+        path = os.path.join(path, SHARD_MANIFEST)
+    with open(path) as f:
+        manifest = json.load(f)
+    if manifest.get("format") != SHARD_FORMAT:
+        raise ValueError(f"{path}: not a sharded-store manifest")
+    base = os.path.dirname(path)
+    tensors: dict = {}
+    for shard in manifest.get("shards", []):
+        ts, _shard_meta = read_dts(os.path.join(base, shard["file"]))
+        for name, arr in ts.items():
+            if name in tensors:
+                raise ValueError(f"{path}: tensor {name!r} in more than one shard")
+            tensors[name] = arr
+    return tensors, manifest.get("meta", {})
 
 
 def read_dts(path: str) -> tuple[dict, dict]:

@@ -9,8 +9,10 @@
 //! PRs: one record per (shape, granularity, variant, workers) with
 //! Melem/s and speedup vs the naive sweep.
 
-use daq::coordinator::Method;
-use daq::experiments::Lab;
+use daq::coordinator::stream::{run_stream, StreamConfig};
+use daq::coordinator::{run_pipeline, Engine, Method, PipelineConfig};
+use daq::experiments::{quantizable_from_source, Lab};
+use daq::io::dts::Dts;
 use daq::metrics::{sweep_native, sweep_native_regions, SweepPlan};
 use daq::quant::{absmax_scales, Granularity};
 use daq::report::Table;
@@ -157,6 +159,92 @@ fn main() {
         }
     }
     println!("{}", t.render());
+
+    // --- §Perf: streaming pipeline vs in-memory pipeline -------------
+    // synthetic 8-layer model; the streaming driver pays shard I/O and
+    // bounded admission for O(depth) residency — this row tracks that tax
+    {
+        let n_layers = 8usize;
+        let dim = 256usize;
+        let mut post = Dts::new();
+        let mut base = Dts::new();
+        let mut rng = XorShift::new(97);
+        for i in 0..n_layers {
+            let name = format!("l{i}.wq");
+            let wb = Tensor::new(vec![dim, dim], rng.normal_vec(dim * dim, 0.1));
+            let wp = Tensor::new(
+                vec![dim, dim],
+                wb.data().iter().map(|&b| b + rng.normal() * 0.002).collect(),
+            );
+            base.insert_f32(&name, &wb);
+            post.insert_f32(&name, &wp);
+        }
+        let quantizable = quantizable_from_source(&post);
+        let method = Method::Search {
+            objective: Objective::SignRate,
+            range: (0.8, 1.25),
+        };
+        let gran = Granularity::Block(128);
+        let workers = cores.min(8);
+
+        let pcfg = PipelineConfig {
+            granularity: gran,
+            method: method.clone(),
+            engine: Engine::Native { workers },
+        };
+        let mem = bench("pipeline (in-memory)", 0, 3, || {
+            run_pipeline(&post, &base, &quantizable, None, &pcfg, None).unwrap()
+        });
+
+        // fresh dir per iteration, deleted outside the timed closure so
+        // cleanup cost doesn't bias the streaming-vs-in-memory ratio
+        let base_dir = std::env::temp_dir()
+            .join(format!("daq_bench_stream_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base_dir);
+        let scfg = StreamConfig::new(gran, method, workers);
+        let mut iter = 0usize;
+        let stream = bench("pipeline (streaming)", 0, 3, || {
+            iter += 1;
+            run_stream(
+                &post,
+                &base,
+                &quantizable,
+                &base_dir.join(iter.to_string()),
+                &scfg,
+            )
+            .unwrap()
+        });
+        let _ = std::fs::remove_dir_all(&base_dir);
+
+        let evals = (n_layers * dim * dim * n_candidates) as f64;
+        let shape = format!("{n_layers}x{dim}x{dim}");
+        let mut t = Table::new(
+            "Full pipeline: in-memory vs streaming (synthetic 8 layers)",
+            &["variant", "workers", "mean ms", "Melem/s (xNC)", "vs in-memory"],
+        );
+        for (variant, mean_s) in [
+            ("pipeline-inmemory", mem.mean_s),
+            ("pipeline-streaming", stream.mean_s),
+        ] {
+            records.push(Record {
+                shape: shape.clone(),
+                granularity: gran.label(),
+                variant: variant.into(),
+                workers,
+                mean_ms: mean_s * 1e3,
+                melem_per_s: evals / mean_s / 1e6,
+                speedup_vs_naive: mem.mean_s / mean_s,
+            });
+            t.row(vec![
+                variant.into(),
+                workers.to_string(),
+                format!("{:.2}", mean_s * 1e3),
+                format!("{:.1}", evals / mean_s / 1e6),
+                format!("{:.2}x", mem.mean_s / mean_s),
+            ]);
+        }
+        println!("{}", t.render());
+    }
 
     // --- machine-readable perf trajectory ---
     let out_path =

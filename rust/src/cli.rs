@@ -3,7 +3,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use crate::coordinator::Method;
-use crate::eval::{load_params, load_params_dequant};
+use crate::eval::load_params;
 use crate::experiments::{table1, table2, table_search, Lab};
 use crate::io::dts::Dts;
 use crate::quant::Granularity;
@@ -25,15 +25,30 @@ COMMANDS:
              --range lo,hi (default 0.8,1.25)
              --engine native|pjrt (default native)
              --out FILE (write quantized checkpoint)
+             --stream (bounded-memory pipeline; --out names a shard DIR;
+               sources stream layer-at-a-time, peak memory stays at
+               --depth layer pairs, not the model)
+             --shard-mb N (output shard budget, default 256)
+             --resume (skip layers recorded in DIR/resume.jsonl)
+             --workers N --depth K (streaming parallelism / in-flight)
+             --post PATH --base PATH (checkpoint overrides; a .dts file,
+               a shard directory, or a manifest.json)
+  shard      Convert a monolithic .dts checkpoint into a sharded store
+             --in FILE --out DIR --shard-mb N (default 256)
   eval       Score a checkpoint on the Style/General rubric
-             --ckpt FILE --artifacts DIR --engine native|pjrt
+             --ckpt PATH (.dts file or sharded store) --artifacts DIR
+             --engine native|pjrt
   tables     Regenerate the paper's tables (1-5)
              --artifacts DIR --only N --engine native|pjrt
   serve      Serve the quantized model on a synthetic request load
              --artifacts DIR --requests N (default 32)
              --new-tokens N (default 8) [--quantize]
-  inspect    Print a DTS container's metadata and tensor index
-             <file.dts>
+             --engine native|pjrt (default native; pjrt uses the AOT
+               artifact, native runs everywhere) --batch N (native)
+  inspect    Print a container's metadata and tensor index (dtype, shape,
+             payload bytes, totals) for a .dts file, a sharded-store
+             directory, or a manifest.json
+             <path>
   golden     Cross-check the Rust FP8 codec against the JAX golden file
              --artifacts DIR
   help       Show this message
@@ -42,6 +57,7 @@ COMMANDS:
 pub fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("quantize") => cmd_quantize(args),
+        Some("shard") => cmd_shard(args),
         Some("eval") => cmd_eval(args),
         Some("tables") => cmd_tables(args),
         Some("serve") => cmd_serve(args),
@@ -72,24 +88,12 @@ fn open_lab(args: &Args) -> Result<Lab> {
     Lab::open(&dir, use_pjrt)
 }
 
-fn cmd_quantize(args: &Args) -> Result<()> {
-    let lab = open_lab(args)?;
-    let gran = Granularity::parse(&args.str_or("gran", "block")).map_err(|e| anyhow!(e))?;
-    let method = parse_method(args)?;
-    println!(
-        "quantizing {} layers  method={}  gran={}  engine={}",
-        lab.quantizable.len(),
-        method.label(),
-        gran.label(),
-        if lab.rt.is_some() { "pjrt" } else { "native" }
-    );
-    let out = lab.quantize(gran, method.clone())?;
-
+fn layer_table(layers: &[crate::coordinator::LayerOutcome]) -> crate::report::Table {
     let mut t = crate::report::Table::new(
         "per-layer results",
         &["layer", "shape", "alpha", "evals", "SignRate", "CosSim", "ms"],
     );
-    for l in &out.layers {
+    for l in layers {
         t.row(vec![
             l.name.clone(),
             format!("{}x{}", l.shape.0, l.shape.1),
@@ -102,7 +106,26 @@ fn cmd_quantize(args: &Args) -> Result<()> {
             format!("{:.1}", l.secs * 1e3),
         ]);
     }
-    println!("{}", t.render());
+    t
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    if args.flag("stream") {
+        return cmd_quantize_stream(args);
+    }
+    let lab = open_lab(args)?;
+    let gran = Granularity::parse(&args.str_or("gran", "block")).map_err(|e| anyhow!(e))?;
+    let method = parse_method(args)?;
+    println!(
+        "quantizing {} layers  method={}  gran={}  engine={}",
+        lab.quantizable.len(),
+        method.label(),
+        gran.label(),
+        if lab.rt.is_some() { "pjrt" } else { "native" }
+    );
+    let out = lab.quantize(gran, method.clone())?;
+
+    println!("{}", layer_table(&out.layers).render());
     if let Some(a) = &out.agg {
         println!(
             "aggregate: dW_L2={:.2} SignRate={:.2}% CosSim={:.4} MSE={:.3e} ({:.2}s total)",
@@ -123,12 +146,111 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `daq quantize --stream`: the bounded-memory pipeline over seek-based
+/// sources. Never loads a whole checkpoint; the rubric evaluation is
+/// intentionally skipped (it would require full-model residency — run
+/// `daq eval --ckpt <out dir>` afterwards).
+fn cmd_quantize_stream(args: &Args) -> Result<()> {
+    if args.str_or("engine", "native") == "pjrt" {
+        bail!("--stream requires --engine native (the PJRT client is serial)");
+    }
+    let out_dir = args
+        .get("out")
+        .ok_or_else(|| anyhow!("--stream needs --out DIR for the sharded store"))?;
+    let dir = args.str_or("artifacts", "artifacts");
+    let post_path = args.str_or("post", &format!("{dir}/ckpt_post.dts"));
+    let base_path = args.str_or("base", &format!("{dir}/ckpt_base.dts"));
+    let post = crate::io::open_source(&post_path)?;
+    let base = crate::io::open_source(&base_path)?;
+    let quantizable = crate::experiments::quantizable_from_source(post.as_ref());
+    if quantizable.is_empty() {
+        bail!("{post_path}: no quantizable 2-D weights found");
+    }
+
+    let gran = Granularity::parse(&args.str_or("gran", "block")).map_err(|e| anyhow!(e))?;
+    let method = parse_method(args)?;
+    let workers = args
+        .usize_or(
+            "workers",
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        )
+        .map_err(|e| anyhow!(e))?;
+    let mut cfg = crate::coordinator::stream::StreamConfig::new(gran, method, workers);
+    cfg.depth = args.usize_or("depth", cfg.depth).map_err(|e| anyhow!(e))?;
+    cfg.shard_budget = (args
+        .usize_or("shard-mb", crate::io::shard::DEFAULT_SHARD_MB as usize)
+        .map_err(|e| anyhow!(e))? as u64)
+        << 20;
+    cfg.resume = args.flag("resume");
+
+    println!(
+        "streaming {} layers  method={}  gran={}  workers={}  depth={}  \
+         shard-budget={}MiB{}",
+        quantizable.len(),
+        cfg.method.label(),
+        cfg.granularity.label(),
+        cfg.workers,
+        cfg.depth,
+        cfg.shard_budget >> 20,
+        if cfg.resume { "  (resume)" } else { "" }
+    );
+    let out = crate::coordinator::stream::run_stream(
+        post.as_ref(),
+        base.as_ref(),
+        &quantizable,
+        std::path::Path::new(out_dir),
+        &cfg,
+    )?;
+
+    println!("{}", layer_table(&out.layers).render());
+    println!(
+        "aggregate: dW_L2={:.2} SignRate={:.2}% CosSim={:.4} MSE={:.3e} ({:.2}s total)",
+        out.agg.delta_l2(),
+        100.0 * out.agg.sign_rate(),
+        out.agg.cos_sim(),
+        out.agg.mse(),
+        out.total_secs
+    );
+    if out.resumed > 0 {
+        println!("resumed: {} layers skipped via the journal", out.resumed);
+    }
+    println!(
+        "peak residency: {:.2} MiB live tensors (largest unit {:.2} MiB x depth {})",
+        out.peak_live_bytes as f64 / (1 << 20) as f64,
+        out.max_unit_bytes as f64 / (1 << 20) as f64,
+        cfg.depth
+    );
+    println!("wrote {}", out.manifest.display());
+    Ok(())
+}
+
+/// `daq shard`: stream a monolithic checkpoint into a sharded store.
+fn cmd_shard(args: &Args) -> Result<()> {
+    let src = args
+        .get("in")
+        .ok_or_else(|| anyhow!("usage: daq shard --in FILE --out DIR [--shard-mb N]"))?;
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow!("usage: daq shard --in FILE --out DIR [--shard-mb N]"))?;
+    let budget = (args
+        .usize_or("shard-mb", crate::io::shard::DEFAULT_SHARD_MB as usize)
+        .map_err(|e| anyhow!(e))? as u64)
+        << 20;
+    let (manifest, n) = crate::io::shard::shard_dts_file(src, out, budget)?;
+    println!("wrote {n} shards under {out} ({})", manifest.display());
+    Ok(())
+}
+
 fn cmd_eval(args: &Args) -> Result<()> {
     let lab = open_lab(args)?;
     let params = match args.get("ckpt") {
         // quantized checkpoints dequantize from the compact sidecars
-        // through the shared decode table; plain checkpoints load as-is
-        Some(path) => load_params_dequant(&Dts::read(path)?)?,
+        // through the shared decode table; plain checkpoints load as-is.
+        // The path may be a monolithic .dts file or a sharded store
+        // (directory / manifest.json) from `daq quantize --stream`.
+        Some(path) => {
+            crate::eval::load_params_dequant_source(crate::io::open_source(path)?.as_ref())?
+        }
         None => load_params(&lab.post)?,
     };
     let (s, g) = lab.rubric(&params)?;
@@ -163,10 +285,6 @@ fn cmd_tables(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let lab = open_lab(args)?;
-    let rt = lab
-        .rt
-        .as_ref()
-        .ok_or_else(|| anyhow!("serve requires --engine pjrt"))?;
     let n = args.usize_or("requests", 32).map_err(|e| anyhow!(e))?;
     let new_tokens = args.usize_or("new-tokens", 8).map_err(|e| anyhow!(e))?;
 
@@ -180,18 +298,30 @@ fn cmd_serve(args: &Args) -> Result<()> {
         load_params(&lab.post)?
     };
 
-    let fwd = crate::eval::PjrtForward {
-        rt,
-        params: &params,
-        batch: rt.manifest.serve_batch,
-    };
+    // PJRT runs the AOT artifact; without it the native ForwardFn serves
+    // the same loop everywhere (no hard --engine pjrt requirement).
     let reqs = crate::serve::gen_requests(n, 42);
-    let rep = crate::serve::serve(&fwd, &reqs, new_tokens)?;
+    let (rep, batch, engine) = match &lab.rt {
+        Some(rt) => {
+            let batch = rt.manifest.serve_batch;
+            let fwd = crate::eval::PjrtForward { rt, params: &params, batch };
+            (crate::serve::serve(&fwd, &reqs, new_tokens)?, batch, "pjrt")
+        }
+        None => {
+            let batch = args.usize_or("batch", 8).map_err(|e| anyhow!(e))?;
+            let fwd = crate::eval::NativeForward {
+                params: &params,
+                cfg: lab.cfg,
+                batch,
+            };
+            (crate::serve::serve(&fwd, &reqs, new_tokens)?, batch, "native")
+        }
+    };
     println!(
-        "served {} requests in {} batches of {} | {:.1} tok/s | style adherence {:.1}%",
+        "served {} requests in {} batches of {batch} ({engine}) | {:.1} tok/s \
+         | style adherence {:.1}%",
         rep.requests,
         rep.batches,
-        rt.manifest.serve_batch,
         rep.tokens_per_sec,
         100.0 * rep.style_adherence
     );
@@ -204,15 +334,50 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         .positional
         .first()
         .or_else(|| args.options.get("ckpt"))
-        .ok_or_else(|| anyhow!("usage: daq inspect <file.dts>"))?;
-    let d = Dts::read(path)?;
-    println!("{path}:");
-    for (k, v) in &d.meta {
-        println!("  meta {k} = {v}");
-    }
-    for name in d.names() {
-        let t = d.get(name).unwrap();
-        println!("  tensor {name:<24} shape {:?}", t.shape());
+        .ok_or_else(|| anyhow!("usage: daq inspect <file.dts | shard dir | manifest.json>"))?;
+    if std::path::Path::new(path).is_dir() || path.ends_with(".json") {
+        // sharded store: manifest + per-shard indexes, payloads untouched
+        let s = crate::io::shard::ShardedDts::open(path)?;
+        println!("{path}: sharded store");
+        for (k, v) in &s.meta {
+            println!("  meta {k} = {v}");
+        }
+        for name in s.names() {
+            let (shard, e) = s.entry(name).expect("listed name");
+            println!(
+                "  tensor {name:<24} {:<4} shape {:?} {} B  [{shard}]",
+                e.dtype_label(),
+                e.shape,
+                e.nbytes
+            );
+        }
+        println!(
+            "  total: {} tensors, {} payload bytes, {} shards",
+            s.names().len(),
+            s.payload_bytes(),
+            s.n_shards()
+        );
+    } else {
+        // index-only read: multi-GB checkpoints inspect in O(index)
+        let idx = crate::io::dts::DtsIndex::open(path)?;
+        println!("{path}:");
+        for (k, v) in &idx.meta {
+            println!("  meta {k} = {v}");
+        }
+        for e in &idx.entries {
+            println!(
+                "  tensor {:<24} {:<4} shape {:?} {} B",
+                e.name,
+                e.dtype_label(),
+                e.shape,
+                e.nbytes
+            );
+        }
+        println!(
+            "  total: {} tensors, {} payload bytes",
+            idx.entries.len(),
+            idx.payload_bytes()
+        );
     }
     Ok(())
 }
@@ -269,9 +434,42 @@ mod tests {
 
     #[test]
     fn usage_mentions_all_commands() {
-        for cmd in ["quantize", "eval", "tables", "serve", "inspect", "golden"] {
+        for cmd in ["quantize", "shard", "eval", "tables", "serve", "inspect", "golden"] {
             assert!(USAGE.contains(cmd), "{cmd} missing from usage");
         }
+        // the streaming mode's flags are documented
+        for flag in ["--stream", "--shard-mb", "--resume"] {
+            assert!(USAGE.contains(flag), "{flag} missing from usage");
+        }
+    }
+
+    #[test]
+    fn stream_requires_out_dir() {
+        let args = Args::parse(
+            ["quantize".to_string(), "--stream".into()],
+        ).unwrap();
+        let err = dispatch(&args).unwrap_err();
+        assert!(format!("{err:#}").contains("--out"), "{err:#}");
+    }
+
+    #[test]
+    fn stream_rejects_pjrt_engine() {
+        let args = Args::parse([
+            "quantize".to_string(),
+            "--stream".into(),
+            "--engine".into(),
+            "pjrt".into(),
+            "--out".into(),
+            "/tmp/daq_stream_cli_test".into(),
+        ]).unwrap();
+        let err = dispatch(&args).unwrap_err();
+        assert!(format!("{err:#}").contains("native"), "{err:#}");
+    }
+
+    #[test]
+    fn shard_requires_in_and_out() {
+        let args = Args::parse(["shard".to_string()]).unwrap();
+        assert!(dispatch(&args).is_err());
     }
 
     #[test]

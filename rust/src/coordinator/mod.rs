@@ -8,6 +8,8 @@
 //! DAQ objective (§2) is one `Method` among the baselines it must be
 //! compared against (Tables 2–5).
 
+pub mod stream;
+
 use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
@@ -206,6 +208,48 @@ pub fn run_pipeline(
 
 type LayerBundle = (Vec<LayerOutcome>, BTreeMap<String, QuantizedTensor>);
 
+/// Quantize one layer under a delta method (AbsMax / scale search) — the
+/// unit of work shared by the in-memory pipeline and the streaming driver
+/// (`coordinator::stream`). Both paths call exactly this function, which
+/// is what makes their outputs bitwise-identical.
+pub(crate) fn quantize_delta_layer(
+    name: &str,
+    wp: &Tensor,
+    wb: &Tensor,
+    method: &Method,
+    gran: Granularity,
+    engine: &dyn crate::search::SweepEngine,
+) -> (LayerOutcome, QuantizedTensor) {
+    let ((alpha, evals, stats, q), secs) = time(|| {
+        let s0 = absmax_scales(wp, gran);
+        match method {
+            Method::AbsMax => {
+                let st = engine.sweep(wp, wb, &s0, &[1.0])[0];
+                let q = quantize_with_scales(wp, &s0, 1.0);
+                (1.0f32, 1usize, st, q)
+            }
+            Method::Search { objective, range } => {
+                let scfg = SearchConfig::paper_default(*objective, *range);
+                let res = search_scale_with(engine, wp, wb, &s0, &scfg);
+                let q = quantize_with_scales(wp, &s0, res.alpha);
+                (res.alpha, res.evals, res.stats, q)
+            }
+            _ => unreachable!("transformed methods handled elsewhere"),
+        }
+    });
+    (
+        LayerOutcome {
+            name: name.to_string(),
+            shape: q.shape,
+            alpha,
+            evals,
+            stats: Some(stats),
+            secs,
+        },
+        q,
+    )
+}
+
 /// AbsMax + scale-search methods: per-layer independent jobs.
 fn run_delta_methods(
     params: &mut Params,
@@ -240,34 +284,7 @@ fn run_delta_methods(
     let method = cfg.method.clone();
 
     let work = move |j: Job, engine: &dyn crate::search::SweepEngine| -> (LayerOutcome, QuantizedTensor) {
-        let ((alpha, evals, stats, q), secs) = time(|| {
-            let s0 = absmax_scales(&j.wp, gran);
-            match &method {
-                Method::AbsMax => {
-                    let st = engine.sweep(&j.wp, &j.wb, &s0, &[1.0])[0];
-                    let q = quantize_with_scales(&j.wp, &s0, 1.0);
-                    (1.0f32, 1usize, st, q)
-                }
-                Method::Search { objective, range } => {
-                    let scfg = SearchConfig::paper_default(*objective, *range);
-                    let res = search_scale_with(engine, &j.wp, &j.wb, &s0, &scfg);
-                    let q = quantize_with_scales(&j.wp, &s0, res.alpha);
-                    (res.alpha, res.evals, res.stats, q)
-                }
-                _ => unreachable!("transformed methods handled elsewhere"),
-            }
-        });
-        (
-            LayerOutcome {
-                name: j.name,
-                shape: q.shape,
-                alpha,
-                evals,
-                stats: Some(stats),
-                secs,
-            },
-            q,
-        )
+        quantize_delta_layer(&j.name, &j.wp, &j.wb, &method, gran, engine)
     };
 
     let results: Vec<(LayerOutcome, QuantizedTensor)> = match cfg.engine {

@@ -1,0 +1,736 @@
+//! Bounded-memory streaming quantization driver.
+//!
+//! A three-stage pipeline over a sharded (or seek-based monolithic)
+//! checkpoint pair:
+//!
+//! 1. a **prefetch** thread pulls `(base, post)` layer pairs through a
+//!    depth-`K` admission gate,
+//! 2. the existing tiled sweep engine quantizes them on a small worker
+//!    pool (each layer runs exactly [`super::quantize_delta_layer`], the
+//!    same unit of work the in-memory pipeline uses, so results are
+//!    **bitwise-identical** to [`super::run_pipeline`]),
+//! 3. a **writer** thread streams `codes` / `scales` / dequantized
+//!    weights into output shards in fixed input order, dropping each
+//!    layer's tensors as soon as they are written.
+//!
+//! A layer's admission permit is held from the moment its tensors are
+//! read until the writer has persisted and dropped them, so peak live
+//! tensor bytes are bounded by `K · (largest layer footprint)` — not by
+//! model size. The measured peak and the largest per-unit footprint are
+//! reported in [`StreamOutcome`] and asserted by the residency test.
+//!
+//! **Resume.** The writer journals per-layer completion (name, α, shape,
+//! eval count, exact f64 sufficient statistics, owning shard) as JSON
+//! lines in `resume.jsonl`. Journal lines are flushed *before* the shard
+//! holding them is finalized (tmp + rename), so after an interruption
+//! every finalized shard's layers are recorded and at most a discardable
+//! `.part` payload is lost. `run_stream` with `resume = true` skips the
+//! recorded layers, reuses their journaled statistics (Rust's shortest
+//! `Display` repr round-trips f64 exactly), and converges to the same
+//! per-tensor bytes as an uninterrupted run.
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Condvar, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::io::shard::{shard_file_name, ShardWriter};
+use crate::io::TensorSource;
+use crate::metrics::DeltaStats;
+use crate::quant::{Granularity, QuantizedTensor};
+use crate::search::TiledSweep;
+use crate::tensor::Tensor;
+use crate::util::json::Json;
+use crate::util::timer::time;
+
+use super::{quantize_delta_layer, LayerOutcome, Method};
+
+/// Journal file name inside the output directory.
+pub const RESUME_JOURNAL: &str = "resume.jsonl";
+
+#[derive(Clone, Debug)]
+pub struct StreamConfig {
+    pub granularity: Granularity,
+    /// Must be a delta method (`AbsMax` / `Search`); the transformed
+    /// baselines fold per-group state across layers and are rejected.
+    pub method: Method,
+    /// Total worker budget, split between layer- and tile-parallelism.
+    pub workers: usize,
+    /// K: maximum layer pairs admitted (read but not yet written).
+    pub depth: usize,
+    /// Output shard payload budget in bytes.
+    pub shard_budget: u64,
+    /// Skip layers recorded in the output directory's resume journal.
+    pub resume: bool,
+}
+
+impl StreamConfig {
+    pub fn new(granularity: Granularity, method: Method, workers: usize) -> Self {
+        StreamConfig {
+            granularity,
+            method,
+            workers: workers.max(1),
+            depth: workers.max(2),
+            shard_budget: crate::io::shard::DEFAULT_SHARD_MB << 20,
+            resume: false,
+        }
+    }
+}
+
+/// Outcome of a streaming run.
+pub struct StreamOutcome {
+    /// Per-layer outcomes in input order (journaled values for resumed
+    /// layers, freshly computed for the rest).
+    pub layers: Vec<LayerOutcome>,
+    /// Model-level aggregate, merged in fixed layer order.
+    pub agg: DeltaStats,
+    /// Path of the written sharded-store manifest.
+    pub manifest: PathBuf,
+    /// Layers skipped via the resume journal.
+    pub resumed: usize,
+    /// Measured peak of concurrently live tensor bytes.
+    pub peak_live_bytes: usize,
+    /// Largest single-unit footprint (layer pair + its outputs, or one
+    /// passthrough tensor). `peak_live_bytes <= depth * this` holds.
+    pub max_unit_bytes: usize,
+    pub total_secs: f64,
+}
+
+// ---------------------------------------------------------------------
+// admission gate: a closable counting semaphore
+
+struct Gate {
+    state: Mutex<(usize, bool)>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new(permits: usize) -> Gate {
+        Gate { state: Mutex::new((permits, false)), cv: Condvar::new() }
+    }
+
+    /// Blocks for a permit; returns `false` if the gate was closed.
+    fn acquire(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.1 {
+                return false;
+            }
+            if st.0 > 0 {
+                st.0 -= 1;
+                return true;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn release(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.0 += 1;
+        self.cv.notify_all();
+    }
+
+    /// Wake all waiters and make every future `acquire` fail (abort path).
+    fn close(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.1 = true;
+        self.cv.notify_all();
+    }
+}
+
+fn add_live(live: &AtomicUsize, peak: &AtomicUsize, bytes: usize) {
+    let now = live.fetch_add(bytes, Ordering::SeqCst) + bytes;
+    peak.fetch_max(now, Ordering::SeqCst);
+}
+
+fn sub_live(live: &AtomicUsize, bytes: usize) {
+    live.fetch_sub(bytes, Ordering::SeqCst);
+}
+
+// ---------------------------------------------------------------------
+// resume journal lines
+
+fn config_line(cfg: &StreamConfig) -> String {
+    let mut c = BTreeMap::new();
+    c.insert("gran".to_string(), Json::Str(cfg.granularity.label()));
+    c.insert("method".to_string(), Json::Str(cfg.method.label()));
+    let mut o = BTreeMap::new();
+    o.insert("config".to_string(), Json::Obj(c));
+    format!("{}\n", Json::Obj(o))
+}
+
+fn layer_line(l: &LayerOutcome, shard: &str) -> String {
+    let stats = l.stats.as_ref().expect("delta stats defined in stream mode");
+    let mut st = BTreeMap::new();
+    st.insert("agree".to_string(), Json::Num(stats.agree));
+    st.insert("dot".to_string(), Json::Num(stats.dot));
+    st.insert("nq".to_string(), Json::Num(stats.nq));
+    st.insert("npost".to_string(), Json::Num(stats.npost));
+    st.insert("sq".to_string(), Json::Num(stats.sq));
+    st.insert("n".to_string(), Json::Num(stats.n));
+    let mut o = BTreeMap::new();
+    o.insert("layer".to_string(), Json::Str(l.name.clone()));
+    o.insert("rows".to_string(), Json::Num(l.shape.0 as f64));
+    o.insert("cols".to_string(), Json::Num(l.shape.1 as f64));
+    o.insert("alpha".to_string(), Json::Num(l.alpha as f64));
+    o.insert("evals".to_string(), Json::Num(l.evals as f64));
+    o.insert("secs".to_string(), Json::Num(l.secs));
+    o.insert("stats".to_string(), Json::Obj(st));
+    o.insert("shard".to_string(), Json::Str(shard.to_string()));
+    format!("{}\n", Json::Obj(o))
+}
+
+fn parse_layer_line(j: &Json) -> Option<LayerOutcome> {
+    let name = j.get("layer")?.as_str()?.to_string();
+    let st = j.get("stats")?;
+    let stats = DeltaStats {
+        agree: st.get("agree")?.as_f64()?,
+        dot: st.get("dot")?.as_f64()?,
+        nq: st.get("nq")?.as_f64()?,
+        npost: st.get("npost")?.as_f64()?,
+        sq: st.get("sq")?.as_f64()?,
+        n: st.get("n")?.as_f64()?,
+    };
+    Some(LayerOutcome {
+        name,
+        shape: (j.get("rows")?.as_usize()?, j.get("cols")?.as_usize()?),
+        alpha: j.get("alpha")?.as_f64()? as f32,
+        evals: j.get("evals")?.as_usize()?,
+        stats: Some(stats),
+        secs: j.get("secs")?.as_f64()?,
+    })
+}
+
+/// Parse a journal: (config json if present, last layer line per name).
+/// Malformed lines (e.g. a truncated tail) are skipped.
+fn parse_journal(text: &str) -> (Option<Json>, BTreeMap<String, LayerOutcome>) {
+    let mut config = None;
+    let mut layers = BTreeMap::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let Ok(j) = Json::parse(line) else { continue };
+        if let Some(c) = j.get("config") {
+            config.get_or_insert_with(|| c.clone());
+        } else if let Some(l) = parse_layer_line(&j) {
+            layers.insert(l.name.clone(), l);
+        }
+    }
+    (config, layers)
+}
+
+// ---------------------------------------------------------------------
+// pipeline stages
+
+/// A prefetched layer pair in flight.
+struct LayerJob {
+    idx: usize,
+    name: String,
+    wp: Tensor,
+    wb: Tensor,
+    pair_bytes: usize,
+}
+
+/// A quantized layer awaiting the writer.
+struct Done {
+    idx: usize,
+    outcome: LayerOutcome,
+    q: QuantizedTensor,
+    deq: Tensor,
+    out_bytes: usize,
+    /// pair + output bytes: this layer's peak contribution.
+    footprint: usize,
+}
+
+struct WriterOut {
+    writer: ShardWriter,
+    computed: Vec<(usize, LayerOutcome)>,
+    max_unit_bytes: usize,
+}
+
+/// Run the streaming pipeline: quantize `quantizable` layers of `post`
+/// against `base` into a sharded store at `out_dir` (shards + resume
+/// journal + manifest), never holding more than `cfg.depth` layer pairs
+/// in memory.
+pub fn run_stream(
+    post: &dyn TensorSource,
+    base: &dyn TensorSource,
+    quantizable: &[String],
+    out_dir: &Path,
+    cfg: &StreamConfig,
+) -> Result<StreamOutcome> {
+    if !matches!(cfg.method, Method::AbsMax | Method::Search { .. }) {
+        bail!(
+            "streaming supports delta methods only (absmax / scale search); \
+             {} folds state across layers and needs the in-memory pipeline",
+            cfg.method.label()
+        );
+    }
+
+    let (out, total_secs) = time(|| run_stream_inner(post, base, quantizable, out_dir, cfg));
+    let mut out = out?;
+    out.total_secs = total_secs;
+    Ok(out)
+}
+
+fn run_stream_inner(
+    post: &dyn TensorSource,
+    base: &dyn TensorSource,
+    quantizable: &[String],
+    out_dir: &Path,
+    cfg: &StreamConfig,
+) -> Result<StreamOutcome> {
+    let journal_path = out_dir.join(RESUME_JOURNAL);
+
+    // -- writer + resume state -----------------------------------------
+    let (mut shard_writer, resumed_layers) = if cfg.resume {
+        let w = ShardWriter::resume(out_dir, cfg.shard_budget)?;
+        let text = std::fs::read_to_string(&journal_path).unwrap_or_default();
+        let (config, mut recorded) = parse_journal(&text);
+        if let Some(c) = &config {
+            let gran = c.get("gran").and_then(|g| g.as_str()).unwrap_or("");
+            let method = c.get("method").and_then(|m| m.as_str()).unwrap_or("");
+            if gran != cfg.granularity.label() || method != cfg.method.label() {
+                bail!(
+                    "{out_dir:?}: resume journal was written by gran={gran} \
+                     method={method}, current run is gran={} method={}",
+                    cfg.granularity.label(),
+                    cfg.method.label()
+                );
+            }
+        }
+        // a journaled layer is resumable iff all three tensors survive in
+        // finalized shards; partial presence means a corrupted store
+        let mut resumed = BTreeMap::new();
+        for name in quantizable {
+            let parts =
+                [format!("{name}.codes"), format!("{name}.scales"), name.clone()];
+            let present = parts.iter().filter(|p| w.contains(p)).count();
+            match (present, recorded.remove(name)) {
+                (3, Some(outcome)) => {
+                    resumed.insert(name.clone(), outcome);
+                }
+                (0, _) => {}
+                (3, None) => bail!(
+                    "{out_dir:?}: layer {name:?} is present in shards but \
+                     missing from the resume journal; remove the directory \
+                     and rerun"
+                ),
+                _ => bail!(
+                    "{out_dir:?}: layer {name:?} is only partially present \
+                     in shards; remove the directory and rerun"
+                ),
+            }
+        }
+        (w, resumed)
+    } else {
+        (ShardWriter::create(out_dir, cfg.shard_budget)?, BTreeMap::new())
+    };
+
+    let mut journal = if cfg.resume {
+        std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(&journal_path)
+            .with_context(|| format!("open {journal_path:?}"))?
+    } else {
+        std::fs::File::create(&journal_path)
+            .with_context(|| format!("create {journal_path:?}"))?
+    };
+    if !cfg.resume || resumed_layers.is_empty() {
+        journal.write_all(config_line(cfg).as_bytes())?;
+        journal.flush()?;
+    }
+
+    // -- plan the work -------------------------------------------------
+    let resumed_count = resumed_layers.len();
+    let mut slots: Vec<Option<LayerOutcome>> = Vec::with_capacity(quantizable.len());
+    let mut todo: Vec<(usize, String)> = Vec::new();
+    for (idx, name) in quantizable.iter().enumerate() {
+        match resumed_layers.get(name) {
+            Some(outcome) => slots.push(Some(outcome.clone())),
+            None => {
+                slots.push(None);
+                todo.push((idx, name.clone()));
+            }
+        }
+    }
+    let expected: VecDeque<usize> = todo.iter().map(|&(i, _)| i).collect();
+
+    let depth = cfg.depth.max(1);
+    let outer = cfg.workers.clamp(1, depth.min(todo.len().max(1)));
+    let intra = (cfg.workers / outer).max(1);
+
+    let gate = Gate::new(depth);
+    let live = AtomicUsize::new(0);
+    let peak = AtomicUsize::new(0);
+    let quant_set: BTreeSet<&String> = quantizable.iter().collect();
+
+    let (job_tx, job_rx) = mpsc::channel::<Result<LayerJob>>();
+    let job_rx = Mutex::new(job_rx);
+    let (done_tx, done_rx) = mpsc::channel::<Result<Done>>();
+
+    let (gate, live, peak, job_rx) = (&gate, &live, &peak, &job_rx);
+    let shard_budget = cfg.shard_budget;
+
+    let writer_out: Result<WriterOut> = std::thread::scope(|s| {
+        // stage 1: prefetch (base, post) pairs through the gate
+        s.spawn(move || {
+            for (idx, name) in todo {
+                if !gate.acquire() {
+                    return; // aborted by the writer
+                }
+                let msg = (|| -> Result<LayerJob> {
+                    let wp = post.tensor_f32(&name)?;
+                    let wb = base.tensor_f32(&name)?;
+                    if wp.shape() != wb.shape() {
+                        bail!(
+                            "{name}: post {:?} vs base {:?}",
+                            wp.shape(),
+                            wb.shape()
+                        );
+                    }
+                    let pair_bytes = (wp.len() + wb.len()) * 4;
+                    add_live(live, peak, pair_bytes);
+                    Ok(LayerJob { idx, name: name.clone(), wp, wb, pair_bytes })
+                })();
+                let stop = msg.is_err();
+                if job_tx.send(msg).is_err() || stop {
+                    return;
+                }
+            }
+        });
+
+        // stage 2: quantize on `outer` workers × `intra` tile threads
+        for _ in 0..outer {
+            let done_tx = done_tx.clone();
+            s.spawn(move || {
+                let engine = TiledSweep::new(intra);
+                loop {
+                    let msg = job_rx.lock().unwrap().recv();
+                    let job = match msg {
+                        Err(_) => break, // prefetch done
+                        Ok(Err(e)) => {
+                            let _ = done_tx.send(Err(e));
+                            break;
+                        }
+                        Ok(Ok(j)) => j,
+                    };
+                    let LayerJob { idx, name, wp, wb, pair_bytes } = job;
+                    let (outcome, q) = quantize_delta_layer(
+                        &name,
+                        &wp,
+                        &wb,
+                        &cfg.method,
+                        cfg.granularity,
+                        &engine,
+                    );
+                    let deq = q.dequantize();
+                    let out_bytes =
+                        q.codes.len() + q.scales.scales.len() * 4 + deq.len() * 4;
+                    add_live(live, peak, out_bytes);
+                    drop(wp);
+                    drop(wb);
+                    sub_live(live, pair_bytes);
+                    let d = Done {
+                        idx,
+                        outcome,
+                        q,
+                        deq,
+                        out_bytes,
+                        footprint: pair_bytes + out_bytes,
+                    };
+                    if done_tx.send(Ok(d)).is_err() {
+                        break;
+                    }
+                }
+            });
+        }
+        drop(done_tx);
+
+        // stage 3: write completed layers in fixed input order
+        let h = s.spawn(move || -> Result<WriterOut> {
+            let r = write_stage(
+                done_rx,
+                expected,
+                &mut shard_writer,
+                &mut journal,
+                shard_budget,
+                post,
+                &quant_set,
+                gate,
+                live,
+                peak,
+            );
+            if r.is_err() {
+                gate.close();
+            }
+            r.map(|(computed, max_unit_bytes)| WriterOut {
+                writer: shard_writer,
+                computed,
+                max_unit_bytes,
+            })
+        });
+        match h.join() {
+            Ok(r) => r,
+            Err(p) => std::panic::resume_unwind(p),
+        }
+    });
+    let WriterOut { writer, computed, max_unit_bytes } = writer_out?;
+
+    for (idx, outcome) in computed {
+        slots[idx] = Some(outcome);
+    }
+    let layers: Vec<LayerOutcome> = slots
+        .into_iter()
+        .enumerate()
+        .map(|(i, s)| {
+            s.ok_or_else(|| anyhow!("layer {:?} was never quantized", quantizable[i]))
+        })
+        .collect::<Result<_>>()?;
+
+    let mut agg = DeltaStats::default();
+    for l in &layers {
+        agg = agg.merge(l.stats.as_ref().expect("delta stats defined"));
+    }
+
+    // store-level metadata, mirroring `PipelineOutcome::write_checkpoint`
+    let mut meta = post.meta().clone();
+    meta.insert("quantized".into(), "fp8_e4m3".into());
+    for l in &layers {
+        meta.insert(format!("alpha.{}", l.name), l.alpha.to_string());
+        meta.insert(format!("gran.{}", l.name), cfg.granularity.label());
+    }
+    let manifest = writer.finish(&meta)?;
+
+    Ok(StreamOutcome {
+        layers,
+        agg,
+        manifest,
+        resumed: resumed_count,
+        peak_live_bytes: peak.load(Ordering::SeqCst),
+        max_unit_bytes,
+        total_secs: 0.0, // stamped by run_stream
+    })
+}
+
+/// The writer stage body: drain completed layers, persist them in input
+/// order (journal lines flush before each shard roll), then stream the
+/// non-quantizable passthrough tensors. Returns the computed outcomes and
+/// the largest single-unit footprint.
+#[allow(clippy::too_many_arguments)]
+fn write_stage(
+    done_rx: mpsc::Receiver<Result<Done>>,
+    mut expected: VecDeque<usize>,
+    writer: &mut ShardWriter,
+    journal: &mut std::fs::File,
+    shard_budget: u64,
+    post: &dyn TensorSource,
+    quant_set: &BTreeSet<&String>,
+    gate: &Gate,
+    live: &AtomicUsize,
+    peak: &AtomicUsize,
+) -> Result<(Vec<(usize, LayerOutcome)>, usize)> {
+    let mut pending: BTreeMap<usize, Done> = BTreeMap::new();
+    let mut computed: Vec<(usize, LayerOutcome)> = Vec::new();
+    let mut pending_lines = String::new();
+    let mut max_unit = 0usize;
+
+    let flush_lines =
+        |journal: &mut std::fs::File, lines: &mut String| -> Result<()> {
+            if !lines.is_empty() {
+                journal.write_all(lines.as_bytes())?;
+                journal.sync_data()?;
+                lines.clear();
+            }
+            Ok(())
+        };
+
+    for msg in done_rx {
+        let d = msg?;
+        pending.insert(d.idx, d);
+        while let Some(&idx) = expected.front() {
+            let Some(d) = pending.remove(&idx) else { break };
+            expected.pop_front();
+            let Done { outcome, q, deq, out_bytes, footprint, .. } = d;
+            max_unit = max_unit.max(footprint);
+            let name = outcome.name.clone();
+            writer.append(
+                &format!("{name}.codes"),
+                &crate::io::dts::DtsTensor::U8 {
+                    shape: vec![q.shape.0, q.shape.1],
+                    data: q.codes,
+                },
+            )?;
+            writer.append(
+                &format!("{name}.scales"),
+                &crate::io::dts::DtsTensor::F32 {
+                    shape: vec![q.scales.grid_rows, q.scales.grid_cols],
+                    data: q.scales.scales,
+                },
+            )?;
+            writer.append(
+                &name,
+                &crate::io::dts::DtsTensor::F32 {
+                    shape: deq.shape().to_vec(),
+                    data: deq.into_data(),
+                },
+            )?;
+            pending_lines.push_str(&layer_line(
+                &outcome,
+                &shard_file_name(writer.current_shard_index()),
+            ));
+            computed.push((idx, outcome));
+            sub_live(live, out_bytes);
+            gate.release();
+            if writer.current_bytes() >= shard_budget {
+                // journal before finalizing: a finalized shard's layers
+                // are always recorded (resume safety invariant)
+                flush_lines(journal, &mut pending_lines)?;
+                writer.roll()?;
+            }
+        }
+    }
+    if !expected.is_empty() {
+        bail!(
+            "{} layers were never quantized (worker terminated early)",
+            expected.len()
+        );
+    }
+
+    // passthrough: every non-quantizable tensor of the post checkpoint,
+    // streamed one at a time
+    for name in post.names() {
+        if quant_set.contains(&name) || writer.contains(&name) {
+            continue;
+        }
+        let t = post.read_tensor(&name)?;
+        let bytes = t.nbytes();
+        max_unit = max_unit.max(bytes);
+        add_live(live, peak, bytes);
+        writer.append(&name, &t)?;
+        drop(t);
+        sub_live(live, bytes);
+        if writer.current_bytes() >= shard_budget {
+            flush_lines(journal, &mut pending_lines)?;
+            writer.roll()?;
+        }
+    }
+
+    flush_lines(journal, &mut pending_lines)?;
+    writer.roll()?;
+    Ok((computed, max_unit))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::Objective;
+
+    #[test]
+    fn gate_bounds_and_closes() {
+        let g = Gate::new(2);
+        assert!(g.acquire());
+        assert!(g.acquire());
+        // third acquire would block; release then acquire succeeds
+        g.release();
+        assert!(g.acquire());
+        g.close();
+        assert!(!g.acquire(), "closed gate must refuse permits");
+        // a blocked acquire wakes on close
+        let g = std::sync::Arc::new(Gate::new(0));
+        let g2 = std::sync::Arc::clone(&g);
+        let h = std::thread::spawn(move || g2.acquire());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        g.close();
+        assert!(!h.join().unwrap());
+    }
+
+    #[test]
+    fn transformed_methods_rejected() {
+        let d = crate::io::dts::Dts::new();
+        let cfg = StreamConfig::new(
+            Granularity::PerChannel,
+            Method::SmoothQuant { alpha: 0.5 },
+            1,
+        );
+        let dir = std::env::temp_dir()
+            .join(format!("daq_stream_reject_{}", std::process::id()));
+        let err = run_stream(&d, &d, &[], &dir, &cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("delta methods"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn journal_layer_line_roundtrips_exactly() {
+        let outcome = LayerOutcome {
+            name: "l0.wq".into(),
+            shape: (96, 64),
+            alpha: 1.0700000524520874f32, // not exactly representable noise
+            evals: 16,
+            stats: Some(DeltaStats {
+                agree: 6143.0,
+                dot: 0.1234567890123456789,
+                nq: 1.0 / 3.0,
+                npost: 2.5e-7,
+                sq: 9.87e-12,
+                n: 6144.0,
+            }),
+            secs: 0.125,
+        };
+        let line = layer_line(&outcome, "shard_00003.dts");
+        let j = Json::parse(line.trim()).unwrap();
+        let back = parse_layer_line(&j).unwrap();
+        assert_eq!(back.name, outcome.name);
+        assert_eq!(back.shape, outcome.shape);
+        assert_eq!(back.alpha.to_bits(), outcome.alpha.to_bits());
+        assert_eq!(back.evals, outcome.evals);
+        let (a, b) = (back.stats.unwrap(), outcome.stats.unwrap());
+        for (x, y) in [
+            (a.agree, b.agree),
+            (a.dot, b.dot),
+            (a.nq, b.nq),
+            (a.npost, b.npost),
+            (a.sq, b.sq),
+            (a.n, b.n),
+        ] {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        assert_eq!(j.get("shard").unwrap().as_str(), Some("shard_00003.dts"));
+    }
+
+    #[test]
+    fn journal_parser_skips_truncated_tail() {
+        let cfg = StreamConfig::new(
+            Granularity::Block(16),
+            Method::Search { objective: Objective::SignRate, range: (0.8, 1.25) },
+            1,
+        );
+        let full = layer_line(
+            &LayerOutcome {
+                name: "a".into(),
+                shape: (4, 4),
+                alpha: 1.0,
+                evals: 16,
+                stats: Some(DeltaStats::default()),
+                secs: 0.0,
+            },
+            "shard_00000.dts",
+        );
+        let text = format!(
+            "{}{}{}",
+            config_line(&cfg),
+            full,
+            &full[..full.len() / 2] // torn write at the tail
+        );
+        let (config, layers) = parse_journal(&text);
+        assert!(config.is_some());
+        assert_eq!(layers.len(), 1);
+        assert!(layers.contains_key("a"));
+    }
+}

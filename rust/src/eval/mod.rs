@@ -13,7 +13,8 @@ use std::collections::HashMap;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::io::dts::Dts;
+use crate::io::dts::{Dts, DtsTensor};
+use crate::io::TensorSource;
 use crate::quant::{Granularity, QuantizedTensor, ScaleGrid};
 use crate::tensor::Tensor;
 
@@ -51,6 +52,13 @@ pub fn load_params_filtered(d: &Dts) -> Result<Params> {
 /// even requiring) a stored f32 copy — the serving-path loader. Tensors
 /// without sidecars load as plain f32; non-f32 extras are skipped.
 pub fn load_params_dequant(d: &Dts) -> Result<Params> {
+    load_params_dequant_source(d)
+}
+
+/// [`load_params_dequant`] generalized over any [`TensorSource`] backend —
+/// in particular the sharded stores the streaming pipeline writes, where
+/// tensors dequantize shard-by-shard as they are pulled.
+pub fn load_params_dequant_source(d: &dyn TensorSource) -> Result<Params> {
     let mut p = Params::new();
     // base names come from both plain tensors AND the stems of `.codes`
     // sidecars: a compact checkpoint may store only codes+scales with no
@@ -82,7 +90,7 @@ pub fn load_params_dequant(d: &Dts) -> Result<Params> {
         let codes_name = format!("{name}.codes");
         let scales_name = format!("{name}.scales");
         let has_codes = d.contains(&codes_name);
-        let gran_label = d.meta.get(&format!("gran.{name}"));
+        let gran_label = d.meta().get(&format!("gran.{name}"));
         if has_codes && d.contains(&scales_name) && gran_label.is_some() {
             let (cshape, codes) = d.tensor_u8(&codes_name)?;
             if cshape.len() != 2 {
@@ -96,18 +104,29 @@ pub fn load_params_dequant(d: &Dts) -> Result<Params> {
                 .map_err(|e| anyhow!("{name}: {e}"))?;
             let q = QuantizedTensor { shape: (rows, cols), codes, scales: grid };
             p.insert(name.clone(), q.dequantize());
-        } else if let Ok(t) = d.tensor_f32(name) {
-            // pre-metadata checkpoints (codes but no `gran.<name>` meta)
-            // and plain tensors: use the stored f32 copy
-            p.insert(name.clone(), t);
-        } else if has_codes {
-            // codes exist but neither a complete sidecar set nor an f32
-            // copy — a silently missing weight would fail far from here
-            bail!(
-                "{name}: {codes_name} present but cannot dequantize \
-                 (missing {scales_name} or gran.{name} metadata) and no \
-                 f32 copy is stored"
-            );
+        } else {
+            match d.read_tensor(name) {
+                // pre-metadata checkpoints (codes but no `gran.<name>`
+                // meta) and plain tensors: use the stored f32 copy
+                Ok(DtsTensor::F32 { shape, data }) => {
+                    p.insert(name.clone(), Tensor::new(shape, data));
+                }
+                // non-f32 extras (token tables etc.) are skipped — unless
+                // codes exist, in which case a silently missing weight
+                // would fail far from here
+                Ok(_) if !has_codes => {}
+                Err(e) if !has_codes => {
+                    // file-backed sources can fail mid-read (truncated
+                    // shard, unreadable file): propagate, never drop a
+                    // parameter silently
+                    return Err(e);
+                }
+                Ok(_) | Err(_) => bail!(
+                    "{name}: {codes_name} present but cannot dequantize \
+                     (missing {scales_name} or gran.{name} metadata) and no \
+                     f32 copy is stored"
+                ),
+            }
         }
     }
     Ok(p)

@@ -93,16 +93,21 @@ impl Lab {
 /// Infer quantizable names without a manifest: 2-D weights following the
 /// model naming convention.
 pub fn quantizable_from_names(post: &Dts) -> Vec<String> {
+    quantizable_from_source(post)
+}
+
+/// [`quantizable_from_names`] over any checkpoint backend (monolithic or
+/// sharded) — shapes come from the index, so no payload is read.
+pub fn quantizable_from_source(post: &dyn crate::io::TensorSource) -> Vec<String> {
     post.names()
-        .iter()
+        .into_iter()
         .filter(|n| {
             let is_linear = n.ends_with(".wq") || n.ends_with(".wk")
                 || n.ends_with(".wv") || n.ends_with(".wo")
                 || n.ends_with(".w1") || n.ends_with(".w2")
                 || n.as_str() == "head";
-            is_linear && post.get(n).map(|t| t.shape().len() == 2).unwrap_or(false)
+            is_linear && post.shape_of(n).map(|s| s.len() == 2).unwrap_or(false)
         })
-        .cloned()
         .collect()
 }
 

@@ -1,15 +1,21 @@
 //! DTS — Delta Tensor Store reader/writer (Rust side).
 //!
 //! Binary-compatible with `python/compile/dts.py`; see that file for the
-//! on-disk layout. The reader parses the index first and then reads tensor
-//! payloads sequentially, so checkpoints stream without being resident
-//! twice; the writer is the mirror image, used to persist quantized
-//! checkpoints and sidecar scale tensors.
+//! on-disk layout. Three access paths share one index parser:
+//!
+//! - [`Dts::read`] — eager: parse the index, then stream every payload
+//!   into memory (the original whole-model reader).
+//! - [`DtsIndex`] / [`DtsReader`] — lazy: parse *only* the index at open
+//!   and serve individual tensors by seeking, so a multi-GB checkpoint is
+//!   never resident. This is the seek layer under the streaming pipeline
+//!   and the sharded store ([`crate::io::shard`]).
+//! - [`Dts::write`] / [`write_index`] — the mirror image, used to persist
+//!   quantized checkpoints, sidecar scale tensors, and shard files.
 
 use std::collections::BTreeMap;
 use std::fs::File;
-use std::io::{BufReader, BufWriter, Read, Write};
-use std::path::Path;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
@@ -43,7 +49,7 @@ impl DtsTensor {
         self.len() == 0
     }
 
-    fn dtype_code(&self) -> u8 {
+    pub(crate) fn dtype_code(&self) -> u8 {
         match self {
             DtsTensor::F32 { .. } => 0,
             DtsTensor::U8 { .. } => 1,
@@ -51,12 +57,272 @@ impl DtsTensor {
         }
     }
 
-    fn nbytes(&self) -> usize {
+    pub(crate) fn nbytes(&self) -> usize {
         match self {
             DtsTensor::F32 { data, .. } => data.len() * 4,
             DtsTensor::U8 { data, .. } => data.len(),
             DtsTensor::I32 { data, .. } => data.len() * 4,
         }
+    }
+}
+
+/// One index entry of a DTS container: everything known about a tensor
+/// without touching its payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorEntry {
+    pub name: String,
+    pub dtype: u8,
+    pub shape: Vec<usize>,
+    /// Byte offset from the start of the payload section.
+    pub offset: u64,
+    pub nbytes: u64,
+}
+
+impl TensorEntry {
+    pub fn dtype_label(&self) -> &'static str {
+        match self.dtype {
+            0 => "f32",
+            1 => "u8",
+            2 => "i32",
+            _ => "?",
+        }
+    }
+}
+
+/// Parsed header + index of a DTS file — the payload is *not* loaded.
+/// This is the seek layer under [`DtsReader`] and the sharded store:
+/// `open` reads only the index; [`DtsIndex::read_entry`] seeks into an
+/// open file and decodes a single tensor.
+#[derive(Debug)]
+pub struct DtsIndex {
+    pub meta: BTreeMap<String, String>,
+    pub entries: Vec<TensorEntry>,
+    /// Absolute file offset where the payload section starts.
+    pub payload_start: u64,
+    /// name -> position in `entries` (first occurrence wins), so per-name
+    /// access over a large checkpoint is O(log N), not a linear scan.
+    lookup: BTreeMap<String, usize>,
+}
+
+impl DtsIndex {
+    pub fn open(path: impl AsRef<Path>) -> Result<DtsIndex> {
+        let path = path.as_ref();
+        let f = File::open(path).with_context(|| format!("open {path:?}"))?;
+        let mut r = BufReader::new(f);
+        match DtsIndex::parse(&mut r) {
+            Ok(i) => Ok(i),
+            Err(e) => bail!("{path:?}: {e:#}"),
+        }
+    }
+
+    /// Parse the header + index from the current position of `r`,
+    /// leaving `r` positioned at the start of the payload.
+    fn parse(r: &mut impl Read) -> Result<DtsIndex> {
+        let mut consumed = 0u64;
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        consumed += 4;
+        if &magic != MAGIC {
+            bail!("bad magic {magic:?}");
+        }
+        let version = read_u32(r)?;
+        if version != VERSION {
+            bail!("unsupported version {version}");
+        }
+        let n_meta = read_u32(r)? as usize;
+        let n_tensor = read_u32(r)? as usize;
+        consumed += 12;
+
+        let mut meta = BTreeMap::new();
+        for _ in 0..n_meta {
+            let klen = read_u16(r)? as usize;
+            let key = read_string(r, klen)?;
+            let vlen = read_u32(r)? as usize;
+            let val = read_string(r, vlen)?;
+            consumed += 2 + klen as u64 + 4 + vlen as u64;
+            meta.insert(key, val);
+        }
+
+        let mut entries = Vec::with_capacity(n_tensor);
+        for _ in 0..n_tensor {
+            let nlen = read_u16(r)? as usize;
+            let name = read_string(r, nlen)?;
+            let mut db = [0u8; 2];
+            r.read_exact(&mut db)?;
+            let (dtype, ndim) = (db[0], db[1] as usize);
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u64(r)? as usize);
+            }
+            let offset = read_u64(r)?;
+            let nbytes = read_u64(r)?;
+            consumed += 2 + nlen as u64 + 2 + 8 * ndim as u64 + 16;
+            entries.push(TensorEntry { name, dtype, shape, offset, nbytes });
+        }
+        let mut lookup = BTreeMap::new();
+        for (i, e) in entries.iter().enumerate() {
+            lookup.entry(e.name.clone()).or_insert(i);
+        }
+        Ok(DtsIndex { meta, entries, payload_start: consumed, lookup })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&TensorEntry> {
+        self.lookup.get(name).map(|&i| &self.entries[i])
+    }
+
+    /// Total payload bytes across all tensors.
+    pub fn payload_bytes(&self) -> u64 {
+        self.entries.iter().map(|e| e.nbytes).sum()
+    }
+
+    /// Seek into `f` and decode the payload of one entry.
+    pub fn read_entry(
+        &self,
+        f: &mut (impl Read + Seek),
+        entry: &TensorEntry,
+    ) -> Result<DtsTensor> {
+        f.seek(SeekFrom::Start(self.payload_start + entry.offset))?;
+        let mut raw = vec![0u8; entry.nbytes as usize];
+        f.read_exact(&mut raw)
+            .with_context(|| format!("payload of {:?}", entry.name))?;
+        decode_payload(entry, raw)
+    }
+}
+
+/// Decode one tensor payload according to its index entry.
+pub(crate) fn decode_payload(e: &TensorEntry, raw: Vec<u8>) -> Result<DtsTensor> {
+    let n: usize = e.shape.iter().product();
+    Ok(match e.dtype {
+        0 => {
+            if raw.len() != n * 4 {
+                bail!("{:?}: f32 payload size mismatch", e.name);
+            }
+            let data = raw
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            DtsTensor::F32 { shape: e.shape.clone(), data }
+        }
+        1 => {
+            if raw.len() != n {
+                bail!("{:?}: u8 payload size mismatch", e.name);
+            }
+            DtsTensor::U8 { shape: e.shape.clone(), data: raw }
+        }
+        2 => {
+            if raw.len() != n * 4 {
+                bail!("{:?}: i32 payload size mismatch", e.name);
+            }
+            let data = raw
+                .chunks_exact(4)
+                .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            DtsTensor::I32 { shape: e.shape.clone(), data }
+        }
+        d => bail!("{:?}: unsupported dtype code {d}", e.name),
+    })
+}
+
+/// Write one tensor's payload bytes.
+pub(crate) fn write_payload(w: &mut impl Write, t: &DtsTensor) -> Result<()> {
+    match t {
+        DtsTensor::F32 { data, .. } => {
+            for v in data {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+        DtsTensor::U8 { data, .. } => w.write_all(data)?,
+        DtsTensor::I32 { data, .. } => {
+            for v in data {
+                w.write_all(&v.to_le_bytes())?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Write the DTS header, metadata block, and tensor index. Entries carry
+/// their final payload offsets. Length prefixes are guarded: a tensor or
+/// meta name longer than `u16::MAX` bytes or a meta value longer than
+/// `u32::MAX` bytes is an error instead of a silently truncated prefix.
+pub(crate) fn write_index(
+    w: &mut impl Write,
+    meta: &BTreeMap<String, String>,
+    entries: &[TensorEntry],
+) -> Result<()> {
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&(meta.len() as u32).to_le_bytes())?;
+    w.write_all(&(entries.len() as u32).to_le_bytes())?;
+
+    for (k, v) in meta {
+        if k.len() > u16::MAX as usize {
+            bail!("meta key of {} bytes exceeds the u16 length prefix", k.len());
+        }
+        if v.len() > u32::MAX as usize {
+            bail!(
+                "meta value for {k:?} ({} bytes) exceeds the u32 length prefix",
+                v.len()
+            );
+        }
+        w.write_all(&(k.len() as u16).to_le_bytes())?;
+        w.write_all(k.as_bytes())?;
+        w.write_all(&(v.len() as u32).to_le_bytes())?;
+        w.write_all(v.as_bytes())?;
+    }
+
+    for e in entries {
+        if e.name.len() > u16::MAX as usize {
+            bail!(
+                "tensor name of {} bytes exceeds the u16 length prefix",
+                e.name.len()
+            );
+        }
+        w.write_all(&(e.name.len() as u16).to_le_bytes())?;
+        w.write_all(e.name.as_bytes())?;
+        w.write_all(&[e.dtype, e.shape.len() as u8])?;
+        for &d in &e.shape {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        w.write_all(&e.offset.to_le_bytes())?;
+        w.write_all(&e.nbytes.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// A random-access DTS file reader: parses only the index at `open`, then
+/// serves individual tensors by seeking — a multi-GB checkpoint is never
+/// resident. The streaming pipeline's source for monolithic checkpoints
+/// (sharded stores use [`crate::io::shard::ShardedDts`]).
+#[derive(Debug)]
+pub struct DtsReader {
+    path: PathBuf,
+    pub index: DtsIndex,
+}
+
+impl DtsReader {
+    pub fn open(path: impl AsRef<Path>) -> Result<DtsReader> {
+        let path = path.as_ref().to_path_buf();
+        let index = DtsIndex::open(&path)?;
+        Ok(DtsReader { path, index })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.index.entries.iter().map(|e| e.name.clone()).collect()
+    }
+
+    pub fn read_tensor(&self, name: &str) -> Result<DtsTensor> {
+        let entry = self
+            .index
+            .entry(name)
+            .ok_or_else(|| anyhow::anyhow!("tensor {name:?} not found in {:?}", self.path))?;
+        let mut f = File::open(&self.path)
+            .with_context(|| format!("open {:?}", self.path))?;
+        self.index.read_entry(&mut f, entry)
     }
 }
 
@@ -134,54 +400,17 @@ impl Dts {
         let path = path.as_ref();
         let f = File::open(path).with_context(|| format!("open {path:?}"))?;
         let mut r = BufReader::new(f);
-
-        let mut magic = [0u8; 4];
-        r.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("{path:?}: bad magic {magic:?}");
-        }
-        let version = read_u32(&mut r)?;
-        if version != VERSION {
-            bail!("{path:?}: unsupported version {version}");
-        }
-        let n_meta = read_u32(&mut r)? as usize;
-        let n_tensor = read_u32(&mut r)? as usize;
+        let index = match DtsIndex::parse(&mut r) {
+            Ok(i) => i,
+            Err(e) => bail!("{path:?}: {e:#}"),
+        };
 
         let mut dts = Dts::new();
-        for _ in 0..n_meta {
-            let klen = read_u16(&mut r)? as usize;
-            let key = read_string(&mut r, klen)?;
-            let vlen = read_u32(&mut r)? as usize;
-            let val = read_string(&mut r, vlen)?;
-            dts.meta.insert(key, val);
-        }
-
-        struct Entry {
-            name: String,
-            dtype: u8,
-            shape: Vec<usize>,
-            offset: u64,
-            nbytes: u64,
-        }
-        let mut entries = Vec::with_capacity(n_tensor);
-        for _ in 0..n_tensor {
-            let nlen = read_u16(&mut r)? as usize;
-            let name = read_string(&mut r, nlen)?;
-            let mut db = [0u8; 2];
-            r.read_exact(&mut db)?;
-            let (dtype, ndim) = (db[0], db[1] as usize);
-            let mut shape = Vec::with_capacity(ndim);
-            for _ in 0..ndim {
-                shape.push(read_u64(&mut r)? as usize);
-            }
-            let offset = read_u64(&mut r)?;
-            let nbytes = read_u64(&mut r)?;
-            entries.push(Entry { name, dtype, shape, offset, nbytes });
-        }
+        dts.meta = index.meta.clone();
 
         // payload: entries were written sequentially; verify and stream
         let mut cursor = 0u64;
-        for e in &entries {
+        for e in &index.entries {
             if e.offset != cursor {
                 bail!("{path:?}: non-sequential payload at {:?} \
                        (offset {} expected {cursor})", e.name, e.offset);
@@ -189,29 +418,7 @@ impl Dts {
             let mut raw = vec![0u8; e.nbytes as usize];
             r.read_exact(&mut raw)
                 .with_context(|| format!("payload of {:?}", e.name))?;
-            let n: usize = e.shape.iter().product();
-            let t = match e.dtype {
-                0 => {
-                    if raw.len() != n * 4 {
-                        bail!("{:?}: f32 payload size mismatch", e.name);
-                    }
-                    let data = raw
-                        .chunks_exact(4)
-                        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-                        .collect();
-                    DtsTensor::F32 { shape: e.shape.clone(), data }
-                }
-                1 => DtsTensor::U8 { shape: e.shape.clone(), data: raw },
-                2 => {
-                    let data = raw
-                        .chunks_exact(4)
-                        .map(|b| i32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-                        .collect();
-                    DtsTensor::I32 { shape: e.shape.clone(), data }
-                }
-                d => bail!("{:?}: unsupported dtype code {d}", e.name),
-            };
-            dts.insert(&e.name, t);
+            dts.insert(&e.name, decode_payload(e, raw)?);
             cursor += e.nbytes;
         }
         Ok(dts)
@@ -222,46 +429,24 @@ impl Dts {
         let f = File::create(path).with_context(|| format!("create {path:?}"))?;
         let mut w = BufWriter::new(f);
 
-        w.write_all(MAGIC)?;
-        w.write_all(&VERSION.to_le_bytes())?;
-        w.write_all(&(self.meta.len() as u32).to_le_bytes())?;
-        w.write_all(&(self.names.len() as u32).to_le_bytes())?;
-
-        for (k, v) in &self.meta {
-            w.write_all(&(k.len() as u16).to_le_bytes())?;
-            w.write_all(k.as_bytes())?;
-            w.write_all(&(v.len() as u32).to_le_bytes())?;
-            w.write_all(v.as_bytes())?;
-        }
-
+        let mut entries = Vec::with_capacity(self.names.len());
         let mut offset = 0u64;
         for name in &self.names {
             let t = &self.tensors[name];
-            w.write_all(&(name.len() as u16).to_le_bytes())?;
-            w.write_all(name.as_bytes())?;
-            w.write_all(&[t.dtype_code(), t.shape().len() as u8])?;
-            for &d in t.shape() {
-                w.write_all(&(d as u64).to_le_bytes())?;
-            }
-            w.write_all(&offset.to_le_bytes())?;
-            w.write_all(&(t.nbytes() as u64).to_le_bytes())?;
+            entries.push(TensorEntry {
+                name: name.clone(),
+                dtype: t.dtype_code(),
+                shape: t.shape().to_vec(),
+                offset,
+                nbytes: t.nbytes() as u64,
+            });
             offset += t.nbytes() as u64;
         }
+        write_index(&mut w, &self.meta, &entries)
+            .with_context(|| format!("write {path:?}"))?;
 
         for name in &self.names {
-            match &self.tensors[name] {
-                DtsTensor::F32 { data, .. } => {
-                    for v in data {
-                        w.write_all(&v.to_le_bytes())?;
-                    }
-                }
-                DtsTensor::U8 { data, .. } => w.write_all(data)?,
-                DtsTensor::I32 { data, .. } => {
-                    for v in data {
-                        w.write_all(&v.to_le_bytes())?;
-                    }
-                }
-            }
+            write_payload(&mut w, &self.tensors[name])?;
         }
         w.flush()?;
         Ok(())
@@ -360,6 +545,58 @@ mod tests {
         let d2 = Dts::read(&p).unwrap();
         std::fs::remove_file(&p).unwrap();
         assert_eq!(d2.names(), &["z", "a", "m"]);
+    }
+
+    #[test]
+    fn index_open_and_seek_read_match_full_read() {
+        let mut d = Dts::new();
+        d.meta.insert("k".into(), "v".into());
+        d.insert("a", DtsTensor::F32 { shape: vec![3], data: vec![1.0, 2.0, 3.0] });
+        d.insert("b", DtsTensor::U8 { shape: vec![2, 2], data: vec![9, 8, 7, 6] });
+        d.insert("c", DtsTensor::I32 { shape: vec![2], data: vec![-5, 5] });
+        let p = tmpfile("seekread");
+        d.write(&p).unwrap();
+
+        let idx = DtsIndex::open(&p).unwrap();
+        assert_eq!(idx.meta.get("k").map(|s| s.as_str()), Some("v"));
+        assert_eq!(idx.entries.len(), 3);
+        assert_eq!(idx.payload_bytes(), 12 + 4 + 8);
+        let ea = idx.entry("a").unwrap();
+        assert_eq!(ea.dtype_label(), "f32");
+        assert_eq!(ea.shape, vec![3]);
+
+        // seek reads (in arbitrary order) equal the eager reader's tensors
+        let r = DtsReader::open(&p).unwrap();
+        assert_eq!(r.names(), vec!["a".to_string(), "b".into(), "c".into()]);
+        for name in ["c", "a", "b"] {
+            assert_eq!(&r.read_tensor(name).unwrap(), d.get(name).unwrap());
+        }
+        assert!(r.read_tensor("missing").is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn writer_rejects_oversized_length_prefixes() {
+        // a tensor name longer than u16::MAX must error, not truncate
+        let long = "x".repeat(u16::MAX as usize + 1);
+        let mut d = Dts::new();
+        d.insert(&long, DtsTensor::U8 { shape: vec![1], data: vec![0] });
+        let p = tmpfile("longname");
+        let err = d.write(&p).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("u16 length prefix"),
+            "{err:#}"
+        );
+
+        // same for meta keys
+        let mut d = Dts::new();
+        d.meta.insert(long.clone(), "v".into());
+        let err = d.write(&p).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("u16 length prefix"),
+            "{err:#}"
+        );
+        let _ = std::fs::remove_file(&p);
     }
 
     #[test]

@@ -1,3 +1,136 @@
 //! Checkpoint and artifact I/O.
+//!
+//! Three interchangeable checkpoint backends implement [`TensorSource`]:
+//! the in-memory [`Dts`](dts::Dts) container, the seek-based
+//! [`DtsReader`](dts::DtsReader) over a monolithic file, and the sharded
+//! [`ShardedDts`](shard::ShardedDts) store. The streaming coordinator and
+//! the sidecar dequant loader are written against the trait, so they run
+//! over any of them.
 
 pub mod dts;
+pub mod shard;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+use dts::{Dts, DtsReader, DtsTensor};
+use shard::ShardedDts;
+
+/// Read access to a named-tensor container. `Sync` so a prefetch thread
+/// can pull tensors while other threads hold the same source.
+pub trait TensorSource: Sync {
+    /// Tensor names in the container's canonical order.
+    fn names(&self) -> Vec<String>;
+
+    /// Container-level string metadata.
+    fn meta(&self) -> &BTreeMap<String, String>;
+
+    fn contains(&self, name: &str) -> bool;
+
+    /// Dims of a stored tensor without reading its payload.
+    fn shape_of(&self, name: &str) -> Option<Vec<usize>>;
+
+    /// Read one tensor (seek-based backends load only this payload).
+    fn read_tensor(&self, name: &str) -> Result<DtsTensor>;
+
+    fn tensor_f32(&self, name: &str) -> Result<Tensor> {
+        match self.read_tensor(name)? {
+            DtsTensor::F32 { shape, data } => Ok(Tensor::new(shape, data)),
+            other => bail!(
+                "tensor {name:?} has dtype {:?}, wanted f32",
+                other.dtype_code()
+            ),
+        }
+    }
+
+    fn tensor_u8(&self, name: &str) -> Result<(Vec<usize>, Vec<u8>)> {
+        match self.read_tensor(name)? {
+            DtsTensor::U8 { shape, data } => Ok((shape, data)),
+            _ => bail!("tensor {name:?} is not u8"),
+        }
+    }
+}
+
+impl TensorSource for Dts {
+    fn names(&self) -> Vec<String> {
+        Dts::names(self).to_vec()
+    }
+
+    fn meta(&self) -> &BTreeMap<String, String> {
+        &self.meta
+    }
+
+    fn contains(&self, name: &str) -> bool {
+        Dts::contains(self, name)
+    }
+
+    fn shape_of(&self, name: &str) -> Option<Vec<usize>> {
+        self.get(name).map(|t| t.shape().to_vec())
+    }
+
+    fn read_tensor(&self, name: &str) -> Result<DtsTensor> {
+        self.get(name)
+            .cloned()
+            .ok_or_else(|| anyhow::anyhow!("tensor {name:?} not found"))
+    }
+}
+
+impl TensorSource for DtsReader {
+    fn names(&self) -> Vec<String> {
+        DtsReader::names(self)
+    }
+
+    fn meta(&self) -> &BTreeMap<String, String> {
+        &self.index.meta
+    }
+
+    fn contains(&self, name: &str) -> bool {
+        self.index.entry(name).is_some()
+    }
+
+    fn shape_of(&self, name: &str) -> Option<Vec<usize>> {
+        self.index.entry(name).map(|e| e.shape.clone())
+    }
+
+    fn read_tensor(&self, name: &str) -> Result<DtsTensor> {
+        DtsReader::read_tensor(self, name)
+    }
+}
+
+impl TensorSource for ShardedDts {
+    fn names(&self) -> Vec<String> {
+        ShardedDts::names(self).to_vec()
+    }
+
+    fn meta(&self) -> &BTreeMap<String, String> {
+        &self.meta
+    }
+
+    fn contains(&self, name: &str) -> bool {
+        ShardedDts::contains(self, name)
+    }
+
+    fn shape_of(&self, name: &str) -> Option<Vec<usize>> {
+        self.entry(name).map(|(_, e)| e.shape.clone())
+    }
+
+    fn read_tensor(&self, name: &str) -> Result<DtsTensor> {
+        ShardedDts::read_tensor(self, name)
+    }
+}
+
+/// Open a checkpoint for streaming reads, auto-detecting the backend:
+/// a directory or a `*.json` path opens as a sharded store; anything else
+/// as a seek-based monolithic DTS file. Either way only indexes are
+/// parsed — payloads load on demand.
+pub fn open_source(path: &str) -> Result<Box<dyn TensorSource>> {
+    let p = Path::new(path);
+    if p.is_dir() || path.ends_with(".json") {
+        Ok(Box::new(ShardedDts::open(p)?))
+    } else {
+        Ok(Box::new(DtsReader::open(p)?))
+    }
+}

@@ -1,0 +1,584 @@
+//! Sharded streaming checkpoint store.
+//!
+//! A sharded store is a directory holding a `manifest.json` plus DTS1
+//! shard files (`shard_00000.dts`, `shard_00001.dts`, …) split by a byte
+//! budget. Each shard is a complete, standalone DTS container (readable
+//! by [`Dts::read`](crate::io::dts::Dts::read) or `daq inspect`); the
+//! manifest records the shard list and the store-level metadata.
+//!
+//! Two halves:
+//!
+//! - [`ShardedDts`] — the reader. `open` parses the manifest and each
+//!   shard's *index only*; `read_tensor(name)` seeks into the owning
+//!   shard and decodes one payload. Peak memory is one tensor, never the
+//!   model.
+//! - [`ShardWriter`] — the append-side. Tensors stream into a `.part`
+//!   payload file (only the small index is held in memory); at the byte
+//!   budget the caller rolls the shard, which writes the final
+//!   header+index+payload file atomically (tmp + rename). An interrupted
+//!   run therefore leaves only complete shard files plus at most one
+//!   discardable `.part`, which is what makes the streaming pipeline's
+//!   resume protocol (`coordinator::stream`) safe.
+//!
+//! The Python artifact side mirrors this format in
+//! `python/compile/dts.py` (`write_sharded_dts` / `read_sharded_dts`).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::io::dts::{write_index, write_payload, DtsIndex, DtsTensor, TensorEntry};
+use crate::util::json::Json;
+
+/// Manifest file name inside a sharded-store directory.
+pub const MANIFEST_NAME: &str = "manifest.json";
+/// Manifest `format` field value.
+pub const MANIFEST_FORMAT: &str = "daq-sharded-dts";
+const MANIFEST_VERSION: f64 = 1.0;
+/// Default shard byte budget (MiB) for the CLI.
+pub const DEFAULT_SHARD_MB: u64 = 256;
+
+/// File name of shard `i`.
+pub fn shard_file_name(i: usize) -> String {
+    format!("shard_{i:05}.dts")
+}
+
+struct Shard {
+    file: String,
+    index: DtsIndex,
+}
+
+/// Reader over a sharded store: manifest + per-shard indexes only; tensor
+/// payloads are fetched on demand by seeking into the owning shard.
+pub struct ShardedDts {
+    dir: PathBuf,
+    pub meta: BTreeMap<String, String>,
+    pub shard_budget_bytes: u64,
+    names: Vec<String>,
+    /// name -> (shard idx, entry idx within that shard's index)
+    lookup: BTreeMap<String, (usize, usize)>,
+    shards: Vec<Shard>,
+}
+
+impl ShardedDts {
+    /// Open a store from its manifest path or its directory.
+    pub fn open(path: impl AsRef<Path>) -> Result<ShardedDts> {
+        let path = path.as_ref();
+        let manifest_path = if path.is_dir() {
+            path.join(MANIFEST_NAME)
+        } else {
+            path.to_path_buf()
+        };
+        let dir = manifest_path
+            .parent()
+            .ok_or_else(|| anyhow!("{manifest_path:?} has no parent directory"))?
+            .to_path_buf();
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {manifest_path:?}"))?;
+        let j = Json::parse(&text)
+            .map_err(|e| anyhow!("{manifest_path:?}: {e}"))?;
+        match j.get("format").and_then(|f| f.as_str()) {
+            Some(MANIFEST_FORMAT) => {}
+            other => bail!("{manifest_path:?}: not a sharded-store manifest ({other:?})"),
+        }
+        let mut meta = BTreeMap::new();
+        if let Some(Json::Obj(m)) = j.get("meta") {
+            for (k, v) in m {
+                match v {
+                    Json::Str(s) => meta.insert(k.clone(), s.clone()),
+                    other => meta.insert(k.clone(), other.to_string()),
+                };
+            }
+        }
+        let shard_budget_bytes = j
+            .get("shard_budget_bytes")
+            .and_then(|b| b.as_f64())
+            .unwrap_or(0.0) as u64;
+
+        let mut shards = Vec::new();
+        let mut names = Vec::new();
+        let mut lookup = BTreeMap::new();
+        for s in j.get("shards").and_then(|s| s.as_arr()).unwrap_or(&[]) {
+            let file = s
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("{manifest_path:?}: shard entry without file"))?
+                .to_string();
+            let index = DtsIndex::open(dir.join(&file))?;
+            let si = shards.len();
+            for (ei, e) in index.entries.iter().enumerate() {
+                if lookup.insert(e.name.clone(), (si, ei)).is_some() {
+                    bail!(
+                        "{manifest_path:?}: tensor {:?} appears in more than one shard",
+                        e.name
+                    );
+                }
+                names.push(e.name.clone());
+            }
+            shards.push(Shard { file, index });
+        }
+        Ok(ShardedDts { dir, meta, shard_budget_bytes, names, lookup, shards })
+    }
+
+    /// Tensor names in store order (shard order, then in-shard order).
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.lookup.contains_key(name)
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Index entry (dtype/shape/bytes) plus owning shard file, payload
+    /// untouched.
+    pub fn entry(&self, name: &str) -> Option<(&str, &TensorEntry)> {
+        let &(si, ei) = self.lookup.get(name)?;
+        Some((self.shards[si].file.as_str(), &self.shards[si].index.entries[ei]))
+    }
+
+    /// Total payload bytes across all shards.
+    pub fn payload_bytes(&self) -> u64 {
+        self.shards.iter().map(|s| s.index.payload_bytes()).sum()
+    }
+
+    /// Read one tensor by seeking into its owning shard.
+    pub fn read_tensor(&self, name: &str) -> Result<DtsTensor> {
+        let &(si, ei) = self
+            .lookup
+            .get(name)
+            .ok_or_else(|| anyhow!("tensor {name:?} not found in {:?}", self.dir))?;
+        let shard = &self.shards[si];
+        let path = self.dir.join(&shard.file);
+        let mut f = File::open(&path).with_context(|| format!("open {path:?}"))?;
+        shard.index.read_entry(&mut f, &shard.index.entries[ei])
+    }
+}
+
+/// One finalized shard's record for the manifest.
+struct ShardRecord {
+    file: String,
+    tensors: usize,
+    bytes: u64,
+}
+
+/// Append-side of a sharded store.
+///
+/// `append` streams the tensor's payload straight to the current shard's
+/// `.part` file and keeps only the index entry in memory, so writer
+/// residency is O(index), not O(shard). `append` never splits a decision
+/// point: the *caller* chooses the roll boundaries by calling
+/// [`ShardWriter::maybe_roll`] between logical units (the streaming
+/// pipeline rolls between layers so a layer never spans shards; the
+/// `daq shard` converter rolls between tensors). A shard may therefore
+/// overshoot the budget by up to one unit.
+pub struct ShardWriter {
+    dir: PathBuf,
+    budget: u64,
+    shards: Vec<ShardRecord>,
+    names_seen: BTreeSet<String>,
+    // current (unfinalized) shard
+    cur_entries: Vec<TensorEntry>,
+    cur_bytes: u64,
+    part: Option<BufWriter<File>>,
+}
+
+impl ShardWriter {
+    /// Start a fresh store in `dir` (created if missing). Fails if the
+    /// directory already holds shard files — use [`ShardWriter::resume`]
+    /// or remove them first.
+    pub fn create(dir: impl AsRef<Path>, budget_bytes: u64) -> Result<ShardWriter> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir).with_context(|| format!("create {dir:?}"))?;
+        if !existing_shard_files(&dir)?.is_empty() {
+            bail!(
+                "{dir:?} already contains shard files; resume or remove them first"
+            );
+        }
+        Ok(ShardWriter {
+            dir,
+            budget: budget_bytes.max(1),
+            shards: Vec::new(),
+            names_seen: BTreeSet::new(),
+            cur_entries: Vec::new(),
+            cur_bytes: 0,
+            part: None,
+        })
+    }
+
+    /// Reopen a store directory after an interruption: finalized shards
+    /// are kept (their indexes are re-read to rebuild the records), a
+    /// leftover `.part` payload is discarded, and writing continues into
+    /// new shard files.
+    pub fn resume(dir: impl AsRef<Path>, budget_bytes: u64) -> Result<ShardWriter> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir).with_context(|| format!("create {dir:?}"))?;
+        let mut shards = Vec::new();
+        let mut names_seen = BTreeSet::new();
+        for file in existing_shard_files(&dir)? {
+            let index = DtsIndex::open(dir.join(&file))?;
+            for e in &index.entries {
+                if !names_seen.insert(e.name.clone()) {
+                    bail!(
+                        "{dir:?}: tensor {:?} appears in more than one shard; \
+                         remove the directory and restart",
+                        e.name
+                    );
+                }
+            }
+            shards.push(ShardRecord {
+                file,
+                tensors: index.entries.len(),
+                bytes: index.payload_bytes(),
+            });
+        }
+        // stale partial payloads / tmp finals from the interrupted run
+        for name in [".part", ".tmp"] {
+            let p = dir.join(format!("shard{name}"));
+            let _ = std::fs::remove_file(p);
+        }
+        Ok(ShardWriter {
+            dir,
+            budget: budget_bytes.max(1),
+            shards,
+            names_seen,
+            cur_entries: Vec::new(),
+            cur_bytes: 0,
+            part: None,
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Tensors already persisted in finalized shards (resume) or staged in
+    /// the current shard.
+    pub fn contains(&self, name: &str) -> bool {
+        self.names_seen.contains(name)
+    }
+
+    /// Index of the shard currently being written (= the shard the next
+    /// appended tensor lands in).
+    pub fn current_shard_index(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Payload bytes staged in the current shard.
+    pub fn current_bytes(&self) -> u64 {
+        self.cur_bytes
+    }
+
+    /// Tensors staged in the current (unfinalized) shard.
+    pub fn staged_tensors(&self) -> usize {
+        self.cur_entries.len()
+    }
+
+    fn part_path(&self) -> PathBuf {
+        self.dir.join("shard.part")
+    }
+
+    /// Append one tensor to the current shard. Never rolls; call
+    /// [`ShardWriter::maybe_roll`] at unit boundaries.
+    pub fn append(&mut self, name: &str, t: &DtsTensor) -> Result<()> {
+        if !self.names_seen.insert(name.to_string()) {
+            bail!("tensor {name:?} appended twice");
+        }
+        if self.part.is_none() {
+            let p = self.part_path();
+            let f = File::create(&p).with_context(|| format!("create {p:?}"))?;
+            self.part = Some(BufWriter::new(f));
+        }
+        let w = self.part.as_mut().expect("part writer just ensured");
+        write_payload(w, t)?;
+        self.cur_entries.push(TensorEntry {
+            name: name.to_string(),
+            dtype: t.dtype_code(),
+            shape: t.shape().to_vec(),
+            offset: self.cur_bytes,
+            nbytes: t.nbytes() as u64,
+        });
+        self.cur_bytes += t.nbytes() as u64;
+        Ok(())
+    }
+
+    /// Roll if the current shard has reached the byte budget.
+    pub fn maybe_roll(&mut self) -> Result<()> {
+        if self.cur_bytes >= self.budget {
+            self.roll()?;
+        }
+        Ok(())
+    }
+
+    /// Finalize the current shard: flush the `.part` payload, write the
+    /// final `shard_NNNNN.dts` (header + index + payload) to a tmp file
+    /// and rename it into place, then delete the `.part`. No-op when
+    /// nothing is staged.
+    pub fn roll(&mut self) -> Result<()> {
+        let Some(part) = self.part.take() else {
+            return Ok(());
+        };
+        let f = part
+            .into_inner()
+            .map_err(|e| anyhow!("flush shard part: {}", e.error()))?;
+        f.sync_all()?;
+        drop(f);
+
+        let file = shard_file_name(self.shards.len());
+        let tmp = self.dir.join("shard.tmp");
+        {
+            let out = File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
+            let mut w = BufWriter::new(out);
+            let mut meta = BTreeMap::new();
+            meta.insert("shard_index".to_string(), self.shards.len().to_string());
+            write_index(&mut w, &meta, &self.cur_entries)?;
+            let mut payload = File::open(self.part_path())?;
+            std::io::copy(&mut payload, &mut w)?;
+            w.flush()?;
+            w.into_inner()
+                .map_err(|e| anyhow!("flush {tmp:?}: {}", e.error()))?
+                .sync_all()?;
+        }
+        std::fs::rename(&tmp, self.dir.join(&file))
+            .with_context(|| format!("rename {tmp:?}"))?;
+        std::fs::remove_file(self.part_path())?;
+
+        self.shards.push(ShardRecord {
+            file,
+            tensors: self.cur_entries.len(),
+            bytes: self.cur_bytes,
+        });
+        self.cur_entries.clear();
+        self.cur_bytes = 0;
+        Ok(())
+    }
+
+    /// Roll any staged tensors and write the manifest with the given
+    /// store-level metadata. Returns the manifest path.
+    pub fn finish(mut self, meta: &BTreeMap<String, String>) -> Result<PathBuf> {
+        self.roll()?;
+        let mut obj = BTreeMap::new();
+        obj.insert("format".to_string(), Json::Str(MANIFEST_FORMAT.into()));
+        obj.insert("version".to_string(), Json::Num(MANIFEST_VERSION));
+        obj.insert(
+            "shard_budget_bytes".to_string(),
+            Json::Num(self.budget as f64),
+        );
+        obj.insert(
+            "meta".to_string(),
+            Json::Obj(
+                meta.iter()
+                    .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+                    .collect(),
+            ),
+        );
+        obj.insert(
+            "shards".to_string(),
+            Json::Arr(
+                self.shards
+                    .iter()
+                    .map(|s| {
+                        let mut m = BTreeMap::new();
+                        m.insert("file".to_string(), Json::Str(s.file.clone()));
+                        m.insert("tensors".to_string(), Json::Num(s.tensors as f64));
+                        m.insert("bytes".to_string(), Json::Num(s.bytes as f64));
+                        Json::Obj(m)
+                    })
+                    .collect(),
+            ),
+        );
+        let path = self.dir.join(MANIFEST_NAME);
+        std::fs::write(&path, format!("{}\n", Json::Obj(obj)))
+            .with_context(|| format!("write {path:?}"))?;
+        Ok(path)
+    }
+}
+
+/// Sorted list of finalized shard files in `dir`.
+fn existing_shard_files(dir: &Path) -> Result<Vec<String>> {
+    let mut out = Vec::new();
+    if !dir.exists() {
+        return Ok(out);
+    }
+    for entry in std::fs::read_dir(dir).with_context(|| format!("read {dir:?}"))? {
+        let name = entry?.file_name().to_string_lossy().into_owned();
+        if name.starts_with("shard_") && name.ends_with(".dts") {
+            out.push(name);
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+/// Convert a monolithic DTS checkpoint into a sharded store, streaming
+/// one tensor at a time (the `daq shard` converter). Returns
+/// (manifest path, shard count).
+pub fn shard_dts_file(
+    src: impl AsRef<Path>,
+    out_dir: impl AsRef<Path>,
+    budget_bytes: u64,
+) -> Result<(PathBuf, usize)> {
+    let reader = crate::io::dts::DtsReader::open(src)?;
+    let mut w = ShardWriter::create(out_dir, budget_bytes)?;
+    for name in reader.names() {
+        let t = reader.read_tensor(&name)?;
+        w.append(&name, &t)?;
+        drop(t);
+        w.maybe_roll()?;
+    }
+    let n = w.current_shard_index() + usize::from(w.staged_tensors() > 0);
+    let manifest = w.finish(&reader.index.meta)?;
+    Ok((manifest, n))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::dts::Dts;
+    use crate::util::rng::XorShift;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("daq_shard_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    }
+
+    fn f32t(n: usize, seed: u64) -> DtsTensor {
+        let mut rng = XorShift::new(seed);
+        DtsTensor::F32 { shape: vec![n], data: rng.normal_vec(n, 1.0) }
+    }
+
+    #[test]
+    fn writer_rolls_at_budget_and_reader_round_trips() {
+        let dir = tmpdir("roundtrip");
+        // budget of 100 bytes; each tensor is 64 bytes -> one per shard
+        let mut w = ShardWriter::create(&dir, 100).unwrap();
+        let tensors: Vec<(String, DtsTensor)> = (0..5)
+            .map(|i| (format!("t{i}"), f32t(16, i as u64 + 1)))
+            .collect();
+        for (name, t) in &tensors {
+            w.append(name, t).unwrap();
+            w.maybe_roll().unwrap();
+        }
+        let mut meta = BTreeMap::new();
+        meta.insert("kind".to_string(), "test".to_string());
+        let manifest = w.finish(&meta).unwrap();
+
+        let s = ShardedDts::open(&manifest).unwrap();
+        // rolls once the payload REACHES the budget: [t0,t1] [t2,t3] [t4]
+        assert_eq!(s.n_shards(), 3, "64B tensors under a 100B budget");
+        assert_eq!(s.meta.get("kind").map(|s| s.as_str()), Some("test"));
+        assert_eq!(
+            s.names(),
+            tensors.iter().map(|(n, _)| n.clone()).collect::<Vec<_>>()
+        );
+        for (name, t) in &tensors {
+            assert_eq!(&s.read_tensor(name).unwrap(), t, "{name}");
+            let (_, e) = s.entry(name).unwrap();
+            assert_eq!(e.nbytes, 64);
+            assert_eq!(e.dtype_label(), "f32");
+        }
+        assert_eq!(s.payload_bytes(), 5 * 64);
+        // opening by directory works too
+        assert!(ShardedDts::open(&dir).is_ok());
+        // each shard is a standalone DTS1 container
+        let d0 = Dts::read(dir.join(shard_file_name(0))).unwrap();
+        assert_eq!(d0.names().len(), 2);
+        assert_eq!(
+            d0.meta.get("shard_index").map(|s| s.as_str()),
+            Some("0")
+        );
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn large_budget_packs_one_shard() {
+        let dir = tmpdir("pack");
+        let mut w = ShardWriter::create(&dir, 1 << 20).unwrap();
+        for i in 0..4 {
+            w.append(&format!("t{i}"), &f32t(8, i as u64)).unwrap();
+            w.maybe_roll().unwrap();
+        }
+        let manifest = w.finish(&BTreeMap::new()).unwrap();
+        let s = ShardedDts::open(&manifest).unwrap();
+        assert_eq!(s.n_shards(), 1);
+        assert_eq!(s.names().len(), 4);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn duplicate_append_rejected() {
+        let dir = tmpdir("dup");
+        let mut w = ShardWriter::create(&dir, 1 << 20).unwrap();
+        w.append("a", &f32t(4, 1)).unwrap();
+        assert!(w.append("a", &f32t(4, 2)).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn resume_keeps_finalized_shards_and_discards_part() {
+        let dir = tmpdir("resume");
+        let mut w = ShardWriter::create(&dir, 1).unwrap(); // roll every tensor
+        w.append("a", &f32t(8, 1)).unwrap();
+        w.maybe_roll().unwrap();
+        // simulate interruption mid-shard: staged tensor never finalized
+        w.append("b", &f32t(8, 2)).unwrap();
+        drop(w);
+        assert!(dir.join("shard.part").exists());
+
+        let mut w = ShardWriter::resume(&dir, 1).unwrap();
+        assert!(w.contains("a"));
+        assert!(!w.contains("b"), "unfinalized tensor must not survive");
+        assert!(!dir.join("shard.part").exists());
+        assert_eq!(w.current_shard_index(), 1);
+        w.append("b", &f32t(8, 3)).unwrap();
+        w.maybe_roll().unwrap();
+        let manifest = w.finish(&BTreeMap::new()).unwrap();
+        let s = ShardedDts::open(&manifest).unwrap();
+        assert_eq!(s.names().to_vec(), vec!["a".to_string(), "b".into()]);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn create_refuses_dir_with_shards() {
+        let dir = tmpdir("refuse");
+        let mut w = ShardWriter::create(&dir, 1).unwrap();
+        w.append("a", &f32t(4, 1)).unwrap();
+        w.roll().unwrap();
+        drop(w);
+        assert!(ShardWriter::create(&dir, 1).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn shard_converter_matches_source() {
+        let dir = tmpdir("convert");
+        let mut d = Dts::new();
+        d.meta.insert("vocab".into(), "64".into());
+        for i in 0..3 {
+            d.insert(&format!("w{i}"), f32t(32, 10 + i as u64));
+        }
+        let src = std::env::temp_dir()
+            .join(format!("daq_shard_src_{}.dts", std::process::id()));
+        d.write(&src).unwrap();
+
+        let (manifest, n) = shard_dts_file(&src, &dir, 200).unwrap();
+        assert!(n >= 2, "128B tensors under a 200B budget must split");
+        let s = ShardedDts::open(&manifest).unwrap();
+        assert_eq!(s.meta.get("vocab").map(|s| s.as_str()), Some("64"));
+        for i in 0..3 {
+            let name = format!("w{i}");
+            assert_eq!(&s.read_tensor(&name).unwrap(), d.get(&name).unwrap());
+        }
+        std::fs::remove_file(&src).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}
+

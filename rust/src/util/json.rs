@@ -1,8 +1,13 @@
-//! Minimal JSON parser — enough to read `artifacts/manifest.json` and
-//! `train_summary.json` (serde is not in the offline registry).
+//! Minimal JSON parser and serializer — enough to read
+//! `artifacts/manifest.json` / `train_summary.json` and to write the
+//! sharded-store manifest and the streaming pipeline's resume journal
+//! (serde is not in the offline registry).
 //!
-//! Supports the full JSON grammar except `\u` escapes beyond the BMP; no
-//! serializer beyond what the report module needs.
+//! Supports the full JSON grammar except `\u` escapes beyond the BMP.
+//! The serializer ([`Json`]'s `Display`) emits compact one-line JSON;
+//! finite `f64` values round-trip exactly through parse (Rust's shortest
+//! `Display` repr), which the resume journal relies on for bit-exact
+//! restart statistics.
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -69,6 +74,72 @@ impl Json {
         }
         Some(cur)
     }
+}
+
+impl fmt::Display for Json {
+    /// Compact serialization. Non-finite numbers (which JSON cannot
+    /// represent) serialize as `null`; integral values within the exact
+    /// i64/f64 range print without a fractional part.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Json::Null => f.write_str("null"),
+            Json::Bool(b) => write!(f, "{b}"),
+            Json::Num(n) => {
+                // -0.0 must not take the integer path: "0" parses back as
+                // +0.0, breaking the exact-bits round-trip ("-0" is valid
+                // JSON and Rust's f64 Display emits it)
+                if !n.is_finite() {
+                    f.write_str("null")
+                } else if n.fract() == 0.0
+                    && !n.is_sign_negative()
+                    && *n < 9.007_199_254_740_992e15
+                {
+                    write!(f, "{}", *n as i64)
+                } else {
+                    write!(f, "{n}")
+                }
+            }
+            Json::Str(s) => write_json_string(f, s),
+            Json::Arr(v) => {
+                f.write_str("[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                f.write_str("]")
+            }
+            Json::Obj(m) => {
+                f.write_str("{")?;
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(",")?;
+                    }
+                    write_json_string(f, k)?;
+                    f.write_str(":")?;
+                    write!(f, "{v}")?;
+                }
+                f.write_str("}")
+            }
+        }
+    }
+}
+
+fn write_json_string(f: &mut fmt::Formatter<'_>, s: &str) -> fmt::Result {
+    f.write_str("\"")?;
+    for ch in s.chars() {
+        match ch {
+            '"' => f.write_str("\\\"")?,
+            '\\' => f.write_str("\\\\")?,
+            '\n' => f.write_str("\\n")?,
+            '\t' => f.write_str("\\t")?,
+            '\r' => f.write_str("\\r")?,
+            c if (c as u32) < 0x20 => write!(f, "\\u{:04x}", c as u32)?,
+            c => write!(f, "{c}")?,
+        }
+    }
+    f.write_str("\"")
 }
 
 #[derive(Debug)]
@@ -294,6 +365,42 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse(r#"{"a" 1}"#).is_err());
+    }
+
+    #[test]
+    fn serializer_roundtrips() {
+        let src = r#"{"a": [1, 2.5, true, null], "s": "line\n\"q\"", "n": -3}"#;
+        let j = Json::parse(src).unwrap();
+        let out = j.to_string();
+        assert_eq!(Json::parse(&out).unwrap(), j);
+        // compact: no spaces outside strings
+        assert!(out.contains("\"a\":[1,2.5,true,null]"), "{out}");
+    }
+
+    #[test]
+    fn serializer_f64_exact_roundtrip() {
+        // shortest-repr Display must parse back to the identical bits —
+        // the resume journal depends on this for restart-exact stats
+        for v in [0.1f64, 1.0 / 3.0, 1.05f32 as f64, 2.5e-300, 123456789.25, -0.0, -3.0]
+        {
+            let s = Json::Num(v).to_string();
+            let back = Json::parse(&s).unwrap().as_f64().unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "{v} via {s}");
+        }
+        // the signed-zero case specifically must not flatten to "0"
+        assert_eq!(Json::Num(-0.0).to_string(), "-0");
+        // integral values print without a fractional part
+        assert_eq!(Json::Num(16.0).to_string(), "16");
+        // non-finite degrades to null (JSON has no representation)
+        assert_eq!(Json::Num(f64::NAN).to_string(), "null");
+    }
+
+    #[test]
+    fn serializer_escapes_strings() {
+        let j = Json::Str("a\"b\\c\nd\u{1}".into());
+        let s = j.to_string();
+        assert_eq!(s, "\"a\\\"b\\\\c\\nd\\u0001\"");
+        assert_eq!(Json::parse(&s).unwrap(), j);
     }
 
     #[test]

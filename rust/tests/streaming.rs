@@ -1,0 +1,422 @@
+//! Integration tests for the bounded-memory streaming pipeline
+//! (`coordinator::stream`) against synthetic checkpoints — no artifacts
+//! or PJRT required.
+//!
+//! The acceptance invariants of the streaming subsystem:
+//! 1. output is **bitwise-identical** to the in-memory `run_pipeline`
+//!    for the same (method, granularity, seed), over both sharded and
+//!    monolithic seek-based sources;
+//! 2. peak live tensor bytes stay bounded by `depth x (largest unit)`,
+//!    not by model size;
+//! 3. an interrupted run resumed from a truncated journal skips the
+//!    completed layers and converges to the same per-tensor bytes.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use daq::coordinator::stream::{run_stream, StreamConfig, RESUME_JOURNAL};
+use daq::coordinator::{run_pipeline, Engine, Method, PipelineConfig, PipelineOutcome};
+use daq::eval::load_params_dequant_source;
+use daq::experiments::quantizable_from_source;
+use daq::io::dts::{Dts, DtsReader, DtsTensor};
+use daq::io::shard::{shard_dts_file, ShardedDts};
+use daq::quant::Granularity;
+use daq::search::Objective;
+use daq::tensor::Tensor;
+use daq::util::rng::XorShift;
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("daq_streamtest_{tag}_{}", std::process::id()))
+}
+
+/// Synthetic (post, base) pair: `n_layers` quantizable GEMMs plus
+/// layernorm / embedding passthrough tensors.
+fn fake_ckpts(seed: u64, n_layers: usize, dim: usize) -> (Dts, Dts) {
+    let mut rng = XorShift::new(seed);
+    let mut base = Dts::new();
+    let mut post = Dts::new();
+    base.meta.insert("vocab".into(), "64".into());
+    post.meta.insert("vocab".into(), "64".into());
+    for i in 0..n_layers {
+        let name = match i % 3 {
+            0 => format!("l{i}.wq"),
+            1 => format!("l{i}.w1"),
+            _ => format!("l{i}.w2"),
+        };
+        let (r, c) = (dim, dim + 8 * (i % 2));
+        let wb = Tensor::new(vec![r, c], rng.normal_vec(r * c, 0.1));
+        let wp = Tensor::new(
+            vec![r, c],
+            wb.data().iter().map(|&b| b + rng.normal() * 0.002).collect(),
+        );
+        base.insert_f32(&name, &wb);
+        post.insert_f32(&name, &wp);
+        let g = Tensor::full(vec![r], 1.0);
+        base.insert_f32(&format!("l{i}.ln1.g"), &g);
+        post.insert_f32(&format!("l{i}.ln1.g"), &g);
+    }
+    let embed = Tensor::new(vec![16, dim], rng.normal_vec(16 * dim, 0.1));
+    base.insert_f32("embed", &embed);
+    post.insert_f32("embed", &embed);
+    (post, base)
+}
+
+fn assert_bits_eq(a: &DtsTensor, b: &DtsTensor, what: &str) {
+    match (a, b) {
+        (
+            DtsTensor::F32 { shape: sa, data: da },
+            DtsTensor::F32 { shape: sb, data: db },
+        ) => {
+            assert_eq!(sa, sb, "{what}: shape");
+            assert_eq!(da.len(), db.len(), "{what}: len");
+            for (x, y) in da.iter().zip(db) {
+                assert_eq!(x.to_bits(), y.to_bits(), "{what}");
+            }
+        }
+        _ => assert_eq!(a, b, "{what}"),
+    }
+}
+
+fn run_both(
+    post: &Dts,
+    base: &Dts,
+    gran: Granularity,
+    method: Method,
+    tag: &str,
+) -> (PipelineOutcome, daq::coordinator::stream::StreamOutcome, ShardedDts) {
+    let quantizable = quantizable_from_source(post);
+    assert!(!quantizable.is_empty());
+
+    let cfg = PipelineConfig {
+        granularity: gran,
+        method: method.clone(),
+        engine: Engine::Native { workers: 2 },
+    };
+    let mem = run_pipeline(post, base, &quantizable, None, &cfg, None).unwrap();
+
+    // post goes through a sharded store, base through the seek-based
+    // monolithic reader — both streaming source backends in one run
+    let post_file = tmp(&format!("{tag}_post_dts")).with_extension("dts");
+    post.write(&post_file).unwrap();
+    let post_shards = tmp(&format!("{tag}_post_shards"));
+    let _ = std::fs::remove_dir_all(&post_shards);
+    let (manifest, _) = shard_dts_file(&post_file, &post_shards, 4096).unwrap();
+    let post_src = ShardedDts::open(&manifest).unwrap();
+
+    let base_file = tmp(&format!("{tag}_base_dts")).with_extension("dts");
+    base.write(&base_file).unwrap();
+    let base_src = DtsReader::open(&base_file).unwrap();
+
+    let out_dir = tmp(&format!("{tag}_out"));
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let mut scfg = StreamConfig::new(gran, method, 2);
+    scfg.shard_budget = 8192;
+    let streamed =
+        run_stream(&post_src, &base_src, &quantizable, &out_dir, &scfg).unwrap();
+    let store = ShardedDts::open(&out_dir).unwrap();
+
+    std::fs::remove_file(&post_file).unwrap();
+    std::fs::remove_file(&base_file).unwrap();
+    std::fs::remove_dir_all(&post_shards).unwrap();
+    (mem, streamed, store)
+}
+
+#[test]
+fn streaming_matches_in_memory_pipeline_bitwise() {
+    for (gi, gran) in [Granularity::Block(16), Granularity::PerChannel]
+        .into_iter()
+        .enumerate()
+    {
+        for (mi, method) in [
+            Method::Search {
+                objective: Objective::SignRate,
+                range: (0.8, 1.25),
+            },
+            Method::AbsMax,
+        ]
+        .into_iter()
+        .enumerate()
+        {
+            let (post, base) = fake_ckpts(11, 5, 32);
+            let tag = format!("eq{gi}{mi}");
+            let (mem, streamed, store) =
+                run_both(&post, &base, gran, method, &tag);
+
+            // per-layer search results identical
+            assert_eq!(mem.layers.len(), streamed.layers.len());
+            for (a, b) in mem.layers.iter().zip(&streamed.layers) {
+                assert_eq!(a.name, b.name);
+                assert_eq!(a.alpha.to_bits(), b.alpha.to_bits(), "{}", a.name);
+                assert_eq!(a.evals, b.evals);
+                assert_eq!(a.stats, b.stats, "{}", a.name);
+            }
+            // fixed-order model aggregate identical
+            assert_eq!(mem.agg.unwrap(), streamed.agg);
+
+            // stored tensors identical: codes, scales, dequantized weights
+            for (name, q) in &mem.quantized {
+                let codes = store.read_tensor(&format!("{name}.codes")).unwrap();
+                assert_bits_eq(
+                    &codes,
+                    &DtsTensor::U8 {
+                        shape: vec![q.shape.0, q.shape.1],
+                        data: q.codes.clone(),
+                    },
+                    &format!("{name}.codes"),
+                );
+                let scales = store.read_tensor(&format!("{name}.scales")).unwrap();
+                assert_bits_eq(
+                    &scales,
+                    &DtsTensor::F32 {
+                        shape: vec![q.scales.grid_rows, q.scales.grid_cols],
+                        data: q.scales.scales.clone(),
+                    },
+                    &format!("{name}.scales"),
+                );
+            }
+            // every parameter (quantized + passthrough) matches the
+            // in-memory outcome via the shared sidecar dequant loader
+            let loaded = load_params_dequant_source(&store).unwrap();
+            assert_eq!(loaded.len(), mem.params.len());
+            for (name, want) in &mem.params {
+                let got = loaded.get(name).unwrap_or_else(|| panic!("missing {name}"));
+                assert_eq!(got.shape(), want.shape(), "{name}");
+                for (x, y) in got.data().iter().zip(want.data()) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "{name}");
+                }
+            }
+            // metadata mirrors write_checkpoint's
+            assert_eq!(
+                store.meta.get("quantized").map(|s| s.as_str()),
+                Some("fp8_e4m3")
+            );
+            for l in &mem.layers {
+                assert_eq!(
+                    store.meta.get(&format!("alpha.{}", l.name)),
+                    Some(&format!("{}", l.alpha)),
+                    "{}",
+                    l.name
+                );
+                assert_eq!(
+                    store.meta.get(&format!("gran.{}", l.name)),
+                    Some(&gran.label()),
+                );
+            }
+            drop(store);
+            std::fs::remove_dir_all(tmp(&format!("{tag}_out"))).unwrap();
+        }
+    }
+}
+
+#[test]
+fn residency_bounded_by_depth_not_model_size() {
+    let (post, base) = fake_ckpts(23, 12, 64);
+    let quantizable = quantizable_from_source(&post);
+    assert_eq!(quantizable.len(), 12);
+
+    let out_dir = tmp("residency_out");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let mut cfg = StreamConfig::new(
+        Granularity::Block(16),
+        Method::Search { objective: Objective::SignRate, range: (0.8, 1.25) },
+        2,
+    );
+    cfg.depth = 2;
+    let out = run_stream(&post, &base, &quantizable, &out_dir, &cfg).unwrap();
+
+    // the admission gate holds each layer's permit from read to write, so
+    // live bytes never exceed depth x the largest single-unit footprint
+    assert!(out.peak_live_bytes > 0);
+    assert!(
+        out.peak_live_bytes <= cfg.depth * out.max_unit_bytes,
+        "peak {} > depth {} x max unit {}",
+        out.peak_live_bytes,
+        cfg.depth,
+        out.max_unit_bytes
+    );
+    // ... and that bound is far below whole-model residency
+    let model_total: usize = out
+        .layers
+        .iter()
+        .map(|l| {
+            let n = l.shape.0 * l.shape.1;
+            2 * n * 4 + n + n * 4 // pair + codes + dequant (scales omitted)
+        })
+        .sum();
+    assert!(
+        cfg.depth * out.max_unit_bytes <= model_total / 3,
+        "bound {} not meaningfully below model residency {model_total}",
+        cfg.depth * out.max_unit_bytes
+    );
+    std::fs::remove_dir_all(&out_dir).unwrap();
+}
+
+#[test]
+fn resume_after_interruption_converges_to_identical_bytes() {
+    for (gi, gran) in [Granularity::Block(16), Granularity::PerChannel]
+        .into_iter()
+        .enumerate()
+    {
+        let (post, base) = fake_ckpts(31, 6, 32);
+        let quantizable = quantizable_from_source(&post);
+        let method = Method::Search {
+            objective: Objective::SignRate,
+            range: (0.8, 1.25),
+        };
+
+        // tiny budget: every layer (and passthrough tensor) gets its own
+        // shard, so truncating at a layer boundary maps to whole shards
+        let mut cfg = StreamConfig::new(gran, method, 2);
+        cfg.shard_budget = 1;
+
+        // reference: uninterrupted run
+        let ref_dir = tmp(&format!("resume_ref{gi}"));
+        let _ = std::fs::remove_dir_all(&ref_dir);
+        let reference =
+            run_stream(&post, &base, &quantizable, &ref_dir, &cfg).unwrap();
+
+        // victim: full run, then simulate an interruption after 3 layers
+        // by truncating the journal and deleting everything the journal
+        // no longer records (later shards, manifest)
+        let dir = tmp(&format!("resume_cut{gi}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        run_stream(&post, &base, &quantizable, &dir, &cfg).unwrap();
+
+        let keep_layers = 3usize;
+        let journal = std::fs::read_to_string(dir.join(RESUME_JOURNAL)).unwrap();
+        let mut kept = String::new();
+        let mut kept_shards: Vec<String> = Vec::new();
+        let mut layer_lines = 0usize;
+        for line in journal.lines() {
+            if line.contains("\"layer\"") {
+                if layer_lines == keep_layers {
+                    break;
+                }
+                layer_lines += 1;
+                let shard = line
+                    .split("\"shard\":\"")
+                    .nth(1)
+                    .and_then(|s| s.split('"').next())
+                    .unwrap()
+                    .to_string();
+                kept_shards.push(shard);
+            }
+            kept.push_str(line);
+            kept.push('\n');
+        }
+        assert_eq!(layer_lines, keep_layers);
+        std::fs::write(dir.join(RESUME_JOURNAL), &kept).unwrap();
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let name = entry.unwrap().file_name().to_string_lossy().into_owned();
+            let is_shard = name.starts_with("shard_") && name.ends_with(".dts");
+            if (is_shard && !kept_shards.contains(&name)) || name == "manifest.json"
+            {
+                std::fs::remove_file(dir.join(&name)).unwrap();
+            }
+        }
+
+        // resume: completed layers skip, the rest recompute
+        let mut rcfg = cfg.clone();
+        rcfg.resume = true;
+        let resumed =
+            run_stream(&post, &base, &quantizable, &dir, &rcfg).unwrap();
+        assert_eq!(resumed.resumed, keep_layers, "journaled layers must skip");
+
+        // outcomes identical to the uninterrupted run
+        assert_eq!(reference.layers.len(), resumed.layers.len());
+        for (a, b) in reference.layers.iter().zip(&resumed.layers) {
+            assert_eq!(a.name, b.name);
+            assert_eq!(a.alpha.to_bits(), b.alpha.to_bits(), "{}", a.name);
+            assert_eq!(a.stats, b.stats, "{}", a.name);
+        }
+        assert_eq!(reference.agg, resumed.agg);
+
+        // stores identical tensor-for-tensor (bitwise) and meta-for-meta
+        let sa = ShardedDts::open(&ref_dir).unwrap();
+        let sb = ShardedDts::open(&dir).unwrap();
+        assert_eq!(sa.names(), sb.names());
+        for name in sa.names() {
+            assert_bits_eq(
+                &sa.read_tensor(name).unwrap(),
+                &sb.read_tensor(name).unwrap(),
+                name,
+            );
+        }
+        assert_eq!(sa.meta, sb.meta);
+
+        // a second resume over the finished store is a no-op that still
+        // converges (all layers skip)
+        let again = run_stream(&post, &base, &quantizable, &dir, &rcfg).unwrap();
+        assert_eq!(again.resumed, quantizable.len());
+        assert_eq!(again.agg, resumed.agg);
+
+        std::fs::remove_dir_all(&ref_dir).unwrap();
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}
+
+#[test]
+fn resume_with_changed_config_is_rejected() {
+    let (post, base) = fake_ckpts(41, 3, 16);
+    let quantizable = quantizable_from_source(&post);
+    let dir = tmp("resume_cfg");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = StreamConfig::new(Granularity::Block(16), Method::AbsMax, 1);
+    run_stream(&post, &base, &quantizable, &dir, &cfg).unwrap();
+
+    let mut other = StreamConfig::new(Granularity::PerChannel, Method::AbsMax, 1);
+    other.resume = true;
+    let err = run_stream(&post, &base, &quantizable, &dir, &other).unwrap_err();
+    assert!(format!("{err:#}").contains("gran"), "{err:#}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn fresh_run_refuses_existing_store() {
+    let (post, base) = fake_ckpts(43, 3, 16);
+    let quantizable = quantizable_from_source(&post);
+    let dir = tmp("fresh_refuse");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = StreamConfig::new(Granularity::Block(16), Method::AbsMax, 1);
+    run_stream(&post, &base, &quantizable, &dir, &cfg).unwrap();
+    let err = run_stream(&post, &base, &quantizable, &dir, &cfg).unwrap_err();
+    assert!(format!("{err:#}").contains("resume"), "{err:#}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The non-streamed `write_checkpoint` output and the streamed store load
+/// identically through the shared source-based dequant loader — the eval
+/// path is backend-agnostic (BTreeMap for deterministic comparison).
+#[test]
+fn eval_loader_agrees_across_backends() {
+    let (post, base) = fake_ckpts(53, 4, 24);
+    let (mem, _streamed, store) = run_both(
+        &post,
+        &base,
+        Granularity::Block(16),
+        Method::Search { objective: Objective::CosSim, range: (0.9, 1.11) },
+        "loader",
+    );
+    let ckpt = tmp("loader_ckpt").with_extension("dts");
+    mem.write_checkpoint(ckpt.to_str().unwrap(), &post.meta).unwrap();
+
+    let mono = DtsReader::open(&ckpt).unwrap();
+    let a = load_params_dequant_source(&mono).unwrap();
+    let b = load_params_dequant_source(&store).unwrap();
+    let an: BTreeMap<_, _> = a.iter().collect();
+    let bn: BTreeMap<_, _> = b.iter().collect();
+    assert_eq!(
+        an.keys().collect::<Vec<_>>(),
+        bn.keys().collect::<Vec<_>>()
+    );
+    for (name, ta) in an {
+        let tb = bn[name];
+        assert_eq!(ta.shape(), tb.shape(), "{name}");
+        for (x, y) in ta.data().iter().zip(tb.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{name}");
+        }
+    }
+    std::fs::remove_file(&ckpt).unwrap();
+    drop(store);
+    std::fs::remove_dir_all(tmp("loader_out")).unwrap();
+}
