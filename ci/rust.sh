@@ -1,10 +1,57 @@
 #!/usr/bin/env bash
-# Tier-1 gate for the rust/ crate: release build + tests, then the style
-# gates (rustfmt, clippy with warnings denied). Run from anywhere.
+# Tier-1 gate for the rust/ crate, split into CI lanes. Run from anywhere.
+#
+#   ci/rust.sh fast   style gates only: rustfmt + clippy (-D warnings) —
+#                     the quick PR signal, fails in a couple of minutes
+#   ci/rust.sh full   release build + tests
+#   ci/rust.sh        both lanes (the local pre-push default)
+#
+# Every cargo invocation passes --locked so drift in the vendored shims
+# (rust/vendor/*) or a hand-edited manifest is caught at the gate — cargo
+# refuses to silently rewrite Cargo.lock. A belt-and-braces git check
+# fails the lane if anything dirtied the lock file anyway.
 set -euo pipefail
 cd "$(dirname "$0")/../rust"
 
-cargo build --release
-cargo test -q
-cargo fmt --check
-cargo clippy --all-targets -- -D warnings
+mode="${1:-all}"
+
+run_fast() {
+  cargo fmt --check
+  cargo clippy --locked --all-targets -- -D warnings
+}
+
+run_full() {
+  cargo build --locked --release
+  cargo test --locked -q
+}
+
+case "$mode" in
+  fast) run_fast ;;
+  full) run_full ;;
+  all)
+    # style gates first: a fmt/clippy violation should surface in the
+    # couple of minutes the fast lane promises, not after a full build
+    run_fast
+    run_full
+    ;;
+  *)
+    echo "usage: ci/rust.sh [fast|full|all]" >&2
+    exit 2
+    ;;
+esac
+
+# fail on a dirty Cargo.lock: --locked should have refused already, but a
+# stale checkout or a tool writing through the lock must not pass
+# silently. Compare against HEAD (catches staged drift too) and refuse an
+# untracked lock — --locked means nothing if the file isn't committed.
+if command -v git >/dev/null 2>&1 \
+    && git rev-parse --is-inside-work-tree >/dev/null 2>&1; then
+  if ! git ls-files --error-unmatch Cargo.lock >/dev/null 2>&1; then
+    echo "error: Cargo.lock is untracked — commit it so --locked is enforced" >&2
+    exit 1
+  fi
+  if ! git diff HEAD --exit-code -- Cargo.lock; then
+    echo "error: Cargo.lock is dirty after the '$mode' lane" >&2
+    exit 1
+  fi
+fi

@@ -1,0 +1,131 @@
+#!/usr/bin/env python3
+"""DTS length-guard checks — the executable coverage for the Python
+writer's format guards (run by the CI `python` job; needs only numpy).
+
+The DTS1 format length-prefixes names with u16 and meta values with u32
+(see dts.py). The writer must refuse anything that would overflow a
+prefix or silently truncate on the Rust reader side, and the reader must
+refuse containers it cannot have written. Exit code 0 = all guards hold.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import dts  # noqa: E402
+
+FAILURES: list[str] = []
+
+
+def check(label: str, fn) -> None:
+    try:
+        fn()
+    except AssertionError as e:
+        FAILURES.append(f"{label}: {e}")
+    else:
+        print(f"ok: {label}")
+
+
+def expect_raises(label: str, exc, substr: str, fn) -> None:
+    def run():
+        try:
+            fn()
+        except exc as e:
+            assert substr in str(e), f"raised {e!r}, wanted {substr!r} in message"
+        else:
+            raise AssertionError(f"expected {exc.__name__} ({substr!r}), got no error")
+
+    check(label, run)
+
+
+def main() -> int:
+    tmp = tempfile.mkdtemp(prefix="daq_dts_guards_")
+    p = os.path.join(tmp, "t.dts")
+    w = np.zeros((2, 2), np.float32)
+
+    # u16 name-length guard: a >64 KiB tensor name must be refused at
+    # write time, not truncated into an unreadable index entry
+    expect_raises(
+        "tensor name over u16 prefix refused",
+        ValueError,
+        "u16 length prefix",
+        lambda: dts.write_dts(p, {"n" * 0x10001: w}),
+    )
+    # ... and the largest representable name still round-trips
+    def max_name_roundtrip():
+        name = "n" * 0xFFFF
+        dts.write_dts(p, {name: w})
+        t2, _ = dts.read_dts(p)
+        assert list(t2) == [name], "max-length name lost in round-trip"
+        np.testing.assert_array_equal(t2[name], w)
+
+    check("tensor name at exactly u16 max round-trips", max_name_roundtrip)
+
+    expect_raises(
+        "meta key over u16 prefix refused",
+        ValueError,
+        "u16 length prefix",
+        lambda: dts.write_dts(p, {"w": w}, {"k" * 0x10001: "v"}),
+    )
+
+    expect_raises(
+        "unsupported dtype refused",
+        ValueError,
+        "unsupported dtype",
+        lambda: dts.write_dts(p, {"w": np.zeros(2, np.float64)}),
+    )
+
+    def bad_magic():
+        bad = os.path.join(tmp, "bad.dts")
+        with open(bad, "wb") as f:
+            f.write(b"NOPE" + b"\x00" * 32)
+        try:
+            dts.read_dts(bad)
+        except ValueError as e:
+            assert "bad magic" in str(e)
+        else:
+            raise AssertionError("reader accepted a bad magic")
+
+    check("reader refuses bad magic", bad_magic)
+
+    def bad_version():
+        import struct
+
+        bad = os.path.join(tmp, "badver.dts")
+        with open(bad, "wb") as f:
+            f.write(dts.MAGIC)
+            f.write(struct.pack("<III", 99, 0, 0))
+        try:
+            dts.read_dts(bad)
+        except ValueError as e:
+            assert "version" in str(e)
+        else:
+            raise AssertionError("reader accepted an unknown version")
+
+    check("reader refuses unknown version", bad_version)
+
+    # a large (but in-range) meta value round-trips through the u32 prefix
+    def big_meta_roundtrip():
+        big = "v" * 100_000
+        dts.write_dts(p, {"w": w}, {"big": big})
+        _, m2 = dts.read_dts(p)
+        assert m2["big"] == big, "100 kB meta value corrupted"
+
+    check("100kB meta value round-trips the u32 prefix", big_meta_roundtrip)
+
+    if FAILURES:
+        print(f"\n{len(FAILURES)} guard check(s) FAILED:", file=sys.stderr)
+        for f in FAILURES:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\nall DTS length guards hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

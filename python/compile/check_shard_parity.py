@@ -1,0 +1,172 @@
+#!/usr/bin/env python3
+"""Sharded-store parity checks — the Python writer must produce exactly
+the layout the Rust reader (rust/src/io/shard.rs) parses, and round-trip
+its own output (run by the CI `python` job; needs only numpy).
+
+Checked invariants, mirroring the Rust `ShardedDts`/`ShardWriter` tests:
+  - shards roll once the payload REACHES the byte budget (may overshoot
+    by one tensor), named shard_NNNNN.dts with a `shard_index` meta key;
+  - every shard is a complete standalone DTS1 container;
+  - the manifest carries format/version/shard_budget_bytes/meta/shards
+    with per-shard file/tensors/bytes;
+  - reading the store back yields bitwise-equal tensors in write order;
+  - a tensor present in two shards is rejected at read time.
+
+Exit code 0 = parity holds.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import sys
+import tempfile
+
+import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+import dts  # noqa: E402
+
+FAILURES: list[str] = []
+
+
+def check(label: str, fn) -> None:
+    try:
+        fn()
+    except AssertionError as e:
+        FAILURES.append(f"{label}: {e}")
+    else:
+        print(f"ok: {label}")
+
+
+def build_tensors() -> dict:
+    rng = np.random.default_rng(7)
+    t = {}
+    for i in range(5):
+        t[f"t{i}"] = rng.normal(0, 1, (4, 4)).astype(np.float32)  # 64 B each
+    t["codes"] = np.arange(64, dtype=np.uint8).reshape(8, 8)
+    t["tokens"] = np.arange(16, dtype=np.int32).reshape(2, 8)
+    return t
+
+
+def main() -> int:
+    tmp = tempfile.mkdtemp(prefix="daq_shard_parity_")
+    store = os.path.join(tmp, "store")
+    tensors = build_tensors()
+    meta = {"kind": "parity", "vocab": "64"}
+
+    # 64 B f32 tensors under a 100 B budget -> rolls follow the Rust
+    # semantics: flush once cur_bytes >= budget
+    manifest_path = dts.write_sharded_dts(store, tensors, meta, shard_budget_bytes=100)
+
+    def manifest_schema():
+        with open(manifest_path) as f:
+            m = json.load(f)
+        assert m["format"] == dts.SHARD_FORMAT, f"format {m['format']!r}"
+        assert m["format"] == "daq-sharded-dts", "format constant drifted from Rust"
+        assert m["version"] == 1
+        assert m["shard_budget_bytes"] == 100
+        assert m["meta"] == meta, f"meta {m['meta']!r}"
+        assert isinstance(m["shards"], list) and m["shards"], "no shards listed"
+        for i, s in enumerate(m["shards"]):
+            assert s["file"] == f"shard_{i:05d}.dts", f"shard name {s['file']!r}"
+            assert s["tensors"] > 0 and s["bytes"] > 0
+            assert os.path.exists(os.path.join(store, s["file"]))
+
+    check("manifest schema matches the Rust reader's expectations", manifest_schema)
+
+    def roll_semantics():
+        with open(manifest_path) as f:
+            m = json.load(f)
+        # [t0,t1] [t2,t3] [t4 + codes] [tokens]  (u8 64 B crosses budget)
+        sizes = [s["bytes"] for s in m["shards"]]
+        assert all(b >= 100 for b in sizes[:-1]), (
+            f"non-final shards under budget: {sizes}"
+        )
+        total = sum(a.nbytes for a in build_tensors().values())
+        assert sum(sizes) == total, f"payload bytes {sum(sizes)} != {total}"
+
+    check("shards roll at the byte budget (Rust ShardWriter semantics)", roll_semantics)
+
+    def shards_standalone():
+        with open(manifest_path) as f:
+            m = json.load(f)
+        for i, s in enumerate(m["shards"]):
+            ts, shard_meta = dts.read_dts(os.path.join(store, s["file"]))
+            assert shard_meta.get("shard_index") == str(i), shard_meta
+            assert len(ts) == s["tensors"]
+
+    check("every shard is a standalone DTS1 container", shards_standalone)
+
+    def roundtrip():
+        t2, m2 = dts.read_sharded_dts(store)
+        assert m2 == meta
+        assert list(t2) == list(tensors), f"order: {list(t2)}"
+        for name, arr in tensors.items():
+            assert t2[name].dtype == arr.dtype, name
+            np.testing.assert_array_equal(t2[name], arr, err_msg=name)
+
+    check("store round-trips bitwise in write order", roundtrip)
+
+    def manifest_path_and_dir_equivalent():
+        a, _ = dts.read_sharded_dts(store)
+        b, _ = dts.read_sharded_dts(manifest_path)
+        assert list(a) == list(b)
+
+    check("opening by directory or manifest path is equivalent",
+          manifest_path_and_dir_equivalent)
+
+    def duplicate_tensor_rejected():
+        dup = os.path.join(tmp, "dup")
+        os.makedirs(dup)
+        x = {"x": np.zeros((2, 2), np.float32)}
+        dts.write_dts(os.path.join(dup, "shard_00000.dts"), x, {"shard_index": "0"})
+        dts.write_dts(os.path.join(dup, "shard_00001.dts"), x, {"shard_index": "1"})
+        manifest = {
+            "format": dts.SHARD_FORMAT,
+            "version": 1,
+            "shard_budget_bytes": 1,
+            "meta": {},
+            "shards": [
+                {"file": "shard_00000.dts", "tensors": 1, "bytes": 16},
+                {"file": "shard_00001.dts", "tensors": 1, "bytes": 16},
+            ],
+        }
+        with open(os.path.join(dup, dts.SHARD_MANIFEST), "w") as f:
+            json.dump(manifest, f)
+        try:
+            dts.read_sharded_dts(dup)
+        except ValueError as e:
+            assert "more than one shard" in str(e)
+        else:
+            raise AssertionError("duplicate tensor across shards was accepted")
+
+    check("tensor in two shards is rejected", duplicate_tensor_rejected)
+
+    def non_manifest_rejected():
+        bad = os.path.join(tmp, "bad.json")
+        with open(bad, "w") as f:
+            json.dump({"format": "something-else"}, f)
+        try:
+            dts.read_sharded_dts(bad)
+        except ValueError as e:
+            assert "manifest" in str(e)
+        else:
+            raise AssertionError("non-manifest json was accepted")
+
+    check("non-manifest json is rejected", non_manifest_rejected)
+
+    shutil.rmtree(tmp, ignore_errors=True)
+
+    if FAILURES:
+        print(f"\n{len(FAILURES)} parity check(s) FAILED:", file=sys.stderr)
+        for f in FAILURES:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\nsharded-store parity holds")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

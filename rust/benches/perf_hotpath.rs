@@ -64,10 +64,16 @@ fn main() {
     let alphas: Vec<f32> = (0..n_candidates).map(|i| 0.8 + 0.028 * i as f32).collect();
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
     let mut records: Vec<Record> = Vec::new();
+    // DAQ_BENCH_FAST=1: reduced shape set for the CI bench-smoke lane —
+    // every variant still emits its BENCH_sweep.json rows, just on
+    // smaller tensors so the job finishes in minutes
+    let fast = std::env::var("DAQ_BENCH_FAST").map(|v| v == "1").unwrap_or(false);
 
     // --- §Perf: sweep variants — naive / region-hoisted (negative
     //     result, kept for the record) / planned tiled / planned + workers
-    for (r, c) in [(512usize, 512usize), (1024, 1024)] {
+    let sweep_shapes: &[(usize, usize)] =
+        if fast { &[(256, 256)] } else { &[(512, 512), (1024, 1024)] };
+    for &(r, c) in sweep_shapes {
         let (wp, wb) = pair(r, c, (r + c) as u64);
         let mut t = Table::new(
             &format!("Sweep engines ({r}x{c}, {n_candidates} candidates)"),
@@ -142,7 +148,12 @@ fn main() {
         "Naive fused sweep throughput (16 candidates)",
         &["shape", "granularity", "mean ms", "Melem/s (xNC)"],
     );
-    for (r, c) in [(128usize, 128usize), (128, 512), (512, 512), (1024, 1024)] {
+    let naive_shapes: &[(usize, usize)] = if fast {
+        &[(128, 128), (128, 512)]
+    } else {
+        &[(128, 128), (128, 512), (512, 512), (1024, 1024)]
+    };
+    for &(r, c) in naive_shapes {
         let (wp, wb) = pair(r, c, (r + c) as u64);
         for gran in [Granularity::Block(128), Granularity::PerChannel] {
             let s0 = absmax_scales(&wp, gran);
@@ -164,8 +175,8 @@ fn main() {
     // synthetic 8-layer model; the streaming driver pays shard I/O and
     // bounded admission for O(depth) residency — this row tracks that tax
     {
-        let n_layers = 8usize;
-        let dim = 256usize;
+        let n_layers = if fast { 4 } else { 8 };
+        let dim = if fast { 128 } else { 256 };
         let mut post = Dts::new();
         let mut base = Dts::new();
         let mut rng = XorShift::new(97);
@@ -209,6 +220,7 @@ fn main() {
                 &post,
                 &base,
                 &quantizable,
+                None,
                 &base_dir.join(iter.to_string()),
                 &scfg,
             )
@@ -240,6 +252,109 @@ fn main() {
                 workers.to_string(),
                 format!("{:.2}", mean_s * 1e3),
                 format!("{:.1}", evals / mean_s / 1e6),
+                format!("{:.2}x", mem.mean_s / mean_s),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+
+    // --- §Perf: group-at-a-time streaming (transform baselines) -------
+    // SmoothQuant couples every GEMM fed by one layernorm, so the
+    // streaming driver admits whole groups through the gate; this row
+    // tracks the group-streaming tax vs the in-memory transformed
+    // pipeline (expected ≈1×: the fold is cheap, quantization dominates)
+    {
+        let n_blocks = if fast { 2 } else { 4 };
+        let dim = if fast { 128 } else { 256 };
+        let mut post = Dts::new();
+        let mut base = Dts::new();
+        let mut calib = Dts::new();
+        let mut rng = XorShift::new(131);
+        for i in 0..n_blocks {
+            for w in ["wq", "wk", "wv", "w1"] {
+                let name = format!("l{i}.{w}");
+                let wb = Tensor::new(vec![dim, dim], rng.normal_vec(dim * dim, 0.1));
+                let wp = Tensor::new(
+                    vec![dim, dim],
+                    wb.data().iter().map(|&b| b + rng.normal() * 0.002).collect(),
+                );
+                base.insert_f32(&name, &wb);
+                post.insert_f32(&name, &wp);
+            }
+            for ln in ["ln1", "ln2"] {
+                let g = Tensor::full(vec![dim], 1.0);
+                let b = Tensor::zeros(vec![dim]);
+                base.insert_f32(&format!("l{i}.{ln}.g"), &g);
+                post.insert_f32(&format!("l{i}.{ln}.g"), &g);
+                base.insert_f32(&format!("l{i}.{ln}.b"), &b);
+                post.insert_f32(&format!("l{i}.{ln}.b"), &b);
+            }
+            for first in ["wq", "w1"] {
+                let acts = Tensor::new(
+                    vec![dim],
+                    (0..dim).map(|_| rng.f32() * 2.0 + 0.05).collect(),
+                );
+                calib.insert_f32(&format!("l{i}.{first}"), &acts);
+            }
+        }
+        let quantizable = quantizable_from_source(&post);
+        let method = Method::SmoothQuant { alpha: 0.5 };
+        let gran = Granularity::Block(128);
+        let workers = cores.min(8);
+
+        let pcfg = PipelineConfig {
+            granularity: gran,
+            method: method.clone(),
+            engine: Engine::Native { workers },
+        };
+        let mem = bench("pipeline (in-memory transform)", 0, 3, || {
+            run_pipeline(&post, &base, &quantizable, Some(&calib), &pcfg, None)
+                .unwrap()
+        });
+
+        let base_dir = std::env::temp_dir()
+            .join(format!("daq_bench_gstream_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base_dir);
+        let scfg = StreamConfig::new(gran, method, workers);
+        let mut iter = 0usize;
+        let stream = bench("pipeline (streaming group)", 0, 3, || {
+            iter += 1;
+            run_stream(
+                &post,
+                &base,
+                &quantizable,
+                Some(&calib),
+                &base_dir.join(iter.to_string()),
+                &scfg,
+            )
+            .unwrap()
+        });
+        let _ = std::fs::remove_dir_all(&base_dir);
+
+        let elems = (n_blocks * 4 * dim * dim) as f64;
+        let shape = format!("{}x{dim}x{dim}", n_blocks * 4);
+        let mut t = Table::new(
+            "Transform pipeline: in-memory vs group streaming (SmoothQuant)",
+            &["variant", "workers", "mean ms", "Melem/s", "vs in-memory"],
+        );
+        for (variant, mean_s) in [
+            ("pipeline-inmemory-transform", mem.mean_s),
+            ("pipeline-streaming-group", stream.mean_s),
+        ] {
+            records.push(Record {
+                shape: shape.clone(),
+                granularity: gran.label(),
+                variant: variant.into(),
+                workers,
+                mean_ms: mean_s * 1e3,
+                melem_per_s: elems / mean_s / 1e6,
+                speedup_vs_naive: mem.mean_s / mean_s,
+            });
+            t.row(vec![
+                variant.into(),
+                workers.to_string(),
+                format!("{:.2}", mean_s * 1e3),
+                format!("{:.1}", elems / mean_s / 1e6),
                 format!("{:.2}x", mem.mean_s / mean_s),
             ]);
         }

@@ -9,7 +9,7 @@
 //! longer share the base model's numerical space, so the delta metrics
 //! are undefined for these baselines — our pipeline reports them as such.
 
-use std::collections::BTreeMap;
+use anyhow::{bail, Result};
 
 use crate::quant::{absmax_scales, quantize_with_scales, Granularity, QuantizedTensor};
 use crate::tensor::Tensor;
@@ -30,11 +30,17 @@ pub fn smoothquant_factors(w: &Tensor, act_stat: &[f32], alpha: f32) -> Vec<f32>
             wmax[r] = wmax[r].max(w.at2(r, c).abs());
         }
     }
-    (0..rows)
-        .map(|r| {
-            let a = act_stat[r].max(1e-8).powf(alpha);
-            let wpow = wmax[r].max(1e-8).powf(1.0 - alpha);
-            (a / wpow).max(1e-6)
+    smoothing_factors(act_stat, &wmax, alpha)
+}
+
+/// The SmoothQuant factor formula itself — the single source shared by
+/// the per-GEMM path and the group path, so a one-member group is
+/// bitwise-identical to [`smoothquant_factors`] by construction.
+fn smoothing_factors(act: &[f32], wmax: &[f32], alpha: f32) -> Vec<f32> {
+    act.iter()
+        .zip(wmax)
+        .map(|(&a, &w)| {
+            (a.max(1e-8).powf(alpha) / w.max(1e-8).powf(1.0 - alpha)).max(1e-6)
         })
         .collect()
 }
@@ -109,14 +115,90 @@ pub fn awq_gemm(
     (q, s, alpha)
 }
 
-/// A transformed-and-quantized model layer set with the affine folds the
-/// serving path must apply. Keyed by tensor name.
-#[derive(Default)]
-pub struct TransformedModel {
-    /// name -> dequantized weight in the *transformed* space
-    pub weights: BTreeMap<String, Tensor>,
-    /// layernorm-param name -> per-channel divisor folded into it
-    pub ln_folds: BTreeMap<String, Vec<f32>>,
+/// Which equivalent per-channel transformation a group applies.
+#[derive(Clone, Copy, Debug)]
+pub enum TransformKind {
+    /// SmoothQuant α-migration (Eq. 4): shared smoothing vector from the
+    /// combined `max|W_j|` of every group member.
+    Smooth { alpha: f32 },
+    /// AWQ-style salience search: one shared α grid-searched on the
+    /// group's first member.
+    Awq,
+}
+
+/// One layernorm-coupled group, transformed and quantized: the unit of
+/// work shared by the in-memory transformed pipeline and the group-aware
+/// streaming driver. Residency is O(this group), never O(model).
+pub struct TransformedGroup {
+    /// Shared per-input-channel smoothing factors.
+    pub s: Vec<f32>,
+    /// Quantized transformed members, in input order.
+    pub quantized: Vec<(String, QuantizedTensor)>,
+    /// The upstream layernorm affine with the inverse scaling folded in.
+    pub gain: Tensor,
+    pub bias: Tensor,
+}
+
+/// Transform and quantize one group: derive the shared smoothing vector
+/// from `members` (post weights, `[in, out]`, in group order) and the
+/// calibration statistic `act` (per input channel), rescale and
+/// AbsMax-quantize each member, and fold the inverse into the group's
+/// layernorm `gain`/`bias`. Deterministic: the f32 reduction order is
+/// fixed by the member order, so callers that agree on a
+/// [`GroupPlan`](crate::coordinator::group::GroupPlan) get bitwise-equal
+/// output.
+pub fn quantize_transform_group(
+    kind: &TransformKind,
+    members: &[(String, Tensor)],
+    act: &[f32],
+    mut gain: Tensor,
+    mut bias: Tensor,
+    granularity: Granularity,
+) -> Result<TransformedGroup> {
+    let Some((first_name, first)) = members.first() else {
+        bail!("transform group has no members");
+    };
+    let rows = first.rows();
+    if act.len() != rows {
+        bail!("calib stat len {} != in-dim {rows} for {first_name}", act.len());
+    }
+    for (name, w) in members {
+        if w.rows() != rows {
+            bail!("group member {name} has {} rows, first member has {rows}", w.rows());
+        }
+    }
+
+    let s: Vec<f32> = match kind {
+        TransformKind::Smooth { alpha } => {
+            // combined per-input-channel |W| max over all group members
+            let mut wmax = vec![0.0f32; rows];
+            for (_, w) in members {
+                for r in 0..rows {
+                    for c in 0..w.cols() {
+                        wmax[r] = wmax[r].max(w.at2(r, c).abs());
+                    }
+                }
+            }
+            smoothing_factors(act, &wmax, *alpha)
+        }
+        TransformKind::Awq => {
+            // one shared AWQ alpha per group, searched on the first member
+            let (_, s, _) = awq_gemm(first, act, granularity);
+            s
+        }
+    };
+
+    let quantized = members
+        .iter()
+        .map(|(name, w)| {
+            let w2 = scale_rows(w, &s);
+            let s0 = absmax_scales(&w2, granularity);
+            (name.clone(), quantize_with_scales(&w2, &s0, 1.0))
+        })
+        .collect();
+
+    fold_into_layernorm(gain.data_mut(), bias.data_mut(), &s);
+    Ok(TransformedGroup { s, quantized, gain, bias })
 }
 
 /// Fold the inverse smoothing into a layernorm's gain and bias so the
@@ -238,6 +320,80 @@ mod tests {
         fold_into_layernorm(&mut g, &mut b, &s);
         assert_eq!(g, vec![0.5, 2.0, 1.0]);
         assert_eq!(b, vec![0.1, -0.8, 0.0]);
+    }
+
+    #[test]
+    fn transform_group_matches_single_gemm_path() {
+        // a one-member group must reduce exactly to the per-GEMM
+        // smoothquant path (shared-vector derivation degenerates)
+        let w = rand_w(16, 8, 11);
+        let acts = rand_acts(16, 12);
+        let (q_ref, s_ref) = smoothquant_gemm(&w, &acts, 0.5, Granularity::PerChannel);
+        let out = quantize_transform_group(
+            &TransformKind::Smooth { alpha: 0.5 },
+            &[("w".to_string(), w.clone())],
+            &acts,
+            Tensor::full(vec![16], 1.0),
+            Tensor::zeros(vec![16]),
+            Granularity::PerChannel,
+        )
+        .unwrap();
+        assert_eq!(out.s, s_ref);
+        assert_eq!(out.quantized.len(), 1);
+        assert_eq!(out.quantized[0].0, "w");
+        assert_eq!(out.quantized[0].1.codes, q_ref.codes);
+        assert_eq!(out.quantized[0].1.scales.scales, q_ref.scales.scales);
+        for (gv, sv) in out.gain.data().iter().zip(&out.s) {
+            assert_eq!(*gv, 1.0 / sv);
+        }
+    }
+
+    #[test]
+    fn transform_group_shares_one_vector_across_members() {
+        let wa = rand_w(12, 6, 21);
+        let wb = rand_w(12, 10, 22);
+        let acts = rand_acts(12, 23);
+        let out = quantize_transform_group(
+            &TransformKind::Smooth { alpha: 0.5 },
+            &[("a".to_string(), wa.clone()), ("b".to_string(), wb.clone())],
+            &acts,
+            Tensor::full(vec![12], 1.0),
+            Tensor::zeros(vec![12]),
+            Granularity::PerChannel,
+        )
+        .unwrap();
+        // the shared vector uses the combined per-row max of both members
+        let mut wmax = vec![0.0f32; 12];
+        for w in [&wa, &wb] {
+            for r in 0..12 {
+                for c in 0..w.cols() {
+                    wmax[r] = wmax[r].max(w.at2(r, c).abs());
+                }
+            }
+        }
+        for r in 0..12 {
+            let want = (acts[r].max(1e-8).powf(0.5)
+                / wmax[r].max(1e-8).powf(0.5))
+            .max(1e-6);
+            assert_eq!(out.s[r], want);
+        }
+        assert_eq!(out.quantized.len(), 2);
+    }
+
+    #[test]
+    fn transform_group_rejects_bad_inputs() {
+        let w = rand_w(8, 4, 31);
+        let acts = rand_acts(4, 32); // wrong length
+        let err = quantize_transform_group(
+            &TransformKind::Awq,
+            &[("w".to_string(), w)],
+            &acts,
+            Tensor::full(vec![8], 1.0),
+            Tensor::zeros(vec![8]),
+            Granularity::PerChannel,
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("calib"), "{err:#}");
     }
 
     #[test]

@@ -20,19 +20,28 @@ USAGE: daq <command> [options]
 COMMANDS:
   quantize   Quantize a post-trained checkpoint against its base
              --artifacts DIR (default artifacts)
-             --metric absmax|sign|cos|mse (default sign)
+             --method absmax|sign|cos|mse|smoothquant|awq (default sign;
+               --metric is an alias)
              --gran block|channel|tensor|blockN (default block)
              --range lo,hi (default 0.8,1.25)
              --engine native|pjrt (default native)
              --out FILE (write quantized checkpoint)
-             --stream (bounded-memory pipeline; --out names a shard DIR;
-               sources stream layer-at-a-time, peak memory stays at
-               --depth layer pairs, not the model)
+             --stream (bounded-memory pipeline; --out names a shard DIR.
+               Delta methods stream layer-at-a-time; smoothquant/awq
+               stream group-at-a-time — the layernorm fold couples every
+               GEMM fed by one layernorm, so whole groups pass through
+               the admission gate and peak memory stays at --depth
+               units, not the model)
              --shard-mb N (output shard budget, default 256)
-             --resume (skip layers recorded in DIR/resume.jsonl)
+             --resume (skip units recorded in DIR/resume.jsonl)
              --workers N --depth K (streaming parallelism / in-flight)
              --post PATH --base PATH (checkpoint overrides; a .dts file,
                a shard directory, or a manifest.json)
+             --calib PATH (activation-stat sidecar for smoothquant/awq;
+               default ARTIFACTS/calib.dts)
+             --groups FILE (explicit transform-group manifest overriding
+               the name-pattern grouping; JSON
+               {"groups": [{"ln": NAME|null, "members": [...]}]})
   shard      Convert a monolithic .dts checkpoint into a sharded store
              --in FILE --out DIR --shard-mb N (default 256)
   eval       Score a checkpoint on the Style/General rubric
@@ -72,7 +81,12 @@ pub fn dispatch(args: &Args) -> Result<()> {
 }
 
 fn parse_method(args: &Args) -> Result<Method> {
-    let metric = args.str_or("metric", "sign");
+    // `--method` is the documented spelling; `--metric` stays as the
+    // historical alias for the delta objectives
+    let metric = args
+        .get("method")
+        .map(|s| s.to_string())
+        .unwrap_or_else(|| args.str_or("metric", "sign"));
     let range = args.range_or("range", (0.8, 1.25)).map_err(|e| anyhow!(e))?;
     Ok(match metric.as_str() {
         "absmax" => Method::AbsMax,
@@ -112,6 +126,13 @@ fn layer_table(layers: &[crate::coordinator::LayerOutcome]) -> crate::report::Ta
 fn cmd_quantize(args: &Args) -> Result<()> {
     if args.flag("stream") {
         return cmd_quantize_stream(args);
+    }
+    // refuse rather than silently ignore: the in-memory path always uses
+    // ARTIFACTS/calib.dts and the name-pattern grouping
+    for flag in ["groups", "calib"] {
+        if args.get(flag).is_some() {
+            bail!("--{flag} requires --stream");
+        }
     }
     let lab = open_lab(args)?;
     let gran = Granularity::parse(&args.str_or("gran", "block")).map_err(|e| anyhow!(e))?;
@@ -158,14 +179,6 @@ fn cmd_quantize_stream(args: &Args) -> Result<()> {
         .get("out")
         .ok_or_else(|| anyhow!("--stream needs --out DIR for the sharded store"))?;
     let dir = args.str_or("artifacts", "artifacts");
-    let post_path = args.str_or("post", &format!("{dir}/ckpt_post.dts"));
-    let base_path = args.str_or("base", &format!("{dir}/ckpt_base.dts"));
-    let post = crate::io::open_source(&post_path)?;
-    let base = crate::io::open_source(&base_path)?;
-    let quantizable = crate::experiments::quantizable_from_source(post.as_ref());
-    if quantizable.is_empty() {
-        bail!("{post_path}: no quantizable 2-D weights found");
-    }
 
     let gran = Granularity::parse(&args.str_or("gran", "block")).map_err(|e| anyhow!(e))?;
     let method = parse_method(args)?;
@@ -182,6 +195,42 @@ fn cmd_quantize_stream(args: &Args) -> Result<()> {
         .map_err(|e| anyhow!(e))? as u64)
         << 20;
     cfg.resume = args.flag("resume");
+    // refuse rather than silently ignore flags the method cannot use
+    // (validated before any checkpoint I/O so mistakes fail fast)
+    if cfg.method.delta_defined() && args.get("calib").is_some() {
+        bail!(
+            "--calib only applies to the transform baselines \
+             (smoothquant / awq); {} ignores it",
+            cfg.method.label()
+        );
+    }
+    if let Some(path) = args.get("groups") {
+        cfg.groups = Some(crate::coordinator::group::GroupManifest::load(path)?);
+    }
+
+    // the transform baselines fold per-group state and need the
+    // activation-stat sidecar
+    let calib = if !cfg.method.delta_defined() {
+        let calib_path = args.str_or("calib", &format!("{dir}/calib.dts"));
+        Some(crate::io::open_source(&calib_path)?)
+    } else {
+        None
+    };
+
+    let post_path = args.str_or("post", &format!("{dir}/ckpt_post.dts"));
+    let base_path = args.str_or("base", &format!("{dir}/ckpt_base.dts"));
+    let post = crate::io::open_source(&post_path)?;
+    // the transform baselines never read the base checkpoint (they
+    // quantize the transformed post weights); don't require one
+    let base: Box<dyn crate::io::TensorSource> = if cfg.method.delta_defined() {
+        crate::io::open_source(&base_path)?
+    } else {
+        Box::new(Dts::new())
+    };
+    let quantizable = crate::experiments::quantizable_from_source(post.as_ref());
+    if quantizable.is_empty() {
+        bail!("{post_path}: no quantizable 2-D weights found");
+    }
 
     println!(
         "streaming {} layers  method={}  gran={}  workers={}  depth={}  \
@@ -198,19 +247,28 @@ fn cmd_quantize_stream(args: &Args) -> Result<()> {
         post.as_ref(),
         base.as_ref(),
         &quantizable,
+        calib.as_deref(),
         std::path::Path::new(out_dir),
         &cfg,
     )?;
 
     println!("{}", layer_table(&out.layers).render());
-    println!(
-        "aggregate: dW_L2={:.2} SignRate={:.2}% CosSim={:.4} MSE={:.3e} ({:.2}s total)",
-        out.agg.delta_l2(),
-        100.0 * out.agg.sign_rate(),
-        out.agg.cos_sim(),
-        out.agg.mse(),
-        out.total_secs
-    );
+    if let Some(a) = &out.agg {
+        println!(
+            "aggregate: dW_L2={:.2} SignRate={:.2}% CosSim={:.4} MSE={:.3e} ({:.2}s total)",
+            a.delta_l2(),
+            100.0 * a.sign_rate(),
+            a.cos_sim(),
+            a.mse(),
+            out.total_secs
+        );
+    } else {
+        println!(
+            "aggregate: delta metrics undefined for {} ({:.2}s total)",
+            cfg.method.label(),
+            out.total_secs
+        );
+    }
     if out.resumed > 0 {
         println!("resumed: {} layers skipped via the journal", out.resumed);
     }
@@ -438,7 +496,9 @@ mod tests {
             assert!(USAGE.contains(cmd), "{cmd} missing from usage");
         }
         // the streaming mode's flags are documented
-        for flag in ["--stream", "--shard-mb", "--resume"] {
+        for flag in
+            ["--stream", "--shard-mb", "--resume", "--groups", "--calib", "--method"]
+        {
             assert!(USAGE.contains(flag), "{flag} missing from usage");
         }
     }
@@ -499,5 +559,55 @@ mod tests {
         assert!(matches!(m("smoothquant").unwrap(), Method::SmoothQuant { .. }));
         assert!(matches!(m("awq").unwrap(), Method::Awq));
         assert!(m("nonsense").is_err());
+    }
+
+    #[test]
+    fn stream_calib_with_delta_method_rejected() {
+        let args = Args::parse([
+            "quantize".to_string(),
+            "--stream".into(),
+            "--out".into(),
+            "/tmp/daq_calib_delta_test".into(),
+            "--calib".into(),
+            "x.dts".into(),
+        ])
+        .unwrap();
+        let err = dispatch(&args).unwrap_err();
+        assert!(format!("{err:#}").contains("transform baselines"), "{err:#}");
+    }
+
+    #[test]
+    fn groups_and_calib_require_stream() {
+        for flag in ["--groups", "--calib"] {
+            let args = Args::parse([
+                "quantize".to_string(),
+                flag.to_string(),
+                "x".into(),
+            ])
+            .unwrap();
+            let err = dispatch(&args).unwrap_err();
+            assert!(format!("{err:#}").contains("--stream"), "{flag}: {err:#}");
+        }
+    }
+
+    #[test]
+    fn method_flag_aliases_metric() {
+        let args = Args::parse([
+            "quantize".to_string(),
+            "--method".into(),
+            "awq".into(),
+        ])
+        .unwrap();
+        assert!(matches!(parse_method(&args).unwrap(), Method::Awq));
+        // --method wins when both are given
+        let both = Args::parse([
+            "quantize".to_string(),
+            "--method".into(),
+            "absmax".into(),
+            "--metric".into(),
+            "awq".into(),
+        ])
+        .unwrap();
+        assert!(matches!(parse_method(&both).unwrap(), Method::AbsMax));
     }
 }

@@ -1,0 +1,398 @@
+//! Transform-group planning: which tensors quantize together.
+//!
+//! Delta methods (AbsMax / scale search) treat every GEMM as an
+//! independent job. The transform-based baselines (SmoothQuant, AWQ) do
+//! not: the equivalent per-channel transformation rescales a GEMM's input
+//! channels and folds the inverse into the *upstream layernorm's* affine,
+//! so every GEMM fed by the same layernorm shares one smoothing vector
+//! and the layernorm itself must be rewritten exactly once. A
+//! [`GroupPlan`] makes that coupling explicit: it walks a checkpoint
+//! index (names + shapes only, no payloads) and partitions the
+//! quantizable tensors into [`Unit`]s — singleton layers for delta
+//! methods, layernorm-coupled groups (plus un-foldable singletons) for
+//! transform methods.
+//!
+//! Both the in-memory pipeline (`coordinator::run_pipeline`) and the
+//! streaming driver (`coordinator::stream`) schedule off the same plan,
+//! which is what lets the streaming path bound residency at
+//! O(largest group) while staying bitwise-identical to the in-memory
+//! result.
+//!
+//! Grouping is derived from the model naming convention
+//! ([`upstream_ln`]); a [`GroupManifest`] (`--groups file.json`) can
+//! override the assignment per member for checkpoints that do not follow
+//! it.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::io::TensorSource;
+use crate::util::json::Json;
+
+/// Upstream layernorm whose affine can absorb an equivalent per-channel
+/// transformation for a given GEMM (None = not foldable; such layers
+/// fall back to plain AbsMax under SmoothQuant/AWQ).
+pub fn upstream_ln(name: &str) -> Option<String> {
+    if name == "head" {
+        return Some("lnf".to_string());
+    }
+    let (layer, w) = name.split_once('.')?;
+    match w {
+        "wq" | "wk" | "wv" => Some(format!("{layer}.ln1")),
+        "w1" => Some(format!("{layer}.ln2")),
+        _ => None, // wo, w2: preceded by attention / GELU, not foldable
+    }
+}
+
+/// One schedulable unit of pipeline work.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Unit {
+    /// An independent layer: any delta-method layer, or a
+    /// transform-method layer with no foldable upstream affine.
+    Layer { name: String },
+    /// A layernorm-coupled transform group: all members share one
+    /// smoothing vector whose inverse folds into `ln`'s gain and bias.
+    Group { ln: String, members: Vec<String> },
+}
+
+impl Unit {
+    /// Stable identifier used by the resume journal.
+    pub fn label(&self) -> String {
+        match self {
+            Unit::Layer { name } => name.clone(),
+            Unit::Group { ln, .. } => format!("ln:{ln}"),
+        }
+    }
+
+    /// Quantizable member names, in quantization order.
+    pub fn members(&self) -> &[String] {
+        match self {
+            Unit::Layer { name } => std::slice::from_ref(name),
+            Unit::Group { members, .. } => members,
+        }
+    }
+
+    /// Tensor names this unit persists into an output store, in write
+    /// order: `codes`/`scales`/dequantized weight per member, then the
+    /// folded layernorm affine for groups. The streaming writer rolls
+    /// shards only between units, so these names land in finalized
+    /// shards all-or-nothing — the invariant the resume protocol checks.
+    pub fn written_names(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for m in self.members() {
+            out.push(format!("{m}.codes"));
+            out.push(format!("{m}.scales"));
+            out.push(m.clone());
+        }
+        if let Unit::Group { ln, .. } = self {
+            out.push(format!("{ln}.g"));
+            out.push(format!("{ln}.b"));
+        }
+        out
+    }
+}
+
+/// Explicit grouping override loaded from a `--groups` manifest:
+///
+/// ```json
+/// {"groups": [{"ln": "l0.ln1", "members": ["l0.wq", "l0.wk"]},
+///             {"ln": null,     "members": ["l0.w1"]}]}
+/// ```
+///
+/// Listed members are assigned to the given layernorm (or forced plain
+/// with `"ln": null`); members not listed anywhere still derive their
+/// group from the name patterns.
+#[derive(Clone, Debug, Default)]
+pub struct GroupManifest {
+    /// member name -> Some(layernorm) to fold into, None to force plain.
+    pub assign: BTreeMap<String, Option<String>>,
+}
+
+impl GroupManifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<GroupManifest> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("read groups manifest {path:?}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        GroupManifest::parse(&j).with_context(|| format!("{path:?}"))
+    }
+
+    pub fn parse(j: &Json) -> Result<GroupManifest> {
+        let groups = j
+            .get("groups")
+            .and_then(|g| g.as_arr())
+            .ok_or_else(|| anyhow!("groups manifest needs a \"groups\" array"))?;
+        let mut assign = BTreeMap::new();
+        for g in groups {
+            let ln = match g.get("ln") {
+                Some(Json::Null) | None => None,
+                Some(v) => Some(
+                    v.as_str()
+                        .ok_or_else(|| anyhow!("group \"ln\" must be a string or null"))?
+                        .to_string(),
+                ),
+            };
+            let members = g
+                .get("members")
+                .and_then(|m| m.as_arr())
+                .ok_or_else(|| anyhow!("group entry needs a \"members\" array"))?;
+            for m in members {
+                let name = m
+                    .as_str()
+                    .ok_or_else(|| anyhow!("group members must be strings"))?;
+                if assign.insert(name.to_string(), ln.clone()).is_some() {
+                    bail!("member {name:?} listed in more than one group");
+                }
+            }
+        }
+        Ok(GroupManifest { assign })
+    }
+}
+
+/// The partition of `quantizable` into schedulable [`Unit`]s, in
+/// execution (and output-store) order.
+#[derive(Clone, Debug)]
+pub struct GroupPlan {
+    pub units: Vec<Unit>,
+}
+
+impl GroupPlan {
+    /// Delta methods: every layer is its own independent unit, in
+    /// `quantizable` order.
+    pub fn delta(quantizable: &[String]) -> GroupPlan {
+        GroupPlan {
+            units: quantizable
+                .iter()
+                .map(|name| Unit::Layer { name: name.clone() })
+                .collect(),
+        }
+    }
+
+    /// Transform methods: partition into layernorm-coupled groups
+    /// (ordered by layernorm name, members in `quantizable` order),
+    /// then un-foldable layers in `quantizable` order. Validates against
+    /// the checkpoint index only — member shapes, shared input dims, and
+    /// the presence/width of each group's layernorm affine — so a bad
+    /// plan fails before any payload is read.
+    pub fn transform(
+        source: &dyn TensorSource,
+        quantizable: &[String],
+        manifest: Option<&GroupManifest>,
+    ) -> Result<GroupPlan> {
+        if let Some(m) = manifest {
+            for name in m.assign.keys() {
+                if !quantizable.contains(name) {
+                    bail!("groups manifest lists unknown quantizable tensor {name:?}");
+                }
+            }
+        }
+
+        let mut groups: BTreeMap<String, Vec<String>> = BTreeMap::new();
+        let mut plain: Vec<String> = Vec::new();
+        for name in quantizable {
+            let ln = match manifest.and_then(|m| m.assign.get(name)) {
+                Some(over) => over.clone(),
+                None => upstream_ln(name),
+            };
+            match ln {
+                Some(ln) => groups.entry(ln).or_default().push(name.clone()),
+                None => plain.push(name.clone()),
+            }
+        }
+
+        for (ln, members) in &groups {
+            // the ln affine must exist (peeked by prefix, index-only)
+            let ln_params = source.names_with_prefix(&format!("{ln}."));
+            for part in ["g", "b"] {
+                let want = format!("{ln}.{part}");
+                if !ln_params.contains(&want) {
+                    bail!(
+                        "group {ln:?}: layernorm parameter {want:?} not found \
+                         in the checkpoint (members {members:?}; tensors under \
+                         the {ln:?} prefix: {ln_params:?})"
+                    );
+                }
+            }
+            let ln_dim = match source.shape_of(&format!("{ln}.g")) {
+                Some(s) if s.len() == 1 => s[0],
+                other => bail!("group {ln:?}: {ln}.g has shape {other:?}, wanted 1-D"),
+            };
+            for m in members {
+                let shape = source
+                    .shape_of(m)
+                    .ok_or_else(|| anyhow!("group {ln:?}: member {m:?} not found"))?;
+                if shape.len() != 2 {
+                    bail!("group {ln:?}: member {m:?} has shape {shape:?}, wanted 2-D");
+                }
+                if shape[0] != ln_dim {
+                    bail!(
+                        "group {ln:?}: member {m:?} has {} input channels but \
+                         {ln}.g has width {ln_dim}",
+                        shape[0]
+                    );
+                }
+            }
+        }
+
+        let mut units: Vec<Unit> = groups
+            .into_iter()
+            .map(|(ln, members)| Unit::Group { ln, members })
+            .collect();
+        units.extend(plain.into_iter().map(|name| Unit::Layer { name }));
+        Ok(GroupPlan { units })
+    }
+
+    /// Largest member count across units (1 for a pure-delta plan).
+    pub fn max_members(&self) -> usize {
+        self.units.iter().map(|u| u.members().len()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::dts::Dts;
+    use crate::tensor::Tensor;
+
+    fn source(dim: usize) -> (Dts, Vec<String>) {
+        let mut d = Dts::new();
+        let names = vec![
+            "l0.wq".to_string(),
+            "l0.wk".into(),
+            "l0.w1".into(),
+            "l0.w2".into(),
+            "head".into(),
+        ];
+        for n in &names {
+            d.insert_f32(n, &Tensor::zeros(vec![dim, dim]));
+        }
+        for ln in ["l0.ln1", "l0.ln2", "lnf"] {
+            d.insert_f32(&format!("{ln}.g"), &Tensor::full(vec![dim], 1.0));
+            d.insert_f32(&format!("{ln}.b"), &Tensor::zeros(vec![dim]));
+        }
+        d.insert_f32("embed", &Tensor::zeros(vec![4, dim]));
+        (d, names)
+    }
+
+    #[test]
+    fn upstream_ln_patterns() {
+        assert_eq!(upstream_ln("l3.wq"), Some("l3.ln1".into()));
+        assert_eq!(upstream_ln("l3.wk"), Some("l3.ln1".into()));
+        assert_eq!(upstream_ln("l3.wv"), Some("l3.ln1".into()));
+        assert_eq!(upstream_ln("l3.w1"), Some("l3.ln2".into()));
+        assert_eq!(upstream_ln("head"), Some("lnf".into()));
+        assert_eq!(upstream_ln("l3.wo"), None);
+        assert_eq!(upstream_ln("l3.w2"), None);
+        assert_eq!(upstream_ln("embed"), None);
+    }
+
+    #[test]
+    fn delta_plan_is_one_unit_per_layer() {
+        let names = vec!["a".to_string(), "b".into()];
+        let p = GroupPlan::delta(&names);
+        assert_eq!(p.units.len(), 2);
+        assert_eq!(p.max_members(), 1);
+        assert_eq!(p.units[0], Unit::Layer { name: "a".into() });
+        assert_eq!(p.units[0].written_names(), vec!["a.codes", "a.scales", "a"]);
+    }
+
+    #[test]
+    fn transform_plan_groups_by_upstream_ln() {
+        let (d, names) = source(8);
+        let p = GroupPlan::transform(&d, &names, None).unwrap();
+        // groups sorted by ln name, then plain layers in input order
+        assert_eq!(
+            p.units,
+            vec![
+                Unit::Group {
+                    ln: "l0.ln1".into(),
+                    members: vec!["l0.wq".into(), "l0.wk".into()],
+                },
+                Unit::Group { ln: "l0.ln2".into(), members: vec!["l0.w1".into()] },
+                Unit::Group { ln: "lnf".into(), members: vec!["head".into()] },
+                Unit::Layer { name: "l0.w2".into() },
+            ]
+        );
+        assert_eq!(p.max_members(), 2);
+        let wn = p.units[0].written_names();
+        assert_eq!(
+            wn,
+            vec![
+                "l0.wq.codes",
+                "l0.wq.scales",
+                "l0.wq",
+                "l0.wk.codes",
+                "l0.wk.scales",
+                "l0.wk",
+                "l0.ln1.g",
+                "l0.ln1.b"
+            ]
+        );
+    }
+
+    #[test]
+    fn transform_plan_rejects_missing_ln() {
+        let mut d = Dts::new();
+        d.insert_f32("l0.wq", &Tensor::zeros(vec![4, 4]));
+        let err =
+            GroupPlan::transform(&d, &["l0.wq".to_string()], None).unwrap_err();
+        assert!(format!("{err:#}").contains("l0.ln1"), "{err:#}");
+    }
+
+    #[test]
+    fn transform_plan_rejects_width_mismatch() {
+        let (mut d, _) = source(8);
+        d.insert_f32("l1.wq", &Tensor::zeros(vec![6, 6]));
+        d.insert_f32("l1.ln1.g", &Tensor::full(vec![8], 1.0));
+        d.insert_f32("l1.ln1.b", &Tensor::zeros(vec![8]));
+        let err =
+            GroupPlan::transform(&d, &["l1.wq".to_string()], None).unwrap_err();
+        assert!(format!("{err:#}").contains("input channels"), "{err:#}");
+    }
+
+    #[test]
+    fn manifest_overrides_and_forces_plain() {
+        let (d, names) = source(8);
+        let m = GroupManifest::parse(
+            &Json::parse(
+                r#"{"groups": [{"ln": "l0.ln1", "members": ["l0.w2"]},
+                               {"ln": null, "members": ["head"]}]}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        let p = GroupPlan::transform(&d, &names, Some(&m)).unwrap();
+        assert_eq!(
+            p.units,
+            vec![
+                Unit::Group {
+                    ln: "l0.ln1".into(),
+                    members: vec!["l0.wq".into(), "l0.wk".into(), "l0.w2".into()],
+                },
+                Unit::Group { ln: "l0.ln2".into(), members: vec!["l0.w1".into()] },
+                Unit::Layer { name: "head".into() },
+            ]
+        );
+    }
+
+    #[test]
+    fn manifest_rejects_duplicates_and_unknown_members() {
+        let dup = Json::parse(
+            r#"{"groups": [{"ln": "a", "members": ["x"]},
+                           {"ln": "b", "members": ["x"]}]}"#,
+        )
+        .unwrap();
+        assert!(GroupManifest::parse(&dup).is_err());
+
+        let (d, names) = source(8);
+        let m = GroupManifest::parse(
+            &Json::parse(r#"{"groups": [{"ln": "l0.ln1", "members": ["ghost"]}]}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        let err = GroupPlan::transform(&d, &names, Some(&m)).unwrap_err();
+        assert!(format!("{err:#}").contains("ghost"), "{err:#}");
+    }
+}

@@ -8,6 +8,7 @@
 //! DAQ objective (§2) is one `Method` among the baselines it must be
 //! compared against (Tables 2–5).
 
+pub mod group;
 pub mod stream;
 
 use std::collections::BTreeMap;
@@ -145,21 +146,6 @@ impl PipelineOutcome {
     }
 }
 
-/// Upstream layernorm whose affine can absorb an equivalent per-channel
-/// transformation for a given GEMM (None = not foldable; such layers fall
-/// back to plain AbsMax under SmoothQuant/AWQ).
-fn upstream_ln(name: &str) -> Option<String> {
-    if name == "head" {
-        return Some("lnf".to_string());
-    }
-    let (layer, w) = name.split_once('.')?;
-    match w {
-        "wq" | "wk" | "wv" => Some(format!("{layer}.ln1")),
-        "w1" => Some(format!("{layer}.ln2")),
-        _ => None, // wo, w2: preceded by attention / GELU, not foldable
-    }
-}
-
 /// Run the pipeline over all quantizable tensors.
 ///
 /// `calib` supplies per-layer activation statistics (required by
@@ -181,13 +167,9 @@ pub fn run_pipeline(
 
     let (out, total_secs) = time(|| -> Result<_> {
         match &cfg.method {
-            Method::SmoothQuant { alpha } => run_transformed(
-                &mut params, post, quantizable, calib, cfg,
-                Transform::Smooth { alpha: *alpha },
-            ),
-            Method::Awq => run_transformed(
-                &mut params, post, quantizable, calib, cfg, Transform::Awq,
-            ),
+            Method::SmoothQuant { .. } | Method::Awq => {
+                run_transformed(&mut params, post, quantizable, calib, cfg)
+            }
             _ => run_delta_methods(&mut params, post, base, quantizable, cfg, rt),
         }
     });
@@ -324,129 +306,156 @@ fn run_delta_methods(
     Ok((layers, quantized))
 }
 
-enum Transform {
-    Smooth { alpha: f32 },
-    Awq,
+/// Outcome of one transform unit: per-member results plus the folded
+/// layernorm affine to install (for groups).
+pub(crate) struct TransformUnitOut {
+    pub outcomes: Vec<LayerOutcome>,
+    pub quantized: Vec<(String, QuantizedTensor)>,
+    /// `(ln, folded gain, folded bias)` — present for group units.
+    pub ln_fold: Option<(String, Tensor, Tensor)>,
+}
+
+/// Quantize one transform unit (a layernorm-coupled group, or a
+/// non-foldable singleton) — the unit of work shared by the in-memory
+/// transformed pipeline and the group-aware streaming driver
+/// (`coordinator::stream`). Both paths call exactly this function over
+/// the same [`group::GroupPlan`], which is what makes their outputs
+/// bitwise-identical.
+///
+/// `members` are the post weights in unit order; `act` / `ln_params`
+/// (layernorm gain, bias) are required for group units.
+pub(crate) fn quantize_transform_unit(
+    unit: &group::Unit,
+    members: &[(String, Tensor)],
+    act: Option<&[f32]>,
+    ln_params: Option<(Tensor, Tensor)>,
+    method: &Method,
+    gran: Granularity,
+) -> Result<TransformUnitOut> {
+    match unit {
+        group::Unit::Layer { name } => {
+            // no foldable upstream affine: plain AbsMax
+            let w = &members[0].1;
+            let (q, secs) = time(|| {
+                let s0 = absmax_scales(w, gran);
+                quantize_with_scales(w, &s0, 1.0)
+            });
+            Ok(TransformUnitOut {
+                outcomes: vec![LayerOutcome {
+                    name: name.clone(),
+                    shape: q.shape,
+                    alpha: 1.0,
+                    evals: 1,
+                    stats: None,
+                    secs,
+                }],
+                quantized: vec![(name.clone(), q)],
+                ln_fold: None,
+            })
+        }
+        group::Unit::Group { ln, .. } => {
+            let act = act.ok_or_else(|| {
+                anyhow!("group {ln:?}: calibration stats required")
+            })?;
+            let (gain, bias) = ln_params
+                .ok_or_else(|| anyhow!("group {ln:?}: layernorm params required"))?;
+            let kind = match method {
+                Method::SmoothQuant { alpha } => {
+                    baselines::TransformKind::Smooth { alpha: *alpha }
+                }
+                Method::Awq => baselines::TransformKind::Awq,
+                other => bail!("{} is not a transform method", other.label()),
+            };
+            let (out, secs) = time(|| {
+                baselines::quantize_transform_group(
+                    &kind, members, act, gain, bias, gran,
+                )
+            });
+            let out = out?;
+            // group-level timing, attributed evenly across the members
+            let per_member_secs = secs / members.len().max(1) as f64;
+            let outcomes = out
+                .quantized
+                .iter()
+                .map(|(name, q)| LayerOutcome {
+                    name: name.clone(),
+                    shape: q.shape,
+                    alpha: 1.0,
+                    evals: 1,
+                    stats: None,
+                    secs: per_member_secs,
+                })
+                .collect();
+            Ok(TransformUnitOut {
+                outcomes,
+                quantized: out.quantized,
+                ln_fold: Some((ln.clone(), out.gain, out.bias)),
+            })
+        }
+    }
 }
 
 /// SmoothQuant / AWQ: equivalent per-channel transformation folded into
 /// the upstream layernorm, then AbsMax quantization of the transformed
-/// weight. Layers with no foldable upstream affine quantize plainly.
+/// weight. Scheduled over the shared [`group::GroupPlan`]; layers with no
+/// foldable upstream affine quantize plainly.
 fn run_transformed(
     params: &mut Params,
     post: &Dts,
     quantizable: &[String],
     calib: Option<&Dts>,
     cfg: &PipelineConfig,
-    tf: Transform,
 ) -> Result<LayerBundle> {
     let calib = calib.ok_or_else(|| anyhow!("{} requires calibration stats",
                                             cfg.method.label()))?;
+    let plan = group::GroupPlan::transform(post, quantizable, None)?;
     let mut layers = Vec::new();
     let mut quantized = BTreeMap::new();
 
-    // group the qkv triplets so they share one smoothing vector (they
-    // share the same layernormed input)
-    let mut groups: BTreeMap<String, Vec<String>> = BTreeMap::new();
-    let mut plain: Vec<String> = Vec::new();
-    for name in quantizable {
-        match upstream_ln(name) {
-            Some(ln) => groups.entry(ln).or_default().push(name.clone()),
-            None => plain.push(name.clone()),
-        }
-    }
-
-    for (ln, members) in groups {
-        // combined per-input-channel |W| max over group members
-        let first = post.tensor_f32(&members[0])?;
-        let rows = first.rows();
-        let act = match calib.tensor_f32(&members[0]) {
-            Ok(t) => t.into_data(),
-            Err(e) => bail!("calib stats for {}: {e}", members[0]),
-        };
-        if act.len() != rows {
-            bail!("calib stat len {} != in-dim {rows} for {}", act.len(), members[0]);
-        }
-
-        let s: Vec<f32> = match tf {
-            Transform::Smooth { alpha } => {
-                let mut wmax = vec![0.0f32; rows];
-                for m in &members {
-                    let w = post.tensor_f32(m)?;
-                    for r in 0..rows {
-                        for c in 0..w.cols() {
-                            wmax[r] = wmax[r].max(w.at2(r, c).abs());
-                        }
-                    }
-                }
-                (0..rows)
-                    .map(|r| {
-                        (act[r].max(1e-8).powf(alpha)
-                            / wmax[r].max(1e-8).powf(1.0 - alpha))
-                        .max(1e-6)
-                    })
-                    .collect()
+    for unit in &plan.units {
+        let members: Vec<(String, Tensor)> = unit
+            .members()
+            .iter()
+            .map(|m| Ok((m.clone(), post.tensor_f32(m)?)))
+            .collect::<Result<_>>()?;
+        let (act, ln_params) = match unit {
+            group::Unit::Group { ln, members: names } => {
+                let act = match calib.tensor_f32(&names[0]) {
+                    Ok(t) => t.into_data(),
+                    Err(e) => bail!("calib stats for {}: {e}", names[0]),
+                };
+                let gname = format!("{ln}.g");
+                let bname = format!("{ln}.b");
+                let g = params
+                    .get(&gname)
+                    .ok_or_else(|| anyhow!("missing {gname}"))?
+                    .clone();
+                let b = params
+                    .get(&bname)
+                    .ok_or_else(|| anyhow!("missing {bname}"))?
+                    .clone();
+                (Some(act), Some((g, b)))
             }
-            Transform::Awq => {
-                // one shared AWQ alpha per group, searched on the first member
-                let (_, s, _) = baselines::awq_gemm(&first, &act, cfg.granularity);
-                s
-            }
+            group::Unit::Layer { .. } => (None, None),
         };
 
-        for m in &members {
-            let w = post.tensor_f32(m)?;
-            let ((q, secs_inner), secs) = time(|| {
-                let w2 = baselines::scale_rows(&w, &s);
-                let s0 = absmax_scales(&w2, cfg.granularity);
-                (quantize_with_scales(&w2, &s0, 1.0), 0.0f64)
-            });
-            let _ = secs_inner;
-            params.insert(m.clone(), q.dequantize());
-            layers.push(LayerOutcome {
-                name: m.clone(),
-                shape: q.shape,
-                alpha: 1.0,
-                evals: 1,
-                stats: None,
-                secs,
-            });
-            quantized.insert(m.clone(), q);
+        let out = quantize_transform_unit(
+            unit,
+            &members,
+            act.as_deref(),
+            ln_params,
+            &cfg.method,
+            cfg.granularity,
+        )?;
+        for (name, q) in out.quantized {
+            params.insert(name.clone(), q.dequantize());
+            quantized.insert(name, q);
         }
-
-        // fold the inverse into the upstream layernorm affine
-        let gname = format!("{ln}.g");
-        let bname = format!("{ln}.b");
-        let mut g = params
-            .get(&gname)
-            .ok_or_else(|| anyhow!("missing {gname}"))?
-            .clone();
-        let mut b = params
-            .get(&bname)
-            .ok_or_else(|| anyhow!("missing {bname}"))?
-            .clone();
-        baselines::fold_into_layernorm(g.data_mut(), b.data_mut(), &s);
-        params.insert(gname, g);
-        params.insert(bname, b);
-    }
-
-    // non-foldable layers: plain AbsMax
-    for name in plain {
-        let w = post.tensor_f32(&name)?;
-        let (q, secs) = time(|| {
-            let s0 = absmax_scales(&w, cfg.granularity);
-            quantize_with_scales(&w, &s0, 1.0)
-        });
-        params.insert(name.clone(), q.dequantize());
-        layers.push(LayerOutcome {
-            name,
-            shape: q.shape,
-            alpha: 1.0,
-            evals: 1,
-            stats: None,
-            secs,
-        });
-        quantized.insert(layers.last().unwrap().name.clone(), q);
+        layers.extend(out.outcomes);
+        if let Some((ln, g, b)) = out.ln_fold {
+            params.insert(format!("{ln}.g"), g);
+            params.insert(format!("{ln}.b"), b);
+        }
     }
     Ok((layers, quantized))
 }

@@ -1,33 +1,43 @@
 //! Bounded-memory streaming quantization driver.
 //!
 //! A three-stage pipeline over a sharded (or seek-based monolithic)
-//! checkpoint pair:
+//! checkpoint pair, scheduled unit-by-unit off a
+//! [`GroupPlan`](super::group::GroupPlan):
 //!
-//! 1. a **prefetch** thread pulls `(base, post)` layer pairs through a
-//!    depth-`K` admission gate,
-//! 2. the existing tiled sweep engine quantizes them on a small worker
-//!    pool (each layer runs exactly [`super::quantize_delta_layer`], the
-//!    same unit of work the in-memory pipeline uses, so results are
-//!    **bitwise-identical** to [`super::run_pipeline`]),
-//! 3. a **writer** thread streams `codes` / `scales` / dequantized
-//!    weights into output shards in fixed input order, dropping each
-//!    layer's tensors as soon as they are written.
+//! 1. a **prefetch** thread pulls whole units through a depth-`K`
+//!    admission gate — a unit is a single `(base, post)` layer pair for
+//!    the delta methods, or a layernorm-coupled transform group (the
+//!    members' post weights, the calibration statistic, and the ln
+//!    affine) for SmoothQuant/AWQ,
+//! 2. a small worker pool quantizes each unit with exactly the shared
+//!    unit of work the in-memory pipeline uses
+//!    ([`super::quantize_delta_layer`] / [`super::quantize_transform_unit`]),
+//!    so results are **bitwise-identical** to [`super::run_pipeline`],
+//! 3. a **writer** thread streams each unit's tensors (per-member
+//!    `codes` / `scales` / dequantized weights, plus the folded
+//!    layernorm affine for groups) into output shards in fixed unit
+//!    order, dropping them as soon as they are written.
 //!
-//! A layer's admission permit is held from the moment its tensors are
+//! A unit's admission permit is held from the moment its tensors are
 //! read until the writer has persisted and dropped them, so peak live
-//! tensor bytes are bounded by `K · (largest layer footprint)` — not by
-//! model size. The measured peak and the largest per-unit footprint are
+//! tensor bytes are bounded by `K · (largest unit footprint)` — for the
+//! transform baselines that is O(largest group), not O(model), which is
+//! what lets SmoothQuant/AWQ stream at all (the layernorm fold couples
+//! every GEMM in a group, so the previous per-layer driver rejected
+//! them). The measured peak and the largest per-unit footprint are
 //! reported in [`StreamOutcome`] and asserted by the residency test.
 //!
-//! **Resume.** The writer journals per-layer completion (name, α, shape,
-//! eval count, exact f64 sufficient statistics, owning shard) as JSON
-//! lines in `resume.jsonl`. Journal lines are flushed *before* the shard
-//! holding them is finalized (tmp + rename), so after an interruption
-//! every finalized shard's layers are recorded and at most a discardable
-//! `.part` payload is lost. `run_stream` with `resume = true` skips the
-//! recorded layers, reuses their journaled statistics (Rust's shortest
-//! `Display` repr round-trips f64 exactly), and converges to the same
-//! per-tensor bytes as an uninterrupted run.
+//! **Resume.** The writer journals per-unit completion (member outcomes
+//! with exact f64 sufficient statistics where defined, owning shard) as
+//! JSON lines in `resume.jsonl`. Shards roll only at unit boundaries and
+//! journal lines are flushed *before* the shard holding them is
+//! finalized (tmp + rename), so a unit's tensors land in finalized
+//! shards all-or-nothing and after an interruption every finalized
+//! shard's units are recorded; at most a discardable `.part` payload is
+//! lost. `run_stream` with `resume = true` skips the recorded units,
+//! reuses their journaled outcomes (Rust's shortest `Display` repr
+//! round-trips f64 exactly), and converges to the same per-tensor bytes
+//! as an uninterrupted run — including after an interruption mid-group.
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
 use std::io::Write;
@@ -37,6 +47,7 @@ use std::sync::{mpsc, Condvar, Mutex};
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::io::dts::DtsTensor;
 use crate::io::shard::{shard_file_name, ShardWriter};
 use crate::io::TensorSource;
 use crate::metrics::DeltaStats;
@@ -46,7 +57,8 @@ use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::timer::time;
 
-use super::{quantize_delta_layer, LayerOutcome, Method};
+use super::group::{GroupManifest, GroupPlan, Unit};
+use super::{quantize_delta_layer, quantize_transform_unit, LayerOutcome, Method};
 
 /// Journal file name inside the output directory.
 pub const RESUME_JOURNAL: &str = "resume.jsonl";
@@ -54,17 +66,21 @@ pub const RESUME_JOURNAL: &str = "resume.jsonl";
 #[derive(Clone, Debug)]
 pub struct StreamConfig {
     pub granularity: Granularity,
-    /// Must be a delta method (`AbsMax` / `Search`); the transformed
-    /// baselines fold per-group state across layers and are rejected.
+    /// Any pipeline method. Delta methods (`AbsMax` / `Search`) stream
+    /// layer-at-a-time; the transform baselines (`SmoothQuant` / `Awq`)
+    /// stream group-at-a-time and require calibration stats.
     pub method: Method,
-    /// Total worker budget, split between layer- and tile-parallelism.
+    /// Total worker budget, split between unit- and tile-parallelism.
     pub workers: usize,
-    /// K: maximum layer pairs admitted (read but not yet written).
+    /// K: maximum units admitted (read but not yet written).
     pub depth: usize,
     /// Output shard payload budget in bytes.
     pub shard_budget: u64,
-    /// Skip layers recorded in the output directory's resume journal.
+    /// Skip units recorded in the output directory's resume journal.
     pub resume: bool,
+    /// Explicit transform-group override (`--groups`); None derives the
+    /// grouping from the model naming convention.
+    pub groups: Option<GroupManifest>,
 }
 
 impl StreamConfig {
@@ -76,25 +92,29 @@ impl StreamConfig {
             depth: workers.max(2),
             shard_budget: crate::io::shard::DEFAULT_SHARD_MB << 20,
             resume: false,
+            groups: None,
         }
     }
 }
 
 /// Outcome of a streaming run.
 pub struct StreamOutcome {
-    /// Per-layer outcomes in input order (journaled values for resumed
-    /// layers, freshly computed for the rest).
+    /// Per-layer outcomes in plan order (journaled values for resumed
+    /// units, freshly computed for the rest).
     pub layers: Vec<LayerOutcome>,
-    /// Model-level aggregate, merged in fixed layer order.
-    pub agg: DeltaStats,
+    /// Model-level aggregate, merged in fixed layer order. None for the
+    /// transform baselines, whose delta metrics are undefined (paper
+    /// Table 2 footnote ‡).
+    pub agg: Option<DeltaStats>,
     /// Path of the written sharded-store manifest.
     pub manifest: PathBuf,
     /// Layers skipped via the resume journal.
     pub resumed: usize,
     /// Measured peak of concurrently live tensor bytes.
     pub peak_live_bytes: usize,
-    /// Largest single-unit footprint (layer pair + its outputs, or one
-    /// passthrough tensor). `peak_live_bytes <= depth * this` holds.
+    /// Largest single-unit footprint (a layer pair, a whole transform
+    /// group, or one passthrough tensor, plus its outputs).
+    /// `peak_live_bytes <= depth * this` holds.
     pub max_unit_bytes: usize,
     pub total_secs: f64,
 }
@@ -162,15 +182,9 @@ fn config_line(cfg: &StreamConfig) -> String {
     format!("{}\n", Json::Obj(o))
 }
 
-fn layer_line(l: &LayerOutcome, shard: &str) -> String {
-    let stats = l.stats.as_ref().expect("delta stats defined in stream mode");
-    let mut st = BTreeMap::new();
-    st.insert("agree".to_string(), Json::Num(stats.agree));
-    st.insert("dot".to_string(), Json::Num(stats.dot));
-    st.insert("nq".to_string(), Json::Num(stats.nq));
-    st.insert("npost".to_string(), Json::Num(stats.npost));
-    st.insert("sq".to_string(), Json::Num(stats.sq));
-    st.insert("n".to_string(), Json::Num(stats.n));
+/// Journal fields of one member outcome. `stats` is present only for
+/// delta methods (it is undefined for the transform baselines).
+fn outcome_fields(l: &LayerOutcome) -> BTreeMap<String, Json> {
     let mut o = BTreeMap::new();
     o.insert("layer".to_string(), Json::Str(l.name.clone()));
     o.insert("rows".to_string(), Json::Num(l.shape.0 as f64));
@@ -178,37 +192,69 @@ fn layer_line(l: &LayerOutcome, shard: &str) -> String {
     o.insert("alpha".to_string(), Json::Num(l.alpha as f64));
     o.insert("evals".to_string(), Json::Num(l.evals as f64));
     o.insert("secs".to_string(), Json::Num(l.secs));
-    o.insert("stats".to_string(), Json::Obj(st));
+    if let Some(stats) = &l.stats {
+        let mut st = BTreeMap::new();
+        st.insert("agree".to_string(), Json::Num(stats.agree));
+        st.insert("dot".to_string(), Json::Num(stats.dot));
+        st.insert("nq".to_string(), Json::Num(stats.nq));
+        st.insert("npost".to_string(), Json::Num(stats.npost));
+        st.insert("sq".to_string(), Json::Num(stats.sq));
+        st.insert("n".to_string(), Json::Num(stats.n));
+        o.insert("stats".to_string(), Json::Obj(st));
+    }
+    o
+}
+
+/// Singleton-unit journal line (delta layers and non-foldable transform
+/// layers): the member fields flattened at top level, as in PR 2.
+fn layer_line(l: &LayerOutcome, shard: &str) -> String {
+    let mut o = outcome_fields(l);
     o.insert("shard".to_string(), Json::Str(shard.to_string()));
     format!("{}\n", Json::Obj(o))
 }
 
-fn parse_layer_line(j: &Json) -> Option<LayerOutcome> {
+/// Group-unit journal line: the unit label plus one member object per
+/// quantized GEMM, all owned by one shard (units never span shards).
+fn unit_line(label: &str, outcomes: &[LayerOutcome], shard: &str) -> String {
+    let mut o = BTreeMap::new();
+    o.insert("unit".to_string(), Json::Str(label.to_string()));
+    o.insert(
+        "members".to_string(),
+        Json::Arr(outcomes.iter().map(|l| Json::Obj(outcome_fields(l))).collect()),
+    );
+    o.insert("shard".to_string(), Json::Str(shard.to_string()));
+    format!("{}\n", Json::Obj(o))
+}
+
+fn parse_outcome(j: &Json) -> Option<LayerOutcome> {
     let name = j.get("layer")?.as_str()?.to_string();
-    let st = j.get("stats")?;
-    let stats = DeltaStats {
-        agree: st.get("agree")?.as_f64()?,
-        dot: st.get("dot")?.as_f64()?,
-        nq: st.get("nq")?.as_f64()?,
-        npost: st.get("npost")?.as_f64()?,
-        sq: st.get("sq")?.as_f64()?,
-        n: st.get("n")?.as_f64()?,
+    let stats = match j.get("stats") {
+        Some(st) => Some(DeltaStats {
+            agree: st.get("agree")?.as_f64()?,
+            dot: st.get("dot")?.as_f64()?,
+            nq: st.get("nq")?.as_f64()?,
+            npost: st.get("npost")?.as_f64()?,
+            sq: st.get("sq")?.as_f64()?,
+            n: st.get("n")?.as_f64()?,
+        }),
+        None => None,
     };
     Some(LayerOutcome {
         name,
         shape: (j.get("rows")?.as_usize()?, j.get("cols")?.as_usize()?),
         alpha: j.get("alpha")?.as_f64()? as f32,
         evals: j.get("evals")?.as_usize()?,
-        stats: Some(stats),
+        stats,
         secs: j.get("secs")?.as_f64()?,
     })
 }
 
-/// Parse a journal: (config json if present, last layer line per name).
-/// Malformed lines (e.g. a truncated tail) are skipped.
-fn parse_journal(text: &str) -> (Option<Json>, BTreeMap<String, LayerOutcome>) {
+/// Parse a journal: (config json if present, last record per unit label —
+/// a singleton layer's label is its name). Malformed lines (e.g. a
+/// truncated tail) are skipped.
+fn parse_journal(text: &str) -> (Option<Json>, BTreeMap<String, Vec<LayerOutcome>>) {
     let mut config = None;
-    let mut layers = BTreeMap::new();
+    let mut units = BTreeMap::new();
     for line in text.lines() {
         let line = line.trim();
         if line.is_empty() {
@@ -217,62 +263,162 @@ fn parse_journal(text: &str) -> (Option<Json>, BTreeMap<String, LayerOutcome>) {
         let Ok(j) = Json::parse(line) else { continue };
         if let Some(c) = j.get("config") {
             config.get_or_insert_with(|| c.clone());
-        } else if let Some(l) = parse_layer_line(&j) {
-            layers.insert(l.name.clone(), l);
+        } else if let Some(label) = j.get("unit").and_then(|u| u.as_str()) {
+            let Some(members) = j.get("members").and_then(|m| m.as_arr()) else {
+                continue;
+            };
+            let outcomes: Option<Vec<LayerOutcome>> =
+                members.iter().map(parse_outcome).collect();
+            if let Some(outcomes) = outcomes {
+                units.insert(label.to_string(), outcomes);
+            }
+        } else if let Some(l) = parse_outcome(&j) {
+            units.insert(l.name.clone(), vec![l]);
         }
     }
-    (config, layers)
+    (config, units)
 }
 
 // ---------------------------------------------------------------------
 // pipeline stages
 
-/// A prefetched layer pair in flight.
-struct LayerJob {
+/// A prefetched unit in flight.
+struct UnitJob {
     idx: usize,
-    name: String,
-    wp: Tensor,
-    wb: Tensor,
-    pair_bytes: usize,
+    unit: Unit,
+    /// Member post weights (and base weights for delta methods).
+    members: Vec<(String, Tensor, Option<Tensor>)>,
+    /// Calibration statistic for group units.
+    act: Option<Vec<f32>>,
+    /// Upstream layernorm (gain, bias) for group units.
+    ln_params: Option<(Tensor, Tensor)>,
+    in_bytes: usize,
 }
 
-/// A quantized layer awaiting the writer.
+/// A quantized unit awaiting the writer.
 struct Done {
     idx: usize,
-    outcome: LayerOutcome,
-    q: QuantizedTensor,
-    deq: Tensor,
+    unit: Unit,
+    outcomes: Vec<LayerOutcome>,
+    /// Tensors to persist, in write order.
+    tensors: Vec<(String, DtsTensor)>,
     out_bytes: usize,
-    /// pair + output bytes: this layer's peak contribution.
+    /// input + output bytes: this unit's peak contribution.
     footprint: usize,
 }
 
 struct WriterOut {
     writer: ShardWriter,
-    computed: Vec<(usize, LayerOutcome)>,
+    computed: Vec<(usize, Vec<LayerOutcome>)>,
     max_unit_bytes: usize,
 }
 
+/// Transform baselines are exactly the methods whose delta metrics are
+/// undefined (`Method::delta_defined` is the single source of truth for
+/// the classification).
+fn is_transform(method: &Method) -> bool {
+    !method.delta_defined()
+}
+
+/// Quantize one unit into its output tensors — stage-2 worker body.
+/// Returns the per-member outcomes and the serialized tensors in write
+/// order.
+fn quantize_unit(
+    unit: &Unit,
+    members: Vec<(String, Tensor, Option<Tensor>)>,
+    act: Option<Vec<f32>>,
+    ln_params: Option<(Tensor, Tensor)>,
+    cfg: &StreamConfig,
+    engine: &TiledSweep,
+) -> Result<(Vec<LayerOutcome>, Vec<(String, DtsTensor)>)> {
+    if is_transform(&cfg.method) {
+        let post_members: Vec<(String, Tensor)> =
+            members.into_iter().map(|(name, wp, _)| (name, wp)).collect();
+        let out = quantize_transform_unit(
+            unit,
+            &post_members,
+            act.as_deref(),
+            ln_params,
+            &cfg.method,
+            cfg.granularity,
+        )?;
+        Ok((out.outcomes, unit_tensors(out.quantized, out.ln_fold)))
+    } else {
+        let (name, wp, wb) = members
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("delta unit with no members"))?;
+        let wb = wb.ok_or_else(|| anyhow!("{name}: missing base weight"))?;
+        let (outcome, q) =
+            quantize_delta_layer(&name, &wp, &wb, &cfg.method, cfg.granularity, engine);
+        Ok((vec![outcome], unit_tensors(vec![(name, q)], None)))
+    }
+}
+
+/// Serialize a quantized unit into the tensors the store persists.
+fn unit_tensors(
+    quantized: Vec<(String, QuantizedTensor)>,
+    ln_fold: Option<(String, Tensor, Tensor)>,
+) -> Vec<(String, DtsTensor)> {
+    let mut tensors = Vec::with_capacity(quantized.len() * 3 + 2);
+    for (name, q) in quantized {
+        let deq = q.dequantize();
+        tensors.push((
+            format!("{name}.codes"),
+            DtsTensor::U8 { shape: vec![q.shape.0, q.shape.1], data: q.codes },
+        ));
+        tensors.push((
+            format!("{name}.scales"),
+            DtsTensor::F32 {
+                shape: vec![q.scales.grid_rows, q.scales.grid_cols],
+                data: q.scales.scales,
+            },
+        ));
+        tensors.push((
+            name,
+            DtsTensor::F32 { shape: deq.shape().to_vec(), data: deq.into_data() },
+        ));
+    }
+    if let Some((ln, gain, bias)) = ln_fold {
+        tensors.push((
+            format!("{ln}.g"),
+            DtsTensor::F32 { shape: gain.shape().to_vec(), data: gain.into_data() },
+        ));
+        tensors.push((
+            format!("{ln}.b"),
+            DtsTensor::F32 { shape: bias.shape().to_vec(), data: bias.into_data() },
+        ));
+    }
+    tensors
+}
+
 /// Run the streaming pipeline: quantize `quantizable` layers of `post`
-/// against `base` into a sharded store at `out_dir` (shards + resume
-/// journal + manifest), never holding more than `cfg.depth` layer pairs
+/// (against `base` for delta methods; using `calib` activation stats for
+/// the transform baselines) into a sharded store at `out_dir` (shards +
+/// resume journal + manifest), never holding more than `cfg.depth` units
 /// in memory.
 pub fn run_stream(
     post: &dyn TensorSource,
     base: &dyn TensorSource,
     quantizable: &[String],
+    calib: Option<&dyn TensorSource>,
     out_dir: &Path,
     cfg: &StreamConfig,
 ) -> Result<StreamOutcome> {
-    if !matches!(cfg.method, Method::AbsMax | Method::Search { .. }) {
-        bail!(
-            "streaming supports delta methods only (absmax / scale search); \
-             {} folds state across layers and needs the in-memory pipeline",
-            cfg.method.label()
-        );
+    if is_transform(&cfg.method) {
+        if calib.is_none() {
+            bail!(
+                "{} requires calibration stats (pass an activation-stat \
+                 sidecar via --calib)",
+                cfg.method.label()
+            );
+        }
+    } else if cfg.groups.is_some() {
+        bail!("--groups only applies to the transform baselines (smoothquant / awq)");
     }
 
-    let (out, total_secs) = time(|| run_stream_inner(post, base, quantizable, out_dir, cfg));
+    let (out, total_secs) =
+        time(|| run_stream_inner(post, base, quantizable, calib, out_dir, cfg));
     let mut out = out?;
     out.total_secs = total_secs;
     Ok(out)
@@ -282,13 +428,42 @@ fn run_stream_inner(
     post: &dyn TensorSource,
     base: &dyn TensorSource,
     quantizable: &[String],
+    calib: Option<&dyn TensorSource>,
     out_dir: &Path,
     cfg: &StreamConfig,
 ) -> Result<StreamOutcome> {
+    let plan = if is_transform(&cfg.method) {
+        GroupPlan::transform(post, quantizable, cfg.groups.as_ref())?
+    } else {
+        GroupPlan::delta(quantizable)
+    };
+
+    // index-only calibration validation: a sidecar missing a group's
+    // stat must fail here, at plan time, not hours into the run when the
+    // prefetch thread finally reaches that group
+    if let Some(calib) = calib {
+        for unit in &plan.units {
+            let Unit::Group { ln, members } = unit else { continue };
+            let first = &members[0];
+            let rows = post.shape_of(first).map(|s| s[0]).unwrap_or(0);
+            match calib.shape_of(first) {
+                Some(s) if s.len() == 1 && s[0] == rows => {}
+                Some(s) => bail!(
+                    "group {ln:?}: calib stat for {first:?} has shape {s:?}, \
+                     wanted [{rows}] (one value per input channel)"
+                ),
+                None => bail!(
+                    "group {ln:?}: calibration sidecar has no stat for first \
+                     member {first:?}"
+                ),
+            }
+        }
+    }
+
     let journal_path = out_dir.join(RESUME_JOURNAL);
 
     // -- writer + resume state -----------------------------------------
-    let (mut shard_writer, resumed_layers) = if cfg.resume {
+    let (mut shard_writer, resumed_units) = if cfg.resume {
         let w = ShardWriter::resume(out_dir, cfg.shard_budget)?;
         let text = std::fs::read_to_string(&journal_path).unwrap_or_default();
         let (config, mut recorded) = parse_journal(&text);
@@ -304,27 +479,42 @@ fn run_stream_inner(
                 );
             }
         }
-        // a journaled layer is resumable iff all three tensors survive in
-        // finalized shards; partial presence means a corrupted store
+        // a journaled unit is resumable iff every tensor it writes
+        // survives in finalized shards; partial presence means a
+        // corrupted store (units never span shards, so an interrupted
+        // writer cannot produce one honestly)
         let mut resumed = BTreeMap::new();
-        for name in quantizable {
-            let parts =
-                [format!("{name}.codes"), format!("{name}.scales"), name.clone()];
-            let present = parts.iter().filter(|p| w.contains(p)).count();
-            match (present, recorded.remove(name)) {
-                (3, Some(outcome)) => {
-                    resumed.insert(name.clone(), outcome);
+        for unit in &plan.units {
+            let label = unit.label();
+            let written = unit.written_names();
+            let present = written.iter().filter(|p| w.contains(p)).count();
+            if present == written.len() {
+                match recorded.remove(&label) {
+                    Some(outcomes) => {
+                        let got: Vec<&String> =
+                            outcomes.iter().map(|o| &o.name).collect();
+                        let want: Vec<&String> = unit.members().iter().collect();
+                        if got != want {
+                            bail!(
+                                "{out_dir:?}: unit {label:?} was journaled with \
+                                 members {got:?} but the current plan expects \
+                                 {want:?} — the grouping changed; remove the \
+                                 directory and rerun"
+                            );
+                        }
+                        resumed.insert(label, outcomes);
+                    }
+                    None => bail!(
+                        "{out_dir:?}: unit {label:?} is present in shards but \
+                         missing from the resume journal; remove the directory \
+                         and rerun"
+                    ),
                 }
-                (0, _) => {}
-                (3, None) => bail!(
-                    "{out_dir:?}: layer {name:?} is present in shards but \
-                     missing from the resume journal; remove the directory \
-                     and rerun"
-                ),
-                _ => bail!(
-                    "{out_dir:?}: layer {name:?} is only partially present \
-                     in shards; remove the directory and rerun"
-                ),
+            } else if present != 0 {
+                bail!(
+                    "{out_dir:?}: unit {label:?} is only partially present in \
+                     shards; remove the directory and rerun"
+                );
             }
         }
         (w, resumed)
@@ -342,21 +532,22 @@ fn run_stream_inner(
         std::fs::File::create(&journal_path)
             .with_context(|| format!("create {journal_path:?}"))?
     };
-    if !cfg.resume || resumed_layers.is_empty() {
+    if !cfg.resume || resumed_units.is_empty() {
         journal.write_all(config_line(cfg).as_bytes())?;
         journal.flush()?;
     }
 
     // -- plan the work -------------------------------------------------
-    let resumed_count = resumed_layers.len();
-    let mut slots: Vec<Option<LayerOutcome>> = Vec::with_capacity(quantizable.len());
-    let mut todo: Vec<(usize, String)> = Vec::new();
-    for (idx, name) in quantizable.iter().enumerate() {
-        match resumed_layers.get(name) {
-            Some(outcome) => slots.push(Some(outcome.clone())),
+    let resumed_count: usize = resumed_units.values().map(|v| v.len()).sum();
+    let mut slots: Vec<Option<Vec<LayerOutcome>>> =
+        Vec::with_capacity(plan.units.len());
+    let mut todo: Vec<(usize, Unit)> = Vec::new();
+    for (idx, unit) in plan.units.iter().enumerate() {
+        match resumed_units.get(&unit.label()) {
+            Some(outcomes) => slots.push(Some(outcomes.clone())),
             None => {
                 slots.push(None);
-                todo.push((idx, name.clone()));
+                todo.push((idx, unit.clone()));
             }
         }
     }
@@ -365,13 +556,14 @@ fn run_stream_inner(
     let depth = cfg.depth.max(1);
     let outer = cfg.workers.clamp(1, depth.min(todo.len().max(1)));
     let intra = (cfg.workers / outer).max(1);
+    let delta_method = !is_transform(&cfg.method);
 
     let gate = Gate::new(depth);
     let live = AtomicUsize::new(0);
     let peak = AtomicUsize::new(0);
     let quant_set: BTreeSet<&String> = quantizable.iter().collect();
 
-    let (job_tx, job_rx) = mpsc::channel::<Result<LayerJob>>();
+    let (job_tx, job_rx) = mpsc::channel::<Result<UnitJob>>();
     let job_rx = Mutex::new(job_rx);
     let (done_tx, done_rx) = mpsc::channel::<Result<Done>>();
 
@@ -379,25 +571,53 @@ fn run_stream_inner(
     let shard_budget = cfg.shard_budget;
 
     let writer_out: Result<WriterOut> = std::thread::scope(|s| {
-        // stage 1: prefetch (base, post) pairs through the gate
+        // stage 1: prefetch whole units through the gate
         s.spawn(move || {
-            for (idx, name) in todo {
+            for (idx, unit) in todo {
                 if !gate.acquire() {
                     return; // aborted by the writer
                 }
-                let msg = (|| -> Result<LayerJob> {
-                    let wp = post.tensor_f32(&name)?;
-                    let wb = base.tensor_f32(&name)?;
-                    if wp.shape() != wb.shape() {
-                        bail!(
-                            "{name}: post {:?} vs base {:?}",
-                            wp.shape(),
-                            wb.shape()
-                        );
+                let msg = (|| -> Result<UnitJob> {
+                    let mut in_bytes = 0usize;
+                    let mut members = Vec::with_capacity(unit.members().len());
+                    for name in unit.members() {
+                        let wp = post.tensor_f32(name)?;
+                        let wb = if delta_method {
+                            let wb = base.tensor_f32(name)?;
+                            if wp.shape() != wb.shape() {
+                                bail!(
+                                    "{name}: post {:?} vs base {:?}",
+                                    wp.shape(),
+                                    wb.shape()
+                                );
+                            }
+                            in_bytes += wb.len() * 4;
+                            Some(wb)
+                        } else {
+                            None
+                        };
+                        in_bytes += wp.len() * 4;
+                        members.push((name.clone(), wp, wb));
                     }
-                    let pair_bytes = (wp.len() + wb.len()) * 4;
-                    add_live(live, peak, pair_bytes);
-                    Ok(LayerJob { idx, name: name.clone(), wp, wb, pair_bytes })
+                    let (act, ln_params) = match &unit {
+                        Unit::Group { ln, members: names } => {
+                            let calib = calib
+                                .ok_or_else(|| anyhow!("calib source required"))?;
+                            let act = calib
+                                .tensor_f32(&names[0])
+                                .map_err(|e| {
+                                    anyhow!("calib stats for {}: {e}", names[0])
+                                })?
+                                .into_data();
+                            let gain = post.tensor_f32(&format!("{ln}.g"))?;
+                            let bias = post.tensor_f32(&format!("{ln}.b"))?;
+                            in_bytes += (act.len() + gain.len() + bias.len()) * 4;
+                            (Some(act), Some((gain, bias)))
+                        }
+                        Unit::Layer { .. } => (None, None),
+                    };
+                    add_live(live, peak, in_bytes);
+                    Ok(UnitJob { idx, unit: unit.clone(), members, act, ln_params, in_bytes })
                 })();
                 let stop = msg.is_err();
                 if job_tx.send(msg).is_err() || stop {
@@ -421,29 +641,28 @@ fn run_stream_inner(
                         }
                         Ok(Ok(j)) => j,
                     };
-                    let LayerJob { idx, name, wp, wb, pair_bytes } = job;
-                    let (outcome, q) = quantize_delta_layer(
-                        &name,
-                        &wp,
-                        &wb,
-                        &cfg.method,
-                        cfg.granularity,
-                        &engine,
+                    let UnitJob { idx, unit, members, act, ln_params, in_bytes } = job;
+                    let quantized = quantize_unit(
+                        &unit, members, act, ln_params, cfg, &engine,
                     );
-                    let deq = q.dequantize();
-                    let out_bytes =
-                        q.codes.len() + q.scales.scales.len() * 4 + deq.len() * 4;
+                    let (outcomes, tensors) = match quantized {
+                        Ok(v) => v,
+                        Err(e) => {
+                            let _ = done_tx.send(Err(e));
+                            break;
+                        }
+                    };
+                    let out_bytes: usize =
+                        tensors.iter().map(|(_, t)| t.nbytes()).sum();
                     add_live(live, peak, out_bytes);
-                    drop(wp);
-                    drop(wb);
-                    sub_live(live, pair_bytes);
+                    sub_live(live, in_bytes);
                     let d = Done {
                         idx,
-                        outcome,
-                        q,
-                        deq,
+                        unit,
+                        outcomes,
+                        tensors,
                         out_bytes,
-                        footprint: pair_bytes + out_bytes,
+                        footprint: in_bytes + out_bytes,
                     };
                     if done_tx.send(Ok(d)).is_err() {
                         break;
@@ -453,7 +672,7 @@ fn run_stream_inner(
         }
         drop(done_tx);
 
-        // stage 3: write completed layers in fixed input order
+        // stage 3: write completed units in fixed plan order
         let h = s.spawn(move || -> Result<WriterOut> {
             let r = write_stage(
                 done_rx,
@@ -483,21 +702,26 @@ fn run_stream_inner(
     });
     let WriterOut { writer, computed, max_unit_bytes } = writer_out?;
 
-    for (idx, outcome) in computed {
-        slots[idx] = Some(outcome);
+    for (idx, outcomes) in computed {
+        slots[idx] = Some(outcomes);
     }
-    let layers: Vec<LayerOutcome> = slots
-        .into_iter()
-        .enumerate()
-        .map(|(i, s)| {
-            s.ok_or_else(|| anyhow!("layer {:?} was never quantized", quantizable[i]))
-        })
-        .collect::<Result<_>>()?;
+    let mut layers: Vec<LayerOutcome> = Vec::with_capacity(quantizable.len());
+    for (i, slot) in slots.into_iter().enumerate() {
+        let outcomes = slot.ok_or_else(|| {
+            anyhow!("unit {:?} was never quantized", plan.units[i].label())
+        })?;
+        layers.extend(outcomes);
+    }
 
-    let mut agg = DeltaStats::default();
-    for l in &layers {
-        agg = agg.merge(l.stats.as_ref().expect("delta stats defined"));
-    }
+    let agg = if cfg.method.delta_defined() {
+        let mut a = DeltaStats::default();
+        for l in &layers {
+            a = a.merge(l.stats.as_ref().expect("delta stats defined"));
+        }
+        Some(a)
+    } else {
+        None
+    };
 
     // store-level metadata, mirroring `PipelineOutcome::write_checkpoint`
     let mut meta = post.meta().clone();
@@ -519,8 +743,9 @@ fn run_stream_inner(
     })
 }
 
-/// The writer stage body: drain completed layers, persist them in input
-/// order (journal lines flush before each shard roll), then stream the
+/// The writer stage body: drain completed units, persist them in plan
+/// order (journal lines flush before each shard roll; shards roll only at
+/// unit boundaries, so a unit never spans shards), then stream the
 /// non-quantizable passthrough tensors. Returns the computed outcomes and
 /// the largest single-unit footprint.
 #[allow(clippy::too_many_arguments)]
@@ -535,9 +760,9 @@ fn write_stage(
     gate: &Gate,
     live: &AtomicUsize,
     peak: &AtomicUsize,
-) -> Result<(Vec<(usize, LayerOutcome)>, usize)> {
+) -> Result<(Vec<(usize, Vec<LayerOutcome>)>, usize)> {
     let mut pending: BTreeMap<usize, Done> = BTreeMap::new();
-    let mut computed: Vec<(usize, LayerOutcome)> = Vec::new();
+    let mut computed: Vec<(usize, Vec<LayerOutcome>)> = Vec::new();
     let mut pending_lines = String::new();
     let mut max_unit = 0usize;
 
@@ -557,39 +782,22 @@ fn write_stage(
         while let Some(&idx) = expected.front() {
             let Some(d) = pending.remove(&idx) else { break };
             expected.pop_front();
-            let Done { outcome, q, deq, out_bytes, footprint, .. } = d;
+            let Done { unit, outcomes, tensors, out_bytes, footprint, .. } = d;
             max_unit = max_unit.max(footprint);
-            let name = outcome.name.clone();
-            writer.append(
-                &format!("{name}.codes"),
-                &crate::io::dts::DtsTensor::U8 {
-                    shape: vec![q.shape.0, q.shape.1],
-                    data: q.codes,
-                },
-            )?;
-            writer.append(
-                &format!("{name}.scales"),
-                &crate::io::dts::DtsTensor::F32 {
-                    shape: vec![q.scales.grid_rows, q.scales.grid_cols],
-                    data: q.scales.scales,
-                },
-            )?;
-            writer.append(
-                &name,
-                &crate::io::dts::DtsTensor::F32 {
-                    shape: deq.shape().to_vec(),
-                    data: deq.into_data(),
-                },
-            )?;
-            pending_lines.push_str(&layer_line(
-                &outcome,
-                &shard_file_name(writer.current_shard_index()),
-            ));
-            computed.push((idx, outcome));
+            for (name, t) in &tensors {
+                writer.append(name, t)?;
+            }
+            let shard = shard_file_name(writer.current_shard_index());
+            pending_lines.push_str(&match &unit {
+                Unit::Layer { .. } => layer_line(&outcomes[0], &shard),
+                Unit::Group { .. } => unit_line(&unit.label(), &outcomes, &shard),
+            });
+            computed.push((idx, outcomes));
+            drop(tensors);
             sub_live(live, out_bytes);
             gate.release();
             if writer.current_bytes() >= shard_budget {
-                // journal before finalizing: a finalized shard's layers
+                // journal before finalizing: a finalized shard's units
                 // are always recorded (resume safety invariant)
                 flush_lines(journal, &mut pending_lines)?;
                 writer.roll()?;
@@ -598,12 +806,13 @@ fn write_stage(
     }
     if !expected.is_empty() {
         bail!(
-            "{} layers were never quantized (worker terminated early)",
+            "{} units were never quantized (worker terminated early)",
             expected.len()
         );
     }
 
-    // passthrough: every non-quantizable tensor of the post checkpoint,
+    // passthrough: every non-quantizable tensor of the post checkpoint
+    // not already written by a unit (folded layernorm affines are),
     // streamed one at a time
     for name in post.names() {
         if quant_set.contains(&name) || writer.contains(&name) {
@@ -652,7 +861,7 @@ mod tests {
     }
 
     #[test]
-    fn transformed_methods_rejected() {
+    fn transform_stream_requires_calib() {
         let d = crate::io::dts::Dts::new();
         let cfg = StreamConfig::new(
             Granularity::PerChannel,
@@ -660,9 +869,21 @@ mod tests {
             1,
         );
         let dir = std::env::temp_dir()
-            .join(format!("daq_stream_reject_{}", std::process::id()));
-        let err = run_stream(&d, &d, &[], &dir, &cfg).unwrap_err();
-        assert!(format!("{err:#}").contains("delta methods"), "{err:#}");
+            .join(format!("daq_stream_nocalib_{}", std::process::id()));
+        let err = run_stream(&d, &d, &[], None, &dir, &cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("calibration"), "{err:#}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn groups_manifest_rejected_for_delta_methods() {
+        let d = crate::io::dts::Dts::new();
+        let mut cfg = StreamConfig::new(Granularity::PerChannel, Method::AbsMax, 1);
+        cfg.groups = Some(GroupManifest::default());
+        let dir = std::env::temp_dir()
+            .join(format!("daq_stream_groups_delta_{}", std::process::id()));
+        let err = run_stream(&d, &d, &[], None, &dir, &cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("--groups"), "{err:#}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -685,7 +906,7 @@ mod tests {
         };
         let line = layer_line(&outcome, "shard_00003.dts");
         let j = Json::parse(line.trim()).unwrap();
-        let back = parse_layer_line(&j).unwrap();
+        let back = parse_outcome(&j).unwrap();
         assert_eq!(back.name, outcome.name);
         assert_eq!(back.shape, outcome.shape);
         assert_eq!(back.alpha.to_bits(), outcome.alpha.to_bits());
@@ -702,6 +923,36 @@ mod tests {
             assert_eq!(x.to_bits(), y.to_bits());
         }
         assert_eq!(j.get("shard").unwrap().as_str(), Some("shard_00003.dts"));
+    }
+
+    #[test]
+    fn journal_unit_line_roundtrips_members_without_stats() {
+        let outcomes = vec![
+            LayerOutcome {
+                name: "l0.wq".into(),
+                shape: (32, 32),
+                alpha: 1.0,
+                evals: 1,
+                stats: None,
+                secs: 0.5,
+            },
+            LayerOutcome {
+                name: "l0.wk".into(),
+                shape: (32, 16),
+                alpha: 1.0,
+                evals: 1,
+                stats: None,
+                secs: 0.5,
+            },
+        ];
+        let line = unit_line("ln:l0.ln1", &outcomes, "shard_00001.dts");
+        let (_, units) = parse_journal(&line);
+        let back = units.get("ln:l0.ln1").unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].name, "l0.wq");
+        assert_eq!(back[1].name, "l0.wk");
+        assert_eq!(back[1].shape, (32, 16));
+        assert!(back.iter().all(|o| o.stats.is_none()));
     }
 
     #[test]
@@ -722,15 +973,29 @@ mod tests {
             },
             "shard_00000.dts",
         );
+        let unit = unit_line(
+            "ln:l0.ln1",
+            &[LayerOutcome {
+                name: "l0.wq".into(),
+                shape: (4, 4),
+                alpha: 1.0,
+                evals: 1,
+                stats: None,
+                secs: 0.0,
+            }],
+            "shard_00001.dts",
+        );
         let text = format!(
-            "{}{}{}",
+            "{}{}{}{}",
             config_line(&cfg),
             full,
-            &full[..full.len() / 2] // torn write at the tail
+            unit,
+            &unit[..unit.len() / 2] // torn write at the tail
         );
-        let (config, layers) = parse_journal(&text);
+        let (config, units) = parse_journal(&text);
         assert!(config.is_some());
-        assert_eq!(layers.len(), 1);
-        assert!(layers.contains_key("a"));
+        assert_eq!(units.len(), 2);
+        assert!(units.contains_key("a"));
+        assert!(units.contains_key("ln:l0.ln1"));
     }
 }

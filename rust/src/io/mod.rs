@@ -33,6 +33,16 @@ pub trait TensorSource: Sync {
     /// Dims of a stored tensor without reading its payload.
     fn shape_of(&self, name: &str) -> Option<Vec<usize>>;
 
+    /// Peek-by-prefix: names starting with `prefix`, in container order,
+    /// from the index alone (no payloads). The group planner uses this to
+    /// locate a layernorm's affine parameters next to its GEMMs.
+    fn names_with_prefix(&self, prefix: &str) -> Vec<String> {
+        self.names()
+            .into_iter()
+            .filter(|n| n.starts_with(prefix))
+            .collect()
+    }
+
     /// Read one tensor (seek-based backends load only this payload).
     fn read_tensor(&self, name: &str) -> Result<DtsTensor>;
 

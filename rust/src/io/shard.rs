@@ -175,7 +175,10 @@ struct ShardRecord {
 /// residency is O(index), not O(shard). `append` never splits a decision
 /// point: the *caller* chooses the roll boundaries by calling
 /// [`ShardWriter::maybe_roll`] between logical units (the streaming
-/// pipeline rolls between layers so a layer never spans shards; the
+/// pipeline rolls between scheduling units — a single layer for delta
+/// methods, a whole layernorm-coupled transform group for
+/// SmoothQuant/AWQ — so a unit never spans shards and lands finalized
+/// all-or-nothing, the invariant its resume protocol checks; the
 /// `daq shard` converter rolls between tensors). A shard may therefore
 /// overshoot the budget by up to one unit.
 pub struct ShardWriter {

@@ -4,12 +4,16 @@
 //!
 //! The acceptance invariants of the streaming subsystem:
 //! 1. output is **bitwise-identical** to the in-memory `run_pipeline`
-//!    for the same (method, granularity, seed), over both sharded and
-//!    monolithic seek-based sources;
-//! 2. peak live tensor bytes stay bounded by `depth x (largest unit)`,
-//!    not by model size;
+//!    for the same (method, granularity, seed) — for the delta methods
+//!    *and* for the layernorm-coupled transform baselines
+//!    (SmoothQuant/AWQ), over both sharded and monolithic seek-based
+//!    sources;
+//! 2. peak live tensor bytes stay bounded by `depth x (largest unit)` —
+//!    a layer pair for delta methods, a whole transform group for the
+//!    baselines — not by model size;
 //! 3. an interrupted run resumed from a truncated journal skips the
-//!    completed layers and converges to the same per-tensor bytes.
+//!    completed units and converges to the same per-tensor bytes,
+//!    including when the interruption falls mid-group.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -61,6 +65,79 @@ fn fake_ckpts(seed: u64, n_layers: usize, dim: usize) -> (Dts, Dts) {
     (post, base)
 }
 
+fn pair_into(
+    post: &mut Dts,
+    base: &mut Dts,
+    rng: &mut XorShift,
+    name: &str,
+    r: usize,
+    c: usize,
+) {
+    let wb = Tensor::new(vec![r, c], rng.normal_vec(r * c, 0.1));
+    let wp = Tensor::new(
+        vec![r, c],
+        wb.data().iter().map(|&b| b + rng.normal() * 0.002).collect(),
+    );
+    base.insert_f32(name, &wb);
+    post.insert_f32(name, &wp);
+}
+
+/// Synthetic transformer-shaped (post, base, calib) triple for the
+/// transform baselines: each block has a qkv triplet fed by ln1, a w1
+/// fed by ln2, and a non-foldable w2; plus head/lnf, an embedding, and
+/// an activation-stat sidecar keyed by each group's first member.
+fn fake_group_ckpts(seed: u64, n_blocks: usize, dim: usize) -> (Dts, Dts, Dts) {
+    let mut rng = XorShift::new(seed);
+    let mut base = Dts::new();
+    let mut post = Dts::new();
+    let mut calib = Dts::new();
+    base.meta.insert("vocab".into(), "64".into());
+    post.meta.insert("vocab".into(), "64".into());
+    for i in 0..n_blocks {
+        for w in ["wq", "wk", "wv"] {
+            pair_into(&mut post, &mut base, &mut rng, &format!("l{i}.{w}"), dim, dim);
+        }
+        pair_into(&mut post, &mut base, &mut rng, &format!("l{i}.w1"), dim, dim + 8);
+        pair_into(&mut post, &mut base, &mut rng, &format!("l{i}.w2"), dim + 8, dim);
+        for ln in ["ln1", "ln2"] {
+            let g = Tensor::new(
+                vec![dim],
+                (0..dim).map(|_| 1.0 + rng.normal() * 0.05).collect(),
+            );
+            let b = Tensor::new(
+                vec![dim],
+                (0..dim).map(|_| rng.normal() * 0.1).collect(),
+            );
+            base.insert_f32(&format!("l{i}.{ln}.g"), &g);
+            post.insert_f32(&format!("l{i}.{ln}.g"), &g);
+            base.insert_f32(&format!("l{i}.{ln}.b"), &b);
+            post.insert_f32(&format!("l{i}.{ln}.b"), &b);
+        }
+        for first in ["wq", "w1"] {
+            let acts = Tensor::new(
+                vec![dim],
+                (0..dim).map(|_| rng.f32() * 2.0 + 0.05).collect(),
+            );
+            calib.insert_f32(&format!("l{i}.{first}"), &acts);
+        }
+    }
+    pair_into(&mut post, &mut base, &mut rng, "head", dim, 16);
+    let g = Tensor::full(vec![dim], 1.0);
+    let b = Tensor::zeros(vec![dim]);
+    for d in [&mut base, &mut post] {
+        d.insert_f32("lnf.g", &g);
+        d.insert_f32("lnf.b", &b);
+    }
+    calib.insert_f32(
+        "head",
+        &Tensor::new(vec![dim], (0..dim).map(|_| rng.f32() + 0.1).collect()),
+    );
+    let embed = Tensor::new(vec![16, dim], rng.normal_vec(16 * dim, 0.1));
+    base.insert_f32("embed", &embed);
+    post.insert_f32("embed", &embed);
+    (post, base, calib)
+}
+
 fn assert_bits_eq(a: &DtsTensor, b: &DtsTensor, what: &str) {
     match (a, b) {
         (
@@ -80,6 +157,7 @@ fn assert_bits_eq(a: &DtsTensor, b: &DtsTensor, what: &str) {
 fn run_both(
     post: &Dts,
     base: &Dts,
+    calib: Option<&Dts>,
     gran: Granularity,
     method: Method,
     tag: &str,
@@ -92,7 +170,7 @@ fn run_both(
         method: method.clone(),
         engine: Engine::Native { workers: 2 },
     };
-    let mem = run_pipeline(post, base, &quantizable, None, &cfg, None).unwrap();
+    let mem = run_pipeline(post, base, &quantizable, calib, &cfg, None).unwrap();
 
     // post goes through a sharded store, base through the seek-based
     // monolithic reader — both streaming source backends in one run
@@ -111,14 +189,84 @@ fn run_both(
     let _ = std::fs::remove_dir_all(&out_dir);
     let mut scfg = StreamConfig::new(gran, method, 2);
     scfg.shard_budget = 8192;
-    let streamed =
-        run_stream(&post_src, &base_src, &quantizable, &out_dir, &scfg).unwrap();
+    let streamed = run_stream(
+        &post_src,
+        &base_src,
+        &quantizable,
+        calib.map(|c| c as &dyn daq::io::TensorSource),
+        &out_dir,
+        &scfg,
+    )
+    .unwrap();
     let store = ShardedDts::open(&out_dir).unwrap();
 
     std::fs::remove_file(&post_file).unwrap();
     std::fs::remove_file(&base_file).unwrap();
     std::fs::remove_dir_all(&post_shards).unwrap();
     (mem, streamed, store)
+}
+
+/// Shared equality assertions: per-layer outcomes, stored tensors, the
+/// sidecar dequant loader, and store metadata all match the in-memory
+/// pipeline bitwise.
+fn assert_store_matches(
+    mem: &PipelineOutcome,
+    streamed: &daq::coordinator::stream::StreamOutcome,
+    store: &ShardedDts,
+    gran: Granularity,
+) {
+    assert_eq!(mem.layers.len(), streamed.layers.len());
+    for (a, b) in mem.layers.iter().zip(&streamed.layers) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.alpha.to_bits(), b.alpha.to_bits(), "{}", a.name);
+        assert_eq!(a.evals, b.evals);
+        assert_eq!(a.stats, b.stats, "{}", a.name);
+    }
+    assert_eq!(mem.agg, streamed.agg);
+
+    // stored tensors identical: codes, scales, dequantized weights
+    for (name, q) in &mem.quantized {
+        let codes = store.read_tensor(&format!("{name}.codes")).unwrap();
+        assert_bits_eq(
+            &codes,
+            &DtsTensor::U8 {
+                shape: vec![q.shape.0, q.shape.1],
+                data: q.codes.clone(),
+            },
+            &format!("{name}.codes"),
+        );
+        let scales = store.read_tensor(&format!("{name}.scales")).unwrap();
+        assert_bits_eq(
+            &scales,
+            &DtsTensor::F32 {
+                shape: vec![q.scales.grid_rows, q.scales.grid_cols],
+                data: q.scales.scales.clone(),
+            },
+            &format!("{name}.scales"),
+        );
+    }
+    // every parameter (quantized + folded layernorms + passthrough)
+    // matches the in-memory outcome via the shared sidecar dequant loader
+    let loaded = load_params_dequant_source(store).unwrap();
+    assert_eq!(loaded.len(), mem.params.len());
+    for (name, want) in &mem.params {
+        let got = loaded.get(name).unwrap_or_else(|| panic!("missing {name}"));
+        assert_eq!(got.shape(), want.shape(), "{name}");
+        for (x, y) in got.data().iter().zip(want.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "{name}");
+        }
+    }
+    // metadata mirrors write_checkpoint's
+    assert_eq!(store.meta.get("quantized").map(|s| s.as_str()), Some("fp8_e4m3"));
+    for l in &mem.layers {
+        assert_eq!(
+            store.meta.get(&format!("alpha.{}", l.name)),
+            Some(&format!("{}", l.alpha)),
+            "{}",
+            l.name
+        );
+        assert_eq!(store.meta.get(&format!("gran.{}", l.name)), Some(&gran.label()));
+    }
 }
 
 #[test]
@@ -140,67 +288,44 @@ fn streaming_matches_in_memory_pipeline_bitwise() {
             let (post, base) = fake_ckpts(11, 5, 32);
             let tag = format!("eq{gi}{mi}");
             let (mem, streamed, store) =
-                run_both(&post, &base, gran, method, &tag);
+                run_both(&post, &base, None, gran, method, &tag);
+            assert_store_matches(&mem, &streamed, &store, gran);
+            drop(store);
+            std::fs::remove_dir_all(tmp(&format!("{tag}_out"))).unwrap();
+        }
+    }
+}
 
-            // per-layer search results identical
-            assert_eq!(mem.layers.len(), streamed.layers.len());
-            for (a, b) in mem.layers.iter().zip(&streamed.layers) {
-                assert_eq!(a.name, b.name);
-                assert_eq!(a.alpha.to_bits(), b.alpha.to_bits(), "{}", a.name);
-                assert_eq!(a.evals, b.evals);
-                assert_eq!(a.stats, b.stats, "{}", a.name);
-            }
-            // fixed-order model aggregate identical
-            assert_eq!(mem.agg.unwrap(), streamed.agg);
-
-            // stored tensors identical: codes, scales, dequantized weights
-            for (name, q) in &mem.quantized {
-                let codes = store.read_tensor(&format!("{name}.codes")).unwrap();
-                assert_bits_eq(
-                    &codes,
-                    &DtsTensor::U8 {
-                        shape: vec![q.shape.0, q.shape.1],
-                        data: q.codes.clone(),
-                    },
-                    &format!("{name}.codes"),
-                );
-                let scales = store.read_tensor(&format!("{name}.scales")).unwrap();
-                assert_bits_eq(
-                    &scales,
-                    &DtsTensor::F32 {
-                        shape: vec![q.scales.grid_rows, q.scales.grid_cols],
-                        data: q.scales.scales.clone(),
-                    },
-                    &format!("{name}.scales"),
-                );
-            }
-            // every parameter (quantized + passthrough) matches the
-            // in-memory outcome via the shared sidecar dequant loader
-            let loaded = load_params_dequant_source(&store).unwrap();
-            assert_eq!(loaded.len(), mem.params.len());
-            for (name, want) in &mem.params {
-                let got = loaded.get(name).unwrap_or_else(|| panic!("missing {name}"));
-                assert_eq!(got.shape(), want.shape(), "{name}");
-                for (x, y) in got.data().iter().zip(want.data()) {
-                    assert_eq!(x.to_bits(), y.to_bits(), "{name}");
-                }
-            }
-            // metadata mirrors write_checkpoint's
-            assert_eq!(
-                store.meta.get("quantized").map(|s| s.as_str()),
-                Some("fp8_e4m3")
-            );
-            for l in &mem.layers {
-                assert_eq!(
-                    store.meta.get(&format!("alpha.{}", l.name)),
-                    Some(&format!("{}", l.alpha)),
-                    "{}",
-                    l.name
-                );
-                assert_eq!(
-                    store.meta.get(&format!("gran.{}", l.name)),
-                    Some(&gran.label()),
-                );
+/// The tentpole invariant: group-at-a-time streaming of the transform
+/// baselines is bitwise-identical to the in-memory transformed pipeline —
+/// quantized members, folded layernorm affines, metadata, everything —
+/// across granularities.
+#[test]
+fn group_streaming_matches_in_memory_transformed_bitwise() {
+    for (gi, gran) in [Granularity::Block(16), Granularity::PerChannel]
+        .into_iter()
+        .enumerate()
+    {
+        for (mi, method) in [Method::SmoothQuant { alpha: 0.5 }, Method::Awq]
+            .into_iter()
+            .enumerate()
+        {
+            let (post, base, calib) = fake_group_ckpts(61, 2, 32);
+            let tag = format!("geq{gi}{mi}");
+            let (mem, streamed, store) =
+                run_both(&post, &base, Some(&calib), gran, method, &tag);
+            // delta metrics are undefined for the transform baselines
+            assert!(mem.agg.is_none());
+            assert!(streamed.agg.is_none());
+            assert!(streamed.layers.iter().all(|l| l.stats.is_none()));
+            assert_store_matches(&mem, &streamed, &store, gran);
+            // the folded layernorm affines are persisted (not the
+            // pre-fold post values)
+            let g = store.read_tensor("l0.ln1.g").unwrap();
+            let DtsTensor::F32 { data, .. } = &g else { panic!("ln gain dtype") };
+            let want = &mem.params["l0.ln1.g"];
+            for (x, y) in data.iter().zip(want.data()) {
+                assert_eq!(x.to_bits(), y.to_bits(), "l0.ln1.g");
             }
             drop(store);
             std::fs::remove_dir_all(tmp(&format!("{tag}_out"))).unwrap();
@@ -222,9 +347,9 @@ fn residency_bounded_by_depth_not_model_size() {
         2,
     );
     cfg.depth = 2;
-    let out = run_stream(&post, &base, &quantizable, &out_dir, &cfg).unwrap();
+    let out = run_stream(&post, &base, &quantizable, None, &out_dir, &cfg).unwrap();
 
-    // the admission gate holds each layer's permit from read to write, so
+    // the admission gate holds each unit's permit from read to write, so
     // live bytes never exceed depth x the largest single-unit footprint
     assert!(out.peak_live_bytes > 0);
     assert!(
@@ -251,6 +376,111 @@ fn residency_bounded_by_depth_not_model_size() {
     std::fs::remove_dir_all(&out_dir).unwrap();
 }
 
+/// Group streaming keeps the same residency shape with the unit enlarged
+/// to one transform group: `peak <= depth x (largest group footprint)`,
+/// still far below whole-model residency.
+#[test]
+fn group_residency_bounded_by_depth_times_largest_group() {
+    let (post, base, calib) = fake_group_ckpts(81, 4, 32);
+    let quantizable = quantizable_from_source(&post);
+    assert_eq!(quantizable.len(), 4 * 5 + 1);
+
+    let out_dir = tmp("gresidency_out");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let mut cfg =
+        StreamConfig::new(Granularity::Block(16), Method::SmoothQuant { alpha: 0.5 }, 2);
+    cfg.depth = 2;
+    let out = run_stream(
+        &post,
+        &base,
+        &quantizable,
+        Some(&calib),
+        &out_dir,
+        &cfg,
+    )
+    .unwrap();
+
+    assert!(out.peak_live_bytes > 0);
+    assert!(
+        out.peak_live_bytes <= cfg.depth * out.max_unit_bytes,
+        "peak {} > depth {} x max group {}",
+        out.peak_live_bytes,
+        cfg.depth,
+        out.max_unit_bytes
+    );
+    // transform units read only post weights: footprint per member is
+    // roughly post + codes + scales + dequant; the model holds 21 GEMMs
+    // while the largest group holds 3
+    let model_total: usize = out
+        .layers
+        .iter()
+        .map(|l| {
+            let n = l.shape.0 * l.shape.1;
+            n * 4 + n + n * 4
+        })
+        .sum();
+    assert!(
+        cfg.depth * out.max_unit_bytes <= model_total / 2,
+        "bound {} not meaningfully below model residency {model_total}",
+        cfg.depth * out.max_unit_bytes
+    );
+    std::fs::remove_dir_all(&out_dir).unwrap();
+}
+
+/// Truncate a journal to its config line plus the first `keep` unit
+/// records, delete every shard the truncated journal no longer records
+/// (plus the manifest), and return how many member layers survive.
+fn truncate_store(dir: &PathBuf, keep: usize) -> usize {
+    let journal = std::fs::read_to_string(dir.join(RESUME_JOURNAL)).unwrap();
+    let mut kept = String::new();
+    let mut kept_shards: Vec<String> = Vec::new();
+    let mut units = 0usize;
+    let mut kept_layers = 0usize;
+    for line in journal.lines() {
+        let is_unit = line.contains("\"shard\":\"");
+        if is_unit {
+            if units == keep {
+                break;
+            }
+            units += 1;
+            let shard = line
+                .split("\"shard\":\"")
+                .nth(1)
+                .and_then(|s| s.split('"').next())
+                .unwrap()
+                .to_string();
+            kept_shards.push(shard);
+            kept_layers += line.matches("\"layer\":").count();
+        }
+        kept.push_str(line);
+        kept.push('\n');
+    }
+    assert_eq!(units, keep, "journal shorter than {keep} unit records");
+    std::fs::write(dir.join(RESUME_JOURNAL), &kept).unwrap();
+    for entry in std::fs::read_dir(dir).unwrap() {
+        let name = entry.unwrap().file_name().to_string_lossy().into_owned();
+        let is_shard = name.starts_with("shard_") && name.ends_with(".dts");
+        if (is_shard && !kept_shards.contains(&name)) || name == "manifest.json" {
+            std::fs::remove_file(dir.join(&name)).unwrap();
+        }
+    }
+    kept_layers
+}
+
+fn assert_stores_identical(a: &PathBuf, b: &PathBuf) {
+    let sa = ShardedDts::open(a).unwrap();
+    let sb = ShardedDts::open(b).unwrap();
+    assert_eq!(sa.names(), sb.names());
+    for name in sa.names() {
+        assert_bits_eq(
+            &sa.read_tensor(name).unwrap(),
+            &sb.read_tensor(name).unwrap(),
+            name,
+        );
+    }
+    assert_eq!(sa.meta, sb.meta);
+}
+
 #[test]
 fn resume_after_interruption_converges_to_identical_bytes() {
     for (gi, gran) in [Granularity::Block(16), Granularity::PerChannel]
@@ -264,8 +494,8 @@ fn resume_after_interruption_converges_to_identical_bytes() {
             range: (0.8, 1.25),
         };
 
-        // tiny budget: every layer (and passthrough tensor) gets its own
-        // shard, so truncating at a layer boundary maps to whole shards
+        // tiny budget: every unit (and passthrough tensor) gets its own
+        // shard, so truncating at a unit boundary maps to whole shards
         let mut cfg = StreamConfig::new(gran, method, 2);
         cfg.shard_budget = 1;
 
@@ -273,54 +503,21 @@ fn resume_after_interruption_converges_to_identical_bytes() {
         let ref_dir = tmp(&format!("resume_ref{gi}"));
         let _ = std::fs::remove_dir_all(&ref_dir);
         let reference =
-            run_stream(&post, &base, &quantizable, &ref_dir, &cfg).unwrap();
+            run_stream(&post, &base, &quantizable, None, &ref_dir, &cfg).unwrap();
 
         // victim: full run, then simulate an interruption after 3 layers
-        // by truncating the journal and deleting everything the journal
-        // no longer records (later shards, manifest)
         let dir = tmp(&format!("resume_cut{gi}"));
         let _ = std::fs::remove_dir_all(&dir);
-        run_stream(&post, &base, &quantizable, &dir, &cfg).unwrap();
-
-        let keep_layers = 3usize;
-        let journal = std::fs::read_to_string(dir.join(RESUME_JOURNAL)).unwrap();
-        let mut kept = String::new();
-        let mut kept_shards: Vec<String> = Vec::new();
-        let mut layer_lines = 0usize;
-        for line in journal.lines() {
-            if line.contains("\"layer\"") {
-                if layer_lines == keep_layers {
-                    break;
-                }
-                layer_lines += 1;
-                let shard = line
-                    .split("\"shard\":\"")
-                    .nth(1)
-                    .and_then(|s| s.split('"').next())
-                    .unwrap()
-                    .to_string();
-                kept_shards.push(shard);
-            }
-            kept.push_str(line);
-            kept.push('\n');
-        }
-        assert_eq!(layer_lines, keep_layers);
-        std::fs::write(dir.join(RESUME_JOURNAL), &kept).unwrap();
-        for entry in std::fs::read_dir(&dir).unwrap() {
-            let name = entry.unwrap().file_name().to_string_lossy().into_owned();
-            let is_shard = name.starts_with("shard_") && name.ends_with(".dts");
-            if (is_shard && !kept_shards.contains(&name)) || name == "manifest.json"
-            {
-                std::fs::remove_file(dir.join(&name)).unwrap();
-            }
-        }
+        run_stream(&post, &base, &quantizable, None, &dir, &cfg).unwrap();
+        let kept_layers = truncate_store(&dir, 3);
+        assert_eq!(kept_layers, 3, "delta units are single layers");
 
         // resume: completed layers skip, the rest recompute
         let mut rcfg = cfg.clone();
         rcfg.resume = true;
         let resumed =
-            run_stream(&post, &base, &quantizable, &dir, &rcfg).unwrap();
-        assert_eq!(resumed.resumed, keep_layers, "journaled layers must skip");
+            run_stream(&post, &base, &quantizable, None, &dir, &rcfg).unwrap();
+        assert_eq!(resumed.resumed, 3, "journaled layers must skip");
 
         // outcomes identical to the uninterrupted run
         assert_eq!(reference.layers.len(), resumed.layers.len());
@@ -330,29 +527,158 @@ fn resume_after_interruption_converges_to_identical_bytes() {
             assert_eq!(a.stats, b.stats, "{}", a.name);
         }
         assert_eq!(reference.agg, resumed.agg);
-
-        // stores identical tensor-for-tensor (bitwise) and meta-for-meta
-        let sa = ShardedDts::open(&ref_dir).unwrap();
-        let sb = ShardedDts::open(&dir).unwrap();
-        assert_eq!(sa.names(), sb.names());
-        for name in sa.names() {
-            assert_bits_eq(
-                &sa.read_tensor(name).unwrap(),
-                &sb.read_tensor(name).unwrap(),
-                name,
-            );
-        }
-        assert_eq!(sa.meta, sb.meta);
+        assert_stores_identical(&ref_dir, &dir);
 
         // a second resume over the finished store is a no-op that still
         // converges (all layers skip)
-        let again = run_stream(&post, &base, &quantizable, &dir, &rcfg).unwrap();
+        let again =
+            run_stream(&post, &base, &quantizable, None, &dir, &rcfg).unwrap();
         assert_eq!(again.resumed, quantizable.len());
         assert_eq!(again.agg, resumed.agg);
 
         std::fs::remove_dir_all(&ref_dir).unwrap();
         std::fs::remove_dir_all(&dir).unwrap();
     }
+}
+
+/// Interrupting a transform run between groups (the journal tail — and
+/// with it a whole group's shard — is lost) must reconverge to a
+/// byte-identical store: resumed groups skip wholesale, lost groups
+/// recompute with the identical shared smoothing vector and fold.
+#[test]
+fn group_resume_mid_run_converges_to_identical_bytes() {
+    let (post, base, calib) = fake_group_ckpts(71, 2, 24);
+    let quantizable = quantizable_from_source(&post);
+    let method = Method::SmoothQuant { alpha: 0.5 };
+    let mut cfg = StreamConfig::new(Granularity::Block(16), method, 2);
+    cfg.shard_budget = 1; // one unit per shard
+
+    let ref_dir = tmp("gresume_ref");
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    let reference = run_stream(
+        &post,
+        &base,
+        &quantizable,
+        Some(&calib),
+        &ref_dir,
+        &cfg,
+    )
+    .unwrap();
+
+    let dir = tmp("gresume_cut");
+    let _ = std::fs::remove_dir_all(&dir);
+    run_stream(&post, &base, &quantizable, Some(&calib), &dir, &cfg).unwrap();
+    // keep the first two units: the l0.ln1 qkv group (3 members) and the
+    // l0.ln2 group (1 member) — the cut falls between coupled groups
+    let kept_layers = truncate_store(&dir, 2);
+    assert_eq!(kept_layers, 4, "qkv group + w1 group");
+
+    let mut rcfg = cfg.clone();
+    rcfg.resume = true;
+    let resumed = run_stream(
+        &post,
+        &base,
+        &quantizable,
+        Some(&calib),
+        &dir,
+        &rcfg,
+    )
+    .unwrap();
+    assert_eq!(resumed.resumed, 4, "both journaled groups must skip whole");
+    assert!(resumed.agg.is_none());
+
+    assert_eq!(reference.layers.len(), resumed.layers.len());
+    for (a, b) in reference.layers.iter().zip(&resumed.layers) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.alpha.to_bits(), b.alpha.to_bits(), "{}", a.name);
+        assert!(b.stats.is_none(), "{}", a.name);
+    }
+    assert_stores_identical(&ref_dir, &dir);
+
+    // a second resume skips every member
+    let again = run_stream(
+        &post,
+        &base,
+        &quantizable,
+        Some(&calib),
+        &dir,
+        &rcfg,
+    )
+    .unwrap();
+    assert_eq!(again.resumed, quantizable.len());
+
+    std::fs::remove_dir_all(&ref_dir).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// A calibration sidecar missing a group's stat (or holding one of the
+/// wrong width) must fail at plan time, before any shard is written —
+/// not hours into the run when the prefetch reaches that group.
+#[test]
+fn group_streaming_validates_calib_at_plan_time() {
+    let (post, base, _full_calib) = fake_group_ckpts(91, 1, 16);
+    let quantizable = quantizable_from_source(&post);
+    let cfg =
+        StreamConfig::new(Granularity::Block(16), Method::SmoothQuant { alpha: 0.5 }, 1);
+    let dir = tmp("calib_plan");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // sidecar lacking the qkv group's first-member stat entirely
+    let mut missing = Dts::new();
+    missing.insert_f32("l0.w1", &Tensor::full(vec![16], 0.5));
+    missing.insert_f32("head", &Tensor::full(vec![16], 0.5));
+    let err = run_stream(&post, &base, &quantizable, Some(&missing), &dir, &cfg)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("no stat"), "{err:#}");
+    assert!(!dir.exists(), "plan-time failure must not create the store");
+
+    // sidecar with a wrong-width stat
+    let mut short = Dts::new();
+    for n in ["l0.wq", "l0.w1", "head"] {
+        short.insert_f32(n, &Tensor::full(vec![4], 0.5));
+    }
+    let err = run_stream(&post, &base, &quantizable, Some(&short), &dir, &cfg)
+        .unwrap_err();
+    assert!(format!("{err:#}").contains("input channel"), "{err:#}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// A shard whose unit record was lost from the journal is a corrupted
+/// store, not a resumable one — the driver must refuse rather than
+/// silently requantize into duplicate tensors.
+#[test]
+fn group_resume_with_unjournaled_shard_is_rejected() {
+    let (post, base, calib) = fake_group_ckpts(73, 1, 16);
+    let quantizable = quantizable_from_source(&post);
+    let mut cfg =
+        StreamConfig::new(Granularity::Block(16), Method::SmoothQuant { alpha: 0.5 }, 1);
+    cfg.shard_budget = 1;
+    let dir = tmp("gresume_unjournaled");
+    let _ = std::fs::remove_dir_all(&dir);
+    run_stream(&post, &base, &quantizable, Some(&calib), &dir, &cfg).unwrap();
+
+    // drop every unit record but keep all shards
+    let journal = std::fs::read_to_string(dir.join(RESUME_JOURNAL)).unwrap();
+    let config_only: String = journal
+        .lines()
+        .filter(|l| l.contains("\"config\""))
+        .map(|l| format!("{l}\n"))
+        .collect();
+    std::fs::write(dir.join(RESUME_JOURNAL), config_only).unwrap();
+
+    let mut rcfg = cfg.clone();
+    rcfg.resume = true;
+    let err = run_stream(
+        &post,
+        &base,
+        &quantizable,
+        Some(&calib),
+        &dir,
+        &rcfg,
+    )
+    .unwrap_err();
+    assert!(format!("{err:#}").contains("missing from the resume journal"), "{err:#}");
+    std::fs::remove_dir_all(&dir).unwrap();
 }
 
 #[test]
@@ -362,11 +688,11 @@ fn resume_with_changed_config_is_rejected() {
     let dir = tmp("resume_cfg");
     let _ = std::fs::remove_dir_all(&dir);
     let cfg = StreamConfig::new(Granularity::Block(16), Method::AbsMax, 1);
-    run_stream(&post, &base, &quantizable, &dir, &cfg).unwrap();
+    run_stream(&post, &base, &quantizable, None, &dir, &cfg).unwrap();
 
     let mut other = StreamConfig::new(Granularity::PerChannel, Method::AbsMax, 1);
     other.resume = true;
-    let err = run_stream(&post, &base, &quantizable, &dir, &other).unwrap_err();
+    let err = run_stream(&post, &base, &quantizable, None, &dir, &other).unwrap_err();
     assert!(format!("{err:#}").contains("gran"), "{err:#}");
     std::fs::remove_dir_all(&dir).unwrap();
 }
@@ -378,8 +704,8 @@ fn fresh_run_refuses_existing_store() {
     let dir = tmp("fresh_refuse");
     let _ = std::fs::remove_dir_all(&dir);
     let cfg = StreamConfig::new(Granularity::Block(16), Method::AbsMax, 1);
-    run_stream(&post, &base, &quantizable, &dir, &cfg).unwrap();
-    let err = run_stream(&post, &base, &quantizable, &dir, &cfg).unwrap_err();
+    run_stream(&post, &base, &quantizable, None, &dir, &cfg).unwrap();
+    let err = run_stream(&post, &base, &quantizable, None, &dir, &cfg).unwrap_err();
     assert!(format!("{err:#}").contains("resume"), "{err:#}");
     std::fs::remove_dir_all(&dir).unwrap();
 }
@@ -393,6 +719,7 @@ fn eval_loader_agrees_across_backends() {
     let (mem, _streamed, store) = run_both(
         &post,
         &base,
+        None,
         Granularity::Block(16),
         Method::Search { objective: Objective::CosSim, range: (0.9, 1.11) },
         "loader",
