@@ -1,10 +1,19 @@
 #!/usr/bin/env bash
 # Tier-1 gate for the rust/ crate, split into CI lanes. Run from anywhere.
 #
-#   ci/rust.sh fast   style gates only: rustfmt + clippy (-D warnings) —
-#                     the quick PR signal, fails in a couple of minutes
-#   ci/rust.sh full   release build + tests
-#   ci/rust.sh        both lanes (the local pre-push default)
+#   ci/rust.sh fast         style gates only: rustfmt + clippy (-D warnings) —
+#                           the quick PR signal, fails in a couple of minutes
+#   ci/rust.sh msrv         cargo check on the pinned MSRV toolchain (the
+#                           rust-fast matrix's second cell: fmt/clippy output
+#                           varies across versions, a type check does not)
+#   ci/rust.sh full         release build + tests
+#   ci/rust.sh determinism  tests/streaming.rs across the CI matrix
+#                           {DAQ_TEST_WORKERS: 1, 4} x {DAQ_TEST_DEPTH: 1, 3};
+#                           every cell must produce byte-identical shards
+#                           (each asserts against the env-independent
+#                           in-memory pipeline AND the workers=1/depth=1
+#                           anchor store)
+#   ci/rust.sh              fast + full (the local pre-push default)
 #
 # Every cargo invocation passes --locked so drift in the vendored shims
 # (rust/vendor/*) or a hand-edited manifest is caught at the gate — cargo
@@ -20,14 +29,30 @@ run_fast() {
   cargo clippy --locked --all-targets -- -D warnings
 }
 
+run_msrv() {
+  cargo check --locked --all-targets
+}
+
 run_full() {
   cargo build --locked --release
   cargo test --locked -q
 }
 
+run_determinism() {
+  for workers in 1 4; do
+    for depth in 1 3; do
+      echo "== determinism cell: workers=${workers} depth=${depth} =="
+      DAQ_TEST_WORKERS="$workers" DAQ_TEST_DEPTH="$depth" \
+        cargo test --locked -q --test streaming
+    done
+  done
+}
+
 case "$mode" in
   fast) run_fast ;;
+  msrv) run_msrv ;;
   full) run_full ;;
+  determinism) run_determinism ;;
   all)
     # style gates first: a fmt/clippy violation should surface in the
     # couple of minutes the fast lane promises, not after a full build
@@ -35,7 +60,7 @@ case "$mode" in
     run_full
     ;;
   *)
-    echo "usage: ci/rust.sh [fast|full|all]" >&2
+    echo "usage: ci/rust.sh [fast|msrv|full|determinism|all]" >&2
     exit 2
     ;;
 esac

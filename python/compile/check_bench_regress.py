@@ -1,0 +1,151 @@
+#!/usr/bin/env python3
+"""Bench-regression gate for the CI `bench` job.
+
+Compares the bench-smoke `BENCH_sweep.json` artifact against the
+committed `rust/BENCH_baseline.json` and fails (exit 1) when any
+`pipeline-*` row regresses by more than the threshold in Melem/s.
+
+Rows are keyed by (variant, shape, granularity) — `workers` is excluded
+on purpose: the bench sizes its worker pool from the runner's core
+count, and a hosted-runner fleet change must not masquerade as a code
+regression. Only rows present in BOTH files are compared; if the files
+share no pipeline rows at all the gate fails loudly (a silently vacuous
+gate is worse than none), telling the operator to re-baseline.
+
+Usage:
+    check_bench_regress.py --current rust/BENCH_sweep.json \
+                           --baseline rust/BENCH_baseline.json \
+                           [--threshold 0.15] [--write-baseline]
+
+`--write-baseline` regenerates the baseline file from the current
+run's pipeline rows (used to commit a fresh baseline from a CI
+artifact) instead of gating.
+
+Exit code 0 = no regression beyond the threshold.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+PIPELINE_PREFIX = "pipeline-"
+
+
+def key(row: dict) -> tuple:
+    return (row["variant"], row["shape"], row["granularity"])
+
+
+def pipeline_rows(doc: dict) -> dict:
+    out = {}
+    for row in doc.get("rows", []):
+        if row.get("variant", "").startswith(PIPELINE_PREFIX):
+            out[key(row)] = row
+    return out
+
+
+def load(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        sys.exit(f"error: cannot read {path}: {e}")
+
+
+def write_baseline(path: str, current: dict, threshold: float) -> None:
+    rows = sorted(pipeline_rows(current).values(), key=key)
+    if not rows:
+        sys.exit("error: current run has no pipeline-* rows to baseline")
+    doc = {
+        "bench": "sweep",
+        "gate": "check_bench_regress.py",
+        "threshold": threshold,
+        "rows": [
+            {
+                "variant": r["variant"],
+                "shape": r["shape"],
+                "granularity": r["granularity"],
+                "workers": r.get("workers"),
+                "mean_ms": r.get("mean_ms"),
+                "melem_per_s": r["melem_per_s"],
+            }
+            for r in rows
+        ],
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    print(f"wrote {path} ({len(rows)} pipeline rows)")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--current", required=True, help="BENCH_sweep.json from this run")
+    ap.add_argument("--baseline", required=True, help="committed BENCH_baseline.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.15,
+        help="max allowed fractional Melem/s regression (default 0.15)",
+    )
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="regenerate the baseline from the current run instead of gating",
+    )
+    args = ap.parse_args()
+
+    current = load(args.current)
+    if args.write_baseline:
+        write_baseline(args.baseline, current, args.threshold)
+        return 0
+
+    baseline = load(args.baseline)
+    base_rows = pipeline_rows(baseline)
+    cur_rows = pipeline_rows(current)
+    if not base_rows:
+        sys.exit(f"error: {args.baseline} has no pipeline-* rows")
+    if not cur_rows:
+        sys.exit(f"error: {args.current} has no pipeline-* rows")
+
+    compared = 0
+    regressions = []
+    for k, base in sorted(base_rows.items()):
+        cur = cur_rows.get(k)
+        if cur is None:
+            # shape sets differ between DAQ_BENCH_FAST and full runs;
+            # a missing counterpart is reported but only the total
+            # overlap is enforced
+            print(f"skip: {k} not in current run")
+            continue
+        compared += 1
+        floor = base["melem_per_s"] * (1.0 - args.threshold)
+        ratio = cur["melem_per_s"] / base["melem_per_s"] if base["melem_per_s"] else 0.0
+        status = "REGRESSION" if cur["melem_per_s"] < floor else "ok"
+        print(
+            f"{status:>10}: {'/'.join(k)}  "
+            f"{cur['melem_per_s']:.2f} vs baseline {base['melem_per_s']:.2f} "
+            f"Melem/s ({ratio:.2f}x, floor {floor:.2f})"
+        )
+        if status == "REGRESSION":
+            regressions.append(k)
+
+    if compared == 0:
+        sys.exit(
+            "error: no pipeline-* rows are shared between the baseline and "
+            "this run — the baseline is stale; regenerate it with "
+            "--write-baseline from a fresh CI artifact"
+        )
+    if regressions:
+        names = ", ".join("/".join(k) for k in regressions)
+        sys.exit(
+            f"error: {len(regressions)}/{compared} pipeline rows regressed "
+            f">{args.threshold:.0%} vs baseline: {names}"
+        )
+    print(f"ok: {compared} pipeline rows within {args.threshold:.0%} of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,8 +1,12 @@
 //! CLI subcommand implementations (`daq <cmd> ...`).
 
-use anyhow::{anyhow, bail, Result};
+use std::path::{Path, PathBuf};
 
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::coordinator::group::{GroupManifest, GroupPlan, GroupSource, Unit};
 use crate::coordinator::Method;
+use crate::eval::trace::{sidecar_path, trace_checkpoint, TraceGraph};
 use crate::eval::load_params;
 use crate::experiments::{table1, table2, table_search, Lab};
 use crate::io::dts::Dts;
@@ -42,6 +46,20 @@ COMMANDS:
              --groups FILE (explicit transform-group manifest overriding
                the name-pattern grouping; JSON
                {"groups": [{"ln": NAME|null, "members": [...]}]})
+             --group-source auto|trace|patterns|manifest (where transform
+               groups come from, default auto: --groups manifest if
+               given, else the traced graph.dts sidecar if present, else
+               the name patterns; if both a manifest and a sidecar exist
+               they are cross-checked and any disagreement is an error)
+             --graph PATH (traced-graph sidecar; default is the
+               checkpoint's sibling <stem>.graph.dts / DIR/graph.dts)
+  trace      Record the checkpoint's dataflow graph (index-only — no
+             payload is read) and persist it as a DTS sidecar so
+             streaming runs can derive transform groups for any tensor
+             naming without re-tracing
+             --ckpt PATH (default ARTIFACTS/ckpt_post.dts)
+             --out PATH (default sibling <stem>.graph.dts)
+             --artifacts DIR (default artifacts)
   shard      Convert a monolithic .dts checkpoint into a sharded store
              --in FILE --out DIR --shard-mb N (default 256)
   eval       Score a checkpoint on the Style/General rubric
@@ -66,6 +84,7 @@ COMMANDS:
 pub fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("quantize") => cmd_quantize(args),
+        Some("trace") => cmd_trace(args),
         Some("shard") => cmd_shard(args),
         Some("eval") => cmd_eval(args),
         Some("tables") => cmd_tables(args),
@@ -129,7 +148,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     }
     // refuse rather than silently ignore: the in-memory path always uses
     // ARTIFACTS/calib.dts and the name-pattern grouping
-    for flag in ["groups", "calib"] {
+    for flag in ["groups", "calib", "group-source", "graph"] {
         if args.get(flag).is_some() {
             bail!("--{flag} requires --stream");
         }
@@ -197,15 +216,23 @@ fn cmd_quantize_stream(args: &Args) -> Result<()> {
     cfg.resume = args.flag("resume");
     // refuse rather than silently ignore flags the method cannot use
     // (validated before any checkpoint I/O so mistakes fail fast)
-    if cfg.method.delta_defined() && args.get("calib").is_some() {
-        bail!(
-            "--calib only applies to the transform baselines \
-             (smoothquant / awq); {} ignores it",
-            cfg.method.label()
-        );
+    if cfg.method.delta_defined() {
+        for flag in ["calib", "groups", "group-source", "graph"] {
+            if args.get(flag).is_some() {
+                bail!(
+                    "--{flag} only applies to the transform baselines \
+                     (smoothquant / awq); {} ignores it",
+                    cfg.method.label()
+                );
+            }
+        }
     }
-    if let Some(path) = args.get("groups") {
-        cfg.groups = Some(crate::coordinator::group::GroupManifest::load(path)?);
+
+    let post_path = args.str_or("post", &format!("{dir}/ckpt_post.dts"));
+    let base_path = args.str_or("base", &format!("{dir}/ckpt_base.dts"));
+    if !cfg.method.delta_defined() {
+        // resolved before any checkpoint I/O so flag mistakes fail fast
+        cfg.groups = resolve_group_source(args, &post_path)?;
     }
 
     // the transform baselines fold per-group state and need the
@@ -217,8 +244,6 @@ fn cmd_quantize_stream(args: &Args) -> Result<()> {
         None
     };
 
-    let post_path = args.str_or("post", &format!("{dir}/ckpt_post.dts"));
-    let base_path = args.str_or("base", &format!("{dir}/ckpt_base.dts"));
     let post = crate::io::open_source(&post_path)?;
     // the transform baselines never read the base checkpoint (they
     // quantize the transformed post weights); don't require one
@@ -227,7 +252,16 @@ fn cmd_quantize_stream(args: &Args) -> Result<()> {
     } else {
         Box::new(Dts::new())
     };
-    let quantizable = crate::experiments::quantizable_from_source(post.as_ref());
+    let mut quantizable = crate::experiments::quantizable_from_source(post.as_ref());
+    if quantizable.is_empty() {
+        // a renamed checkpoint defeats the name patterns entirely — the
+        // traced graph still knows which tensors are GEMM weights
+        if let GroupSource::Trace(g) | GroupSource::ManifestAndTrace(_, g) =
+            &cfg.groups
+        {
+            quantizable = g.quantizable();
+        }
+    }
     if quantizable.is_empty() {
         bail!("{post_path}: no quantizable 2-D weights found");
     }
@@ -243,6 +277,9 @@ fn cmd_quantize_stream(args: &Args) -> Result<()> {
         cfg.shard_budget >> 20,
         if cfg.resume { "  (resume)" } else { "" }
     );
+    if !cfg.method.delta_defined() {
+        println!("transform groups from: {}", cfg.groups.label());
+    }
     let out = crate::coordinator::stream::run_stream(
         post.as_ref(),
         base.as_ref(),
@@ -279,6 +316,97 @@ fn cmd_quantize_stream(args: &Args) -> Result<()> {
         cfg.depth
     );
     println!("wrote {}", out.manifest.display());
+    Ok(())
+}
+
+fn load_graph(path: &Path) -> Result<TraceGraph> {
+    TraceGraph::read_sidecar(path).with_context(|| {
+        format!("no usable traced graph at {path:?} — run `daq trace` first")
+    })
+}
+
+/// Resolve where transform groups come from (`--group-source`, default
+/// `auto`). Precedence in auto mode: an explicit `--groups` manifest
+/// and/or a traced `graph.dts` sidecar next to the checkpoint — when
+/// both exist they are cross-checked against each other and any
+/// disagreement is an error; with neither, the name patterns apply.
+fn resolve_group_source(args: &Args, post_path: &str) -> Result<GroupSource> {
+    let manifest = match args.get("groups") {
+        Some(path) => Some(GroupManifest::load(path)?),
+        None => None,
+    };
+    let graph_path = args
+        .get("graph")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| sidecar_path(post_path));
+    Ok(match args.str_or("group-source", "auto").as_str() {
+        "patterns" => {
+            if manifest.is_some() {
+                bail!("--groups conflicts with --group-source patterns");
+            }
+            GroupSource::Patterns
+        }
+        "manifest" => GroupSource::Manifest(
+            manifest
+                .ok_or_else(|| anyhow!("--group-source manifest requires --groups FILE"))?,
+        ),
+        "trace" => {
+            if manifest.is_some() {
+                bail!(
+                    "--groups conflicts with --group-source trace \
+                     (use --group-source auto to cross-check both)"
+                );
+            }
+            GroupSource::Trace(load_graph(&graph_path)?)
+        }
+        "auto" => {
+            // only read the sidecar when the user named one or the
+            // default location exists
+            let graph = if args.get("graph").is_some() || graph_path.exists() {
+                Some(load_graph(&graph_path)?)
+            } else {
+                None
+            };
+            match (manifest, graph) {
+                (Some(m), Some(g)) => GroupSource::ManifestAndTrace(m, g),
+                (Some(m), None) => GroupSource::Manifest(m),
+                (None, Some(g)) => GroupSource::Trace(g),
+                (None, None) => GroupSource::Patterns,
+            }
+        }
+        other => bail!("unknown --group-source {other:?} (auto|trace|patterns|manifest)"),
+    })
+}
+
+/// `daq trace`: record the checkpoint's dataflow graph (index-only) and
+/// persist it as a DTS sidecar for `--group-source trace` streaming runs.
+fn cmd_trace(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let ckpt = args.str_or("ckpt", &format!("{dir}/ckpt_post.dts"));
+    let source = crate::io::open_source(&ckpt)?;
+    let graph = trace_checkpoint(source.as_ref())?;
+    let quantizable = graph.quantizable();
+    let plan = GroupPlan::from_graph(source.as_ref(), &quantizable, &graph)?;
+    let n_groups =
+        plan.units.iter().filter(|u| matches!(u, Unit::Group { .. })).count();
+    let out = args
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| sidecar_path(&ckpt));
+    graph.write_sidecar(&out)?;
+    println!(
+        "traced {ckpt}: {} ops over {} checkpoint tensors (fingerprint {:016x})",
+        graph.ops.len(),
+        graph.leaves.len(),
+        graph.fingerprint
+    );
+    println!(
+        "transform grouping: {n_groups} ln-coupled groups + {} singletons \
+         over {} quantizable GEMMs",
+        plan.units.len() - n_groups,
+        quantizable.len()
+    );
+    println!("wrote {}", out.display());
     Ok(())
 }
 
@@ -436,6 +564,21 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             idx.entries.len(),
             idx.payload_bytes()
         );
+        // a traced-graph sidecar additionally decodes into an op summary
+        if idx.meta.get("daq.graph").map(|v| v.as_str()) == Some("1") {
+            let g = TraceGraph::read_sidecar(path)?;
+            println!(
+                "  traced dataflow graph: {} ops, {} leaf tensors, \
+                 fingerprint {:016x}",
+                g.ops.len(),
+                g.leaves.len(),
+                g.fingerprint
+            );
+            for (kind, n) in g.op_histogram() {
+                println!("    op {kind:<10} x{n}");
+            }
+            println!("    quantizable GEMM weights: {:?}", g.quantizable());
+        }
     }
     Ok(())
 }
@@ -492,13 +635,22 @@ mod tests {
 
     #[test]
     fn usage_mentions_all_commands() {
-        for cmd in ["quantize", "shard", "eval", "tables", "serve", "inspect", "golden"] {
+        for cmd in
+            ["quantize", "trace", "shard", "eval", "tables", "serve", "inspect", "golden"]
+        {
             assert!(USAGE.contains(cmd), "{cmd} missing from usage");
         }
         // the streaming mode's flags are documented
-        for flag in
-            ["--stream", "--shard-mb", "--resume", "--groups", "--calib", "--method"]
-        {
+        for flag in [
+            "--stream",
+            "--shard-mb",
+            "--resume",
+            "--groups",
+            "--calib",
+            "--method",
+            "--group-source",
+            "--graph",
+        ] {
             assert!(USAGE.contains(flag), "{flag} missing from usage");
         }
     }
@@ -578,7 +730,7 @@ mod tests {
 
     #[test]
     fn groups_and_calib_require_stream() {
-        for flag in ["--groups", "--calib"] {
+        for flag in ["--groups", "--calib", "--group-source", "--graph"] {
             let args = Args::parse([
                 "quantize".to_string(),
                 flag.to_string(),
@@ -588,6 +740,56 @@ mod tests {
             let err = dispatch(&args).unwrap_err();
             assert!(format!("{err:#}").contains("--stream"), "{flag}: {err:#}");
         }
+    }
+
+    #[test]
+    fn group_source_flag_validation() {
+        // unknown mode
+        let args = Args::parse([
+            "quantize".to_string(),
+            "--stream".into(),
+            "--out".into(),
+            "/tmp/daq_gs_test".into(),
+            "--method".into(),
+            "smoothquant".into(),
+            "--group-source".into(),
+            "vibes".into(),
+        ])
+        .unwrap();
+        let err = dispatch(&args).unwrap_err();
+        assert!(format!("{err:#}").contains("--group-source"), "{err:#}");
+
+        // manifest mode without --groups
+        let args = Args::parse([
+            "quantize".to_string(),
+            "--stream".into(),
+            "--out".into(),
+            "/tmp/daq_gs_test".into(),
+            "--method".into(),
+            "smoothquant".into(),
+            "--group-source".into(),
+            "manifest".into(),
+        ])
+        .unwrap();
+        let err = dispatch(&args).unwrap_err();
+        assert!(format!("{err:#}").contains("--groups"), "{err:#}");
+
+        // trace mode with no sidecar anywhere
+        let args = Args::parse([
+            "quantize".to_string(),
+            "--stream".into(),
+            "--out".into(),
+            "/tmp/daq_gs_test".into(),
+            "--method".into(),
+            "smoothquant".into(),
+            "--group-source".into(),
+            "trace".into(),
+            "--graph".into(),
+            "/tmp/daq_gs_no_such_graph.dts".into(),
+        ])
+        .unwrap();
+        let err = dispatch(&args).unwrap_err();
+        assert!(format!("{err:#}").contains("daq trace"), "{err:#}");
     }
 
     #[test]

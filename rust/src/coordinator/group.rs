@@ -18,16 +18,28 @@
 //! O(largest group) while staying bitwise-identical to the in-memory
 //! result.
 //!
-//! Grouping is derived from the model naming convention
-//! ([`upstream_ln`]); a [`GroupManifest`] (`--groups file.json`) can
-//! override the assignment per member for checkpoints that do not follow
-//! it.
+//! Three [`GroupSource`]s can produce the plan, in decreasing order of
+//! trust:
+//! - **trace** ([`GroupPlan::from_graph`]): the checkpoint's actual
+//!   dataflow, recorded by `eval::trace` — works for any checkpoint the
+//!   forward can execute, regardless of tensor naming, and proves
+//!   foldability (every consumer of the layernorm output must be a
+//!   quantizable GEMM) instead of assuming it;
+//! - **manifest** ([`GroupManifest`], `--groups file.json`): an explicit
+//!   per-member override;
+//! - **patterns** ([`upstream_ln`]): the historical model-naming
+//!   convention, the fallback when neither of the above is available.
+//!
+//! When a manifest *and* a trace are both supplied, the resolver derives
+//! the plan from each and errors on any disagreement rather than
+//! silently preferring one.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
 
+use crate::eval::trace::{self, OpKind, TraceGraph, ValueId};
 use crate::io::TensorSource;
 use crate::util::json::Json;
 
@@ -53,11 +65,22 @@ pub enum Unit {
     /// transform-method layer with no foldable upstream affine.
     Layer { name: String },
     /// A layernorm-coupled transform group: all members share one
-    /// smoothing vector whose inverse folds into `ln`'s gain and bias.
-    Group { ln: String, members: Vec<String> },
+    /// smoothing vector whose inverse folds into the affine tensors
+    /// `gain` / `bias` (stored names — for pattern/manifest plans these
+    /// are `<ln>.g` / `<ln>.b`, trace-derived plans carry whatever the
+    /// checkpoint actually calls them).
+    Group { ln: String, gain: String, bias: String, members: Vec<String> },
 }
 
 impl Unit {
+    /// A group under the conventional `<ln>.g` / `<ln>.b` affine naming
+    /// (the pattern / manifest path).
+    pub fn group(ln: String, members: Vec<String>) -> Unit {
+        let gain = format!("{ln}.g");
+        let bias = format!("{ln}.b");
+        Unit::Group { ln, gain, bias, members }
+    }
+
     /// Stable identifier used by the resume journal.
     pub fn label(&self) -> String {
         match self {
@@ -86,9 +109,9 @@ impl Unit {
             out.push(format!("{m}.scales"));
             out.push(m.clone());
         }
-        if let Unit::Group { ln, .. } = self {
-            out.push(format!("{ln}.g"));
-            out.push(format!("{ln}.b"));
+        if let Unit::Group { gain, bias, .. } = self {
+            out.push(gain.clone());
+            out.push(bias.clone());
         }
         out
     }
@@ -124,6 +147,13 @@ impl GroupManifest {
             .get("groups")
             .and_then(|g| g.as_arr())
             .ok_or_else(|| anyhow!("groups manifest needs a \"groups\" array"))?;
+        if groups.is_empty() {
+            bail!(
+                "groups manifest has an empty \"groups\" array — an override \
+                 that overrides nothing is almost certainly a mistake; remove \
+                 --groups to use the derived grouping"
+            );
+        }
         let mut assign = BTreeMap::new();
         for g in groups {
             let ln = match g.get("ln") {
@@ -151,6 +181,34 @@ impl GroupManifest {
     }
 }
 
+/// Where transform groups come from (see the module docs for the trust
+/// ordering). `ManifestAndTrace` cross-checks: the plan is derived from
+/// both and any disagreement is an error, never a silent preference.
+#[derive(Clone, Debug, Default)]
+pub enum GroupSource {
+    #[default]
+    Patterns,
+    Manifest(GroupManifest),
+    Trace(TraceGraph),
+    ManifestAndTrace(GroupManifest, TraceGraph),
+}
+
+impl GroupSource {
+    pub fn label(&self) -> &'static str {
+        match self {
+            GroupSource::Patterns => "patterns",
+            GroupSource::Manifest(_) => "manifest",
+            GroupSource::Trace(_) => "trace",
+            GroupSource::ManifestAndTrace(..) => "manifest+trace",
+        }
+    }
+
+    /// True for the default (no explicit grouping input was supplied).
+    pub fn is_patterns(&self) -> bool {
+        matches!(self, GroupSource::Patterns)
+    }
+}
+
 /// The partition of `quantizable` into schedulable [`Unit`]s, in
 /// execution (and output-store) order.
 #[derive(Clone, Debug)]
@@ -170,6 +228,32 @@ impl GroupPlan {
         }
     }
 
+    /// Derive the transform plan from a [`GroupSource`].
+    pub fn resolve(
+        source: &dyn TensorSource,
+        quantizable: &[String],
+        groups: &GroupSource,
+    ) -> Result<GroupPlan> {
+        match groups {
+            GroupSource::Patterns => Self::transform(source, quantizable, None),
+            GroupSource::Manifest(m) => Self::transform(source, quantizable, Some(m)),
+            GroupSource::Trace(g) => Self::from_graph(source, quantizable, g),
+            GroupSource::ManifestAndTrace(m, g) => {
+                let from_manifest = Self::transform(source, quantizable, Some(m))?;
+                let from_trace = Self::from_graph(source, quantizable, g)?;
+                if let Some(diff) = from_manifest.diff(&from_trace) {
+                    bail!(
+                        "the groups manifest and the traced dataflow graph \
+                         disagree — refusing to silently prefer one: {diff} \
+                         (fix the manifest, re-run `daq trace`, or pick a \
+                         side explicitly with --group-source)"
+                    );
+                }
+                Ok(from_trace)
+            }
+        }
+    }
+
     /// Transform methods: partition into layernorm-coupled groups
     /// (ordered by layernorm name, members in `quantizable` order),
     /// then un-foldable layers in `quantizable` order. Validates against
@@ -184,6 +268,12 @@ impl GroupPlan {
         if let Some(m) = manifest {
             for name in m.assign.keys() {
                 if !quantizable.contains(name) {
+                    if source.contains(name) {
+                        bail!(
+                            "groups manifest lists {name:?}, which exists in the \
+                             checkpoint but is not a quantizable GEMM weight"
+                        );
+                    }
                     bail!("groups manifest lists unknown quantizable tensor {name:?}");
                 }
             }
@@ -202,23 +292,183 @@ impl GroupPlan {
             }
         }
 
-        for (ln, members) in &groups {
-            // the ln affine must exist (peeked by prefix, index-only)
-            let ln_params = source.names_with_prefix(&format!("{ln}."));
-            for part in ["g", "b"] {
-                let want = format!("{ln}.{part}");
-                if !ln_params.contains(&want) {
+        let mut units: Vec<Unit> = groups
+            .into_iter()
+            .map(|(ln, members)| Unit::group(ln, members))
+            .collect();
+        units.extend(plain.into_iter().map(|name| Unit::Layer { name }));
+        let plan = GroupPlan { units };
+        plan.validate(source)?;
+        Ok(plan)
+    }
+
+    /// Derive the transform plan from a traced dataflow graph: a GEMM
+    /// weight folds into a layernorm iff its matmul consumes that
+    /// layernorm's output **and** every other consumer of the layernorm
+    /// output is itself a GEMM against a quantizable weight (folding
+    /// rescales the layernorm output, so a single non-quantizable
+    /// consumer makes the fold incorrect — a case the name patterns
+    /// cannot even express). No tensor-name conventions are consulted.
+    pub fn from_graph(
+        source: &dyn TensorSource,
+        quantizable: &[String],
+        graph: &TraceGraph,
+    ) -> Result<GroupPlan> {
+        let fp = trace::fingerprint(source);
+        if graph.fingerprint != fp {
+            bail!(
+                "traced graph fingerprint {:016x} does not match this \
+                 checkpoint's index ({fp:016x}) — the sidecar is stale; \
+                 re-run `daq trace`",
+                graph.fingerprint
+            );
+        }
+        // A weight's fold *candidate*: the stored affine of the single
+        // layernorm feeding every one of its GEMM uses (None if any use
+        // is fed by something else, by two different layernorms, or by
+        // a computed affine).
+        struct Cand {
+            gain: String,
+            bias: String,
+            /// Output value(s) of the feeding layernorm op(s).
+            ln_outs: BTreeSet<ValueId>,
+        }
+        let mut cands: BTreeMap<&str, Option<Cand>> = BTreeMap::new();
+        for name in quantizable {
+            let Some(&vid) = graph.leaves.get(name) else {
+                bail!(
+                    "quantizable tensor {name:?} never appears in the traced \
+                     dataflow graph — the trace and the quantizable set \
+                     disagree; re-run `daq trace`"
+                );
+            };
+            let gemm_uses: Vec<_> = graph
+                .ops
+                .iter()
+                .filter(|o| o.kind == OpKind::Matmul && o.inputs.get(1) == Some(&vid))
+                .collect();
+            if gemm_uses.is_empty() {
+                bail!(
+                    "quantizable tensor {name:?} is never consumed as a GEMM \
+                     weight in the traced dataflow graph"
+                );
+            }
+            let mut cand: Option<Cand> = None;
+            let mut ok = true;
+            for mm in &gemm_uses {
+                let x = mm.inputs[0];
+                let produced_by_ln =
+                    graph.producer(x).filter(|p| p.kind == OpKind::Layernorm);
+                let Some(ln_op) = produced_by_ln else {
+                    ok = false;
+                    break;
+                };
+                let (Some(g), Some(b)) = (
+                    graph.leaf_name(ln_op.inputs[1]),
+                    graph.leaf_name(ln_op.inputs[2]),
+                ) else {
+                    ok = false; // affine is itself computed, not stored
+                    break;
+                };
+                match &mut cand {
+                    None => {
+                        cand = Some(Cand {
+                            gain: g.to_string(),
+                            bias: b.to_string(),
+                            ln_outs: BTreeSet::from([x]),
+                        });
+                    }
+                    Some(c) if c.gain == g && c.bias == b => {
+                        c.ln_outs.insert(x);
+                    }
+                    Some(_) => {
+                        ok = false; // fed by two different layernorms
+                        break;
+                    }
+                }
+            }
+            cands.insert(name.as_str(), if ok { cand } else { None });
+        }
+
+        // A candidate becomes a group member only if folding is safe:
+        // the layernorm output must feed nothing but GEMMs whose weights
+        // all fold into this same layernorm (folding rescales the
+        // output for EVERY consumer, so one exempt consumer poisons the
+        // whole fold).
+        let fold_safe = |c: &Cand| -> bool {
+            c.ln_outs.iter().all(|&x| {
+                graph.consumers(x).iter().all(|cons| {
+                    cons.kind == OpKind::Matmul
+                        && cons.inputs.first() == Some(&x)
+                        && cons
+                            .inputs
+                            .get(1)
+                            .and_then(|&w| graph.leaf_name(w))
+                            .and_then(|w| cands.get(w))
+                            .and_then(|o| o.as_ref())
+                            .map(|wc| wc.gain == c.gain && wc.bias == c.bias)
+                            .unwrap_or(false)
+                })
+            })
+        };
+
+        // (gain, bias) -> members, in `quantizable` order — keyed by the
+        // full affine pair so tied gains with distinct biases can never
+        // fuse into one group
+        let mut groups: BTreeMap<(String, String), Vec<String>> = BTreeMap::new();
+        let mut plain: Vec<String> = Vec::new();
+        for name in quantizable {
+            match cands.get(name.as_str()).and_then(|o| o.as_ref()) {
+                Some(c) if fold_safe(c) => {
+                    groups
+                        .entry((c.gain.clone(), c.bias.clone()))
+                        .or_default()
+                        .push(name.clone());
+                }
+                _ => plain.push(name.clone()),
+            }
+        }
+
+        let mut units: Vec<Unit> = groups
+            .into_iter()
+            .map(|((gain, bias), members)| {
+                let ln = gain.strip_suffix(".g").unwrap_or(&gain).to_string();
+                Unit::Group { ln, gain, bias, members }
+            })
+            .collect();
+        units.extend(plain.into_iter().map(|name| Unit::Layer { name }));
+        let plan = GroupPlan { units };
+        plan.validate(source)?;
+        Ok(plan)
+    }
+
+    /// Index-only validation shared by every group source: the affine
+    /// tensors exist and their width matches every member's input dim.
+    fn validate(&self, source: &dyn TensorSource) -> Result<()> {
+        for unit in &self.units {
+            let Unit::Group { ln, gain, bias, members } = unit else { continue };
+            for part in [gain, bias] {
+                if !source.contains(part) {
                     bail!(
-                        "group {ln:?}: layernorm parameter {want:?} not found \
+                        "group {ln:?}: layernorm parameter {part:?} not found \
                          in the checkpoint (members {members:?}; tensors under \
-                         the {ln:?} prefix: {ln_params:?})"
+                         the {ln:?} prefix: {:?})",
+                        source.names_with_prefix(&format!("{ln}."))
                     );
                 }
             }
-            let ln_dim = match source.shape_of(&format!("{ln}.g")) {
-                Some(s) if s.len() == 1 => s[0],
-                other => bail!("group {ln:?}: {ln}.g has shape {other:?}, wanted 1-D"),
+            let Some(gain_shape) = source.shape_of(gain) else {
+                bail!("group {ln:?}: cannot read the shape of {gain:?}");
             };
+            // accept [d] and the [1, d]-style storage some checkpoints
+            // use, but reject anything with two real axes
+            if gain_shape.iter().filter(|&&d| d > 1).count() > 1 {
+                bail!(
+                    "group {ln:?}: {gain} has shape {gain_shape:?}, wanted a \
+                     1-D layernorm affine"
+                );
+            }
+            let ln_dim: usize = gain_shape.iter().product();
             for m in members {
                 let shape = source
                     .shape_of(m)
@@ -229,19 +479,31 @@ impl GroupPlan {
                 if shape[0] != ln_dim {
                     bail!(
                         "group {ln:?}: member {m:?} has {} input channels but \
-                         {ln}.g has width {ln_dim}",
+                         {gain} has width {ln_dim}",
                         shape[0]
                     );
                 }
             }
         }
+        Ok(())
+    }
 
-        let mut units: Vec<Unit> = groups
-            .into_iter()
-            .map(|(ln, members)| Unit::Group { ln, members })
-            .collect();
-        units.extend(plain.into_iter().map(|name| Unit::Layer { name }));
-        Ok(GroupPlan { units })
+    /// First structural disagreement with `other`, if any — used to
+    /// cross-check independently derived plans.
+    pub fn diff(&self, other: &GroupPlan) -> Option<String> {
+        if self.units.len() != other.units.len() {
+            return Some(format!(
+                "{} units vs {} units",
+                self.units.len(),
+                other.units.len()
+            ));
+        }
+        for (a, b) in self.units.iter().zip(&other.units) {
+            if a != b {
+                return Some(format!("unit {a:?} vs {b:?}"));
+            }
+        }
+        None
     }
 
     /// Largest member count across units (1 for a pure-delta plan).
@@ -253,6 +515,8 @@ impl GroupPlan {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::eval::model_native::ModelCfg;
+    use crate::eval::trace::{stamp_model_meta, trace_graph};
     use crate::io::dts::Dts;
     use crate::tensor::Tensor;
 
@@ -274,6 +538,35 @@ mod tests {
         }
         d.insert_f32("embed", &Tensor::zeros(vec![4, dim]));
         (d, names)
+    }
+
+    /// A full canonical checkpoint `trace_graph` can walk (ln affines
+    /// stored 1-D, square weights where the config allows).
+    fn traceable_ckpt() -> (Dts, ModelCfg, Vec<String>) {
+        let cfg =
+            ModelCfg { vocab: 12, d_model: 8, n_layer: 1, n_head: 2, d_ff: 8, seq_len: 4 };
+        let mut d = Dts::new();
+        stamp_model_meta(&mut d, &cfg);
+        d.insert_f32("embed", &Tensor::zeros(vec![cfg.vocab, cfg.d_model]));
+        d.insert_f32("pos", &Tensor::zeros(vec![cfg.seq_len, cfg.d_model]));
+        for w in ["wq", "wk", "wv", "wo", "w1", "w2"] {
+            d.insert_f32(&format!("l0.{w}"), &Tensor::zeros(vec![8, 8]));
+        }
+        for ln in ["l0.ln1", "l0.ln2", "lnf"] {
+            d.insert_f32(&format!("{ln}.g"), &Tensor::full(vec![8], 1.0));
+            d.insert_f32(&format!("{ln}.b"), &Tensor::zeros(vec![8]));
+        }
+        d.insert_f32("head", &Tensor::zeros(vec![8, cfg.vocab]));
+        let quantizable = vec![
+            "l0.wq".to_string(),
+            "l0.wk".into(),
+            "l0.wv".into(),
+            "l0.wo".into(),
+            "l0.w1".into(),
+            "l0.w2".into(),
+            "head".into(),
+        ];
+        (d, cfg, quantizable)
     }
 
     #[test]
@@ -306,12 +599,9 @@ mod tests {
         assert_eq!(
             p.units,
             vec![
-                Unit::Group {
-                    ln: "l0.ln1".into(),
-                    members: vec!["l0.wq".into(), "l0.wk".into()],
-                },
-                Unit::Group { ln: "l0.ln2".into(), members: vec!["l0.w1".into()] },
-                Unit::Group { ln: "lnf".into(), members: vec!["head".into()] },
+                Unit::group("l0.ln1".into(), vec!["l0.wq".into(), "l0.wk".into()]),
+                Unit::group("l0.ln2".into(), vec!["l0.w1".into()]),
+                Unit::group("lnf".into(), vec!["head".into()]),
                 Unit::Layer { name: "l0.w2".into() },
             ]
         );
@@ -367,11 +657,11 @@ mod tests {
         assert_eq!(
             p.units,
             vec![
-                Unit::Group {
-                    ln: "l0.ln1".into(),
-                    members: vec!["l0.wq".into(), "l0.wk".into(), "l0.w2".into()],
-                },
-                Unit::Group { ln: "l0.ln2".into(), members: vec!["l0.w1".into()] },
+                Unit::group(
+                    "l0.ln1".into(),
+                    vec!["l0.wq".into(), "l0.wk".into(), "l0.w2".into()],
+                ),
+                Unit::group("l0.ln2".into(), vec!["l0.w1".into()]),
                 Unit::Layer { name: "head".into() },
             ]
         );
@@ -394,5 +684,107 @@ mod tests {
         .unwrap();
         let err = GroupPlan::transform(&d, &names, Some(&m)).unwrap_err();
         assert!(format!("{err:#}").contains("ghost"), "{err:#}");
+    }
+
+    #[test]
+    fn manifest_rejects_empty_groups_array() {
+        let empty = Json::parse(r#"{"groups": []}"#).unwrap();
+        let err = GroupManifest::parse(&empty).unwrap_err();
+        assert!(format!("{err:#}").contains("empty"), "{err:#}");
+    }
+
+    #[test]
+    fn manifest_rejects_non_quantizable_tensor() {
+        // "embed" exists in the checkpoint but is not a quantizable GEMM:
+        // the error must say so (not just "unknown")
+        let (d, names) = source(8);
+        let m = GroupManifest::parse(
+            &Json::parse(r#"{"groups": [{"ln": "l0.ln1", "members": ["embed"]}]}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        let err = GroupPlan::transform(&d, &names, Some(&m)).unwrap_err();
+        assert!(format!("{err:#}").contains("not a quantizable"), "{err:#}");
+    }
+
+    #[test]
+    fn graph_plan_matches_pattern_plan_on_canonical_names() {
+        // on a canonical checkpoint the traced dataflow must agree with
+        // the name patterns — the patterns are a correct (if fragile)
+        // encoding of this very structure
+        let (d, cfg, quantizable) = traceable_ckpt();
+        let graph = trace_graph(&d, &cfg).unwrap();
+        let from_trace = GroupPlan::from_graph(&d, &quantizable, &graph).unwrap();
+        let from_patterns = GroupPlan::transform(&d, &quantizable, None).unwrap();
+        assert_eq!(from_trace.diff(&from_patterns), None);
+        assert!(from_trace
+            .units
+            .iter()
+            .any(|u| matches!(u, Unit::Group { ln, .. } if ln == "l0.ln1")));
+    }
+
+    #[test]
+    fn graph_plan_unfolds_ln_when_a_sibling_gemm_is_not_quantizable() {
+        // drop wv from the quantizable set: ln1's output now feeds a GEMM
+        // that will NOT be rescaled, so folding ln1 would corrupt it —
+        // the trace demotes wq/wk to singletons; the patterns would have
+        // grouped them anyway (the bug class this subsystem removes)
+        let (d, cfg, mut quantizable) = traceable_ckpt();
+        let graph = trace_graph(&d, &cfg).unwrap();
+        quantizable.retain(|n| n != "l0.wv");
+        let plan = GroupPlan::from_graph(&d, &quantizable, &graph).unwrap();
+        assert!(plan.units.contains(&Unit::Layer { name: "l0.wq".into() }));
+        assert!(plan.units.contains(&Unit::Layer { name: "l0.wk".into() }));
+        assert!(!plan
+            .units
+            .iter()
+            .any(|u| matches!(u, Unit::Group { ln, .. } if ln == "l0.ln1")));
+        // the untouched MLP group is still derived
+        assert!(plan
+            .units
+            .iter()
+            .any(|u| matches!(u, Unit::Group { ln, .. } if ln == "l0.ln2")));
+
+        let naive = GroupPlan::transform(&d, &quantizable, None).unwrap();
+        assert!(naive
+            .units
+            .iter()
+            .any(|u| matches!(u, Unit::Group { ln, .. } if ln == "l0.ln1")));
+    }
+
+    #[test]
+    fn graph_plan_rejects_stale_fingerprint() {
+        let (mut d, cfg, quantizable) = traceable_ckpt();
+        let graph = trace_graph(&d, &cfg).unwrap();
+        d.insert_f32("extra", &Tensor::zeros(vec![2]));
+        let err = GroupPlan::from_graph(&d, &quantizable, &graph).unwrap_err();
+        assert!(format!("{err:#}").contains("stale"), "{err:#}");
+    }
+
+    #[test]
+    fn manifest_and_trace_disagreement_errors() {
+        let (d, cfg, quantizable) = traceable_ckpt();
+        let graph = trace_graph(&d, &cfg).unwrap();
+        // manifest that forces head plain — disagrees with the trace,
+        // which folds head into lnf
+        let m = GroupManifest::parse(
+            &Json::parse(r#"{"groups": [{"ln": null, "members": ["head"]}]}"#).unwrap(),
+        )
+        .unwrap();
+        let gs = GroupSource::ManifestAndTrace(m, graph.clone());
+        let err = GroupPlan::resolve(&d, &quantizable, &gs).unwrap_err();
+        assert!(format!("{err:#}").contains("disagree"), "{err:#}");
+
+        // an agreeing manifest resolves fine
+        let m = GroupManifest::parse(
+            &Json::parse(r#"{"groups": [{"ln": "lnf", "members": ["head"]}]}"#).unwrap(),
+        )
+        .unwrap();
+        let gs = GroupSource::ManifestAndTrace(m, graph);
+        let plan = GroupPlan::resolve(&d, &quantizable, &gs).unwrap();
+        assert!(plan
+            .units
+            .iter()
+            .any(|u| matches!(u, Unit::Group { ln, .. } if ln == "lnf")));
     }
 }

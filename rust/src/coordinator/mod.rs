@@ -150,6 +150,9 @@ impl PipelineOutcome {
 ///
 /// `calib` supplies per-layer activation statistics (required by
 /// SmoothQuant/AWQ); `rt` supplies the PJRT engine when selected.
+/// Transform groups derive from the name patterns; use
+/// [`run_pipeline_grouped`] to supply an explicit [`group::GroupSource`]
+/// (a `--groups` manifest or a traced dataflow graph).
 pub fn run_pipeline(
     post: &Dts,
     base: &Dts,
@@ -158,6 +161,26 @@ pub fn run_pipeline(
     cfg: &PipelineConfig,
     rt: Option<&Runtime>,
 ) -> Result<PipelineOutcome> {
+    run_pipeline_grouped(post, base, quantizable, calib, cfg, rt, &group::GroupSource::Patterns)
+}
+
+/// [`run_pipeline`] with an explicit transform-group source.
+#[allow(clippy::too_many_arguments)]
+pub fn run_pipeline_grouped(
+    post: &Dts,
+    base: &Dts,
+    quantizable: &[String],
+    calib: Option<&Dts>,
+    cfg: &PipelineConfig,
+    rt: Option<&Runtime>,
+    groups: &group::GroupSource,
+) -> Result<PipelineOutcome> {
+    if cfg.method.delta_defined() && !groups.is_patterns() {
+        bail!(
+            "--groups / --group-source only apply to the transform baselines \
+             (smoothquant / awq)"
+        );
+    }
     // start from the post-trained parameters; quantized layers get
     // replaced below
     let mut params = Params::new();
@@ -168,7 +191,7 @@ pub fn run_pipeline(
     let (out, total_secs) = time(|| -> Result<_> {
         match &cfg.method {
             Method::SmoothQuant { .. } | Method::Awq => {
-                run_transformed(&mut params, post, quantizable, calib, cfg)
+                run_transformed(&mut params, post, quantizable, calib, cfg, groups)
             }
             _ => run_delta_methods(&mut params, post, base, quantizable, cfg, rt),
         }
@@ -311,8 +334,9 @@ fn run_delta_methods(
 pub(crate) struct TransformUnitOut {
     pub outcomes: Vec<LayerOutcome>,
     pub quantized: Vec<(String, QuantizedTensor)>,
-    /// `(ln, folded gain, folded bias)` — present for group units.
-    pub ln_fold: Option<(String, Tensor, Tensor)>,
+    /// `(folded gain, folded bias)` — present for group units; the
+    /// stored names come from the unit's `gain` / `bias` fields.
+    pub ln_fold: Option<(Tensor, Tensor)>,
 }
 
 /// Quantize one transform unit (a layernorm-coupled group, or a
@@ -389,7 +413,7 @@ pub(crate) fn quantize_transform_unit(
             Ok(TransformUnitOut {
                 outcomes,
                 quantized: out.quantized,
-                ln_fold: Some((ln.clone(), out.gain, out.bias)),
+                ln_fold: Some((out.gain, out.bias)),
             })
         }
     }
@@ -397,18 +421,20 @@ pub(crate) fn quantize_transform_unit(
 
 /// SmoothQuant / AWQ: equivalent per-channel transformation folded into
 /// the upstream layernorm, then AbsMax quantization of the transformed
-/// weight. Scheduled over the shared [`group::GroupPlan`]; layers with no
-/// foldable upstream affine quantize plainly.
+/// weight. Scheduled over the shared [`group::GroupPlan`] resolved from
+/// `groups` (name patterns, an explicit manifest, or a traced dataflow
+/// graph); layers with no foldable upstream affine quantize plainly.
 fn run_transformed(
     params: &mut Params,
     post: &Dts,
     quantizable: &[String],
     calib: Option<&Dts>,
     cfg: &PipelineConfig,
+    groups: &group::GroupSource,
 ) -> Result<LayerBundle> {
     let calib = calib.ok_or_else(|| anyhow!("{} requires calibration stats",
                                             cfg.method.label()))?;
-    let plan = group::GroupPlan::transform(post, quantizable, None)?;
+    let plan = group::GroupPlan::resolve(post, quantizable, groups)?;
     let mut layers = Vec::new();
     let mut quantized = BTreeMap::new();
 
@@ -419,20 +445,18 @@ fn run_transformed(
             .map(|m| Ok((m.clone(), post.tensor_f32(m)?)))
             .collect::<Result<_>>()?;
         let (act, ln_params) = match unit {
-            group::Unit::Group { ln, members: names } => {
+            group::Unit::Group { gain, bias, members: names, .. } => {
                 let act = match calib.tensor_f32(&names[0]) {
                     Ok(t) => t.into_data(),
                     Err(e) => bail!("calib stats for {}: {e}", names[0]),
                 };
-                let gname = format!("{ln}.g");
-                let bname = format!("{ln}.b");
                 let g = params
-                    .get(&gname)
-                    .ok_or_else(|| anyhow!("missing {gname}"))?
+                    .get(gain)
+                    .ok_or_else(|| anyhow!("missing {gain}"))?
                     .clone();
                 let b = params
-                    .get(&bname)
-                    .ok_or_else(|| anyhow!("missing {bname}"))?
+                    .get(bias)
+                    .ok_or_else(|| anyhow!("missing {bias}"))?
                     .clone();
                 (Some(act), Some((g, b)))
             }
@@ -452,9 +476,11 @@ fn run_transformed(
             quantized.insert(name, q);
         }
         layers.extend(out.outcomes);
-        if let Some((ln, g, b)) = out.ln_fold {
-            params.insert(format!("{ln}.g"), g);
-            params.insert(format!("{ln}.b"), b);
+        if let (group::Unit::Group { gain, bias, .. }, Some((g, b))) =
+            (unit, out.ln_fold)
+        {
+            params.insert(gain.clone(), g);
+            params.insert(bias.clone(), b);
         }
     }
     Ok((layers, quantized))

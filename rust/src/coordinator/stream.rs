@@ -57,7 +57,7 @@ use crate::tensor::Tensor;
 use crate::util::json::Json;
 use crate::util::timer::time;
 
-use super::group::{GroupManifest, GroupPlan, Unit};
+use super::group::{GroupPlan, GroupSource, Unit};
 use super::{quantize_delta_layer, quantize_transform_unit, LayerOutcome, Method};
 
 /// Journal file name inside the output directory.
@@ -78,9 +78,11 @@ pub struct StreamConfig {
     pub shard_budget: u64,
     /// Skip units recorded in the output directory's resume journal.
     pub resume: bool,
-    /// Explicit transform-group override (`--groups`); None derives the
-    /// grouping from the model naming convention.
-    pub groups: Option<GroupManifest>,
+    /// Where transform groups come from: the model naming convention
+    /// (default), an explicit `--groups` manifest, a traced dataflow
+    /// graph (`daq trace` sidecar), or both cross-checked against each
+    /// other.
+    pub groups: GroupSource,
 }
 
 impl StreamConfig {
@@ -92,7 +94,7 @@ impl StreamConfig {
             depth: workers.max(2),
             shard_budget: crate::io::shard::DEFAULT_SHARD_MB << 20,
             resume: false,
-            groups: None,
+            groups: GroupSource::Patterns,
         }
     }
 }
@@ -342,7 +344,14 @@ fn quantize_unit(
             &cfg.method,
             cfg.granularity,
         )?;
-        Ok((out.outcomes, unit_tensors(out.quantized, out.ln_fold)))
+        // the folded affine persists under the unit's stored names
+        let fold = match (unit, out.ln_fold) {
+            (Unit::Group { gain, bias, .. }, Some((g, b))) => {
+                Some((gain.clone(), bias.clone(), g, b))
+            }
+            _ => None,
+        };
+        Ok((out.outcomes, unit_tensors(out.quantized, fold)))
     } else {
         let (name, wp, wb) = members
             .into_iter()
@@ -356,9 +365,10 @@ fn quantize_unit(
 }
 
 /// Serialize a quantized unit into the tensors the store persists.
+/// `ln_fold` is `(gain name, bias name, folded gain, folded bias)`.
 fn unit_tensors(
     quantized: Vec<(String, QuantizedTensor)>,
-    ln_fold: Option<(String, Tensor, Tensor)>,
+    ln_fold: Option<(String, String, Tensor, Tensor)>,
 ) -> Vec<(String, DtsTensor)> {
     let mut tensors = Vec::with_capacity(quantized.len() * 3 + 2);
     for (name, q) in quantized {
@@ -379,13 +389,13 @@ fn unit_tensors(
             DtsTensor::F32 { shape: deq.shape().to_vec(), data: deq.into_data() },
         ));
     }
-    if let Some((ln, gain, bias)) = ln_fold {
+    if let Some((gain_name, bias_name, gain, bias)) = ln_fold {
         tensors.push((
-            format!("{ln}.g"),
+            gain_name,
             DtsTensor::F32 { shape: gain.shape().to_vec(), data: gain.into_data() },
         ));
         tensors.push((
-            format!("{ln}.b"),
+            bias_name,
             DtsTensor::F32 { shape: bias.shape().to_vec(), data: bias.into_data() },
         ));
     }
@@ -413,8 +423,11 @@ pub fn run_stream(
                 cfg.method.label()
             );
         }
-    } else if cfg.groups.is_some() {
-        bail!("--groups only applies to the transform baselines (smoothquant / awq)");
+    } else if !cfg.groups.is_patterns() {
+        bail!(
+            "--groups / --group-source only apply to the transform baselines \
+             (smoothquant / awq)"
+        );
     }
 
     let (out, total_secs) =
@@ -433,7 +446,7 @@ fn run_stream_inner(
     cfg: &StreamConfig,
 ) -> Result<StreamOutcome> {
     let plan = if is_transform(&cfg.method) {
-        GroupPlan::transform(post, quantizable, cfg.groups.as_ref())?
+        GroupPlan::resolve(post, quantizable, &cfg.groups)?
     } else {
         GroupPlan::delta(quantizable)
     };
@@ -443,7 +456,7 @@ fn run_stream_inner(
     // prefetch thread finally reaches that group
     if let Some(calib) = calib {
         for unit in &plan.units {
-            let Unit::Group { ln, members } = unit else { continue };
+            let Unit::Group { ln, members, .. } = unit else { continue };
             let first = &members[0];
             let rows = post.shape_of(first).map(|s| s[0]).unwrap_or(0);
             match calib.shape_of(first) {
@@ -600,7 +613,7 @@ fn run_stream_inner(
                         members.push((name.clone(), wp, wb));
                     }
                     let (act, ln_params) = match &unit {
-                        Unit::Group { ln, members: names } => {
+                        Unit::Group { gain, bias, members: names, .. } => {
                             let calib = calib
                                 .ok_or_else(|| anyhow!("calib source required"))?;
                             let act = calib
@@ -609,8 +622,8 @@ fn run_stream_inner(
                                     anyhow!("calib stats for {}: {e}", names[0])
                                 })?
                                 .into_data();
-                            let gain = post.tensor_f32(&format!("{ln}.g"))?;
-                            let bias = post.tensor_f32(&format!("{ln}.b"))?;
+                            let gain = post.tensor_f32(gain)?;
+                            let bias = post.tensor_f32(bias)?;
                             in_bytes += (act.len() + gain.len() + bias.len()) * 4;
                             (Some(act), Some((gain, bias)))
                         }
@@ -879,7 +892,8 @@ mod tests {
     fn groups_manifest_rejected_for_delta_methods() {
         let d = crate::io::dts::Dts::new();
         let mut cfg = StreamConfig::new(Granularity::PerChannel, Method::AbsMax, 1);
-        cfg.groups = Some(GroupManifest::default());
+        cfg.groups =
+            GroupSource::Manifest(crate::coordinator::group::GroupManifest::default());
         let dir = std::env::temp_dir()
             .join(format!("daq_stream_groups_delta_{}", std::process::id()));
         let err = run_stream(&d, &d, &[], None, &dir, &cfg).unwrap_err();

@@ -8,6 +8,7 @@
 //!   (`forward_native`), used to cross-check the artifact and in tests.
 
 pub mod model_native;
+pub mod trace;
 
 use std::collections::HashMap;
 

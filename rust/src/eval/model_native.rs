@@ -1,8 +1,17 @@
 //! Native-Rust transformer forward — an independent reimplementation of
 //! `python/compile/model.py` used to cross-check the AOT artifact (the
 //! integration test asserts argmax agreement) and as a PJRT-free fallback.
+//!
+//! The forward is written once, generically, against a [`Backend`] whose
+//! handles flow through the graph: [`NativeBackend`] computes real
+//! tensors (bitwise-identical to the original hand-rolled loop), while
+//! `eval::trace`'s shape-only backend re-runs the same `forward_with`
+//! body to record the producer→consumer dataflow graph without touching
+//! a single payload. Structure lives in exactly one place, so the traced
+//! graph cannot drift from what the forward actually computes.
 
 use std::collections::HashMap;
+use std::rc::Rc;
 
 use anyhow::{anyhow, Result};
 
@@ -40,49 +49,197 @@ impl ModelCfg {
     }
 }
 
-fn p<'a>(params: &'a HashMap<String, Tensor>, name: &str) -> Result<&'a Tensor> {
-    params.get(name).ok_or_else(|| anyhow!("missing param {name:?}"))
+/// The operations the transformer forward is built from. `forward_with`
+/// drives a backend through the graph; the handle type `H` is whatever
+/// the backend flows between ops — real tensors for [`NativeBackend`],
+/// shape-only value ids for the tracing backend.
+///
+/// Parameters are fetched by their *canonical role name* (`l3.wq`,
+/// `lnf.g`, ...); a backend may resolve roles to differently named
+/// checkpoint tensors (see `eval::trace::Layout`).
+pub trait Backend {
+    type H: Clone;
+
+    /// Fetch a model parameter by canonical role name.
+    fn param(&mut self, name: &str) -> Result<Self::H>;
+
+    /// Token + learned positional embedding: `[batch * seq, d]`.
+    fn embed(
+        &mut self,
+        embed: &Self::H,
+        pos: &Self::H,
+        batch: usize,
+        tokens: &[i32],
+    ) -> Result<Self::H>;
+
+    /// Row-wise layernorm with affine `gain` / `bias` (eps 1e-5).
+    fn layernorm(&mut self, x: &Self::H, gain: &Self::H, bias: &Self::H) -> Result<Self::H>;
+
+    /// `x @ w` — every GEMM against a checkpoint weight goes through
+    /// here, which is what makes the traced graph's layernorm→GEMM
+    /// edges complete.
+    fn matmul(&mut self, x: &Self::H, w: &Self::H) -> Result<Self::H>;
+
+    /// Causal softmax attention over `n_head` heads.
+    fn attention(
+        &mut self,
+        q: &Self::H,
+        k: &Self::H,
+        v: &Self::H,
+        batch: usize,
+        n_head: usize,
+    ) -> Result<Self::H>;
+
+    /// Residual add.
+    fn add(&mut self, a: &Self::H, b: &Self::H) -> Result<Self::H>;
+
+    /// Tanh-approximated GELU, elementwise. Consumes its input so a
+    /// uniquely owned activation can be updated in place.
+    fn gelu(&mut self, x: Self::H) -> Result<Self::H>;
 }
 
-/// Forward pass: tokens `[batch * seq]` → logits `[batch * seq * vocab]`.
-///
-/// Matches the JAX graph: learned positional embeddings, pre-LN blocks,
-/// causal softmax attention, tanh-approximated GELU, final LN, untied head.
-pub fn forward_native(
-    params: &HashMap<String, Tensor>,
+/// The transformer forward, generic over the backend: learned positional
+/// embeddings, pre-LN blocks, causal softmax attention, tanh-approximated
+/// GELU, final LN, untied head. Matches the JAX graph; returns the
+/// logits handle (`[batch * seq, vocab]` under the native backend).
+pub fn forward_with<B: Backend>(
+    be: &mut B,
     cfg: &ModelCfg,
     batch: usize,
     tokens: &[i32],
-) -> Result<Vec<f32>> {
-    let (t_len, d, v) = (cfg.seq_len, cfg.d_model, cfg.vocab);
-    assert_eq!(tokens.len(), batch * t_len);
-    let embed = p(params, "embed")?;
-    let pos = p(params, "pos")?;
-
-    // x: [batch*seq, d]
-    let mut x = Tensor::zeros(vec![batch * t_len, d]);
-    for i in 0..batch {
-        for t in 0..t_len {
-            let tok = tokens[i * t_len + t] as usize;
-            for j in 0..d {
-                x.set2(i * t_len + t, j, embed.at2(tok, j) + pos.at2(t, j));
-            }
-        }
-    }
-
-    let n_head = cfg.n_head;
-    let dh = d / n_head;
-    let scale = 1.0 / (dh as f32).sqrt();
+) -> Result<B::H> {
+    assert_eq!(tokens.len(), batch * cfg.seq_len);
+    let embed = be.param("embed")?;
+    let pos = be.param("pos")?;
+    let mut x = be.embed(&embed, &pos, batch, tokens)?;
 
     for l in 0..cfg.n_layer {
         // --- attention block ---
-        let g1 = p(params, &format!("l{l}.ln1.g"))?;
-        let b1 = p(params, &format!("l{l}.ln1.b"))?;
-        let h = layernorm_rows(&x, g1.data(), b1.data(), 1e-5);
-        let q = matmul(&h, p(params, &format!("l{l}.wq"))?);
-        let k = matmul(&h, p(params, &format!("l{l}.wk"))?);
-        let vv = matmul(&h, p(params, &format!("l{l}.wv"))?);
+        let g1 = be.param(&format!("l{l}.ln1.g"))?;
+        let b1 = be.param(&format!("l{l}.ln1.b"))?;
+        let h = be.layernorm(&x, &g1, &b1)?;
+        let wq = be.param(&format!("l{l}.wq"))?;
+        let wk = be.param(&format!("l{l}.wk"))?;
+        let wv = be.param(&format!("l{l}.wv"))?;
+        let q = be.matmul(&h, &wq)?;
+        let k = be.matmul(&h, &wk)?;
+        let v = be.matmul(&h, &wv)?;
+        let att = be.attention(&q, &k, &v, batch, cfg.n_head)?;
+        let wo = be.param(&format!("l{l}.wo"))?;
+        let proj = be.matmul(&att, &wo)?;
+        x = be.add(&x, &proj)?;
 
+        // --- MLP block ---
+        let g2 = be.param(&format!("l{l}.ln2.g"))?;
+        let b2 = be.param(&format!("l{l}.ln2.b"))?;
+        let h2 = be.layernorm(&x, &g2, &b2)?;
+        let w1 = be.param(&format!("l{l}.w1"))?;
+        let m = be.matmul(&h2, &w1)?;
+        let m = be.gelu(m)?;
+        let w2 = be.param(&format!("l{l}.w2"))?;
+        let m2 = be.matmul(&m, &w2)?;
+        x = be.add(&x, &m2)?;
+    }
+
+    let gf = be.param("lnf.g")?;
+    let bf = be.param("lnf.b")?;
+    let xf = be.layernorm(&x, &gf, &bf)?;
+    let head = be.param("head")?;
+    be.matmul(&xf, &head)
+}
+
+/// A value flowing through the [`NativeBackend`]: parameters borrow from
+/// the checkpoint map (no copies on the hot serving path), intermediates
+/// are owned and cheaply clonable through an `Rc`.
+#[derive(Clone)]
+pub enum NativeVal<'p> {
+    Param(&'p Tensor),
+    Owned(Rc<Tensor>),
+}
+
+impl NativeVal<'_> {
+    fn own(t: Tensor) -> Self {
+        NativeVal::Owned(Rc::new(t))
+    }
+
+    fn t(&self) -> &Tensor {
+        match self {
+            NativeVal::Param(t) => t,
+            NativeVal::Owned(t) => t,
+        }
+    }
+}
+
+/// Computes the forward with real tensors — the arithmetic (and its
+/// evaluation order) is exactly the pre-refactor hand-rolled loop, so
+/// logits are bitwise-unchanged.
+pub struct NativeBackend<'p> {
+    pub params: &'p HashMap<String, Tensor>,
+}
+
+impl<'p> Backend for NativeBackend<'p> {
+    type H = NativeVal<'p>;
+
+    fn param(&mut self, name: &str) -> Result<NativeVal<'p>> {
+        self.params
+            .get(name)
+            .map(NativeVal::Param)
+            .ok_or_else(|| anyhow!("missing param {name:?}"))
+    }
+
+    fn embed(
+        &mut self,
+        embed: &NativeVal<'p>,
+        pos: &NativeVal<'p>,
+        batch: usize,
+        tokens: &[i32],
+    ) -> Result<NativeVal<'p>> {
+        let (embed, pos) = (embed.t(), pos.t());
+        let d = embed.cols();
+        let t_len = tokens.len() / batch;
+        let mut x = Tensor::zeros(vec![batch * t_len, d]);
+        for i in 0..batch {
+            for t in 0..t_len {
+                let tok = tokens[i * t_len + t] as usize;
+                for j in 0..d {
+                    x.set2(i * t_len + t, j, embed.at2(tok, j) + pos.at2(t, j));
+                }
+            }
+        }
+        Ok(NativeVal::own(x))
+    }
+
+    fn layernorm(
+        &mut self,
+        x: &NativeVal<'p>,
+        gain: &NativeVal<'p>,
+        bias: &NativeVal<'p>,
+    ) -> Result<NativeVal<'p>> {
+        Ok(NativeVal::own(layernorm_rows(
+            x.t(),
+            gain.t().data(),
+            bias.t().data(),
+            1e-5,
+        )))
+    }
+
+    fn matmul(&mut self, x: &NativeVal<'p>, w: &NativeVal<'p>) -> Result<NativeVal<'p>> {
+        Ok(NativeVal::own(matmul(x.t(), w.t())))
+    }
+
+    fn attention(
+        &mut self,
+        q: &NativeVal<'p>,
+        k: &NativeVal<'p>,
+        v: &NativeVal<'p>,
+        batch: usize,
+        n_head: usize,
+    ) -> Result<NativeVal<'p>> {
+        let (q, k, vv) = (q.t(), k.t(), v.t());
+        let d = q.cols();
+        let dh = d / n_head;
+        let t_len = q.rows() / batch;
+        let scale = 1.0 / (dh as f32).sqrt();
         let mut att_out = Tensor::zeros(vec![batch * t_len, d]);
         for i in 0..batch {
             for hd in 0..n_head {
@@ -115,27 +272,42 @@ pub fn forward_native(
                 }
             }
         }
-        let proj = matmul(&att_out, p(params, &format!("l{l}.wo"))?);
-        x = x.add(&proj);
-
-        // --- MLP block ---
-        let g2 = p(params, &format!("l{l}.ln2.g"))?;
-        let b2 = p(params, &format!("l{l}.ln2.b"))?;
-        let h2 = layernorm_rows(&x, g2.data(), b2.data(), 1e-5);
-        let mut m = matmul(&h2, p(params, &format!("l{l}.w1"))?);
-        for vmut in m.data_mut() {
-            *vmut = gelu(*vmut);
-        }
-        let m2 = matmul(&m, p(params, &format!("l{l}.w2"))?);
-        x = x.add(&m2);
+        Ok(NativeVal::own(att_out))
     }
 
-    let gf = p(params, "lnf.g")?;
-    let bf = p(params, "lnf.b")?;
-    let xf = layernorm_rows(&x, gf.data(), bf.data(), 1e-5);
-    let logits = matmul(&xf, p(params, "head")?);
-    debug_assert_eq!(logits.shape(), &[batch * t_len, v]);
-    Ok(logits.into_data())
+    fn add(&mut self, a: &NativeVal<'p>, b: &NativeVal<'p>) -> Result<NativeVal<'p>> {
+        Ok(NativeVal::own(a.t().add(b.t())))
+    }
+
+    fn gelu(&mut self, x: NativeVal<'p>) -> Result<NativeVal<'p>> {
+        // a uniquely owned activation (the usual case: the matmul result
+        // just produced) mutates in place, as the pre-refactor loop did
+        let mut t = match x {
+            NativeVal::Owned(rc) => Rc::try_unwrap(rc).unwrap_or_else(|rc| (*rc).clone()),
+            NativeVal::Param(t) => t.clone(),
+        };
+        for v in t.data_mut() {
+            *v = gelu(*v);
+        }
+        Ok(NativeVal::own(t))
+    }
+}
+
+/// Forward pass: tokens `[batch * seq]` → logits `[batch * seq * vocab]`.
+pub fn forward_native(
+    params: &HashMap<String, Tensor>,
+    cfg: &ModelCfg,
+    batch: usize,
+    tokens: &[i32],
+) -> Result<Vec<f32>> {
+    let mut be = NativeBackend { params };
+    let logits = forward_with(&mut be, cfg, batch, tokens)?;
+    let t = match logits {
+        NativeVal::Param(t) => t.clone(),
+        NativeVal::Owned(rc) => Rc::try_unwrap(rc).unwrap_or_else(|rc| (*rc).clone()),
+    };
+    debug_assert_eq!(t.shape(), &[batch * cfg.seq_len, cfg.vocab]);
+    Ok(t.into_data())
 }
 
 #[cfg(test)]

@@ -1,0 +1,701 @@
+//! Dataflow tracing over checkpoint tensors — the structure source for
+//! transform grouping.
+//!
+//! The transform baselines (SmoothQuant / AWQ) fold the inverse smoothing
+//! vector into the *upstream layernorm*, so grouping GEMMs correctly
+//! requires knowing which layernorm actually feeds each GEMM. The name
+//! patterns in [`crate::coordinator::group::upstream_ln`] guess this from
+//! the model naming convention; this module derives it from the model's
+//! real dataflow instead: it re-runs the shared forward body
+//! ([`forward_with`](super::model_native::forward_with)) under a
+//! **shape-only backend** whose handles are value ids, recording one
+//! [`OpNode`] per operation. No payload is ever read — tracing is
+//! index-only, exactly like the group planner's other validations.
+//!
+//! Checkpoints whose tensors are named differently (the renamed-tensor
+//! case the patterns cannot group) declare their naming through
+//! `layout.<role> = <actual name>` metadata entries ([`Layout`]); the
+//! layout only *locates* tensors — which layernorm couples to which GEMM,
+//! and whether a layernorm is foldable at all, comes from the graph.
+//!
+//! The traced graph persists as a DTS sidecar (`graph.dts`, written by
+//! `daq trace`) carrying a fingerprint of the checkpoint index, so
+//! streaming runs can load groups index-only without re-tracing and a
+//! stale sidecar is rejected instead of silently mis-grouping.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::io::dts::Dts;
+use crate::io::TensorSource;
+
+use super::model_native::{forward_with, Backend, ModelCfg};
+
+/// A value in the traced graph: checkpoint tensors are leaves, every op
+/// output is a fresh id.
+pub type ValueId = u32;
+
+/// Operation kinds the forward is built from (one per [`Backend`] op).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    Embed,
+    Layernorm,
+    Matmul,
+    Attention,
+    Add,
+    Gelu,
+}
+
+impl OpKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            OpKind::Embed => "embed",
+            OpKind::Layernorm => "layernorm",
+            OpKind::Matmul => "matmul",
+            OpKind::Attention => "attention",
+            OpKind::Add => "add",
+            OpKind::Gelu => "gelu",
+        }
+    }
+
+    fn code(self) -> i32 {
+        match self {
+            OpKind::Embed => 0,
+            OpKind::Layernorm => 1,
+            OpKind::Matmul => 2,
+            OpKind::Attention => 3,
+            OpKind::Add => 4,
+            OpKind::Gelu => 5,
+        }
+    }
+
+    fn from_code(c: i32) -> Result<OpKind> {
+        Ok(match c {
+            0 => OpKind::Embed,
+            1 => OpKind::Layernorm,
+            2 => OpKind::Matmul,
+            3 => OpKind::Attention,
+            4 => OpKind::Add,
+            5 => OpKind::Gelu,
+            other => bail!("graph sidecar: unknown op kind code {other}"),
+        })
+    }
+}
+
+/// One traced operation: `inputs` → `output` (value ids).
+///
+/// Input conventions (fixed by the [`Backend`] trait):
+/// - `Matmul`: `[activation, weight]` — the weight is always input 1;
+/// - `Layernorm`: `[x, gain, bias]`;
+/// - `Embed`: `[embedding, positional]`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct OpNode {
+    pub kind: OpKind,
+    pub inputs: Vec<ValueId>,
+    pub output: ValueId,
+}
+
+/// The traced producer→consumer graph over one checkpoint.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct TraceGraph {
+    /// Checkpoint tensor name (as stored, post-layout) → leaf value id.
+    pub leaves: BTreeMap<String, ValueId>,
+    /// Operations in execution order.
+    pub ops: Vec<OpNode>,
+    /// [`fingerprint`] of the checkpoint index the trace was taken from.
+    pub fingerprint: u64,
+}
+
+impl TraceGraph {
+    /// Name of the leaf holding `vid`, if `vid` is a checkpoint tensor.
+    pub fn leaf_name(&self, vid: ValueId) -> Option<&str> {
+        self.leaves
+            .iter()
+            .find_map(|(n, &v)| (v == vid).then(|| n.as_str()))
+    }
+
+    /// The op that produced `vid` (None for leaves).
+    pub fn producer(&self, vid: ValueId) -> Option<&OpNode> {
+        self.ops.iter().find(|o| o.output == vid)
+    }
+
+    /// Every op consuming `vid` as an input.
+    pub fn consumers(&self, vid: ValueId) -> Vec<&OpNode> {
+        self.ops.iter().filter(|o| o.inputs.contains(&vid)).collect()
+    }
+
+    /// Checkpoint tensors consumed as GEMM weights (matmul input 1), in
+    /// first-use order — the graph's answer to "what is quantizable",
+    /// with no name patterns involved.
+    pub fn quantizable(&self) -> Vec<String> {
+        let by_vid: BTreeMap<ValueId, &str> =
+            self.leaves.iter().map(|(n, &v)| (v, n.as_str())).collect();
+        let mut out: Vec<String> = Vec::new();
+        for op in &self.ops {
+            if op.kind != OpKind::Matmul {
+                continue;
+            }
+            if let Some(name) = op.inputs.get(1).and_then(|v| by_vid.get(v)) {
+                if !out.iter().any(|n| n == name) {
+                    out.push(name.to_string());
+                }
+            }
+        }
+        out
+    }
+
+    /// Op counts by kind, for `daq inspect`.
+    pub fn op_histogram(&self) -> BTreeMap<&'static str, usize> {
+        let mut h = BTreeMap::new();
+        for op in &self.ops {
+            *h.entry(op.kind.label()).or_insert(0) += 1;
+        }
+        h
+    }
+
+    // -- DTS sidecar ---------------------------------------------------
+
+    /// Serialize into an in-memory DTS container: op arrays as i32
+    /// tensors, leaf bindings and the fingerprint as metadata.
+    pub fn to_dts(&self) -> Dts {
+        let mut d = Dts::new();
+        d.meta.insert("daq.graph".into(), "1".into());
+        d.meta.insert(
+            "daq.graph.fingerprint".into(),
+            format!("{:016x}", self.fingerprint),
+        );
+        for (name, vid) in &self.leaves {
+            d.meta.insert(format!("leaf.{name}"), vid.to_string());
+        }
+        let kinds: Vec<i32> = self.ops.iter().map(|o| o.kind.code()).collect();
+        let outs: Vec<i32> = self.ops.iter().map(|o| o.output as i32).collect();
+        let in_len: Vec<i32> = self.ops.iter().map(|o| o.inputs.len() as i32).collect();
+        let ins: Vec<i32> = self
+            .ops
+            .iter()
+            .flat_map(|o| o.inputs.iter().map(|&v| v as i32))
+            .collect();
+        d.insert_i32("ops.kind", vec![kinds.len()], kinds);
+        d.insert_i32("ops.out", vec![outs.len()], outs);
+        d.insert_i32("ops.in_len", vec![in_len.len()], in_len);
+        d.insert_i32("ops.in", vec![ins.len()], ins);
+        d
+    }
+
+    /// Decode a sidecar container written by [`TraceGraph::to_dts`].
+    pub fn from_dts(d: &Dts) -> Result<TraceGraph> {
+        if d.meta.get("daq.graph").map(|v| v.as_str()) != Some("1") {
+            bail!("not a daq graph sidecar (missing `daq.graph = 1` metadata)");
+        }
+        let fingerprint = d
+            .meta
+            .get("daq.graph.fingerprint")
+            .and_then(|v| u64::from_str_radix(v, 16).ok())
+            .ok_or_else(|| anyhow!("graph sidecar: bad or missing fingerprint"))?;
+        let mut leaves = BTreeMap::new();
+        for (k, v) in &d.meta {
+            if let Some(name) = k.strip_prefix("leaf.") {
+                let vid: ValueId = v
+                    .parse()
+                    .map_err(|_| anyhow!("graph sidecar: bad leaf id for {name:?}"))?;
+                leaves.insert(name.to_string(), vid);
+            }
+        }
+        let (_, kinds) = d.tensor_i32("ops.kind")?;
+        let (_, outs) = d.tensor_i32("ops.out")?;
+        let (_, in_len) = d.tensor_i32("ops.in_len")?;
+        let (_, ins) = d.tensor_i32("ops.in")?;
+        if kinds.len() != outs.len() || kinds.len() != in_len.len() {
+            bail!("graph sidecar: op array lengths disagree");
+        }
+        // corrupt files must error, not panic on an `as usize` underflow
+        if outs.iter().chain(&in_len).chain(&ins).any(|&v| v < 0) {
+            bail!("graph sidecar: negative op array entry");
+        }
+        let total: usize = in_len.iter().map(|&n| n as usize).sum();
+        if total != ins.len() {
+            bail!("graph sidecar: ops.in has {} ids, index wants {total}", ins.len());
+        }
+        let mut ops = Vec::with_capacity(kinds.len());
+        let mut cursor = 0usize;
+        for i in 0..kinds.len() {
+            let n = in_len[i] as usize;
+            ops.push(OpNode {
+                kind: OpKind::from_code(kinds[i])?,
+                inputs: ins[cursor..cursor + n].iter().map(|&v| v as u32).collect(),
+                output: outs[i] as u32,
+            });
+            cursor += n;
+        }
+        Ok(TraceGraph { leaves, ops, fingerprint })
+    }
+
+    /// Write the sidecar file.
+    pub fn write_sidecar(&self, path: impl AsRef<Path>) -> Result<()> {
+        self.to_dts().write(path)
+    }
+
+    /// Read a sidecar file written by [`TraceGraph::write_sidecar`].
+    pub fn read_sidecar(path: impl AsRef<Path>) -> Result<TraceGraph> {
+        let path = path.as_ref();
+        let d = Dts::read(path).with_context(|| format!("graph sidecar {path:?}"))?;
+        TraceGraph::from_dts(&d).with_context(|| format!("{path:?}"))
+    }
+}
+
+/// Default sidecar location for a checkpoint path: `<stem>.graph.dts`
+/// next to a monolithic file, `graph.dts` inside a sharded store.
+pub fn sidecar_path(ckpt: &str) -> PathBuf {
+    let p = Path::new(ckpt);
+    if p.is_dir() {
+        p.join("graph.dts")
+    } else if ckpt.ends_with(".json") {
+        p.parent().unwrap_or_else(|| Path::new(".")).join("graph.dts")
+    } else {
+        p.with_extension("graph.dts")
+    }
+}
+
+/// Order-independent fingerprint of everything a trace is derived from:
+/// FNV-1a over the sorted (name, shape) pairs of the checkpoint index
+/// plus the trace-relevant metadata (the model config keys and every
+/// `layout.*` entry). Payload-free, stable across the monolithic /
+/// sharded backends, and it changes whenever a tensor is added,
+/// removed, renamed, or reshaped — or the layout / model config is
+/// edited — the staleness signal for persisted graph sidecars.
+pub fn fingerprint(source: &dyn TensorSource) -> u64 {
+    let mut names = source.names();
+    names.sort();
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut eat = |bytes: &[u8]| {
+        for &b in bytes {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    for name in &names {
+        eat(name.as_bytes());
+        eat(&[0xff]);
+        for d in source.shape_of(name).unwrap_or_default() {
+            eat(&(d as u64).to_le_bytes());
+        }
+        eat(&[0xfe]);
+    }
+    // metadata the traced graph depends on: editing the layout role map
+    // or the model config invalidates a recorded graph even when no
+    // tensor changed (BTreeMap iteration is already sorted)
+    for (k, v) in source.meta() {
+        let relevant = k.starts_with("layout.")
+            || matches!(
+                k.as_str(),
+                "vocab" | "d_model" | "n_layer" | "n_head" | "d_ff" | "seq_len"
+            );
+        if relevant {
+            eat(k.as_bytes());
+            eat(&[0xfd]);
+            eat(v.as_bytes());
+            eat(&[0xfc]);
+        }
+    }
+    h
+}
+
+/// Role → stored-name mapping for checkpoints that do not follow the
+/// canonical naming, declared as `layout.<role> = <actual>` metadata
+/// entries (analogous to a weight map in an HF index). Roles without an
+/// entry resolve to themselves.
+#[derive(Clone, Debug, Default)]
+pub struct Layout {
+    map: BTreeMap<String, String>,
+}
+
+impl Layout {
+    pub fn from_meta(meta: &BTreeMap<String, String>) -> Layout {
+        let map = meta
+            .iter()
+            .filter_map(|(k, v)| {
+                k.strip_prefix("layout.").map(|role| (role.to_string(), v.clone()))
+            })
+            .collect();
+        Layout { map }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// The stored tensor name for a canonical role.
+    pub fn resolve(&self, role: &str) -> String {
+        self.map.get(role).cloned().unwrap_or_else(|| role.to_string())
+    }
+}
+
+/// Shape-only handle flowing through the [`TraceBackend`].
+#[derive(Clone, Debug)]
+pub struct TracedVal {
+    pub vid: ValueId,
+    pub shape: Vec<usize>,
+}
+
+fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+fn cols2(shape: &[usize], what: &str) -> Result<(usize, usize)> {
+    match shape {
+        [r, c] => Ok((*r, *c)),
+        other => bail!("trace: {what} has shape {other:?}, wanted 2-D"),
+    }
+}
+
+/// Records the dataflow graph while checking shapes from the checkpoint
+/// index — an invalid checkpoint (missing tensor, dimension mismatch)
+/// fails the trace with the offending op, before any payload is read.
+pub struct TraceBackend<'s> {
+    source: &'s dyn TensorSource,
+    layout: Layout,
+    leaves: BTreeMap<String, ValueId>,
+    ops: Vec<OpNode>,
+    next: ValueId,
+}
+
+impl<'s> TraceBackend<'s> {
+    pub fn new(source: &'s dyn TensorSource, layout: Layout) -> TraceBackend<'s> {
+        TraceBackend { source, layout, leaves: BTreeMap::new(), ops: Vec::new(), next: 0 }
+    }
+
+    fn fresh(&mut self) -> ValueId {
+        let v = self.next;
+        self.next += 1;
+        v
+    }
+
+    fn op(&mut self, kind: OpKind, inputs: Vec<ValueId>, shape: Vec<usize>) -> TracedVal {
+        let output = self.fresh();
+        self.ops.push(OpNode { kind, inputs, output });
+        TracedVal { vid: output, shape }
+    }
+
+    /// Finish the trace, stamping the checkpoint fingerprint.
+    pub fn finish(self) -> TraceGraph {
+        TraceGraph {
+            leaves: self.leaves,
+            ops: self.ops,
+            fingerprint: fingerprint(self.source),
+        }
+    }
+}
+
+impl Backend for TraceBackend<'_> {
+    type H = TracedVal;
+
+    fn param(&mut self, name: &str) -> Result<TracedVal> {
+        let actual = self.layout.resolve(name);
+        let shape = self.source.shape_of(&actual).ok_or_else(|| {
+            if actual == name {
+                anyhow!("trace: checkpoint has no tensor {name:?}")
+            } else {
+                anyhow!(
+                    "trace: checkpoint has no tensor {actual:?} \
+                     (layout target of role {name:?})"
+                )
+            }
+        })?;
+        if let Some(&vid) = self.leaves.get(&actual) {
+            return Ok(TracedVal { vid, shape });
+        }
+        let vid = self.fresh();
+        self.leaves.insert(actual, vid);
+        Ok(TracedVal { vid, shape })
+    }
+
+    fn embed(
+        &mut self,
+        embed: &TracedVal,
+        pos: &TracedVal,
+        batch: usize,
+        tokens: &[i32],
+    ) -> Result<TracedVal> {
+        let (_, d) = cols2(&embed.shape, "embedding")?;
+        let (p_rows, p_cols) = cols2(&pos.shape, "positional embedding")?;
+        let t_len = tokens.len() / batch;
+        if p_rows < t_len || p_cols != d {
+            bail!(
+                "trace: positional embedding {:?} incompatible with \
+                 seq_len {t_len} x d_model {d}",
+                pos.shape
+            );
+        }
+        Ok(self.op(
+            OpKind::Embed,
+            vec![embed.vid, pos.vid],
+            vec![batch * t_len, d],
+        ))
+    }
+
+    fn layernorm(
+        &mut self,
+        x: &TracedVal,
+        gain: &TracedVal,
+        bias: &TracedVal,
+    ) -> Result<TracedVal> {
+        let (_, d) = cols2(&x.shape, "layernorm input")?;
+        for (t, part) in [(gain, "gain"), (bias, "bias")] {
+            if numel(&t.shape) != d {
+                bail!(
+                    "trace: layernorm {part} has {} elements, input width is {d}",
+                    numel(&t.shape)
+                );
+            }
+        }
+        let shape = x.shape.clone();
+        Ok(self.op(OpKind::Layernorm, vec![x.vid, gain.vid, bias.vid], shape))
+    }
+
+    fn matmul(&mut self, x: &TracedVal, w: &TracedVal) -> Result<TracedVal> {
+        let (n, k) = cols2(&x.shape, "matmul lhs")?;
+        let (wk, m) = cols2(&w.shape, "matmul weight")?;
+        if k != wk {
+            bail!("trace: matmul inner dims disagree ({k} vs {wk})");
+        }
+        Ok(self.op(OpKind::Matmul, vec![x.vid, w.vid], vec![n, m]))
+    }
+
+    fn attention(
+        &mut self,
+        q: &TracedVal,
+        k: &TracedVal,
+        v: &TracedVal,
+        _batch: usize,
+        n_head: usize,
+    ) -> Result<TracedVal> {
+        let (_, d) = cols2(&q.shape, "attention query")?;
+        if k.shape != q.shape || v.shape != q.shape {
+            bail!(
+                "trace: attention q/k/v shapes disagree ({:?} / {:?} / {:?})",
+                q.shape,
+                k.shape,
+                v.shape
+            );
+        }
+        if d % n_head != 0 {
+            bail!("trace: d_model {d} not divisible by n_head {n_head}");
+        }
+        let shape = q.shape.clone();
+        Ok(self.op(OpKind::Attention, vec![q.vid, k.vid, v.vid], shape))
+    }
+
+    fn add(&mut self, a: &TracedVal, b: &TracedVal) -> Result<TracedVal> {
+        if a.shape != b.shape {
+            bail!("trace: add shapes disagree ({:?} vs {:?})", a.shape, b.shape);
+        }
+        let shape = a.shape.clone();
+        Ok(self.op(OpKind::Add, vec![a.vid, b.vid], shape))
+    }
+
+    fn gelu(&mut self, x: TracedVal) -> Result<TracedVal> {
+        let TracedVal { vid, shape } = x;
+        Ok(self.op(OpKind::Gelu, vec![vid], shape))
+    }
+}
+
+/// Trace the forward over a checkpoint's index: run the shared
+/// `forward_with` body under the shape-only backend (layout read from
+/// `layout.*` metadata) and return the recorded graph, fingerprinted
+/// against the checkpoint.
+pub fn trace_graph(source: &dyn TensorSource, cfg: &ModelCfg) -> Result<TraceGraph> {
+    let layout = Layout::from_meta(source.meta());
+    let tokens = vec![0i32; cfg.seq_len];
+    let mut be = TraceBackend::new(source, layout);
+    forward_with(&mut be, cfg, 1, &tokens)?;
+    Ok(be.finish())
+}
+
+/// Convenience: trace with the config read from the checkpoint metadata.
+pub fn trace_checkpoint(source: &dyn TensorSource) -> Result<TraceGraph> {
+    let cfg = ModelCfg::from_meta(source.meta())
+        .context("tracing needs the model config in checkpoint metadata")?;
+    trace_graph(source, &cfg)
+}
+
+/// Extend an in-memory checkpoint with the canonical model-config and
+/// (optionally) layout metadata — test/builder helper.
+pub fn stamp_model_meta(d: &mut Dts, cfg: &ModelCfg) {
+    for (k, v) in [
+        ("vocab", cfg.vocab),
+        ("d_model", cfg.d_model),
+        ("n_layer", cfg.n_layer),
+        ("n_head", cfg.n_head),
+        ("d_ff", cfg.d_ff),
+        ("seq_len", cfg.seq_len),
+    ] {
+        d.meta.insert(k.to_string(), v.to_string());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg { vocab: 12, d_model: 8, n_layer: 1, n_head: 2, d_ff: 12, seq_len: 4 }
+    }
+
+    /// Canonical-named checkpoint matching `tiny_cfg` (shapes only — the
+    /// values are irrelevant to tracing).
+    fn canonical_ckpt(cfg: &ModelCfg) -> Dts {
+        let mut d = Dts::new();
+        stamp_model_meta(&mut d, cfg);
+        d.insert_f32("embed", &Tensor::zeros(vec![cfg.vocab, cfg.d_model]));
+        d.insert_f32("pos", &Tensor::zeros(vec![cfg.seq_len, cfg.d_model]));
+        for l in 0..cfg.n_layer {
+            for w in ["wq", "wk", "wv", "wo"] {
+                d.insert_f32(
+                    &format!("l{l}.{w}"),
+                    &Tensor::zeros(vec![cfg.d_model, cfg.d_model]),
+                );
+            }
+            d.insert_f32(&format!("l{l}.w1"), &Tensor::zeros(vec![cfg.d_model, cfg.d_ff]));
+            d.insert_f32(&format!("l{l}.w2"), &Tensor::zeros(vec![cfg.d_ff, cfg.d_model]));
+            for ln in ["ln1", "ln2"] {
+                d.insert_f32(&format!("l{l}.{ln}.g"), &Tensor::full(vec![cfg.d_model], 1.0));
+                d.insert_f32(&format!("l{l}.{ln}.b"), &Tensor::zeros(vec![cfg.d_model]));
+            }
+        }
+        d.insert_f32("lnf.g", &Tensor::full(vec![cfg.d_model], 1.0));
+        d.insert_f32("lnf.b", &Tensor::zeros(vec![cfg.d_model]));
+        d.insert_f32("head", &Tensor::zeros(vec![cfg.d_model, cfg.vocab]));
+        d
+    }
+
+    #[test]
+    fn trace_records_gemms_and_layernorm_edges() {
+        let cfg = tiny_cfg();
+        let d = canonical_ckpt(&cfg);
+        let g = trace_graph(&d, &cfg).unwrap();
+        // every checkpoint tensor the forward touches is a leaf
+        assert!(g.leaves.contains_key("l0.wq"));
+        assert!(g.leaves.contains_key("l0.ln1.g"));
+        assert!(g.leaves.contains_key("head"));
+        // quantizable = GEMM weights, in first-use order
+        assert_eq!(
+            g.quantizable(),
+            vec!["l0.wq", "l0.wk", "l0.wv", "l0.wo", "l0.w1", "l0.w2", "head"]
+        );
+        // the wq matmul's activation is produced by the ln1 layernorm
+        let wq = g.leaves["l0.wq"];
+        let mm = g
+            .ops
+            .iter()
+            .find(|o| o.kind == OpKind::Matmul && o.inputs.get(1) == Some(&wq))
+            .unwrap();
+        let ln = g.producer(mm.inputs[0]).unwrap();
+        assert_eq!(ln.kind, OpKind::Layernorm);
+        assert_eq!(g.leaf_name(ln.inputs[1]), Some("l0.ln1.g"));
+        // the w2 matmul's activation comes from a GELU, not a layernorm
+        let w2 = g.leaves["l0.w2"];
+        let mm2 = g
+            .ops
+            .iter()
+            .find(|o| o.kind == OpKind::Matmul && o.inputs.get(1) == Some(&w2))
+            .unwrap();
+        assert_eq!(g.producer(mm2.inputs[0]).unwrap().kind, OpKind::Gelu);
+        assert_eq!(g.fingerprint, fingerprint(&d));
+    }
+
+    #[test]
+    fn trace_fails_on_missing_or_misshapen_tensors() {
+        let cfg = tiny_cfg();
+        let mut d = canonical_ckpt(&cfg);
+        let keep = d.tensor_f32("l0.wq").unwrap();
+        d.insert_f32("l0.wq", &Tensor::zeros(vec![cfg.d_model + 1, cfg.d_model]));
+        let err = trace_graph(&d, &cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("inner dims"), "{err:#}");
+        d.insert_f32("l0.wq", &keep);
+        assert!(trace_graph(&d, &cfg).is_ok());
+
+        let mut missing = canonical_ckpt(&cfg);
+        missing.meta.insert("layout.head".into(), "nope".into());
+        let err = trace_graph(&missing, &cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("nope"), "{err:#}");
+    }
+
+    #[test]
+    fn layout_resolves_renamed_tensors() {
+        let meta: BTreeMap<String, String> = [
+            ("layout.l0.wq".to_string(), "blk0.q_proj".to_string()),
+            ("other".to_string(), "x".to_string()),
+        ]
+        .into();
+        let l = Layout::from_meta(&meta);
+        assert_eq!(l.resolve("l0.wq"), "blk0.q_proj");
+        assert_eq!(l.resolve("l0.wk"), "l0.wk");
+    }
+
+    #[test]
+    fn sidecar_roundtrips_exactly() {
+        let cfg = tiny_cfg();
+        let d = canonical_ckpt(&cfg);
+        let g = trace_graph(&d, &cfg).unwrap();
+        let back = TraceGraph::from_dts(&g.to_dts()).unwrap();
+        assert_eq!(g, back);
+
+        let p = std::env::temp_dir()
+            .join(format!("daq_trace_sidecar_{}.graph.dts", std::process::id()));
+        g.write_sidecar(&p).unwrap();
+        let back = TraceGraph::read_sidecar(&p).unwrap();
+        std::fs::remove_file(&p).unwrap();
+        assert_eq!(g, back);
+    }
+
+    #[test]
+    fn sidecar_rejects_non_graph_containers() {
+        let d = Dts::new();
+        assert!(TraceGraph::from_dts(&d).is_err());
+    }
+
+    #[test]
+    fn fingerprint_tracks_index_and_trace_relevant_meta() {
+        let cfg = tiny_cfg();
+        let a = canonical_ckpt(&cfg);
+        let mut b = canonical_ckpt(&cfg);
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+        // values don't matter...
+        b.insert_f32("head", &Tensor::full(vec![cfg.d_model, cfg.vocab], 3.0));
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+        // ...shapes do
+        b.insert_f32("head", &Tensor::zeros(vec![cfg.d_model, cfg.vocab + 1]));
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+        // ...and extra tensors do
+        let mut c = canonical_ckpt(&cfg);
+        c.insert_f32("extra", &Tensor::zeros(vec![1]));
+        assert_ne!(fingerprint(&a), fingerprint(&c));
+        // editing the layout role map or the model config invalidates a
+        // trace even when no tensor changed
+        let mut d = canonical_ckpt(&cfg);
+        d.meta.insert("layout.l0.wq".into(), "l0.wk".into());
+        assert_ne!(fingerprint(&a), fingerprint(&d));
+        let mut e = canonical_ckpt(&cfg);
+        e.meta.insert("n_head".into(), "4".into());
+        assert_ne!(fingerprint(&a), fingerprint(&e));
+        // unrelated metadata does not
+        let mut f = canonical_ckpt(&cfg);
+        f.meta.insert("note".into(), "hello".into());
+        assert_eq!(fingerprint(&a), fingerprint(&f));
+    }
+
+    #[test]
+    fn sidecar_path_variants() {
+        assert_eq!(
+            sidecar_path("artifacts/ckpt_post.dts"),
+            PathBuf::from("artifacts/ckpt_post.graph.dts")
+        );
+        assert_eq!(
+            sidecar_path("store/manifest.json"),
+            PathBuf::from("store/graph.dts")
+        );
+    }
+}

@@ -354,6 +354,11 @@ impl Dts {
         });
     }
 
+    pub fn insert_i32(&mut self, name: &str, shape: Vec<usize>, data: Vec<i32>) {
+        debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+        self.insert(name, DtsTensor::I32 { shape, data });
+    }
+
     pub fn names(&self) -> &[String] {
         &self.names
     }

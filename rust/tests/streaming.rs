@@ -18,9 +18,14 @@
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
+use daq::coordinator::group::GroupSource;
 use daq::coordinator::stream::{run_stream, StreamConfig, RESUME_JOURNAL};
-use daq::coordinator::{run_pipeline, Engine, Method, PipelineConfig, PipelineOutcome};
+use daq::coordinator::{
+    run_pipeline_grouped, Engine, Method, PipelineConfig, PipelineOutcome,
+};
 use daq::eval::load_params_dequant_source;
+use daq::eval::model_native::ModelCfg;
+use daq::eval::trace::{stamp_model_meta, trace_checkpoint};
 use daq::experiments::quantizable_from_source;
 use daq::io::dts::{Dts, DtsReader, DtsTensor};
 use daq::io::shard::{shard_dts_file, ShardedDts};
@@ -31,6 +36,22 @@ use daq::util::rng::XorShift;
 
 fn tmp(tag: &str) -> PathBuf {
     std::env::temp_dir().join(format!("daq_streamtest_{tag}_{}", std::process::id()))
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Streaming config for the equality tests, parameterized by the CI
+/// determinism matrix: `DAQ_TEST_WORKERS` / `DAQ_TEST_DEPTH` vary the
+/// worker count and admission depth per matrix cell, and every cell must
+/// produce byte-identical stores (each is asserted against the
+/// env-independent in-memory pipeline, and the anchor test below pins
+/// the streamed bytes of the env cell to the workers=1/depth=1 cell).
+fn test_stream_cfg(gran: Granularity, method: Method) -> StreamConfig {
+    let mut cfg = StreamConfig::new(gran, method, env_usize("DAQ_TEST_WORKERS", 2));
+    cfg.depth = env_usize("DAQ_TEST_DEPTH", cfg.depth);
+    cfg
 }
 
 /// Synthetic (post, base) pair: `n_layers` quantizable GEMMs plus
@@ -163,6 +184,29 @@ fn run_both(
     tag: &str,
 ) -> (PipelineOutcome, daq::coordinator::stream::StreamOutcome, ShardedDts) {
     let quantizable = quantizable_from_source(post);
+    run_both_grouped(
+        post,
+        base,
+        calib,
+        &quantizable,
+        gran,
+        method,
+        tag,
+        GroupSource::Patterns,
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_both_grouped(
+    post: &Dts,
+    base: &Dts,
+    calib: Option<&Dts>,
+    quantizable: &[String],
+    gran: Granularity,
+    method: Method,
+    tag: &str,
+    groups: GroupSource,
+) -> (PipelineOutcome, daq::coordinator::stream::StreamOutcome, ShardedDts) {
     assert!(!quantizable.is_empty());
 
     let cfg = PipelineConfig {
@@ -170,7 +214,9 @@ fn run_both(
         method: method.clone(),
         engine: Engine::Native { workers: 2 },
     };
-    let mem = run_pipeline(post, base, &quantizable, calib, &cfg, None).unwrap();
+    let mem =
+        run_pipeline_grouped(post, base, quantizable, calib, &cfg, None, &groups)
+            .unwrap();
 
     // post goes through a sharded store, base through the seek-based
     // monolithic reader — both streaming source backends in one run
@@ -187,12 +233,13 @@ fn run_both(
 
     let out_dir = tmp(&format!("{tag}_out"));
     let _ = std::fs::remove_dir_all(&out_dir);
-    let mut scfg = StreamConfig::new(gran, method, 2);
+    let mut scfg = test_stream_cfg(gran, method);
     scfg.shard_budget = 8192;
+    scfg.groups = groups;
     let streamed = run_stream(
         &post_src,
         &base_src,
-        &quantizable,
+        quantizable,
         calib.map(|c| c as &dyn daq::io::TensorSource),
         &out_dir,
         &scfg,
@@ -746,4 +793,172 @@ fn eval_loader_agrees_across_backends() {
     std::fs::remove_file(&ckpt).unwrap();
     drop(store);
     std::fs::remove_dir_all(tmp("loader_out")).unwrap();
+}
+
+/// Synthetic transformer whose tensor names follow a foreign convention
+/// (`blk0.q_proj`, `final_norm.g`, ...) that defeats every name pattern
+/// in the repo — `quantizable_from_source` finds nothing and
+/// `upstream_ln` cannot couple anything. The checkpoint carries the
+/// model config plus `layout.*` metadata, so the dataflow trace can
+/// still execute (index-only) and recover the grouping structurally.
+fn renamed_ckpts() -> (Dts, Dts, Dts, ModelCfg) {
+    let cfg =
+        ModelCfg { vocab: 32, d_model: 16, n_layer: 1, n_head: 2, d_ff: 24, seq_len: 4 };
+    let mut rng = XorShift::new(211);
+    let mut post = Dts::new();
+    let mut base = Dts::new();
+    let mut calib = Dts::new();
+    stamp_model_meta(&mut post, &cfg);
+    stamp_model_meta(&mut base, &cfg);
+    for (role, actual) in [
+        ("embed", "emb_tok"),
+        ("pos", "emb_pos"),
+        ("l0.wq", "blk0.q_proj"),
+        ("l0.wk", "blk0.k_proj"),
+        ("l0.wv", "blk0.v_proj"),
+        ("l0.wo", "blk0.o_proj"),
+        ("l0.w1", "blk0.ffn_up"),
+        ("l0.w2", "blk0.ffn_down"),
+        ("l0.ln1.g", "blk0.norm_attn.g"),
+        ("l0.ln1.b", "blk0.norm_attn.b"),
+        ("l0.ln2.g", "blk0.norm_ffn.g"),
+        ("l0.ln2.b", "blk0.norm_ffn.b"),
+        ("lnf.g", "final_norm.g"),
+        ("lnf.b", "final_norm.b"),
+        ("head", "lm_out"),
+    ] {
+        for d in [&mut post, &mut base] {
+            d.meta.insert(format!("layout.{role}"), actual.to_string());
+        }
+    }
+    let d = cfg.d_model;
+    pair_into(&mut post, &mut base, &mut rng, "emb_tok", cfg.vocab, d);
+    pair_into(&mut post, &mut base, &mut rng, "emb_pos", cfg.seq_len, d);
+    for w in ["q_proj", "k_proj", "v_proj", "o_proj"] {
+        pair_into(&mut post, &mut base, &mut rng, &format!("blk0.{w}"), d, d);
+    }
+    pair_into(&mut post, &mut base, &mut rng, "blk0.ffn_up", d, cfg.d_ff);
+    pair_into(&mut post, &mut base, &mut rng, "blk0.ffn_down", cfg.d_ff, d);
+    pair_into(&mut post, &mut base, &mut rng, "lm_out", d, cfg.vocab);
+    for ln in ["blk0.norm_attn", "blk0.norm_ffn", "final_norm"] {
+        let g = Tensor::new(vec![d], (0..d).map(|_| 1.0 + rng.normal() * 0.05).collect());
+        let b = Tensor::new(vec![d], (0..d).map(|_| rng.normal() * 0.1).collect());
+        for dd in [&mut post, &mut base] {
+            dd.insert_f32(&format!("{ln}.g"), &g);
+            dd.insert_f32(&format!("{ln}.b"), &b);
+        }
+    }
+    for first in ["blk0.q_proj", "blk0.ffn_up", "lm_out"] {
+        let acts =
+            Tensor::new(vec![d], (0..d).map(|_| rng.f32() * 2.0 + 0.05).collect());
+        calib.insert_f32(first, &acts);
+    }
+    (post, base, calib, cfg)
+}
+
+/// The tentpole acceptance test: on a checkpoint whose tensor names
+/// defeat the `upstream_ln` patterns entirely, trace-derived groups
+/// drive both the in-memory transformed pipeline and the streaming
+/// driver to bitwise-identical stores — and the layernorm fold really
+/// happens (the groups are not silently degraded to singletons).
+#[test]
+fn trace_groups_stream_renamed_checkpoint_bitwise() {
+    let (post, base, calib, _cfg) = renamed_ckpts();
+
+    // the name patterns are defeated: no quantizable tensors, nothing
+    // groupable
+    assert!(quantizable_from_source(&post).is_empty());
+
+    // the dataflow trace recovers both the GEMM set and the coupling
+    let graph = trace_checkpoint(&post).unwrap();
+    let quantizable = graph.quantizable();
+    assert_eq!(
+        quantizable,
+        vec![
+            "blk0.q_proj",
+            "blk0.k_proj",
+            "blk0.v_proj",
+            "blk0.o_proj",
+            "blk0.ffn_up",
+            "blk0.ffn_down",
+            "lm_out"
+        ]
+    );
+
+    for (mi, method) in [Method::SmoothQuant { alpha: 0.5 }, Method::Awq]
+        .into_iter()
+        .enumerate()
+    {
+        let gran = Granularity::Block(16);
+        let tag = format!("renamed{mi}");
+        let (mem, streamed, store) = run_both_grouped(
+            &post,
+            &base,
+            Some(&calib),
+            &quantizable,
+            gran,
+            method,
+            &tag,
+            GroupSource::Trace(graph.clone()),
+        );
+        assert!(mem.agg.is_none());
+        assert_store_matches(&mem, &streamed, &store, gran);
+        // the qkv group's affine actually absorbed the inverse smoothing
+        // (SmoothQuant's factors are generically != 1; AWQ may
+        // legitimately settle on alpha = 0, i.e. identity scaling)
+        let folded = &mem.params["blk0.norm_attn.g"];
+        if mi == 0 {
+            let original = post.tensor_f32("blk0.norm_attn.g").unwrap();
+            assert!(
+                folded
+                    .data()
+                    .iter()
+                    .zip(original.data())
+                    .any(|(a, b)| (a - b).abs() > 1e-6),
+                "layernorm affine unchanged — the trace-derived group did not fold"
+            );
+        }
+        // ...and the streamed store persists the folded value bitwise
+        let DtsTensor::F32 { data, .. } =
+            store.read_tensor("blk0.norm_attn.g").unwrap()
+        else {
+            panic!("ln gain dtype")
+        };
+        for (x, y) in data.iter().zip(folded.data()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "blk0.norm_attn.g");
+        }
+        drop(store);
+        std::fs::remove_dir_all(tmp(&format!("{tag}_out"))).unwrap();
+    }
+}
+
+/// Every CI determinism-matrix cell (`DAQ_TEST_WORKERS` x
+/// `DAQ_TEST_DEPTH`) must produce byte-identical shards: the env-driven
+/// configuration is pinned against the workers=1 / depth=1 anchor, so
+/// any two cells are transitively identical.
+#[test]
+fn stream_determinism_across_workers_and_depth() {
+    let (post, base) = fake_ckpts(77, 6, 24);
+    let quantizable = quantizable_from_source(&post);
+    let method = Method::Search {
+        objective: Objective::SignRate,
+        range: (0.8, 1.25),
+    };
+
+    let anchor_dir = tmp("det_anchor");
+    let _ = std::fs::remove_dir_all(&anchor_dir);
+    let mut anchor_cfg = StreamConfig::new(Granularity::Block(16), method.clone(), 1);
+    anchor_cfg.depth = 1;
+    anchor_cfg.shard_budget = 8192;
+    run_stream(&post, &base, &quantizable, None, &anchor_dir, &anchor_cfg).unwrap();
+
+    let cell_dir = tmp("det_cell");
+    let _ = std::fs::remove_dir_all(&cell_dir);
+    let mut cell_cfg = test_stream_cfg(Granularity::Block(16), method);
+    cell_cfg.shard_budget = 8192;
+    run_stream(&post, &base, &quantizable, None, &cell_dir, &cell_cfg).unwrap();
+
+    assert_stores_identical(&anchor_dir, &cell_dir);
+    std::fs::remove_dir_all(&anchor_dir).unwrap();
+    std::fs::remove_dir_all(&cell_dir).unwrap();
 }
