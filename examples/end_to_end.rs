@@ -13,7 +13,7 @@
 //! `make artifacts`. Run: `cargo run --release --example end_to_end`
 
 use daq::coordinator::Method;
-use daq::eval::{load_params, PjrtForward};
+use daq::eval::{load_params, params_bytes, PjrtForward};
 use daq::experiments::{Lab, PAPER_RANGES};
 use daq::fp8;
 use daq::io::dts::Dts;
@@ -21,7 +21,7 @@ use daq::metrics::sweep_native;
 use daq::quant::{absmax_scales, Granularity};
 use daq::report::{fmt3, fmt_l2, fmt_pct, Table};
 use daq::search::Objective;
-use daq::serve::{gen_requests, serve};
+use daq::serve::{gen_requests, serve_reforward};
 use daq::util::timer::Stopwatch;
 
 fn main() -> anyhow::Result<()> {
@@ -113,16 +113,18 @@ fn main() -> anyhow::Result<()> {
     }
     println!("\n{}", table.render());
 
-    // ---- 5. serving ----
+    // ---- 5. serving (PJRT runs the AOT full-sequence graph, so the
+    //         reforward loop serves here; `daq serve` native uses the
+    //         continuous-batching incremental scheduler) ----
     let params = daq_sign_params.expect("daq-sign variant ran");
     let rep = sw.measure("5. serve 32 requests", || {
         let fwd = PjrtForward { rt, params: &params, batch: rt.manifest.serve_batch };
-        serve(&fwd, &gen_requests(32, 42), 8)
+        serve_reforward(&fwd, &gen_requests(32, 42), 8, params_bytes(&params))
     })?;
     println!(
-        "serving: {:.1} tok/s | batch latency {} | style adherence {:.1}%",
+        "serving: {:.1} tok/s | step latency {} | style adherence {:.1}%",
         rep.tokens_per_sec,
-        rep.batch_latency.summary(),
+        rep.step_latency.summary(),
         100.0 * rep.style_adherence
     );
 

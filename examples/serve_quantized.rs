@@ -1,20 +1,21 @@
-//! Serve the DAQ-quantized model: batched greedy decoding through the
-//! AOT-compiled forward graph on PJRT — Python is not involved.
+//! Serve the DAQ-quantized model with the FP8 params resident end-to-end:
+//! continuous batching + incremental (KV-cached) greedy decoding through
+//! the fused dequant-matmul — Python is not involved and the weights'
+//! f32 image never materializes.
 //!
 //! Requires `make artifacts`. Run:
 //! `cargo run --release --example serve_quantized`
 
 use daq::coordinator::Method;
-use daq::eval::PjrtForward;
+use daq::eval::decode::Decoder;
+use daq::eval::QuantizedParams;
 use daq::experiments::Lab;
 use daq::quant::Granularity;
 use daq::search::Objective;
-use daq::serve::{gen_requests, serve};
+use daq::serve::{gen_requests, serve, ServeConfig};
 
 fn main() -> anyhow::Result<()> {
-    let lab = Lab::open("artifacts", true)?;
-    let rt = lab.rt.as_ref().expect("PJRT runtime");
-    println!("PJRT platform: {}", rt.platform());
+    let lab = Lab::open("artifacts", false)?;
 
     // Quantize with DAQ-sign, then serve the quantized model.
     let out = lab.quantize(
@@ -30,21 +31,25 @@ fn main() -> anyhow::Result<()> {
         agg.cos_sim()
     );
 
-    let fwd = PjrtForward {
-        rt,
-        params: &out.params,
-        batch: rt.manifest.serve_batch,
-    };
+    // Keep the FP8 codes+scales resident and serve through the
+    // continuous-batching incremental decoder — the weights' f32 image
+    // never materializes beyond one row of dequant scratch.
+    let qp = QuantizedParams::from_pipeline(&out.params, &out.quantized);
+    println!(
+        "resident params: {:.2} MiB quantized vs {:.2} MiB f32",
+        qp.resident_param_bytes() as f64 / (1 << 20) as f64,
+        qp.f32_param_bytes() as f64 / (1 << 20) as f64,
+    );
+    let dec = Decoder::new(&qp, lab.cfg);
     let reqs = gen_requests(32, 42);
-    let rep = serve(&fwd, &reqs, 8)?;
+    let rep = serve(&dec, &reqs, &ServeConfig { slots: 8, new_tokens: 8 })?;
 
     println!(
-        "served {} requests ({} batches of {}), {} new tokens each",
-        rep.requests, rep.batches, rt.manifest.serve_batch,
-        rep.new_tokens_per_request
+        "served {} requests over {} slots, {} new tokens each",
+        rep.requests, rep.slots, rep.new_tokens_per_request
     );
     println!("throughput: {:.1} tok/s", rep.tokens_per_sec);
-    println!("batch latency: {}", rep.batch_latency.summary());
+    println!("request latency: {}", rep.request_latency.summary());
     println!(
         "style adherence of generated signatures: {:.1}%",
         100.0 * rep.style_adherence

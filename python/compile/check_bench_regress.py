@@ -3,13 +3,15 @@
 
 Compares the bench-smoke `BENCH_sweep.json` artifact against the
 committed `rust/BENCH_baseline.json` and fails (exit 1) when any
-`pipeline-*` row regresses by more than the threshold in Melem/s.
+`pipeline-*` or `serve-*` row regresses by more than the threshold in
+its throughput metric (Melem/s for the pipeline rows, tokens/s for the
+serving rows).
 
 Rows are keyed by (variant, shape, granularity) — `workers` is excluded
 on purpose: the bench sizes its worker pool from the runner's core
 count, and a hosted-runner fleet change must not masquerade as a code
 regression. Only rows present in BOTH files are compared; if the files
-share no pipeline rows at all the gate fails loudly (a silently vacuous
+share no gated rows at all the gate fails loudly (a silently vacuous
 gate is worse than none), telling the operator to re-baseline.
 
 Usage:
@@ -30,17 +32,25 @@ import argparse
 import json
 import sys
 
-PIPELINE_PREFIX = "pipeline-"
+GATED_PREFIXES = ("pipeline-", "serve-")
 
 
 def key(row: dict) -> tuple:
     return (row["variant"], row["shape"], row["granularity"])
 
 
+def metric(row: dict) -> tuple:
+    """(name, value) of a row's throughput metric: Melem/s for the
+    pipeline rows, tokens/s for the serving rows."""
+    if "melem_per_s" in row:
+        return ("melem_per_s", row["melem_per_s"])
+    return ("tokens_per_s", row["tokens_per_s"])
+
+
 def pipeline_rows(doc: dict) -> dict:
     out = {}
     for row in doc.get("rows", []):
-        if row.get("variant", "").startswith(PIPELINE_PREFIX):
+        if row.get("variant", "").startswith(GATED_PREFIXES):
             out[key(row)] = row
     return out
 
@@ -68,7 +78,7 @@ def write_baseline(path: str, current: dict, threshold: float) -> None:
                 "granularity": r["granularity"],
                 "workers": r.get("workers"),
                 "mean_ms": r.get("mean_ms"),
-                "melem_per_s": r["melem_per_s"],
+                metric(r)[0]: metric(r)[1],
             }
             for r in rows
         ],
@@ -105,9 +115,9 @@ def main() -> int:
     base_rows = pipeline_rows(baseline)
     cur_rows = pipeline_rows(current)
     if not base_rows:
-        sys.exit(f"error: {args.baseline} has no pipeline-* rows")
+        sys.exit(f"error: {args.baseline} has no pipeline-*/serve-* rows")
     if not cur_rows:
-        sys.exit(f"error: {args.current} has no pipeline-* rows")
+        sys.exit(f"error: {args.current} has no pipeline-*/serve-* rows")
 
     compared = 0
     regressions = []
@@ -120,30 +130,37 @@ def main() -> int:
             print(f"skip: {k} not in current run")
             continue
         compared += 1
-        floor = base["melem_per_s"] * (1.0 - args.threshold)
-        ratio = cur["melem_per_s"] / base["melem_per_s"] if base["melem_per_s"] else 0.0
-        status = "REGRESSION" if cur["melem_per_s"] < floor else "ok"
+        mname, mbase = metric(base)
+        if mname not in cur:
+            print(f"skip: {k} metric {mname} missing from current run")
+            compared -= 1
+            continue
+        mcur = cur[mname]
+        floor = mbase * (1.0 - args.threshold)
+        ratio = mcur / mbase if mbase else 0.0
+        status = "REGRESSION" if mcur < floor else "ok"
+        unit = "Melem/s" if mname == "melem_per_s" else "tok/s"
         print(
             f"{status:>10}: {'/'.join(k)}  "
-            f"{cur['melem_per_s']:.2f} vs baseline {base['melem_per_s']:.2f} "
-            f"Melem/s ({ratio:.2f}x, floor {floor:.2f})"
+            f"{mcur:.2f} vs baseline {mbase:.2f} "
+            f"{unit} ({ratio:.2f}x, floor {floor:.2f})"
         )
         if status == "REGRESSION":
             regressions.append(k)
 
     if compared == 0:
         sys.exit(
-            "error: no pipeline-* rows are shared between the baseline and "
-            "this run — the baseline is stale; regenerate it with "
+            "error: no pipeline-*/serve-* rows are shared between the baseline "
+            "and this run — the baseline is stale; regenerate it with "
             "--write-baseline from a fresh CI artifact"
         )
     if regressions:
         names = ", ".join("/".join(k) for k in regressions)
         sys.exit(
-            f"error: {len(regressions)}/{compared} pipeline rows regressed "
+            f"error: {len(regressions)}/{compared} gated rows regressed "
             f">{args.threshold:.0%} vs baseline: {names}"
         )
-    print(f"ok: {compared} pipeline rows within {args.threshold:.0%} of baseline")
+    print(f"ok: {compared} gated rows within {args.threshold:.0%} of baseline")
     return 0
 
 

@@ -361,10 +361,110 @@ fn main() {
         println!("{}", t.render());
     }
 
+    // --- §Perf: serving — full-reforward baseline vs incremental decode
+    //     vs quantized-resident incremental decode. The reforward loop
+    //     re-runs the whole-sequence forward per generated token
+    //     (O(seq²)); the scheduler decodes O(t) per token against KV
+    //     caches, and the quantized row additionally serves straight from
+    //     codes+scales through the fused dequant-matmul.
+    let mut serve_rows: Vec<String> = Vec::new();
+    {
+        use daq::eval::decode::Decoder;
+        use daq::eval::model_native::{synth_params, synth_quantized, ModelCfg};
+        use daq::eval::{params_bytes, NativeForward};
+        use daq::serve::{gen_requests, serve, serve_reforward, ServeConfig};
+
+        // vocab 64 covers the serve workload's token alphabet; GEMM
+        // weights must dominate the shape for the 0.35x resident bound
+        let cfg = if fast {
+            ModelCfg { vocab: 64, d_model: 48, n_layer: 2, n_head: 4, d_ff: 96, seq_len: 24 }
+        } else {
+            ModelCfg { vocab: 64, d_model: 64, n_layer: 2, n_head: 4, d_ff: 128, seq_len: 32 }
+        };
+        let params = synth_params(&cfg, 2024);
+        let mut quantizable: Vec<String> = Vec::new();
+        for l in 0..cfg.n_layer {
+            for w in ["wq", "wk", "wv", "wo", "w1", "w2"] {
+                quantizable.push(format!("l{l}.{w}"));
+            }
+        }
+        quantizable.push("head".into());
+        let qp = synth_quantized(&params, &quantizable, Granularity::Block(128));
+        let n_req = if fast { 6 } else { 12 };
+        let new_tokens = if fast { 4 } else { 8 };
+        let slots = 4usize;
+        let reqs = gen_requests(n_req, 42);
+        let scfg = ServeConfig { slots, new_tokens };
+        let total_tokens = (n_req * new_tokens) as f64;
+
+        let fwd = NativeForward { params: &params, cfg, batch: slots };
+        let reforward = bench("serve reforward", 0, 3, || {
+            serve_reforward(&fwd, &reqs, new_tokens, params_bytes(&params)).unwrap()
+        });
+        let dec = Decoder::new(&params, cfg);
+        let inmem = bench("serve inmemory", 0, 3, || {
+            serve(&dec, &reqs, &scfg).unwrap()
+        });
+        let qdec = Decoder::new(&qp, cfg);
+        let quant = bench("serve quantized", 0, 3, || {
+            serve(&qdec, &reqs, &scfg).unwrap()
+        });
+
+        let shape = format!(
+            "{}x{}x{}x{}",
+            cfg.n_layer, cfg.d_model, cfg.d_ff, cfg.seq_len
+        );
+        let gran = Granularity::Block(128);
+        let mut t = Table::new(
+            "Serving: full-reforward vs incremental vs quantized-resident",
+            &["variant", "slots", "mean ms", "tok/s", "resident MiB", "vs reforward"],
+        );
+        for (variant, mean_s, resident) in [
+            ("serve-reforward", reforward.mean_s, params_bytes(&params)),
+            ("serve-inmemory", inmem.mean_s, params_bytes(&params)),
+            ("serve-quantized", quant.mean_s, qp.resident_param_bytes()),
+        ] {
+            let tok_s = total_tokens / mean_s;
+            serve_rows.push(format!(
+                "{{\"shape\": \"{shape}\", \"granularity\": \"{}\", \
+                 \"variant\": \"{variant}\", \"workers\": {slots}, \
+                 \"mean_ms\": {:.4}, \"tokens_per_s\": {tok_s:.2}, \
+                 \"resident_param_bytes\": {resident}, \
+                 \"speedup_vs_reforward\": {:.3}}}",
+                gran.label(),
+                mean_s * 1e3,
+                reforward.mean_s / mean_s,
+            ));
+            t.row(vec![
+                variant.into(),
+                slots.to_string(),
+                format!("{:.2}", mean_s * 1e3),
+                format!("{tok_s:.1}"),
+                format!("{:.3}", resident as f64 / (1 << 20) as f64),
+                format!("{:.2}x", reforward.mean_s / mean_s),
+            ]);
+        }
+        println!("{}", t.render());
+        // the whole point of incremental decode: strictly faster than
+        // re-running the full forward per token, even quantized
+        assert!(
+            quant.mean_s < reforward.mean_s,
+            "serve-quantized ({:.2} ms) must beat the full-reforward \
+             baseline ({:.2} ms)",
+            quant.mean_s * 1e3,
+            reforward.mean_s * 1e3
+        );
+        assert!(
+            qp.resident_param_bytes() * 100 <= params_bytes(&params) * 35,
+            "quantized-resident params must be <= 0.35x of f32"
+        );
+    }
+
     // --- machine-readable perf trajectory ---
     let out_path =
         std::env::var("DAQ_BENCH_OUT").unwrap_or_else(|_| "BENCH_sweep.json".into());
-    let body: Vec<String> = records.iter().map(|r| format!("  {}", r.json())).collect();
+    let mut body: Vec<String> = records.iter().map(|r| format!("  {}", r.json())).collect();
+    body.extend(serve_rows.iter().map(|r| format!("  {r}")));
     let json = format!(
         "{{\"bench\": \"sweep\", \"candidates\": {}, \"cores\": {}, \"rows\": [\n{}\n]}}\n",
         n_candidates,
@@ -372,7 +472,10 @@ fn main() {
         body.join(",\n")
     );
     match std::fs::write(&out_path, &json) {
-        Ok(()) => println!("wrote {out_path} ({} records)", records.len()),
+        Ok(()) => println!(
+            "wrote {out_path} ({} records)",
+            records.len() + serve_rows.len()
+        ),
         Err(e) => eprintln!("could not write {out_path}: {e}"),
     }
 

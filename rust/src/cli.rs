@@ -6,8 +6,9 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::coordinator::group::{GroupManifest, GroupPlan, GroupSource, Unit};
 use crate::coordinator::Method;
-use crate::eval::trace::{sidecar_path, trace_checkpoint, TraceGraph};
-use crate::eval::load_params;
+use crate::eval::decode::Decoder;
+use crate::eval::trace::{model_cfg_for, sidecar_path, trace_graph, TraceGraph};
+use crate::eval::{load_params, params_bytes, QuantizedParams};
 use crate::experiments::{table1, table2, table_search, Lab};
 use crate::io::dts::Dts;
 use crate::quant::Granularity;
@@ -56,7 +57,9 @@ COMMANDS:
   trace      Record the checkpoint's dataflow graph (index-only — no
              payload is read) and persist it as a DTS sidecar so
              streaming runs can derive transform groups for any tensor
-             naming without re-tracing
+             naming without re-tracing. The model config comes from the
+             checkpoint metadata, falling back to ARTIFACTS/manifest.json
+             for pre-metadata checkpoints
              --ckpt PATH (default ARTIFACTS/ckpt_post.dts)
              --out PATH (default sibling <stem>.graph.dts)
              --artifacts DIR (default artifacts)
@@ -64,14 +67,29 @@ COMMANDS:
              --in FILE --out DIR --shard-mb N (default 256)
   eval       Score a checkpoint on the Style/General rubric
              --ckpt PATH (.dts file or sharded store) --artifacts DIR
+             --quantized (evaluate with the store's FP8 codes+scales
+               resident, through the fused dequant-matmul; requires
+               --ckpt and --engine native)
              --engine native|pjrt
   tables     Regenerate the paper's tables (1-5)
              --artifacts DIR --only N --engine native|pjrt
-  serve      Serve the quantized model on a synthetic request load
+  serve      Serve a synthetic request load: continuous batching with
+             incremental (KV-cached) decode — requests join the batch as
+             slots free up and leave when done, O(t) per generated token
              --artifacts DIR --requests N (default 32)
-             --new-tokens N (default 8) [--quantize]
-             --engine native|pjrt (default native; pjrt uses the AOT
-               artifact, native runs everywhere) --batch N (native)
+             --new-tokens N (default 8)
+             --batch B (concurrent decode slots, default 8)
+             --store PATH (serve straight from a checkpoint store: a .dts
+               file, a shard directory, or a manifest.json; model config
+               from checkpoint metadata, falling back to the artifact
+               manifest)
+             --quantized (FP8 params end-to-end: codes+scales stay
+               resident and rows dequantize inside the fused
+               dequant-matmul; requires --engine native)
+             --quantize (quantize first, then serve dequantized f32 —
+               the legacy comparison path)
+             --engine native|pjrt (default native; pjrt serves the AOT
+               artifact through the full-reforward loop)
   inspect    Print a container's metadata and tensor index (dtype, shape,
              payload bytes, totals) for a .dts file, a sharded-store
              directory, or a manifest.json
@@ -384,7 +402,10 @@ fn cmd_trace(args: &Args) -> Result<()> {
     let dir = args.str_or("artifacts", "artifacts");
     let ckpt = args.str_or("ckpt", &format!("{dir}/ckpt_post.dts"));
     let source = crate::io::open_source(&ckpt)?;
-    let graph = trace_checkpoint(source.as_ref())?;
+    // config from checkpoint metadata, else the artifact manifest —
+    // pre-metadata checkpoints trace through the lowered config
+    let cfg = model_cfg_for(source.as_ref(), &dir)?;
+    let graph = trace_graph(source.as_ref(), &cfg)?;
     let quantizable = graph.quantizable();
     let plan = GroupPlan::from_graph(source.as_ref(), &quantizable, &graph)?;
     let n_groups =
@@ -429,6 +450,35 @@ fn cmd_shard(args: &Args) -> Result<()> {
 
 fn cmd_eval(args: &Args) -> Result<()> {
     let lab = open_lab(args)?;
+    // --quantized: keep the store's codes+scales resident and evaluate
+    // through the fused dequant-matmul backend — same rubric, ~0.3x the
+    // parameter footprint (bitwise-equal logits, pinned in tests)
+    if args.flag("quantized") {
+        if lab.rt.is_some() {
+            bail!("--quantized requires --engine native");
+        }
+        let path = args
+            .get("ckpt")
+            .ok_or_else(|| anyhow!("--quantized requires --ckpt STORE"))?;
+        let src = crate::io::open_source(path)?;
+        let qp = QuantizedParams::load(src.as_ref())?;
+        if qp.n_quantized() == 0 {
+            bail!(
+                "{path}: no codes+scales sidecars found — nothing to \
+                 evaluate quantized-resident"
+            );
+        }
+        let fwd = crate::eval::QuantForward { params: &qp, cfg: lab.cfg, batch: 64 };
+        let s = crate::eval::eval_rubric(&fwd, &lab.style)?;
+        let g = crate::eval::eval_rubric(&fwd, &lab.general)?;
+        println!(
+            "Style={s:.3} General={g:.3} (quantized-resident: {:.2} MiB vs \
+             {:.2} MiB f32)",
+            qp.resident_param_bytes() as f64 / (1 << 20) as f64,
+            qp.f32_param_bytes() as f64 / (1 << 20) as f64,
+        );
+        return Ok(());
+    }
     let params = match args.get("ckpt") {
         // quantized checkpoints dequantize from the compact sidecars
         // through the shared decode table; plain checkpoints load as-is.
@@ -469,49 +519,140 @@ fn cmd_tables(args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    let lab = open_lab(args)?;
-    let n = args.usize_or("requests", 32).map_err(|e| anyhow!(e))?;
-    let new_tokens = args.usize_or("new-tokens", 8).map_err(|e| anyhow!(e))?;
-
-    let params = if args.flag("quantize") {
-        let out = lab.quantize(Granularity::Block(128), Method::Search {
-            objective: Objective::SignRate,
-            range: (0.8, 1.25),
-        })?;
-        out.params
-    } else {
-        load_params(&lab.post)?
-    };
-
-    // PJRT runs the AOT artifact; without it the native ForwardFn serves
-    // the same loop everywhere (no hard --engine pjrt requirement).
-    let reqs = crate::serve::gen_requests(n, 42);
-    let (rep, batch, engine) = match &lab.rt {
-        Some(rt) => {
-            let batch = rt.manifest.serve_batch;
-            let fwd = crate::eval::PjrtForward { rt, params: &params, batch };
-            (crate::serve::serve(&fwd, &reqs, new_tokens)?, batch, "pjrt")
-        }
-        None => {
-            let batch = args.usize_or("batch", 8).map_err(|e| anyhow!(e))?;
-            let fwd = crate::eval::NativeForward {
-                params: &params,
-                cfg: lab.cfg,
-                batch,
-            };
-            (crate::serve::serve(&fwd, &reqs, new_tokens)?, batch, "native")
-        }
-    };
+fn print_serve_report(rep: &crate::serve::ServeReport, engine: &str, f32_bytes: usize) {
     println!(
-        "served {} requests in {} batches of {batch} ({engine}) | {:.1} tok/s \
+        "served {} requests over {} slots ({engine}) | {:.1} tok/s \
          | style adherence {:.1}%",
         rep.requests,
-        rep.batches,
+        rep.slots,
         rep.tokens_per_sec,
         100.0 * rep.style_adherence
     );
-    println!("batch latency: {}", rep.batch_latency.summary());
+    println!("request latency: {}", rep.request_latency.summary());
+    println!("step latency:    {}", rep.step_latency.summary());
+    if f32_bytes > 0 {
+        println!(
+            "resident params: {:.2} MiB ({:.2}x of the {:.2} MiB f32 path)",
+            rep.resident_param_bytes as f64 / (1 << 20) as f64,
+            rep.resident_param_bytes as f64 / f32_bytes as f64,
+            f32_bytes as f64 / (1 << 20) as f64,
+        );
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let n = args.usize_or("requests", 32).map_err(|e| anyhow!(e))?;
+    let new_tokens = args.usize_or("new-tokens", 8).map_err(|e| anyhow!(e))?;
+    let quantized = args.flag("quantized");
+    let store = args.get("store");
+    let dir = args.str_or("artifacts", "artifacts");
+    let reqs = crate::serve::gen_requests(n, 42);
+
+    // PJRT serves the AOT full-sequence graph via the reforward loop;
+    // the incremental scheduler is native-only.
+    if args.str_or("engine", "native") == "pjrt" {
+        if quantized {
+            bail!(
+                "--quantized requires --engine native (the AOT graph takes \
+                 dense f32 params)"
+            );
+        }
+        let lab = open_lab(args)?;
+        let rt = lab.rt.as_ref().ok_or_else(|| anyhow!("PJRT runtime unavailable"))?;
+        let params = match store {
+            Some(path) => crate::eval::load_params_dequant_source(
+                crate::io::open_source(path)?.as_ref(),
+            )?,
+            None => load_params(&lab.post)?,
+        };
+        let fwd = crate::eval::PjrtForward { rt, params: &params, batch: rt.manifest.serve_batch };
+        let rep =
+            crate::serve::serve_reforward(&fwd, &reqs, new_tokens, params_bytes(&params))?;
+        print_serve_report(&rep, "pjrt-reforward", params_bytes(&params));
+        return Ok(());
+    }
+
+    let slots = args.usize_or("batch", 8).map_err(|e| anyhow!(e))?;
+    let scfg = crate::serve::ServeConfig { slots, new_tokens };
+
+    // --quantize (run the quantization pipeline first) only makes sense
+    // without a store; refuse rather than silently serve the store dense
+    // when the user likely meant --quantized (one letter apart)
+    if store.is_some() && args.flag("quantize") {
+        bail!(
+            "--quantize runs the quantization pipeline on the artifacts \
+             checkpoint and cannot combine with --store; to serve a store \
+             FP8-resident use --quantized"
+        );
+    }
+
+    // resolve the parameter storage: quantized-resident or dense f32,
+    // from a store or from the artifacts directory
+    let (rep, engine, f32_bytes) = match (store, quantized) {
+        (Some(path), true) => {
+            let src = crate::io::open_source(path)?;
+            let cfg = model_cfg_for(src.as_ref(), &dir)?;
+            let at_rest: u64 = src
+                .names()
+                .iter()
+                .filter_map(|nm| src.nbytes_of(nm))
+                .sum();
+            let qp = QuantizedParams::load(src.as_ref())?;
+            // a store with no sidecars would "serve quantized" at 1.0x —
+            // the exact silent-dense trap --quantize+--store errors on
+            if qp.n_quantized() == 0 {
+                bail!(
+                    "{path}: no codes+scales sidecars found — nothing to \
+                     serve quantized-resident (quantize it first: \
+                     daq quantize --stream --out DIR)"
+                );
+            }
+            println!(
+                "store {path}: {:.2} MiB at rest, {} quantized tensors",
+                at_rest as f64 / (1 << 20) as f64,
+                qp.n_quantized()
+            );
+            let f32_bytes = qp.f32_param_bytes();
+            let dec = Decoder::new(&qp, cfg);
+            (crate::serve::serve(&dec, &reqs, &scfg)?, "native-quantized", f32_bytes)
+        }
+        (Some(path), false) => {
+            let src = crate::io::open_source(path)?;
+            let cfg = model_cfg_for(src.as_ref(), &dir)?;
+            let params = crate::eval::load_params_dequant_source(src.as_ref())?;
+            let f32_bytes = params_bytes(&params);
+            let dec = Decoder::new(&params, cfg);
+            (crate::serve::serve(&dec, &reqs, &scfg)?, "native-inmemory", f32_bytes)
+        }
+        (None, true) => {
+            // quantize the post checkpoint and keep the storage form
+            let lab = open_lab(args)?;
+            let out = lab.quantize(
+                Granularity::Block(128),
+                Method::Search { objective: Objective::SignRate, range: (0.8, 1.25) },
+            )?;
+            let qp = QuantizedParams::from_pipeline(&out.params, &out.quantized);
+            let f32_bytes = qp.f32_param_bytes();
+            let dec = Decoder::new(&qp, lab.cfg);
+            (crate::serve::serve(&dec, &reqs, &scfg)?, "native-quantized", f32_bytes)
+        }
+        (None, false) => {
+            let lab = open_lab(args)?;
+            let params = if args.flag("quantize") {
+                lab.quantize(Granularity::Block(128), Method::Search {
+                    objective: Objective::SignRate,
+                    range: (0.8, 1.25),
+                })?
+                .params
+            } else {
+                load_params(&lab.post)?
+            };
+            let f32_bytes = params_bytes(&params);
+            let dec = Decoder::new(&params, lab.cfg);
+            (crate::serve::serve(&dec, &reqs, &scfg)?, "native-inmemory", f32_bytes)
+        }
+    };
+    print_serve_report(&rep, engine, f32_bytes);
     Ok(())
 }
 
@@ -653,6 +794,56 @@ mod tests {
         ] {
             assert!(USAGE.contains(flag), "{flag} missing from usage");
         }
+        // the serving mode's flags are documented
+        for flag in ["--store", "--quantized", "--new-tokens", "--batch"] {
+            assert!(USAGE.contains(flag), "{flag} missing from usage");
+        }
+    }
+
+    #[test]
+    fn serve_quantized_rejects_pjrt_engine() {
+        let args = Args::parse([
+            "serve".to_string(),
+            "--quantized".into(),
+            "--engine".into(),
+            "pjrt".into(),
+        ])
+        .unwrap();
+        let err = dispatch(&args).unwrap_err();
+        assert!(format!("{err:#}").contains("native"), "{err:#}");
+    }
+
+    #[test]
+    fn serve_rejects_quantize_with_store() {
+        let args = Args::parse([
+            "serve".to_string(),
+            "--store".into(),
+            "/tmp/daq_no_such_store.dts".into(),
+            "--quantize".into(),
+        ])
+        .unwrap();
+        let err = dispatch(&args).unwrap_err();
+        assert!(format!("{err:#}").contains("--quantized"), "{err:#}");
+    }
+
+    #[test]
+    fn eval_quantized_requires_ckpt() {
+        // fails on the missing --ckpt (after the artifacts open, which
+        // this environment does not have -> either error is fine, but it
+        // must not fall through to the dense loader)
+        let args = Args::parse(["eval".to_string(), "--quantized".into()]).unwrap();
+        assert!(dispatch(&args).is_err());
+    }
+
+    #[test]
+    fn serve_store_must_exist() {
+        let args = Args::parse([
+            "serve".to_string(),
+            "--store".into(),
+            "/tmp/daq_no_such_store.dts".into(),
+        ])
+        .unwrap();
+        assert!(dispatch(&args).is_err());
     }
 
     #[test]

@@ -1,0 +1,519 @@
+//! Incremental (KV-cached) decoding — the serving path's answer to the
+//! full-reforward loop.
+//!
+//! The batched serve loop used to re-run the whole-sequence forward for
+//! every generated token: token t cost O(seq²·d) attention plus seq
+//! GEMM rows that had already been computed t times before. This module
+//! decodes one token per step against per-layer K/V caches keyed on a
+//! position cursor, so token t costs O(t·d) attention and exactly one
+//! GEMM row per weight — O(t) per token instead of O(seq²).
+//!
+//! The decoder reproduces the native forward's arithmetic *exactly*: the
+//! same accumulation orders, the same layernorm/softmax/GELU bodies, and
+//! the full forward's softmax over a causally masked row is bitwise
+//! equal to the incremental softmax over the prefix (the masked `-1e9`
+//! entries underflow to exactly `0.0` in f32). `decode` tests pin logits
+//! at every position to the full forward's bits.
+//!
+//! Parameter storage is abstracted behind [`ParamSource`] so the same
+//! decoder serves dense f32 maps and the quantized-resident store — for
+//! the latter every GEMM row flows through the fused dequant path
+//! ([`crate::quant::matvec_quant_into`]) and the weight's f32 image never
+//! materializes.
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::quant::matvec_quant_into;
+use crate::tensor::ops::gelu;
+use crate::tensor::Tensor;
+
+use super::model_native::ModelCfg;
+use super::quantstore::{QParam, QuantizedParams};
+use super::{params_bytes, Params};
+
+/// Read access to model parameters for the decoder: dense views for the
+/// small parameters, row-streamed GEMM products for the weights.
+pub trait ParamSource {
+    /// Dense view of a non-GEMM parameter (embeddings, layernorm affine).
+    fn dense(&self, name: &str) -> Result<&Tensor>;
+
+    /// `(rows, cols)` of a GEMM weight.
+    fn gemm_dims(&self, name: &str) -> Result<(usize, usize)>;
+
+    /// `out[N] = x[K] @ W[K,N]`. `row_scratch` must be `N` long; the
+    /// quantized store decodes weight rows into it, dense sources ignore
+    /// it. Accumulation order matches `ops::matmul` row-for-row.
+    fn matvec_into(
+        &self,
+        name: &str,
+        x: &[f32],
+        out: &mut [f32],
+        row_scratch: &mut [f32],
+    ) -> Result<()>;
+
+    /// Bytes the parameter set occupies resident in memory.
+    fn resident_param_bytes(&self) -> usize;
+}
+
+/// Dense matvec mirroring `ops::matmul`'s per-row loop (same `aik == 0`
+/// skip, same ascending-k accumulation).
+fn matvec_dense(x: &[f32], w: &Tensor, out: &mut [f32]) {
+    let (k, n) = (w.rows(), w.cols());
+    assert_eq!(x.len(), k);
+    assert_eq!(out.len(), n);
+    out.fill(0.0);
+    let wd = w.data();
+    for (kk, &aik) in x.iter().enumerate() {
+        if aik == 0.0 {
+            continue;
+        }
+        let wrow = &wd[kk * n..(kk + 1) * n];
+        for (oj, wj) in out.iter_mut().zip(wrow) {
+            *oj += aik * wj;
+        }
+    }
+}
+
+impl ParamSource for Params {
+    fn dense(&self, name: &str) -> Result<&Tensor> {
+        self.get(name).ok_or_else(|| anyhow!("missing param {name:?}"))
+    }
+
+    fn gemm_dims(&self, name: &str) -> Result<(usize, usize)> {
+        let t = ParamSource::dense(self, name)?;
+        Ok((t.rows(), t.cols()))
+    }
+
+    fn matvec_into(
+        &self,
+        name: &str,
+        x: &[f32],
+        out: &mut [f32],
+        _row_scratch: &mut [f32],
+    ) -> Result<()> {
+        matvec_dense(x, ParamSource::dense(self, name)?, out);
+        Ok(())
+    }
+
+    fn resident_param_bytes(&self) -> usize {
+        params_bytes(self)
+    }
+}
+
+impl ParamSource for QuantizedParams {
+    fn dense(&self, name: &str) -> Result<&Tensor> {
+        QuantizedParams::dense(self, name)
+    }
+
+    fn gemm_dims(&self, name: &str) -> Result<(usize, usize)> {
+        match self.get(name) {
+            Some(QParam::Quant(q)) => Ok(q.shape),
+            Some(QParam::Plain(t)) => Ok((t.rows(), t.cols())),
+            None => bail!("missing param {name:?}"),
+        }
+    }
+
+    fn matvec_into(
+        &self,
+        name: &str,
+        x: &[f32],
+        out: &mut [f32],
+        row_scratch: &mut [f32],
+    ) -> Result<()> {
+        match self.get(name) {
+            Some(QParam::Quant(q)) => {
+                matvec_quant_into(x, q, out, row_scratch);
+                Ok(())
+            }
+            Some(QParam::Plain(t)) => {
+                matvec_dense(x, t, out);
+                Ok(())
+            }
+            None => bail!("missing param {name:?}"),
+        }
+    }
+
+    fn resident_param_bytes(&self) -> usize {
+        QuantizedParams::resident_param_bytes(self)
+    }
+}
+
+/// Single-row layernorm mirroring `ops::layernorm_rows` (same summation
+/// order, same `(x-mu)*inv*g + b` expression, eps 1e-5).
+fn layernorm_vec(x: &[f32], g: &[f32], b: &[f32], out: &mut [f32]) {
+    let n = x.len();
+    assert_eq!(g.len(), n);
+    assert_eq!(b.len(), n);
+    let mu = x.iter().sum::<f32>() / n as f32;
+    let var = x.iter().map(|v| (v - mu) * (v - mu)).sum::<f32>() / n as f32;
+    let inv = 1.0 / (var + 1e-5f32).sqrt();
+    for j in 0..n {
+        out[j] = (x[j] - mu) * inv * g[j] + b[j];
+    }
+}
+
+/// Single-row softmax mirroring `ops::softmax_rows`.
+fn softmax_vec(row: &mut [f32]) {
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for v in row.iter_mut() {
+        *v = (*v - max).exp();
+        sum += *v;
+    }
+    for v in row.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// Per-request decode state: the position cursor, one K and one V cache
+/// per layer (each `pos · d_model` floats), and the fixed-size step
+/// scratch — allocated once at session start so a decode step allocates
+/// nothing beyond the logits row it returns.
+pub struct DecodeSession {
+    pos: usize,
+    kcache: Vec<Vec<f32>>,
+    vcache: Vec<Vec<f32>>,
+    // step scratch (sizes fixed by the model config)
+    x: Vec<f32>,
+    h: Vec<f32>,
+    qv: Vec<f32>,
+    kv: Vec<f32>,
+    vv: Vec<f32>,
+    att: Vec<f32>,
+    proj: Vec<f32>,
+    m: Vec<f32>,
+    m2: Vec<f32>,
+    scores: Vec<f32>,
+    scratch_d: Vec<f32>,
+    scratch_ff: Vec<f32>,
+    scratch_v: Vec<f32>,
+}
+
+impl DecodeSession {
+    /// Tokens consumed so far (the next step decodes this position).
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+
+    /// Live cache footprint in bytes (both caches, all layers).
+    pub fn cache_bytes(&self) -> usize {
+        self.kcache
+            .iter()
+            .chain(&self.vcache)
+            .map(|c| c.len() * 4)
+            .sum()
+    }
+}
+
+/// Canonical parameter names of one transformer block, resolved once at
+/// decoder construction — the per-token hot loop must not rebuild name
+/// strings (one `format!` per parameter per layer per token adds up to
+/// thousands of allocations per request).
+struct LayerNames {
+    ln1_g: String,
+    ln1_b: String,
+    wq: String,
+    wk: String,
+    wv: String,
+    wo: String,
+    ln2_g: String,
+    ln2_b: String,
+    w1: String,
+    w2: String,
+}
+
+/// The incremental decoder: config + parameter source, stateless across
+/// sessions so one decoder drives every slot of the serving scheduler.
+pub struct Decoder<'p> {
+    src: &'p dyn ParamSource,
+    pub cfg: ModelCfg,
+    layers: Vec<LayerNames>,
+}
+
+impl<'p> Decoder<'p> {
+    pub fn new(src: &'p dyn ParamSource, cfg: ModelCfg) -> Decoder<'p> {
+        let layers = (0..cfg.n_layer)
+            .map(|l| LayerNames {
+                ln1_g: format!("l{l}.ln1.g"),
+                ln1_b: format!("l{l}.ln1.b"),
+                wq: format!("l{l}.wq"),
+                wk: format!("l{l}.wk"),
+                wv: format!("l{l}.wv"),
+                wo: format!("l{l}.wo"),
+                ln2_g: format!("l{l}.ln2.g"),
+                ln2_b: format!("l{l}.ln2.b"),
+                w1: format!("l{l}.w1"),
+                w2: format!("l{l}.w2"),
+            })
+            .collect();
+        Decoder { src, cfg, layers }
+    }
+
+    pub fn session(&self) -> DecodeSession {
+        let d = self.cfg.d_model;
+        DecodeSession {
+            pos: 0,
+            kcache: vec![Vec::new(); self.cfg.n_layer],
+            vcache: vec![Vec::new(); self.cfg.n_layer],
+            x: vec![0.0; d],
+            h: vec![0.0; d],
+            qv: vec![0.0; d],
+            kv: vec![0.0; d],
+            vv: vec![0.0; d],
+            att: vec![0.0; d],
+            proj: vec![0.0; d],
+            m: vec![0.0; self.cfg.d_ff],
+            m2: vec![0.0; d],
+            scores: Vec::with_capacity(self.cfg.seq_len),
+            scratch_d: vec![0.0; d],
+            scratch_ff: vec![0.0; self.cfg.d_ff],
+            scratch_v: vec![0.0; self.cfg.vocab],
+        }
+    }
+
+    /// Consume one token at the session's position cursor and return the
+    /// logits row (`vocab` floats) predicting the next token. All
+    /// intermediates live in the session's preallocated scratch — the
+    /// only allocation per step is the returned logits row.
+    pub fn step(&self, s: &mut DecodeSession, token: i32) -> Result<Vec<f32>> {
+        let cfg = &self.cfg;
+        let (d, dh) = (cfg.d_model, cfg.d_model / cfg.n_head);
+        let t = s.pos;
+        if t >= cfg.seq_len {
+            bail!("decode position {t} beyond seq_len {}", cfg.seq_len);
+        }
+        let tok = token as usize;
+        let embed = self.src.dense("embed")?;
+        let pos = self.src.dense("pos")?;
+        if token < 0 || tok >= cfg.vocab {
+            bail!("token {token} outside vocab {}", cfg.vocab);
+        }
+
+        // disjoint borrows of the session's caches + scratch fields
+        let DecodeSession {
+            pos: s_pos,
+            kcache,
+            vcache,
+            x,
+            h,
+            qv,
+            kv,
+            vv,
+            att,
+            proj,
+            m,
+            m2,
+            scores,
+            scratch_d,
+            scratch_ff,
+            scratch_v,
+        } = s;
+
+        // token + positional embedding for this single row
+        for (j, xj) in x.iter_mut().enumerate() {
+            *xj = embed.at2(tok, j) + pos.at2(t, j);
+        }
+
+        let scale = 1.0 / (dh as f32).sqrt();
+        for l in 0..cfg.n_layer {
+            let names = &self.layers[l];
+            // --- attention block ---
+            let g1 = self.src.dense(&names.ln1_g)?;
+            let b1 = self.src.dense(&names.ln1_b)?;
+            layernorm_vec(x, g1.data(), b1.data(), h);
+            self.src.matvec_into(&names.wq, h, qv, scratch_d)?;
+            self.src.matvec_into(&names.wk, h, kv, scratch_d)?;
+            self.src.matvec_into(&names.wv, h, vv, scratch_d)?;
+            kcache[l].extend_from_slice(kv);
+            vcache[l].extend_from_slice(vv);
+
+            // causal attention of this one query row over the cache; the
+            // full forward's masked positions contribute exp(-1e9-max)=0
+            // to its softmax sum, so the prefix-only softmax here is
+            // bitwise identical
+            let kc = &kcache[l];
+            let vc = &vcache[l];
+            for hd in 0..cfg.n_head {
+                scores.clear();
+                scores.resize(t + 1, 0.0);
+                for (tk, sc) in scores.iter_mut().enumerate() {
+                    let mut acc = 0.0f32;
+                    let krow = &kc[tk * d..(tk + 1) * d];
+                    for j in 0..dh {
+                        acc += qv[hd * dh + j] * krow[hd * dh + j];
+                    }
+                    *sc = acc * scale;
+                }
+                softmax_vec(scores);
+                for j in 0..dh {
+                    let mut acc = 0.0f32;
+                    for (tk, sc) in scores.iter().enumerate() {
+                        acc += sc * vc[tk * d + hd * dh + j];
+                    }
+                    att[hd * dh + j] = acc;
+                }
+            }
+            self.src.matvec_into(&names.wo, att, proj, scratch_d)?;
+            for (xj, pj) in x.iter_mut().zip(proj.iter()) {
+                *xj += pj;
+            }
+
+            // --- MLP block ---
+            let g2 = self.src.dense(&names.ln2_g)?;
+            let b2 = self.src.dense(&names.ln2_b)?;
+            layernorm_vec(x, g2.data(), b2.data(), h);
+            self.src.matvec_into(&names.w1, h, m, scratch_ff)?;
+            for v in m.iter_mut() {
+                *v = gelu(*v);
+            }
+            self.src.matvec_into(&names.w2, m, m2, scratch_d)?;
+            for (xj, mj) in x.iter_mut().zip(m2.iter()) {
+                *xj += mj;
+            }
+        }
+
+        let gf = self.src.dense("lnf.g")?;
+        let bf = self.src.dense("lnf.b")?;
+        layernorm_vec(x, gf.data(), bf.data(), h);
+        let mut logits = vec![0.0f32; cfg.vocab];
+        self.src.matvec_into("head", h, &mut logits, scratch_v)?;
+        *s_pos += 1;
+        Ok(logits)
+    }
+
+    pub fn resident_param_bytes(&self) -> usize {
+        self.src.resident_param_bytes()
+    }
+}
+
+/// What the continuous-batching scheduler needs from a decoding engine —
+/// exactly the four operations `serve::serve` calls, no more. Implemented
+/// by [`Decoder`] for real models and by mocks in the serve tests.
+pub trait TokenDecoder {
+    type Session;
+
+    fn start(&self) -> Self::Session;
+
+    /// Consume one token, return the next-token logits row.
+    fn step(&self, s: &mut Self::Session, token: i32) -> Result<Vec<f32>>;
+
+    /// Hard cap on the position cursor (the positional-embedding table).
+    fn max_positions(&self) -> usize;
+
+    fn resident_param_bytes(&self) -> usize;
+}
+
+impl TokenDecoder for Decoder<'_> {
+    type Session = DecodeSession;
+
+    fn start(&self) -> DecodeSession {
+        self.session()
+    }
+
+    fn step(&self, s: &mut DecodeSession, token: i32) -> Result<Vec<f32>> {
+        Decoder::step(self, s, token)
+    }
+
+    fn max_positions(&self) -> usize {
+        self.cfg.seq_len
+    }
+
+    fn resident_param_bytes(&self) -> usize {
+        Decoder::resident_param_bytes(self)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::model_native::{
+        forward_native, forward_quant, synth_params, synth_quantized,
+    };
+    use crate::quant::Granularity;
+
+    fn tiny_cfg() -> ModelCfg {
+        ModelCfg { vocab: 16, d_model: 8, n_layer: 2, n_head: 2, d_ff: 16, seq_len: 6 }
+    }
+
+    fn gemm_names(cfg: &ModelCfg) -> Vec<String> {
+        let mut v = Vec::new();
+        for l in 0..cfg.n_layer {
+            for w in ["wq", "wk", "wv", "wo", "w1", "w2"] {
+                v.push(format!("l{l}.{w}"));
+            }
+        }
+        v.push("head".into());
+        v
+    }
+
+    #[test]
+    fn incremental_decode_is_bitwise_the_full_forward() {
+        let cfg = tiny_cfg();
+        let params = synth_params(&cfg, 11);
+        let tokens = vec![1i32, 5, 3, 9, 2, 7];
+        let full = forward_native(&params, &cfg, 1, &tokens).unwrap();
+        let dec = Decoder::new(&params, cfg);
+        let mut s = dec.session();
+        for (t, &tok) in tokens.iter().enumerate() {
+            let row = dec.step(&mut s, tok).unwrap();
+            assert_eq!(s.pos(), t + 1);
+            let want = &full[t * cfg.vocab..(t + 1) * cfg.vocab];
+            for (j, (a, b)) in row.iter().zip(want).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "pos {t} logit {j}: {a} vs {b}"
+                );
+            }
+        }
+        assert!(s.cache_bytes() > 0);
+    }
+
+    #[test]
+    fn quantized_decode_is_bitwise_the_quant_forward() {
+        let cfg = tiny_cfg();
+        let params = synth_params(&cfg, 13);
+        let qp = synth_quantized(&params, &gemm_names(&cfg), Granularity::PerChannel);
+        let tokens = vec![4i32, 1, 8, 15, 0, 3];
+        let full = forward_quant(&qp, &cfg, 1, &tokens).unwrap();
+        let dec = Decoder::new(&qp, cfg);
+        let mut s = dec.session();
+        for (t, &tok) in tokens.iter().enumerate() {
+            let row = dec.step(&mut s, tok).unwrap();
+            let want = &full[t * cfg.vocab..(t + 1) * cfg.vocab];
+            for (a, b) in row.iter().zip(want) {
+                assert_eq!(a.to_bits(), b.to_bits(), "pos {t}");
+            }
+        }
+        // and the quantized store is what the decoder reports resident
+        assert_eq!(
+            TokenDecoder::resident_param_bytes(&dec),
+            QuantizedParams::resident_param_bytes(&qp)
+        );
+    }
+
+    #[test]
+    fn cursor_is_bounded_by_the_position_table() {
+        let cfg = tiny_cfg();
+        let params = synth_params(&cfg, 17);
+        let dec = Decoder::new(&params, cfg);
+        let mut s = dec.session();
+        for t in 0..cfg.seq_len {
+            dec.step(&mut s, (t % cfg.vocab) as i32).unwrap();
+        }
+        let err = dec.step(&mut s, 0).unwrap_err();
+        assert!(format!("{err:#}").contains("seq_len"), "{err:#}");
+    }
+
+    #[test]
+    fn bad_token_is_an_error() {
+        let cfg = tiny_cfg();
+        let params = synth_params(&cfg, 19);
+        let dec = Decoder::new(&params, cfg);
+        let mut s = dec.session();
+        assert!(dec.step(&mut s, -1).is_err());
+        assert!(dec.step(&mut s, cfg.vocab as i32).is_err());
+        // failed steps must not advance the cursor
+        assert_eq!(s.pos(), 0);
+    }
+}

@@ -7,16 +7,19 @@
 //! - **native**: a from-scratch Rust reimplementation of the transformer
 //!   (`forward_native`), used to cross-check the artifact and in tests.
 
+pub mod decode;
 pub mod model_native;
+pub mod quantstore;
 pub mod trace;
+
+pub use quantstore::{QParam, QuantizedParams};
 
 use std::collections::HashMap;
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 
-use crate::io::dts::{Dts, DtsTensor};
+use crate::io::dts::Dts;
 use crate::io::TensorSource;
-use crate::quant::{Granularity, QuantizedTensor, ScaleGrid};
 use crate::tensor::Tensor;
 
 /// A loaded model checkpoint: name → f32 tensor.
@@ -59,78 +62,20 @@ pub fn load_params_dequant(d: &Dts) -> Result<Params> {
 /// [`load_params_dequant`] generalized over any [`TensorSource`] backend —
 /// in particular the sharded stores the streaming pipeline writes, where
 /// tensors dequantize shard-by-shard as they are pulled.
+///
+/// Built on the quantized-resident loader ([`QuantizedParams::load`]) so
+/// both paths share one name-derivation and fallback policy; this one
+/// then expands every weight to dense f32 — use it only where a full f32
+/// copy is actually wanted (PJRT, cross-checks). The serving path keeps
+/// the store quantized instead.
 pub fn load_params_dequant_source(d: &dyn TensorSource) -> Result<Params> {
-    let mut p = Params::new();
-    // base names come from both plain tensors AND the stems of `.codes`
-    // sidecars: a compact checkpoint may store only codes+scales with no
-    // f32 copy at all. A `.codes`/`.scales` suffix only counts as a
-    // sidecar when its counterpart exists — a plain parameter that merely
-    // happens to end in `.scales` must still load as itself.
-    let mut names: Vec<String> = Vec::new();
-    let mut seen = std::collections::BTreeSet::new();
-    for name in d.names() {
-        let base = if let Some(stem) = name.strip_suffix(".codes") {
-            if d.contains(&format!("{stem}.scales")) {
-                stem.to_string()
-            } else {
-                name.clone()
-            }
-        } else if let Some(stem) = name.strip_suffix(".scales") {
-            if d.contains(&format!("{stem}.codes")) {
-                continue;
-            }
-            name.clone()
-        } else {
-            name.clone()
-        };
-        if seen.insert(base.clone()) {
-            names.push(base);
-        }
-    }
-    for name in &names {
-        let codes_name = format!("{name}.codes");
-        let scales_name = format!("{name}.scales");
-        let has_codes = d.contains(&codes_name);
-        let gran_label = d.meta().get(&format!("gran.{name}"));
-        if has_codes && d.contains(&scales_name) && gran_label.is_some() {
-            let (cshape, codes) = d.tensor_u8(&codes_name)?;
-            if cshape.len() != 2 {
-                bail!("{codes_name}: expected 2-D codes, got {cshape:?}");
-            }
-            let (rows, cols) = (cshape[0], cshape[1]);
-            let gran =
-                Granularity::parse(gran_label.expect("checked")).map_err(|e| anyhow!(e))?;
-            let scales = d.tensor_f32(&scales_name)?.into_data();
-            let grid = ScaleGrid::from_sidecar(gran, rows, cols, scales)
-                .map_err(|e| anyhow!("{name}: {e}"))?;
-            let q = QuantizedTensor { shape: (rows, cols), codes, scales: grid };
-            p.insert(name.clone(), q.dequantize());
-        } else {
-            match d.read_tensor(name) {
-                // pre-metadata checkpoints (codes but no `gran.<name>`
-                // meta) and plain tensors: use the stored f32 copy
-                Ok(DtsTensor::F32 { shape, data }) => {
-                    p.insert(name.clone(), Tensor::new(shape, data));
-                }
-                // non-f32 extras (token tables etc.) are skipped — unless
-                // codes exist, in which case a silently missing weight
-                // would fail far from here
-                Ok(_) if !has_codes => {}
-                Err(e) if !has_codes => {
-                    // file-backed sources can fail mid-read (truncated
-                    // shard, unreadable file): propagate, never drop a
-                    // parameter silently
-                    return Err(e);
-                }
-                Ok(_) | Err(_) => bail!(
-                    "{name}: {codes_name} present but cannot dequantize \
-                     (missing {scales_name} or gran.{name} metadata) and no \
-                     f32 copy is stored"
-                ),
-            }
-        }
-    }
-    Ok(p)
+    Ok(QuantizedParams::load(d)?.dequantize_all())
+}
+
+/// Total f32 footprint of a dense parameter map, for the resident-memory
+/// comparison the serve report prints.
+pub fn params_bytes(p: &Params) -> usize {
+    p.values().map(|t| t.len() * 4).sum()
 }
 
 /// One eval set: tokens `[n, seq]` and a 0/1 mask of scored positions
@@ -154,9 +99,14 @@ impl EvalSet {
     }
 }
 
-/// Accuracy of argmax next-token predictions at masked positions, given
-/// logits `[n, seq, vocab]` flattened row-major.
-pub fn masked_accuracy(set: &EvalSet, logits: &[f32], vocab: usize) -> f64 {
+/// Raw correct/total counts of argmax next-token predictions at masked
+/// positions, given logits `[n, seq, vocab]` flattened row-major. The
+/// single source of truth for scoring: [`masked_accuracy`] is the ratio,
+/// and [`eval_rubric`] sums these counts across batches directly — no
+/// lossy reconstruction of counts from a rounded ratio. Note a mask bit
+/// at the final position never scores (there is no next token), so the
+/// scored total here can be smaller than the raw mask popcount.
+pub fn masked_counts(set: &EvalSet, logits: &[f32], vocab: usize) -> (usize, usize) {
     let (n, seq) = (set.n, set.seq);
     assert_eq!(logits.len(), n * seq * vocab);
     let mut correct = 0usize;
@@ -180,6 +130,12 @@ pub fn masked_accuracy(set: &EvalSet, logits: &[f32], vocab: usize) -> f64 {
             }
         }
     }
+    (correct, total)
+}
+
+/// Accuracy of argmax next-token predictions at masked positions.
+pub fn masked_accuracy(set: &EvalSet, logits: &[f32], vocab: usize) -> f64 {
+    let (correct, total) = masked_counts(set, logits, vocab);
     if total == 0 {
         return 0.0;
     }
@@ -191,9 +147,12 @@ pub fn accuracy_to_rubric(acc: f64) -> f64 {
     2.0 * acc
 }
 
-/// A forward function: (batch, tokens, params) -> logits.
+/// A full-sequence forward function: `(batch, tokens) -> logits`.
+/// Parameters are bound at construction — every implementation closes
+/// over its own parameter storage (dense f32, PJRT-resident, or the
+/// quantized store), so callers never thread a params map through.
 pub trait ForwardFn {
-    fn forward(&self, batch: usize, tokens: &[i32], params: &Params) -> Result<Vec<f32>>;
+    fn forward(&self, batch: usize, tokens: &[i32]) -> Result<Vec<f32>>;
     fn vocab(&self) -> usize;
     fn seq_len(&self) -> usize;
     fn batch(&self) -> usize;
@@ -201,6 +160,10 @@ pub trait ForwardFn {
 
 /// Evaluate one eval set in fixed-size batches (padding the last batch by
 /// repeating row 0; padded rows carry zero masks so they never score).
+/// Correct/total counts sum directly across batches via
+/// [`masked_counts`] — the per-batch ratio is never rounded back into a
+/// count, so a mask bit at an unscoreable position cannot drift the
+/// aggregate.
 pub fn eval_rubric(fwd: &dyn ForwardFn, set: &EvalSet) -> Result<f64> {
     let b = fwd.batch();
     let seq = fwd.seq_len();
@@ -208,7 +171,7 @@ pub fn eval_rubric(fwd: &dyn ForwardFn, set: &EvalSet) -> Result<f64> {
         bail!("eval set seq {} != model seq {seq}", set.seq);
     }
     let vocab = fwd.vocab();
-    let mut correct_total = (0usize, 0usize);
+    let (mut correct, mut total) = (0usize, 0usize);
     let mut i = 0;
     while i < set.n {
         let take = (set.n - i).min(b);
@@ -225,24 +188,18 @@ pub fn eval_rubric(fwd: &dyn ForwardFn, set: &EvalSet) -> Result<f64> {
             tokens[j * seq..(j + 1) * seq]
                 .copy_from_slice(&set.tokens[src..src + seq]);
         }
-        let logits = fwd.forward(b, &tokens, &dummy_params_guard())?;
-        // note: ForwardFn implementations close over params; the guard is
-        // only for the trait signature symmetry (see PjrtForward below).
+        let logits = fwd.forward(b, &tokens)?;
         let batch_set = EvalSet { n: b, seq, tokens, mask };
-        let (mut c, mut t) = correct_total;
-        let acc = masked_accuracy(&batch_set, &logits, vocab);
-        let scored: usize = batch_set.mask.iter().map(|&m| m as usize).sum();
-        c += (acc * scored as f64).round() as usize;
-        t += scored;
-        correct_total = (c, t);
+        let (c, t) = masked_counts(&batch_set, &logits, vocab);
+        correct += c;
+        total += t;
         i += take;
     }
-    let (c, t) = correct_total;
-    Ok(accuracy_to_rubric(if t == 0 { 0.0 } else { c as f64 / t as f64 }))
-}
-
-fn dummy_params_guard() -> Params {
-    Params::new()
+    Ok(accuracy_to_rubric(if total == 0 {
+        0.0
+    } else {
+        correct as f64 / total as f64
+    }))
 }
 
 /// PJRT-backed forward (params bound at construction).
@@ -253,7 +210,7 @@ pub struct PjrtForward<'a> {
 }
 
 impl ForwardFn for PjrtForward<'_> {
-    fn forward(&self, batch: usize, tokens: &[i32], _unused: &Params) -> Result<Vec<f32>> {
+    fn forward(&self, batch: usize, tokens: &[i32]) -> Result<Vec<f32>> {
         let mut hp: HashMap<String, Tensor> = HashMap::new();
         for (k, v) in self.params.iter() {
             hp.insert(k.clone(), v.clone());
@@ -282,8 +239,35 @@ pub struct NativeForward<'a> {
 }
 
 impl ForwardFn for NativeForward<'_> {
-    fn forward(&self, batch: usize, tokens: &[i32], _unused: &Params) -> Result<Vec<f32>> {
+    fn forward(&self, batch: usize, tokens: &[i32]) -> Result<Vec<f32>> {
         model_native::forward_native(self.params, &self.cfg, batch, tokens)
+    }
+
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+
+    fn seq_len(&self) -> usize {
+        self.cfg.seq_len
+    }
+
+    fn batch(&self) -> usize {
+        self.batch
+    }
+}
+
+/// Quantized-resident forward: the same native graph flowing through the
+/// fused dequant-matmul backend — weights never leave their codes+scales
+/// storage form.
+pub struct QuantForward<'a> {
+    pub params: &'a QuantizedParams,
+    pub cfg: model_native::ModelCfg,
+    pub batch: usize,
+}
+
+impl ForwardFn for QuantForward<'_> {
+    fn forward(&self, batch: usize, tokens: &[i32]) -> Result<Vec<f32>> {
+        model_native::forward_quant(self.params, &self.cfg, batch, tokens)
     }
 
     fn vocab(&self) -> usize {
@@ -334,6 +318,58 @@ mod tests {
     fn empty_mask_gives_zero() {
         let set = EvalSet { n: 1, seq: 2, tokens: vec![0, 0], mask: vec![0, 0] };
         assert_eq!(masked_accuracy(&set, &[0.0; 4], 2), 0.0);
+    }
+
+    /// Always predicts token 1, whatever the input.
+    struct PredictOneForward {
+        seq: usize,
+        vocab: usize,
+        batch: usize,
+    }
+
+    impl ForwardFn for PredictOneForward {
+        fn forward(&self, batch: usize, _tokens: &[i32]) -> Result<Vec<f32>> {
+            let mut logits = vec![0.0f32; batch * self.seq * self.vocab];
+            for row in logits.chunks_mut(self.vocab) {
+                row[1] = 1.0;
+            }
+            Ok(logits)
+        }
+
+        fn vocab(&self) -> usize {
+            self.vocab
+        }
+
+        fn seq_len(&self) -> usize {
+            self.seq
+        }
+
+        fn batch(&self) -> usize {
+            self.batch
+        }
+    }
+
+    #[test]
+    fn rubric_sums_counts_exactly_no_roundtrip_drift() {
+        // A mask bit at the final position is in the raw mask popcount but
+        // can never score (no next token). The old accumulation
+        // reconstructed counts as round(batch_accuracy * popcount), which
+        // inflates the total and fabricates correct-counts here; summing
+        // masked_counts directly must give exactly 2 * (1/2) = 1.0.
+        let fwd = PredictOneForward { seq: 3, vocab: 4, batch: 2 };
+        let set = EvalSet {
+            n: 1,
+            seq: 3,
+            // t=0 scores target tokens[1]=1 (predicted 1: correct),
+            // t=1 scores target tokens[2]=0 (predicted 1: wrong),
+            // t=2 carries a mask bit but has no next token
+            tokens: vec![0, 1, 0],
+            mask: vec![1, 1, 1],
+        };
+        let (c, t) = masked_counts(&set, &fwd.forward(1, &set.tokens).unwrap(), 4);
+        assert_eq!((c, t), (1, 2));
+        let r = eval_rubric(&fwd, &set).unwrap();
+        assert!((r - 1.0).abs() < 1e-12, "rubric drifted: {r}");
     }
 
     #[test]

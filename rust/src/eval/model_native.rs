@@ -13,14 +13,17 @@
 use std::collections::HashMap;
 use std::rc::Rc;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
+use crate::quant::{matmul_quant, QuantizedTensor};
 use crate::tensor::ops::{gelu, layernorm_rows, matmul, softmax_rows};
 use crate::tensor::Tensor;
 
+use super::quantstore::{QParam, QuantizedParams};
+
 /// Model configuration (mirrors `model.ModelConfig`; read from the
 /// checkpoint metadata or the artifact manifest).
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ModelCfg {
     pub vocab: usize,
     pub d_model: usize,
@@ -148,6 +151,74 @@ pub fn forward_with<B: Backend>(
     be.matmul(&xf, &head)
 }
 
+/// Token + learned positional embedding, `[batch * t_len, d]` — shared by
+/// the dense and quantized backends (one arithmetic, one evaluation
+/// order, bitwise-identical results).
+pub fn embed_rows(embed: &Tensor, pos: &Tensor, batch: usize, tokens: &[i32]) -> Tensor {
+    let d = embed.cols();
+    let t_len = tokens.len() / batch;
+    let mut x = Tensor::zeros(vec![batch * t_len, d]);
+    for i in 0..batch {
+        for t in 0..t_len {
+            let tok = tokens[i * t_len + t] as usize;
+            for j in 0..d {
+                x.set2(i * t_len + t, j, embed.at2(tok, j) + pos.at2(t, j));
+            }
+        }
+    }
+    x
+}
+
+/// Causal softmax attention over `n_head` heads — shared by the dense and
+/// quantized backends. (The incremental decoder reproduces this loop one
+/// query row at a time against its KV cache; `eval::decode` pins the
+/// bitwise agreement.)
+pub fn attention_causal(
+    q: &Tensor,
+    k: &Tensor,
+    vv: &Tensor,
+    batch: usize,
+    n_head: usize,
+) -> Tensor {
+    let d = q.cols();
+    let dh = d / n_head;
+    let t_len = q.rows() / batch;
+    let scale = 1.0 / (dh as f32).sqrt();
+    let mut att_out = Tensor::zeros(vec![batch * t_len, d]);
+    for i in 0..batch {
+        for hd in 0..n_head {
+            // scores [t_len, t_len] for this (sample, head)
+            let mut scores = Tensor::zeros(vec![t_len, t_len]);
+            for tq in 0..t_len {
+                for tk in 0..=tq {
+                    let mut s = 0.0f32;
+                    let qrow = q.row(i * t_len + tq);
+                    let krow = k.row(i * t_len + tk);
+                    for j in 0..dh {
+                        s += qrow[hd * dh + j] * krow[hd * dh + j];
+                    }
+                    scores.set2(tq, tk, s * scale);
+                }
+                for tk in tq + 1..t_len {
+                    scores.set2(tq, tk, -1e9);
+                }
+            }
+            softmax_rows(&mut scores);
+            for tq in 0..t_len {
+                for j in 0..dh {
+                    let mut acc = 0.0f32;
+                    for tk in 0..=tq {
+                        acc += scores.at2(tq, tk)
+                            * vv.at2(i * t_len + tk, hd * dh + j);
+                    }
+                    att_out.set2(i * t_len + tq, hd * dh + j, acc);
+                }
+            }
+        }
+    }
+    att_out
+}
+
 /// A value flowing through the [`NativeBackend`]: parameters borrow from
 /// the checkpoint map (no copies on the hot serving path), intermediates
 /// are owned and cheaply clonable through an `Rc`.
@@ -194,19 +265,7 @@ impl<'p> Backend for NativeBackend<'p> {
         batch: usize,
         tokens: &[i32],
     ) -> Result<NativeVal<'p>> {
-        let (embed, pos) = (embed.t(), pos.t());
-        let d = embed.cols();
-        let t_len = tokens.len() / batch;
-        let mut x = Tensor::zeros(vec![batch * t_len, d]);
-        for i in 0..batch {
-            for t in 0..t_len {
-                let tok = tokens[i * t_len + t] as usize;
-                for j in 0..d {
-                    x.set2(i * t_len + t, j, embed.at2(tok, j) + pos.at2(t, j));
-                }
-            }
-        }
-        Ok(NativeVal::own(x))
+        Ok(NativeVal::own(embed_rows(embed.t(), pos.t(), batch, tokens)))
     }
 
     fn layernorm(
@@ -235,44 +294,7 @@ impl<'p> Backend for NativeBackend<'p> {
         batch: usize,
         n_head: usize,
     ) -> Result<NativeVal<'p>> {
-        let (q, k, vv) = (q.t(), k.t(), v.t());
-        let d = q.cols();
-        let dh = d / n_head;
-        let t_len = q.rows() / batch;
-        let scale = 1.0 / (dh as f32).sqrt();
-        let mut att_out = Tensor::zeros(vec![batch * t_len, d]);
-        for i in 0..batch {
-            for hd in 0..n_head {
-                // scores [t_len, t_len] for this (sample, head)
-                let mut scores = Tensor::zeros(vec![t_len, t_len]);
-                for tq in 0..t_len {
-                    for tk in 0..=tq {
-                        let mut s = 0.0f32;
-                        let qrow = q.row(i * t_len + tq);
-                        let krow = k.row(i * t_len + tk);
-                        for j in 0..dh {
-                            s += qrow[hd * dh + j] * krow[hd * dh + j];
-                        }
-                        scores.set2(tq, tk, s * scale);
-                    }
-                    for tk in tq + 1..t_len {
-                        scores.set2(tq, tk, -1e9);
-                    }
-                }
-                softmax_rows(&mut scores);
-                for tq in 0..t_len {
-                    for j in 0..dh {
-                        let mut acc = 0.0f32;
-                        for tk in 0..=tq {
-                            acc += scores.at2(tq, tk)
-                                * vv.at2(i * t_len + tk, hd * dh + j);
-                        }
-                        att_out.set2(i * t_len + tq, hd * dh + j, acc);
-                    }
-                }
-            }
-        }
-        Ok(NativeVal::own(att_out))
+        Ok(NativeVal::own(attention_causal(q.t(), k.t(), v.t(), batch, n_head)))
     }
 
     fn add(&mut self, a: &NativeVal<'p>, b: &NativeVal<'p>) -> Result<NativeVal<'p>> {
@@ -293,6 +315,145 @@ impl<'p> Backend for NativeBackend<'p> {
     }
 }
 
+/// A value flowing through the [`QuantBackend`]: GEMM weights stay in
+/// their codes+scales storage form, everything else is dense.
+#[derive(Clone)]
+pub enum QuantVal<'p> {
+    Plain(&'p Tensor),
+    Quant(&'p QuantizedTensor),
+    Owned(Rc<Tensor>),
+}
+
+impl QuantVal<'_> {
+    fn own(t: Tensor) -> Self {
+        QuantVal::Owned(Rc::new(t))
+    }
+
+    fn dense(&self, what: &str) -> Result<&Tensor> {
+        match self {
+            QuantVal::Plain(t) => Ok(t),
+            QuantVal::Owned(t) => Ok(t),
+            QuantVal::Quant(_) => bail!(
+                "{what}: operand is quantized but this op needs a dense \
+                 tensor (only GEMM weights may stay quantized-resident)"
+            ),
+        }
+    }
+}
+
+/// The third backend: computes the same forward as [`NativeBackend`] but
+/// over a [`QuantizedParams`] store — every GEMM whose weight is
+/// quantized flows through the fused dequant-matmul
+/// ([`crate::quant::matmul_quant`]), so a weight's f32 image never exists
+/// beyond one row of scratch. Activations and the non-GEMM parameters
+/// (embeddings, layernorm affines) are dense, as the model needs them.
+pub struct QuantBackend<'p> {
+    pub params: &'p QuantizedParams,
+}
+
+impl<'p> Backend for QuantBackend<'p> {
+    type H = QuantVal<'p>;
+
+    fn param(&mut self, name: &str) -> Result<QuantVal<'p>> {
+        match self.params.get(name) {
+            Some(QParam::Plain(t)) => Ok(QuantVal::Plain(t)),
+            Some(QParam::Quant(q)) => Ok(QuantVal::Quant(q)),
+            None => Err(anyhow!("missing param {name:?}")),
+        }
+    }
+
+    fn embed(
+        &mut self,
+        embed: &QuantVal<'p>,
+        pos: &QuantVal<'p>,
+        batch: usize,
+        tokens: &[i32],
+    ) -> Result<QuantVal<'p>> {
+        Ok(QuantVal::own(embed_rows(
+            embed.dense("embed")?,
+            pos.dense("pos")?,
+            batch,
+            tokens,
+        )))
+    }
+
+    fn layernorm(
+        &mut self,
+        x: &QuantVal<'p>,
+        gain: &QuantVal<'p>,
+        bias: &QuantVal<'p>,
+    ) -> Result<QuantVal<'p>> {
+        Ok(QuantVal::own(layernorm_rows(
+            x.dense("layernorm input")?,
+            gain.dense("layernorm gain")?.data(),
+            bias.dense("layernorm bias")?.data(),
+            1e-5,
+        )))
+    }
+
+    fn matmul(&mut self, x: &QuantVal<'p>, w: &QuantVal<'p>) -> Result<QuantVal<'p>> {
+        let x = x.dense("matmul lhs")?;
+        Ok(QuantVal::own(match w {
+            QuantVal::Quant(q) => matmul_quant(x, q),
+            other => matmul(x, other.dense("matmul weight")?),
+        }))
+    }
+
+    fn attention(
+        &mut self,
+        q: &QuantVal<'p>,
+        k: &QuantVal<'p>,
+        v: &QuantVal<'p>,
+        batch: usize,
+        n_head: usize,
+    ) -> Result<QuantVal<'p>> {
+        Ok(QuantVal::own(attention_causal(
+            q.dense("attention q")?,
+            k.dense("attention k")?,
+            v.dense("attention v")?,
+            batch,
+            n_head,
+        )))
+    }
+
+    fn add(&mut self, a: &QuantVal<'p>, b: &QuantVal<'p>) -> Result<QuantVal<'p>> {
+        Ok(QuantVal::own(a.dense("add lhs")?.add(b.dense("add rhs")?)))
+    }
+
+    fn gelu(&mut self, x: QuantVal<'p>) -> Result<QuantVal<'p>> {
+        let mut t = match x {
+            QuantVal::Owned(rc) => Rc::try_unwrap(rc).unwrap_or_else(|rc| (*rc).clone()),
+            QuantVal::Plain(t) => t.clone(),
+            QuantVal::Quant(_) => bail!("gelu: operand is quantized"),
+        };
+        for v in t.data_mut() {
+            *v = gelu(*v);
+        }
+        Ok(QuantVal::own(t))
+    }
+}
+
+/// Forward pass over a quantized-resident store: tokens `[batch * seq]` →
+/// logits `[batch * seq * vocab]`. Agrees with [`forward_native`] over
+/// the dequantized parameter map bitwise (the fused dequant-matmul
+/// reproduces the dense kernel's accumulation order exactly).
+pub fn forward_quant(
+    params: &QuantizedParams,
+    cfg: &ModelCfg,
+    batch: usize,
+    tokens: &[i32],
+) -> Result<Vec<f32>> {
+    let mut be = QuantBackend { params };
+    let logits = forward_with(&mut be, cfg, batch, tokens)?;
+    let t = match logits {
+        QuantVal::Plain(t) => t.clone(),
+        QuantVal::Owned(rc) => Rc::try_unwrap(rc).unwrap_or_else(|rc| (*rc).clone()),
+        QuantVal::Quant(_) => bail!("forward produced a quantized logits handle"),
+    };
+    debug_assert_eq!(t.shape(), &[batch * cfg.seq_len, cfg.vocab]);
+    Ok(t.into_data())
+}
+
 /// Forward pass: tokens `[batch * seq]` → logits `[batch * seq * vocab]`.
 pub fn forward_native(
     params: &HashMap<String, Tensor>,
@@ -310,39 +471,66 @@ pub fn forward_native(
     Ok(t.into_data())
 }
 
+/// Deterministic synthetic parameter set for a config, canonical naming —
+/// the model builder behind the serve bench, the decode/serve tests, and
+/// this module's own tests (layernorm affines are identity so tiny models
+/// stay numerically tame).
+pub fn synth_params(cfg: &ModelCfg, seed: u64) -> HashMap<String, Tensor> {
+    use crate::util::rng::XorShift;
+    let mut rng = XorShift::new(seed);
+    let mut p = HashMap::new();
+    let mut add = |p: &mut HashMap<String, Tensor>, name: &str, r: usize, c: usize,
+                   rng: &mut XorShift| {
+        p.insert(name.into(), Tensor::new(vec![r, c], rng.normal_vec(r * c, 0.1)));
+    };
+    add(&mut p, "embed", cfg.vocab, cfg.d_model, &mut rng);
+    add(&mut p, "pos", cfg.seq_len, cfg.d_model, &mut rng);
+    for l in 0..cfg.n_layer {
+        for w in ["wq", "wk", "wv", "wo"] {
+            add(&mut p, &format!("l{l}.{w}"), cfg.d_model, cfg.d_model, &mut rng);
+        }
+        add(&mut p, &format!("l{l}.w1"), cfg.d_model, cfg.d_ff, &mut rng);
+        add(&mut p, &format!("l{l}.w2"), cfg.d_ff, cfg.d_model, &mut rng);
+        p.insert(format!("l{l}.ln1.g"), Tensor::full(vec![1, cfg.d_model], 1.0));
+        p.insert(format!("l{l}.ln1.b"), Tensor::zeros(vec![1, cfg.d_model]));
+        p.insert(format!("l{l}.ln2.g"), Tensor::full(vec![1, cfg.d_model], 1.0));
+        p.insert(format!("l{l}.ln2.b"), Tensor::zeros(vec![1, cfg.d_model]));
+    }
+    p.insert("lnf.g".into(), Tensor::full(vec![1, cfg.d_model], 1.0));
+    p.insert("lnf.b".into(), Tensor::zeros(vec![1, cfg.d_model]));
+    add(&mut p, "head", cfg.d_model, cfg.vocab, &mut rng);
+    p
+}
+
+/// Quantize every GEMM weight of a [`synth_params`] map in place into a
+/// [`QuantizedParams`] store (AbsMax, the given granularity) — the
+/// quantized-side twin of [`synth_params`] for benches and tests.
+pub fn synth_quantized(
+    params: &HashMap<String, Tensor>,
+    quantizable: &[String],
+    gran: crate::quant::Granularity,
+) -> QuantizedParams {
+    let mut qp = QuantizedParams::new();
+    for (name, t) in params {
+        if quantizable.iter().any(|q| q == name) {
+            qp.insert(name.clone(), QParam::Quant(crate::quant::quantize(t, gran, 1.0)));
+        } else {
+            qp.insert(name.clone(), QParam::Plain(t.clone()));
+        }
+    }
+    qp
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::rng::XorShift;
 
     fn tiny_cfg() -> ModelCfg {
         ModelCfg { vocab: 16, d_model: 8, n_layer: 1, n_head: 2, d_ff: 16, seq_len: 4 }
     }
 
     fn tiny_params(cfg: &ModelCfg, seed: u64) -> HashMap<String, Tensor> {
-        let mut rng = XorShift::new(seed);
-        let mut p = HashMap::new();
-        let mut add = |p: &mut HashMap<String, Tensor>, name: &str, r: usize, c: usize,
-                       rng: &mut XorShift| {
-            p.insert(name.into(), Tensor::new(vec![r, c], rng.normal_vec(r * c, 0.1)));
-        };
-        add(&mut p, "embed", cfg.vocab, cfg.d_model, &mut rng);
-        add(&mut p, "pos", cfg.seq_len, cfg.d_model, &mut rng);
-        for l in 0..cfg.n_layer {
-            for w in ["wq", "wk", "wv", "wo"] {
-                add(&mut p, &format!("l{l}.{w}"), cfg.d_model, cfg.d_model, &mut rng);
-            }
-            add(&mut p, &format!("l{l}.w1"), cfg.d_model, cfg.d_ff, &mut rng);
-            add(&mut p, &format!("l{l}.w2"), cfg.d_ff, cfg.d_model, &mut rng);
-            p.insert(format!("l{l}.ln1.g"), Tensor::full(vec![1, cfg.d_model], 1.0));
-            p.insert(format!("l{l}.ln1.b"), Tensor::zeros(vec![1, cfg.d_model]));
-            p.insert(format!("l{l}.ln2.g"), Tensor::full(vec![1, cfg.d_model], 1.0));
-            p.insert(format!("l{l}.ln2.b"), Tensor::zeros(vec![1, cfg.d_model]));
-        }
-        p.insert("lnf.g".into(), Tensor::full(vec![1, cfg.d_model], 1.0));
-        p.insert("lnf.b".into(), Tensor::zeros(vec![1, cfg.d_model]));
-        add(&mut p, "head", cfg.d_model, cfg.vocab, &mut rng);
-        p
+        synth_params(cfg, seed)
     }
 
     #[test]
@@ -399,5 +587,48 @@ mod tests {
         let mut params = tiny_params(&cfg, 4);
         params.remove("head");
         assert!(forward_native(&params, &cfg, 1, &[0, 1, 2, 3]).is_err());
+    }
+
+    #[test]
+    fn quant_backend_matches_native_over_dequantized_params() {
+        // the acceptance bar is 1e-6 relative; the fused dequant-matmul
+        // reproduces the dense kernel's accumulation order, so the
+        // agreement is in fact bitwise — assert the stronger property
+        let cfg = tiny_cfg();
+        let params = tiny_params(&cfg, 5);
+        let quantizable: Vec<String> = params
+            .keys()
+            .filter(|n| {
+                n.ends_with(".wq") || n.ends_with(".wk") || n.ends_with(".wv")
+                    || n.ends_with(".wo") || n.ends_with(".w1")
+                    || n.ends_with(".w2") || n.as_str() == "head"
+            })
+            .cloned()
+            .collect();
+        let qp = synth_quantized(&params, &quantizable, crate::quant::Granularity::PerChannel);
+        assert_eq!(qp.n_quantized(), quantizable.len());
+        let deq = qp.dequantize_all();
+        let tokens = vec![1i32, 2, 3, 4, 5, 6, 7, 8];
+        let native = forward_native(&deq, &cfg, 2, &tokens).unwrap();
+        let quant = forward_quant(&qp, &cfg, 2, &tokens).unwrap();
+        assert_eq!(native.len(), quant.len());
+        for (i, (a, b)) in native.iter().zip(&quant).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "logit {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn quant_backend_refuses_quantized_non_gemm_params() {
+        let cfg = tiny_cfg();
+        let params = tiny_params(&cfg, 6);
+        // quantizing the embedding would silently re-densify inside the
+        // forward; the backend must refuse instead
+        let qp = synth_quantized(
+            &params,
+            &["embed".to_string()],
+            crate::quant::Granularity::PerChannel,
+        );
+        let err = forward_quant(&qp, &cfg, 1, &[0, 1, 2, 3]).unwrap_err();
+        assert!(format!("{err:#}").contains("dense"), "{err:#}");
     }
 }

@@ -1,0 +1,337 @@
+//! Quantized-resident parameter store — the serving-path counterpart of
+//! [`load_params_dequant_source`](super::load_params_dequant_source) that
+//! *keeps* the compression: every `<name>.codes` / `<name>.scales` pair
+//! loads as a [`QuantizedTensor`] (1 byte/element + compact scales) and
+//! stays that way for the life of the process, dequantizing row-by-row
+//! inside the fused dequant-matmul ([`crate::quant::matmul_quant`]) as the
+//! forward consumes it. Parameters without sidecars (embeddings, layernorm
+//! affines, biases) load as plain f32 — they are small and the forward
+//! needs them dense.
+//!
+//! Loads from any [`TensorSource`] backend — the in-memory [`Dts`]
+//! container, a seek-based monolithic file, or the sharded stores the
+//! streaming pipeline writes — and never materializes an f32 copy of a
+//! quantized weight at load time.
+
+use std::collections::{BTreeMap, HashMap};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::io::dts::DtsTensor;
+use crate::io::TensorSource;
+use crate::quant::{Granularity, QuantizedTensor, ScaleGrid};
+use crate::tensor::Tensor;
+
+use super::Params;
+
+/// One resident parameter: compact storage form for quantized weights,
+/// dense f32 for everything else.
+pub enum QParam {
+    Quant(QuantizedTensor),
+    Plain(Tensor),
+}
+
+impl QParam {
+    /// Logical element count.
+    pub fn numel(&self) -> usize {
+        match self {
+            QParam::Quant(q) => q.shape.0 * q.shape.1,
+            QParam::Plain(t) => t.len(),
+        }
+    }
+
+    /// Bytes this parameter actually occupies in memory.
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            QParam::Quant(q) => q.nbytes(),
+            QParam::Plain(t) => t.len() * 4,
+        }
+    }
+
+    /// Bytes a dense f32 copy would occupy (the `load_params_dequant`
+    /// footprint this store avoids).
+    pub fn f32_bytes(&self) -> usize {
+        self.numel() * 4
+    }
+}
+
+/// A loaded model checkpoint with quantized weights kept quantized.
+#[derive(Default)]
+pub struct QuantizedParams {
+    map: HashMap<String, QParam>,
+}
+
+impl QuantizedParams {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Load from any checkpoint backend. Mirrors the dequantizing
+    /// loader's name derivation exactly: a `.codes`/`.scales` suffix only
+    /// counts as a sidecar when its counterpart exists, codes-only
+    /// checkpoints (no stored f32 copy) load fine, and codes without the
+    /// `gran.<name>` metadata fall back to the stored f32 copy
+    /// (pre-metadata checkpoints).
+    pub fn load(d: &dyn TensorSource) -> Result<QuantizedParams> {
+        let mut map = HashMap::new();
+        let mut names: Vec<String> = Vec::new();
+        let mut seen = std::collections::BTreeSet::new();
+        for name in d.names() {
+            let base = if let Some(stem) = name.strip_suffix(".codes") {
+                if d.contains(&format!("{stem}.scales")) {
+                    stem.to_string()
+                } else {
+                    name.clone()
+                }
+            } else if let Some(stem) = name.strip_suffix(".scales") {
+                if d.contains(&format!("{stem}.codes")) {
+                    continue;
+                }
+                name.clone()
+            } else {
+                name.clone()
+            };
+            if seen.insert(base.clone()) {
+                names.push(base);
+            }
+        }
+        for name in &names {
+            let codes_name = format!("{name}.codes");
+            let scales_name = format!("{name}.scales");
+            let has_codes = d.contains(&codes_name);
+            let gran_label = d.meta().get(&format!("gran.{name}"));
+            if has_codes && d.contains(&scales_name) && gran_label.is_some() {
+                let (cshape, codes) = d.tensor_u8(&codes_name)?;
+                if cshape.len() != 2 {
+                    bail!("{codes_name}: expected 2-D codes, got {cshape:?}");
+                }
+                let (rows, cols) = (cshape[0], cshape[1]);
+                let gran = Granularity::parse(gran_label.expect("checked"))
+                    .map_err(|e| anyhow!(e))?;
+                let scales = d.tensor_f32(&scales_name)?.into_data();
+                let grid = ScaleGrid::from_sidecar(gran, rows, cols, scales)
+                    .map_err(|e| anyhow!("{name}: {e}"))?;
+                let q = QuantizedTensor { shape: (rows, cols), codes, scales: grid };
+                map.insert(name.clone(), QParam::Quant(q));
+            } else {
+                match d.read_tensor(name) {
+                    // pre-metadata checkpoints (codes but no `gran.<name>`
+                    // meta) and plain tensors: use the stored f32 copy
+                    Ok(DtsTensor::F32 { shape, data }) => {
+                        map.insert(name.clone(), QParam::Plain(Tensor::new(shape, data)));
+                    }
+                    // non-f32 extras (token tables etc.) are skipped — unless
+                    // codes exist, in which case a silently missing weight
+                    // would fail far from here
+                    Ok(_) if !has_codes => {}
+                    Err(e) if !has_codes => {
+                        // file-backed sources can fail mid-read (truncated
+                        // shard, unreadable file): propagate, never drop a
+                        // parameter silently
+                        return Err(e);
+                    }
+                    Ok(_) | Err(_) => bail!(
+                        "{name}: {codes_name} present but cannot dequantize \
+                         (missing {scales_name} or gran.{name} metadata) and no \
+                         f32 copy is stored"
+                    ),
+                }
+            }
+        }
+        Ok(QuantizedParams { map })
+    }
+
+    /// Build from a pipeline outcome's in-memory results: storage-form
+    /// tensors where the pipeline quantized, plain f32 for the rest —
+    /// `daq serve --quantized` without a `--store` goes through this.
+    pub fn from_pipeline(
+        params: &Params,
+        quantized: &BTreeMap<String, QuantizedTensor>,
+    ) -> QuantizedParams {
+        let mut map = HashMap::new();
+        for (name, t) in params {
+            match quantized.get(name) {
+                Some(q) => map.insert(name.clone(), QParam::Quant(q.clone())),
+                None => map.insert(name.clone(), QParam::Plain(t.clone())),
+            };
+        }
+        QuantizedParams { map }
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, p: QParam) {
+        self.map.insert(name.into(), p);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&QParam> {
+        self.map.get(name)
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Dense view of a parameter the forward needs as plain f32
+    /// (embeddings, layernorm affines). Refusing to silently dequantize a
+    /// weight here is what keeps the resident-memory guarantee honest:
+    /// GEMM weights must flow through the fused dequant-matmul instead.
+    pub fn dense(&self, name: &str) -> Result<&Tensor> {
+        match self.map.get(name) {
+            Some(QParam::Plain(t)) => Ok(t),
+            Some(QParam::Quant(_)) => bail!(
+                "param {name:?} is quantized but the op needs a dense tensor \
+                 (only GEMM weights may be quantized-resident)"
+            ),
+            None => bail!("missing param {name:?}"),
+        }
+    }
+
+    /// Number of quantized (storage-form) parameters.
+    pub fn n_quantized(&self) -> usize {
+        self.map
+            .values()
+            .filter(|p| matches!(p, QParam::Quant(_)))
+            .count()
+    }
+
+    /// Bytes the parameter set actually occupies resident in memory.
+    pub fn resident_param_bytes(&self) -> usize {
+        self.map.values().map(|p| p.resident_bytes()).sum()
+    }
+
+    /// Bytes the dequantized-f32 load path would occupy for the same set.
+    pub fn f32_param_bytes(&self) -> usize {
+        self.map.values().map(|p| p.f32_bytes()).sum()
+    }
+
+    /// Expand to a dense parameter map — the equality-test bridge to the
+    /// f32 loaders, *not* a serving path (it materializes everything this
+    /// store exists to avoid).
+    pub fn dequantize_all(&self) -> Params {
+        let mut p = Params::new();
+        for (name, v) in &self.map {
+            let t = match v {
+                QParam::Quant(q) => q.dequantize(),
+                QParam::Plain(t) => t.clone(),
+            };
+            p.insert(name.clone(), t);
+        }
+        p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::dts::Dts;
+    use crate::quant::quantize;
+    use crate::util::rng::XorShift;
+
+    fn quantized_ckpt() -> (Dts, Tensor) {
+        let mut rng = XorShift::new(41);
+        let w = Tensor::new(vec![8, 12], rng.normal_vec(96, 0.1));
+        let q = quantize(&w, Granularity::PerChannel, 1.0);
+        let mut d = Dts::new();
+        d.meta.insert("gran.w".into(), "channel".into());
+        d.insert(
+            "w.codes",
+            DtsTensor::U8 { shape: vec![8, 12], data: q.codes.clone() },
+        );
+        d.insert(
+            "w.scales",
+            DtsTensor::F32 {
+                shape: vec![q.scales.grid_rows, q.scales.grid_cols],
+                data: q.scales.scales.clone(),
+            },
+        );
+        d.insert_f32("ln.g", &Tensor::full(vec![1, 12], 1.0));
+        (d, q.dequantize())
+    }
+
+    #[test]
+    fn load_keeps_codes_resident_and_agrees_with_dequant_loader() {
+        let (d, want_w) = quantized_ckpt();
+        let qp = QuantizedParams::load(&d).unwrap();
+        assert_eq!(qp.n_quantized(), 1);
+        assert!(matches!(qp.get("w"), Some(QParam::Quant(_))));
+        assert!(matches!(qp.get("ln.g"), Some(QParam::Plain(_))));
+        // resident bytes: 96 codes + 12 channel scales * 4 + 12 plain * 4
+        assert_eq!(qp.resident_param_bytes(), 96 + 12 * 4 + 12 * 4);
+        assert_eq!(qp.f32_param_bytes(), 96 * 4 + 12 * 4);
+        // the dense bridge agrees bitwise with the dequantizing loader
+        let deq = qp.dequantize_all();
+        let via_loader = crate::eval::load_params_dequant(&d).unwrap();
+        assert_eq!(deq.len(), via_loader.len());
+        for (a, b) in deq["w"].data().iter().zip(via_loader["w"].data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in deq["w"].data().iter().zip(want_w.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn dense_refuses_quantized_weights() {
+        let (d, _) = quantized_ckpt();
+        let qp = QuantizedParams::load(&d).unwrap();
+        assert!(qp.dense("ln.g").is_ok());
+        let err = qp.dense("w").unwrap_err();
+        assert!(format!("{err:#}").contains("quantized"), "{err:#}");
+        assert!(qp.dense("nope").is_err());
+    }
+
+    #[test]
+    fn codes_without_gran_meta_fall_back_to_stored_f32() {
+        let mut rng = XorShift::new(43);
+        let w = Tensor::new(vec![4, 4], rng.normal_vec(16, 0.1));
+        let q = quantize(&w, Granularity::PerTensor, 1.0);
+        let mut d = Dts::new();
+        // codes + scales but NO gran meta, WITH an f32 copy: pre-metadata
+        // checkpoint — the f32 copy must win, resident as plain f32
+        d.insert_f32("w", &w);
+        d.insert(
+            "w.codes",
+            DtsTensor::U8 { shape: vec![4, 4], data: q.codes.clone() },
+        );
+        d.insert(
+            "w.scales",
+            DtsTensor::F32 { shape: vec![1, 1], data: q.scales.scales.clone() },
+        );
+        let qp = QuantizedParams::load(&d).unwrap();
+        assert_eq!(qp.n_quantized(), 0);
+        match qp.get("w") {
+            Some(QParam::Plain(t)) => {
+                for (a, b) in t.data().iter().zip(w.data()) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!(
+                "expected plain fallback, got {:?}",
+                other.map(|p| p.numel())
+            ),
+        }
+    }
+
+    #[test]
+    fn from_pipeline_prefers_storage_form() {
+        let mut rng = XorShift::new(47);
+        let w = Tensor::new(vec![6, 6], rng.normal_vec(36, 0.1));
+        let q = quantize(&w, Granularity::PerChannel, 1.0);
+        let mut params = Params::new();
+        params.insert("w".into(), q.dequantize());
+        params.insert("b".into(), Tensor::zeros(vec![1, 6]));
+        let mut quantized = BTreeMap::new();
+        quantized.insert("w".to_string(), q);
+        let qp = QuantizedParams::from_pipeline(&params, &quantized);
+        assert!(matches!(qp.get("w"), Some(QParam::Quant(_))));
+        assert!(matches!(qp.get("b"), Some(QParam::Plain(_))));
+        assert!(qp.resident_param_bytes() < qp.f32_param_bytes());
+    }
+}

@@ -520,6 +520,36 @@ pub fn trace_checkpoint(source: &dyn TensorSource) -> Result<TraceGraph> {
     trace_graph(source, &cfg)
 }
 
+/// Resolve the model config for a checkpoint: the checkpoint metadata
+/// when present, else the artifact manifest (`manifest.json` under
+/// `artifacts_dir`) — pre-metadata checkpoints trace and serve through
+/// the same config the AOT artifacts were lowered for. With neither
+/// source available the metadata error propagates, annotated with the
+/// missing fallback.
+pub fn model_cfg_for(source: &dyn TensorSource, artifacts_dir: &str) -> Result<ModelCfg> {
+    match ModelCfg::from_meta(source.meta()) {
+        Ok(cfg) => Ok(cfg),
+        Err(meta_err) => {
+            let dir = Path::new(artifacts_dir);
+            if dir.join("manifest.json").exists() {
+                let m = crate::runtime::Manifest::load(dir).with_context(|| {
+                    format!(
+                        "checkpoint has no model-config metadata; falling back \
+                         to {artifacts_dir}/manifest.json"
+                    )
+                })?;
+                Ok(m.model_cfg())
+            } else {
+                Err(meta_err.context(format!(
+                    "checkpoint has no model-config metadata and no artifact \
+                     manifest exists at {artifacts_dir}/manifest.json to derive \
+                     it from"
+                )))
+            }
+        }
+    }
+}
+
 /// Extend an in-memory checkpoint with the canonical model-config and
 /// (optionally) layout metadata — test/builder helper.
 pub fn stamp_model_meta(d: &mut Dts, cfg: &ModelCfg) {
@@ -685,6 +715,49 @@ mod tests {
         let mut f = canonical_ckpt(&cfg);
         f.meta.insert("note".into(), "hello".into());
         assert_eq!(fingerprint(&a), fingerprint(&f));
+    }
+
+    #[test]
+    fn model_cfg_falls_back_to_artifact_manifest() {
+        let cfg = tiny_cfg();
+        let dir = std::env::temp_dir()
+            .join(format!("daq_trace_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            format!(
+                "{{\"n_candidates\": 16, \"eval_batch\": 8, \"serve_batch\": 4, \
+                 \"seq_len\": {}, \"vocab\": {}, \"d_model\": {}, \
+                 \"n_layer\": {}, \"n_head\": {}, \"d_ff\": {}}}",
+                cfg.seq_len, cfg.vocab, cfg.d_model, cfg.n_layer, cfg.n_head, cfg.d_ff
+            ),
+        )
+        .unwrap();
+        let dir_s = dir.to_str().unwrap();
+
+        // metadata-bearing checkpoint: both sources must agree
+        let with_meta = canonical_ckpt(&cfg);
+        let from_meta = ModelCfg::from_meta(with_meta.meta()).unwrap();
+        assert_eq!(model_cfg_for(&with_meta, dir_s).unwrap(), from_meta);
+
+        // pre-metadata checkpoint: the manifest supplies the config, and
+        // the trace over it equals the metadata-driven trace
+        let mut bare = canonical_ckpt(&cfg);
+        for k in ["vocab", "d_model", "n_layer", "n_head", "d_ff", "seq_len"] {
+            bare.meta.remove(k);
+        }
+        assert!(ModelCfg::from_meta(bare.meta()).is_err());
+        let derived = model_cfg_for(&bare, dir_s).unwrap();
+        assert_eq!(derived, from_meta);
+        let g_meta = trace_graph(&with_meta, &from_meta).unwrap();
+        let g_manifest = trace_graph(&bare, &derived).unwrap();
+        assert_eq!(g_meta.ops, g_manifest.ops);
+        assert_eq!(g_meta.leaves, g_manifest.leaves);
+
+        // with neither source the error names both
+        let err = model_cfg_for(&bare, "/nonexistent_daq_artifacts").unwrap_err();
+        assert!(format!("{err:#}").contains("manifest"), "{err:#}");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -134,6 +134,19 @@ pub fn decode_table() -> [f32; 256] {
     t
 }
 
+/// Bulk-decode a slice of E4M3 codes through the shared LUT. The workhorse
+/// of every quantized-resident read path: [`crate::quant::QuantizedTensor`]
+/// row dequantization and the fused dequant-matmul decode rows through this
+/// instead of per-element [`decode_e4m3`] calls.
+#[inline]
+pub fn decode_slice_into(codes: &[u8], out: &mut [f32]) {
+    assert_eq!(codes.len(), out.len());
+    let table = decode_lut();
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = table[c as usize];
+    }
+}
+
 static DECODE_LUT: std::sync::OnceLock<[f32; 256]> = std::sync::OnceLock::new();
 
 /// Process-wide decode table, built once on first use — the bulk
@@ -264,6 +277,21 @@ mod tests {
         }
         // the static is shared, not rebuilt
         assert!(std::ptr::eq(lut, decode_lut()));
+    }
+
+    #[test]
+    fn decode_slice_matches_scalar_decode() {
+        let codes: Vec<u8> = (0..=255).collect();
+        let mut out = vec![0.0f32; 256];
+        decode_slice_into(&codes, &mut out);
+        for (c, v) in codes.iter().zip(&out) {
+            let want = decode_e4m3(*c);
+            if want.is_nan() {
+                assert!(v.is_nan());
+            } else {
+                assert_eq!(v.to_bits(), want.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -33,6 +33,11 @@ pub trait TensorSource: Sync {
     /// Dims of a stored tensor without reading its payload.
     fn shape_of(&self, name: &str) -> Option<Vec<usize>>;
 
+    /// At-rest payload bytes of a stored tensor, from the index alone —
+    /// the serving path reports store-size vs resident-size from this
+    /// without pulling a single payload.
+    fn nbytes_of(&self, name: &str) -> Option<u64>;
+
     /// Peek-by-prefix: names starting with `prefix`, in container order,
     /// from the index alone (no payloads). The group planner uses this to
     /// locate a layernorm's affine parameters next to its GEMMs.
@@ -81,6 +86,10 @@ impl TensorSource for Dts {
         self.get(name).map(|t| t.shape().to_vec())
     }
 
+    fn nbytes_of(&self, name: &str) -> Option<u64> {
+        self.get(name).map(|t| t.nbytes() as u64)
+    }
+
     fn read_tensor(&self, name: &str) -> Result<DtsTensor> {
         self.get(name)
             .cloned()
@@ -105,6 +114,10 @@ impl TensorSource for DtsReader {
         self.index.entry(name).map(|e| e.shape.clone())
     }
 
+    fn nbytes_of(&self, name: &str) -> Option<u64> {
+        self.index.entry(name).map(|e| e.nbytes)
+    }
+
     fn read_tensor(&self, name: &str) -> Result<DtsTensor> {
         DtsReader::read_tensor(self, name)
     }
@@ -125,6 +138,10 @@ impl TensorSource for ShardedDts {
 
     fn shape_of(&self, name: &str) -> Option<Vec<usize>> {
         self.entry(name).map(|(_, e)| e.shape.clone())
+    }
+
+    fn nbytes_of(&self, name: &str) -> Option<u64> {
+        self.entry(name).map(|(_, e)| e.nbytes)
     }
 
     fn read_tensor(&self, name: &str) -> Result<DtsTensor> {

@@ -183,15 +183,25 @@ pub struct QuantizedTensor {
 impl QuantizedTensor {
     pub fn dequantize(&self) -> Tensor {
         let (rows, cols) = self.shape;
-        let table = fp8::decode_lut();
         let mut out = vec![0.0f32; rows * cols];
         for r in 0..rows {
-            for c in 0..cols {
-                out[r * cols + c] =
-                    table[self.codes[r * cols + c] as usize] * self.scales.at(r, c);
-            }
+            self.dequant_row_into(r, &mut out[r * cols..(r + 1) * cols]);
         }
         Tensor::new(vec![rows, cols], out)
+    }
+
+    /// Dequantize one row into a caller-provided buffer — the unit of the
+    /// fused dequant-matmul: only `cols` f32 ever exist at once, not the
+    /// whole matrix. Bitwise-identical to the corresponding
+    /// [`Self::dequantize`] row (same LUT value, same scale multiply).
+    #[inline]
+    pub fn dequant_row_into(&self, r: usize, out: &mut [f32]) {
+        let (_, cols) = self.shape;
+        assert_eq!(out.len(), cols);
+        fp8::decode_slice_into(&self.codes[r * cols..(r + 1) * cols], out);
+        for (c, o) in out.iter_mut().enumerate() {
+            *o *= self.scales.at(r, c);
+        }
     }
 
     /// Storage footprint in bytes (codes + scales).
@@ -244,6 +254,66 @@ pub fn qdq(w: &Tensor, s0: &ScaleGrid, alpha: f32) -> Tensor {
         }
     }
     Tensor::new(vec![rows, cols], out)
+}
+
+/// Fused dequant-matmul: `x[M,K] @ Q[K,N]` with `Q` staying in its E4M3
+/// codes+scales storage form — rows of `Q` dequantize through the shared
+/// LUT into one `N`-wide scratch buffer as the GEMM consumes them, so the
+/// resident footprint is the codes plus a single row, never a full f32
+/// copy of the weight.
+///
+/// Bitwise-identical to `ops::matmul(x, &q.dequantize())`: per output
+/// element the contributions accumulate in the same ascending-k order,
+/// the decoded row values are the exact `dequantize` values, and the
+/// `aik == 0` skip matches the dense kernel's.
+pub fn matmul_quant(x: &Tensor, q: &QuantizedTensor) -> Tensor {
+    assert_eq!(x.ndim(), 2);
+    let (m, k) = (x.rows(), x.cols());
+    let (k2, n) = q.shape;
+    assert_eq!(k, k2, "matmul_quant inner dims: {k} vs {k2}");
+    let mut c = vec![0.0f32; m * n];
+    let xd = x.data();
+    let mut wrow = vec![0.0f32; n];
+    for kk in 0..k {
+        q.dequant_row_into(kk, &mut wrow);
+        for i in 0..m {
+            let aik = xd[i * k + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (cj, wj) in crow.iter_mut().zip(&wrow) {
+                *cj += aik * wj;
+            }
+        }
+    }
+    Tensor::new(vec![m, n], c)
+}
+
+/// Single-row fused dequant-matmul for the incremental decode path:
+/// `out[N] = x[K] @ Q[K,N]`, with `row_scratch` (len `N`) reused across
+/// calls so a decode step allocates nothing. Same accumulation order as
+/// [`matmul_quant`] with one x-row.
+pub fn matvec_quant_into(
+    x: &[f32],
+    q: &QuantizedTensor,
+    out: &mut [f32],
+    row_scratch: &mut [f32],
+) {
+    let (k, n) = q.shape;
+    assert_eq!(x.len(), k, "matvec_quant x len {} vs rows {k}", x.len());
+    assert_eq!(out.len(), n);
+    assert_eq!(row_scratch.len(), n);
+    out.fill(0.0);
+    for (kk, &aik) in x.iter().enumerate() {
+        if aik == 0.0 {
+            continue;
+        }
+        q.dequant_row_into(kk, row_scratch);
+        for (oj, wj) in out.iter_mut().zip(row_scratch.iter()) {
+            *oj += aik * wj;
+        }
+    }
 }
 
 #[cfg(test)]
@@ -382,6 +452,52 @@ mod tests {
         }
         // wrong length rejected
         assert!(ScaleGrid::from_sidecar(Granularity::PerChannel, 4, 4, vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn fused_dequant_matmul_is_bitwise_dense() {
+        use crate::tensor::ops::matmul;
+        let mut rng = XorShift::new(21);
+        for gran in [
+            Granularity::PerTensor,
+            Granularity::PerChannel,
+            Granularity::Block(16),
+        ] {
+            let w = rand_w(24, 20, 8);
+            let q = quantize(&w, gran, 1.0);
+            // x includes exact zeros so the skip paths are exercised
+            let mut xd = rng.normal_vec(6 * 24, 0.5);
+            xd[3] = 0.0;
+            xd[40] = 0.0;
+            let x = Tensor::new(vec![6, 24], xd);
+            let dense = matmul(&x, &q.dequantize());
+            let fused = matmul_quant(&x, &q);
+            assert_eq!(fused.shape(), dense.shape());
+            for (a, b) in fused.data().iter().zip(dense.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{gran:?}");
+            }
+            // single-row form agrees with the fused GEMM's first row
+            let mut out = vec![0.0f32; 20];
+            let mut scratch = vec![0.0f32; 20];
+            matvec_quant_into(x.row(0), &q, &mut out, &mut scratch);
+            for (a, b) in out.iter().zip(fused.row(0)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{gran:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn dequant_row_matches_full_dequantize() {
+        let w = rand_w(30, 14, 9);
+        let q = quantize(&w, Granularity::Block(8), 1.0);
+        let full = q.dequantize();
+        let mut row = vec![0.0f32; 14];
+        for r in 0..30 {
+            q.dequant_row_into(r, &mut row);
+            for (a, b) in row.iter().zip(full.row(r)) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -112,6 +112,21 @@ impl Manifest {
             forwards,
         })
     }
+
+    /// The model configuration the artifacts were lowered for, as a
+    /// native `ModelCfg` — the fallback config source for `daq trace` and
+    /// `daq serve` over pre-metadata checkpoints
+    /// ([`crate::eval::trace::model_cfg_for`]).
+    pub fn model_cfg(&self) -> crate::eval::model_native::ModelCfg {
+        crate::eval::model_native::ModelCfg {
+            vocab: self.vocab,
+            d_model: self.d_model,
+            n_layer: self.n_layer,
+            n_head: self.n_head,
+            d_ff: self.d_ff,
+            seq_len: self.seq_len,
+        }
+    }
 }
 
 /// The PJRT runtime: CPU client + compiled-executable cache.

@@ -1,16 +1,30 @@
-//! Batched serving loop over the quantized model — proves the full
-//! three-layer composition end-to-end: Rust request loop → AOT HLO
-//! forward → PJRT, with FP8-quantized (dequantized-at-load) weights and
-//! Python nowhere in sight.
+//! Continuous-batching serving over the (optionally quantized-resident)
+//! model.
+//!
+//! The scheduler owns a fixed set of decode **slots**. Requests queue for
+//! admission, join the active batch the moment a slot frees up, decode
+//! one token per scheduler tick through their own incremental
+//! [`TokenDecoder`] session (per-layer KV cache, O(t) per token), and
+//! leave the batch the moment they finish — a long request never holds
+//! short ones hostage, and latency percentiles are **per request**
+//! (admission → completion), not shared across a lock-stepped batch.
+//!
+//! The pre-refactor full-reforward loop survives as
+//! [`serve_reforward`]: it re-runs the whole-sequence forward for every
+//! generated token (O(seq²) per token) and is kept as the PJRT path and
+//! the bench baseline the incremental scheduler is measured against.
 //!
 //! Workload: styled-completion requests mirroring the corpus — a pattern
 //! prompt plus SEP; the server greedily decodes the style signature and
-//! continuation. Reports per-request latency percentiles and token
-//! throughput.
+//! continuation.
 
-use anyhow::Result;
+use std::collections::VecDeque;
+use std::time::Instant;
 
-use crate::eval::{ForwardFn, Params};
+use anyhow::{bail, Result};
+
+use crate::eval::decode::TokenDecoder;
+use crate::eval::ForwardFn;
 use crate::util::rng::XorShift;
 use crate::util::timer::LatencyStats;
 
@@ -63,39 +77,229 @@ pub fn expected_signature(prompt: &[i32]) -> [i32; 3] {
     ]
 }
 
+/// Scheduler configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Concurrent decode slots (the continuous batch width).
+    pub slots: usize,
+    /// Greedy tokens to decode per request (capped by the position table).
+    pub new_tokens: usize,
+}
+
 /// Serving report.
 pub struct ServeReport {
     pub requests: usize,
-    pub batches: usize,
+    pub slots: usize,
     pub new_tokens_per_request: usize,
-    pub batch_latency: LatencyStats,
+    /// Scheduler ticks (continuous path) or forward batches (reforward).
+    pub steps: usize,
+    /// Wall time of one scheduler tick / one reforward batch.
+    pub step_latency: LatencyStats,
+    /// Per-request latency, admission → completion.
     pub request_latency: LatencyStats,
     pub tokens_per_sec: f64,
     /// Fraction of generated signature tokens matching the SFT style.
     pub style_adherence: f64,
     pub completions: Vec<Vec<i32>>,
+    /// Bytes the model parameters occupy resident while serving.
+    pub resident_param_bytes: usize,
+    /// High-water mark of simultaneously active slots.
+    pub peak_active_slots: usize,
 }
 
-/// Run the serving workload: batches of `fwd.batch()` requests, greedy
-/// decoding `new_tokens` tokens each.
-pub fn serve(
+fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for v in 1..row.len() {
+        if row[v] > row[best] {
+            best = v;
+        }
+    }
+    best
+}
+
+struct Active<S> {
+    idx: usize,
+    session: S,
+    next_input: i32,
+    generated: Vec<i32>,
+    budget: usize,
+    admitted: Instant,
+}
+
+/// Run the continuous-batching scheduler: up to `cfg.slots` requests
+/// decode concurrently, each through its own incremental session; a
+/// finishing request frees its slot for the next queued one immediately.
+pub fn serve<D: TokenDecoder>(
+    dec: &D,
+    requests: &[Request],
+    cfg: &ServeConfig,
+) -> Result<ServeReport> {
+    assert!(cfg.slots > 0, "need at least one decode slot");
+    let max_pos = dec.max_positions();
+    // validate the whole workload up front: a malformed request must
+    // fail fast, not abort the run after other requests already finished
+    for (idx, r) in requests.iter().enumerate() {
+        if r.prompt.is_empty() {
+            bail!("request {idx}: empty prompt");
+        }
+        if r.prompt.len() > max_pos {
+            bail!(
+                "request {idx}: prompt len {} exceeds the model's \
+                 position table ({max_pos})",
+                r.prompt.len()
+            );
+        }
+    }
+    let mut queue: VecDeque<usize> = (0..requests.len()).collect();
+    let mut slots: Vec<Option<Active<D::Session>>> = Vec::new();
+    slots.resize_with(cfg.slots, || None);
+    let mut completions: Vec<Vec<i32>> = vec![Vec::new(); requests.len()];
+    let mut step_latency = LatencyStats::default();
+    let mut request_latency = LatencyStats::default();
+    let mut sig_match = 0usize;
+    let mut sig_total = 0usize;
+    let mut total_generated = 0usize;
+    let mut steps = 0usize;
+    let mut peak_active = 0usize;
+    let t_all = Instant::now();
+
+    let mut complete = |a: Active<D::Session>,
+                        completions: &mut Vec<Vec<i32>>,
+                        request_latency: &mut LatencyStats,
+                        sig_match: &mut usize,
+                        sig_total: &mut usize| {
+        request_latency.record(a.admitted.elapsed().as_secs_f64() * 1e3);
+        let want = expected_signature(&requests[a.idx].prompt);
+        for (g, w) in a.generated.iter().take(3).zip(want.iter()) {
+            *sig_total += 1;
+            if g == w {
+                *sig_match += 1;
+            }
+        }
+        completions[a.idx] = a.generated;
+    };
+
+    loop {
+        // admission: fill every free slot from the queue. The prompt
+        // prefills here (one decode step per prompt token — the session
+        // cursor advances to prompt_len - 1, and the last prompt token
+        // becomes the first decode input).
+        for slot in slots.iter_mut() {
+            if slot.is_some() {
+                continue;
+            }
+            let Some(idx) = queue.pop_front() else { break };
+            let prompt = &requests[idx].prompt;
+            // the admission timestamp precedes the prefill so the
+            // per-request latency really is admission -> completion
+            // (prompt replay included)
+            let admitted = Instant::now();
+            let mut session = dec.start();
+            for &tok in &prompt[..prompt.len() - 1] {
+                dec.step(&mut session, tok)?;
+            }
+            // room left in the position table caps the generation budget
+            // (feeding the token at position p requires p < max_pos)
+            let budget = cfg.new_tokens.min(max_pos - prompt.len() + 1);
+            let a = Active {
+                idx,
+                session,
+                next_input: *prompt.last().expect("validated non-empty"),
+                generated: Vec::with_capacity(budget),
+                budget,
+                admitted,
+            };
+            if budget == 0 {
+                complete(
+                    a,
+                    &mut completions,
+                    &mut request_latency,
+                    &mut sig_match,
+                    &mut sig_total,
+                );
+            } else {
+                *slot = Some(a);
+            }
+        }
+
+        let active = slots.iter().filter(|s| s.is_some()).count();
+        peak_active = peak_active.max(active);
+        if active == 0 {
+            if queue.is_empty() {
+                break;
+            }
+            continue; // zero-budget admissions drained the slots; refill
+        }
+
+        // one tick: every active request decodes exactly one token
+        let t_tick = Instant::now();
+        for slot in slots.iter_mut() {
+            let Some(a) = slot.as_mut() else { continue };
+            let logits = dec.step(&mut a.session, a.next_input)?;
+            let best = argmax(&logits) as i32;
+            a.generated.push(best);
+            a.next_input = best;
+            total_generated += 1;
+            if a.generated.len() >= a.budget {
+                let done = slot.take().expect("checked");
+                complete(
+                    done,
+                    &mut completions,
+                    &mut request_latency,
+                    &mut sig_match,
+                    &mut sig_total,
+                );
+            }
+        }
+        step_latency.record(t_tick.elapsed().as_secs_f64() * 1e3);
+        steps += 1;
+    }
+
+    let total_s = t_all.elapsed().as_secs_f64();
+    Ok(ServeReport {
+        requests: requests.len(),
+        slots: cfg.slots,
+        new_tokens_per_request: cfg.new_tokens,
+        steps,
+        step_latency,
+        request_latency,
+        tokens_per_sec: total_generated as f64 / total_s,
+        style_adherence: if sig_total == 0 {
+            0.0
+        } else {
+            sig_match as f64 / sig_total as f64
+        },
+        completions,
+        resident_param_bytes: dec.resident_param_bytes(),
+        peak_active_slots: peak_active,
+    })
+}
+
+/// The pre-refactor serving loop: fixed batches of `fwd.batch()` requests,
+/// each generated token re-running the **whole-sequence** forward. Kept as
+/// the PJRT serving path (the AOT graph is full-sequence) and as the
+/// baseline the incremental scheduler is benchmarked against.
+/// `resident_param_bytes` is reported as given (the ForwardFn trait does
+/// not expose its parameter storage).
+pub fn serve_reforward(
     fwd: &dyn ForwardFn,
     requests: &[Request],
     new_tokens: usize,
+    resident_param_bytes: usize,
 ) -> Result<ServeReport> {
     let b = fwd.batch();
     let seq = fwd.seq_len();
     let vocab = fwd.vocab();
-    let mut batch_latency = LatencyStats::default();
+    let mut step_latency = LatencyStats::default();
     let mut request_latency = LatencyStats::default();
     let mut completions = Vec::with_capacity(requests.len());
     let mut sig_match = 0usize;
     let mut sig_total = 0usize;
-    let t_all = std::time::Instant::now();
-    let dummy = Params::new();
+    let mut steps = 0usize;
+    let t_all = Instant::now();
 
     for chunk in requests.chunks(b) {
-        let t_batch = std::time::Instant::now();
+        let t_batch = Instant::now();
         // tokens buffer [b, seq]; pad short batches by repeating slot 0
         let mut buf = vec![tokens::PAD; b * seq];
         let mut cursors = vec![0usize; b];
@@ -110,7 +314,7 @@ pub fn serve(
         }
 
         for _ in 0..new_tokens {
-            let logits = fwd.forward(b, &buf, &dummy)?;
+            let logits = fwd.forward(b, &buf)?;
             for j in 0..b {
                 let cur = cursors[j];
                 if cur >= seq {
@@ -118,23 +322,18 @@ pub fn serve(
                 }
                 // prediction made at position cur-1 selects token at cur
                 let row = &logits[(j * seq + cur - 1) * vocab..(j * seq + cur) * vocab];
-                let mut best = 0usize;
-                for v in 1..vocab {
-                    if row[v] > row[best] {
-                        best = v;
-                    }
-                }
-                buf[j * seq + cur] = best as i32;
+                buf[j * seq + cur] = argmax(row) as i32;
                 cursors[j] = cur + 1;
             }
         }
+        steps += 1;
 
         let batch_ms = t_batch.elapsed().as_secs_f64() * 1e3;
-        batch_latency.record(batch_ms);
+        step_latency.record(batch_ms);
         for (j, req) in chunk.iter().enumerate() {
             request_latency.record(batch_ms); // synchronous batch: shared latency
-            let gen: Vec<i32> = buf
-                [j * seq + req.prompt.len()..(j * seq + req.prompt.len() + new_tokens).min((j + 1) * seq)]
+            let gen: Vec<i32> = buf[j * seq + req.prompt.len()
+                ..(j * seq + req.prompt.len() + new_tokens).min((j + 1) * seq)]
                 .to_vec();
             let want = expected_signature(&req.prompt);
             for (g, w) in gen.iter().take(3).zip(want.iter()) {
@@ -151,9 +350,10 @@ pub fn serve(
     let total_new = requests.len() * new_tokens;
     Ok(ServeReport {
         requests: requests.len(),
-        batches: requests.len().div_ceil(b),
+        slots: b,
         new_tokens_per_request: new_tokens,
-        batch_latency,
+        steps,
+        step_latency,
         request_latency,
         tokens_per_sec: total_new as f64 / total_s,
         style_adherence: if sig_total == 0 {
@@ -162,6 +362,8 @@ pub fn serve(
             sig_match as f64 / sig_total as f64
         },
         completions,
+        resident_param_bytes,
+        peak_active_slots: b,
     })
 }
 
@@ -205,8 +407,118 @@ mod tests {
         }
     }
 
-    /// A mock forward that always predicts the expected signature chain,
-    /// exercising the decode loop without PJRT.
+    /// A mock incremental decoder that always predicts the expected
+    /// signature chain, exercising the scheduler without a model: the
+    /// session accumulates consumed tokens, and once the prompt (14
+    /// tokens) is in, predictions follow the signature.
+    struct MockDecoder {
+        vocab: usize,
+        max_pos: usize,
+    }
+
+    impl TokenDecoder for MockDecoder {
+        type Session = Vec<i32>;
+
+        fn start(&self) -> Vec<i32> {
+            Vec::new()
+        }
+
+        fn step(&self, s: &mut Vec<i32>, token: i32) -> Result<Vec<f32>> {
+            assert!(s.len() < self.max_pos, "scheduler overran the cursor");
+            s.push(token);
+            let t = s.len() - 1; // position just consumed
+            let mut logits = vec![0.0f32; self.vocab];
+            let target = if s.len() >= 14 {
+                let want = expected_signature(&s[..14]);
+                match t {
+                    13 => want[0],
+                    14 => want[1],
+                    15 => want[2],
+                    _ => tokens::EOS,
+                }
+            } else {
+                tokens::EOS
+            };
+            logits[target as usize] = 1.0;
+            Ok(logits)
+        }
+
+        fn max_positions(&self) -> usize {
+            self.max_pos
+        }
+
+        fn resident_param_bytes(&self) -> usize {
+            1234
+        }
+    }
+
+    #[test]
+    fn scheduler_decodes_and_scores_style() {
+        let dec = MockDecoder { vocab: 64, max_pos: 32 };
+        let reqs = gen_requests(6, 9);
+        let cfg = ServeConfig { slots: 4, new_tokens: 3 };
+        let rep = serve(&dec, &reqs, &cfg).unwrap();
+        assert_eq!(rep.requests, 6);
+        assert_eq!(rep.completions.len(), 6);
+        for (req, gen) in reqs.iter().zip(&rep.completions) {
+            assert_eq!(gen.as_slice(), &expected_signature(&req.prompt));
+        }
+        assert!((rep.style_adherence - 1.0).abs() < 1e-12);
+        assert!(rep.tokens_per_sec > 0.0);
+        // latency is per-request, not per-batch
+        assert_eq!(rep.request_latency.count(), 6);
+        assert!(rep.peak_active_slots <= 4);
+        assert_eq!(rep.resident_param_bytes, 1234);
+    }
+
+    #[test]
+    fn slots_refill_as_requests_finish() {
+        // 7 requests through 2 slots: everything completes, and the
+        // scheduler never has more than 2 active
+        let dec = MockDecoder { vocab: 64, max_pos: 32 };
+        let reqs = gen_requests(7, 11);
+        let cfg = ServeConfig { slots: 2, new_tokens: 4 };
+        let rep = serve(&dec, &reqs, &cfg).unwrap();
+        assert_eq!(rep.request_latency.count(), 7);
+        assert!(rep.peak_active_slots <= 2);
+        for gen in &rep.completions {
+            assert_eq!(gen.len(), 4);
+        }
+        // 7 requests x 4 tokens through 2 slots needs >= 14 ticks
+        assert!(rep.steps >= 14, "steps = {}", rep.steps);
+    }
+
+    #[test]
+    fn oversized_prompt_is_an_error_not_a_panic() {
+        // a model whose position table cannot even hold the prompt must
+        // surface a clean error through the Result API
+        let dec = MockDecoder { vocab: 64, max_pos: 10 };
+        let reqs = gen_requests(2, 5); // 14-token prompts
+        let err = serve(&dec, &reqs, &ServeConfig { slots: 2, new_tokens: 2 })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("position table"), "{err:#}");
+
+        let empty = vec![Request { prompt: Vec::new() }];
+        let err = serve(&dec, &empty, &ServeConfig { slots: 1, new_tokens: 1 })
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("empty prompt"), "{err:#}");
+    }
+
+    #[test]
+    fn generation_budget_respects_position_table() {
+        // prompt is 14 tokens; a 15-position table leaves room to feed
+        // exactly positions 13 and 14 -> 2 generated tokens
+        let dec = MockDecoder { vocab: 64, max_pos: 15 };
+        let reqs = gen_requests(3, 13);
+        let cfg = ServeConfig { slots: 2, new_tokens: 8 };
+        let rep = serve(&dec, &reqs, &cfg).unwrap();
+        for gen in &rep.completions {
+            assert_eq!(gen.len(), 2);
+        }
+        assert_eq!(rep.request_latency.count(), 3);
+    }
+
+    /// Full-reforward mock (old-style ForwardFn) for the baseline loop.
     struct MockForward {
         batch: usize,
         seq: usize,
@@ -214,14 +526,12 @@ mod tests {
     }
 
     impl ForwardFn for MockForward {
-        fn forward(&self, batch: usize, toks: &[i32], _p: &Params) -> Result<Vec<f32>> {
+        fn forward(&self, batch: usize, toks: &[i32]) -> Result<Vec<f32>> {
             let mut logits = vec![0.0f32; batch * self.seq * self.vocab];
             for j in 0..batch {
                 for t in 0..self.seq {
-                    // find current end: predict SEP-following signature
                     let prompt = &toks[j * self.seq..j * self.seq + 14];
                     let want = expected_signature(prompt);
-                    // position 13 = SEP: predict want[0]; 14 -> want[1]; 15 -> want[2]
                     let target = match t {
                         13 => want[0],
                         14 => want[1],
@@ -248,15 +558,25 @@ mod tests {
     }
 
     #[test]
-    fn serve_loop_decodes_and_scores_style() {
+    fn reforward_baseline_still_decodes() {
         let fwd = MockForward { batch: 4, seq: 32, vocab: 64 };
         let reqs = gen_requests(6, 9);
-        let rep = serve(&fwd, &reqs, 3).unwrap();
+        let rep = serve_reforward(&fwd, &reqs, 3, 4096).unwrap();
         assert_eq!(rep.requests, 6);
-        assert_eq!(rep.batches, 2);
+        assert_eq!(rep.steps, 2); // two fixed batches of 4
         assert_eq!(rep.completions.len(), 6);
-        // the mock always emits the right signature
         assert!((rep.style_adherence - 1.0).abs() < 1e-12);
-        assert!(rep.tokens_per_sec > 0.0);
+        assert_eq!(rep.resident_param_bytes, 4096);
+    }
+
+    #[test]
+    fn scheduler_and_reforward_agree_on_completions() {
+        // same mock policy on both paths -> identical greedy completions
+        let dec = MockDecoder { vocab: 64, max_pos: 32 };
+        let fwd = MockForward { batch: 4, seq: 32, vocab: 64 };
+        let reqs = gen_requests(9, 17);
+        let a = serve(&dec, &reqs, &ServeConfig { slots: 3, new_tokens: 3 }).unwrap();
+        let b = serve_reforward(&fwd, &reqs, 3, 0).unwrap();
+        assert_eq!(a.completions, b.completions);
     }
 }

@@ -1,0 +1,211 @@
+//! Integration tests for the quantized-resident serving engine: streaming
+//! pipeline → sharded store → `QuantizedParams` → fused dequant-matmul
+//! forward / incremental decode / continuous-batching scheduler, end to
+//! end, plus the sharded-store coverage for the dequantizing loader.
+
+use std::path::PathBuf;
+
+use daq::coordinator::stream::{run_stream, StreamConfig};
+use daq::coordinator::Method;
+use daq::eval::decode::Decoder;
+use daq::eval::model_native::{forward_native, synth_params, ModelCfg};
+use daq::eval::{
+    load_params_dequant_source, NativeForward, QuantForward, QuantizedParams,
+};
+use daq::experiments::quantizable_from_source;
+use daq::io::dts::{Dts, DtsTensor};
+use daq::io::shard::{ShardWriter, ShardedDts};
+use daq::io::TensorSource;
+use daq::quant::{quantize, Granularity};
+use daq::serve::{gen_requests, serve, serve_reforward, ServeConfig};
+use daq::tensor::Tensor;
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("daq_servetest_{tag}_{}", std::process::id()))
+}
+
+fn serve_cfg() -> ModelCfg {
+    // vocab 64 covers the serve workload's token alphabet (BOS/SEP,
+    // content 4..47, style 48..63). GEMM weights dominate this shape on
+    // purpose: the resident-bytes acceptance bound (<= 0.35x f32) only
+    // holds when the quantizable fraction is transformer-like, not
+    // toy-tiny
+    ModelCfg { vocab: 64, d_model: 64, n_layer: 2, n_head: 4, d_ff: 128, seq_len: 32 }
+}
+
+fn ckpt_from_params(cfg: &ModelCfg, seed: u64) -> Dts {
+    let params = synth_params(cfg, seed);
+    let mut d = Dts::new();
+    let mut names: Vec<&String> = params.keys().collect();
+    names.sort();
+    for name in names {
+        d.insert_f32(name, &params[name]);
+    }
+    daq::eval::trace::stamp_model_meta(&mut d, cfg);
+    d
+}
+
+/// Quantize a synthetic model through the *streaming* pipeline into a
+/// sharded store, then prove the whole quantized-resident serving path
+/// over that store.
+#[test]
+fn quantized_store_serves_end_to_end() {
+    let cfg = serve_cfg();
+    let post = ckpt_from_params(&cfg, 101);
+    let base = ckpt_from_params(&cfg, 102);
+    let quantizable = quantizable_from_source(&post);
+    assert_eq!(quantizable.len(), 6 * cfg.n_layer + 1);
+
+    let out_dir = tmp("store");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let mut scfg = StreamConfig::new(Granularity::Block(128), Method::AbsMax, 2);
+    scfg.shard_budget = 64 << 10;
+    run_stream(&post, &base, &quantizable, None, &out_dir, &scfg).unwrap();
+    let store = ShardedDts::open(&out_dir).unwrap();
+
+    // the store's model-config metadata survived the streaming pipeline
+    let stored_cfg = ModelCfg::from_meta(TensorSource::meta(&store)).unwrap();
+    assert_eq!(stored_cfg, cfg);
+
+    // --- loader coverage over the sharded store (previously only the
+    //     in-memory Dts path was exercised) ---
+    let qp = QuantizedParams::load(&store).unwrap();
+    assert_eq!(qp.n_quantized(), quantizable.len());
+    let dense = load_params_dequant_source(&store).unwrap();
+    let via_store = qp.dequantize_all();
+    assert_eq!(dense.len(), via_store.len());
+    for (name, t) in &dense {
+        let u = &via_store[name];
+        assert_eq!(t.shape(), u.shape(), "{name}");
+        for (a, b) in t.data().iter().zip(u.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{name}");
+        }
+    }
+
+    // --- acceptance: resident param bytes <= 0.35x of the f32 path ---
+    let resident = qp.resident_param_bytes();
+    let f32_bytes = qp.f32_param_bytes();
+    assert!(
+        (resident as f64) <= 0.35 * f32_bytes as f64,
+        "resident {resident} vs f32 {f32_bytes} ({:.3}x)",
+        resident as f64 / f32_bytes as f64
+    );
+
+    // --- acceptance: QuantBackend forward agrees with NativeBackend over
+    //     the dequantized params (<= 1e-6 rel; in fact bitwise) ---
+    let tokens: Vec<i32> = (0..2 * cfg.seq_len).map(|i| (i % cfg.vocab) as i32).collect();
+    let native = forward_native(&dense, &cfg, 2, &tokens).unwrap();
+    let qfwd = QuantForward { params: &qp, cfg, batch: 2 };
+    let quant = daq::eval::ForwardFn::forward(&qfwd, 2, &tokens).unwrap();
+    for (i, (a, b)) in native.iter().zip(&quant).enumerate() {
+        let rel = (a - b).abs() / a.abs().max(1e-6);
+        assert!(rel <= 1e-6, "logit {i}: {a} vs {b} (rel {rel})");
+        assert_eq!(a.to_bits(), b.to_bits(), "logit {i}");
+    }
+
+    // --- the continuous-batching scheduler over the quantized store
+    //     produces exactly the tokens the full-reforward loop does ---
+    let reqs = gen_requests(6, 7);
+    let rep = serve(
+        &Decoder::new(&qp, cfg),
+        &reqs,
+        &ServeConfig { slots: 3, new_tokens: 4 },
+    )
+    .unwrap();
+    assert_eq!(rep.requests, 6);
+    assert_eq!(rep.request_latency.count(), 6);
+    assert_eq!(rep.resident_param_bytes, resident);
+    assert!(rep.peak_active_slots <= 3);
+    for gen in &rep.completions {
+        assert_eq!(gen.len(), 4);
+    }
+    let reforward = serve_reforward(&qfwd, &reqs, 4, resident).unwrap();
+    assert_eq!(rep.completions, reforward.completions);
+
+    // and the dense-resident scheduler decodes the same tokens too
+    // (quantization changed the weights, not the decode semantics)
+    let dec_dense = Decoder::new(&dense, cfg);
+    let rep_dense = serve(
+        &dec_dense,
+        &reqs,
+        &ServeConfig { slots: 3, new_tokens: 4 },
+    )
+    .unwrap();
+    let nfwd = NativeForward { params: &dense, cfg, batch: 3 };
+    let reforward_dense = serve_reforward(&nfwd, &reqs, 4, f32_bytes).unwrap();
+    assert_eq!(rep_dense.completions, reforward_dense.completions);
+
+    std::fs::remove_dir_all(&out_dir).unwrap();
+}
+
+/// The codes-without-`gran.<name>`-meta fallback path over a sharded
+/// store: the stored f32 copy must win, and a sidecar pair *with* the
+/// metadata must stay quantized — both through `ShardedDts`.
+#[test]
+fn sharded_dequant_loader_gran_meta_fallback() {
+    let dir = tmp("fallback");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let w = Tensor::new(vec![6, 10], (0..60).map(|i| (i as f32 - 30.0) * 0.01).collect());
+    let qw = quantize(&w, Granularity::PerChannel, 1.0);
+    let v = Tensor::new(vec![4, 8], (0..32).map(|i| (i as f32 - 16.0) * 0.02).collect());
+    let qv = quantize(&v, Granularity::PerChannel, 1.0);
+
+    let mut writer = ShardWriter::create(&dir, 1 << 20).unwrap();
+    // `w`: f32 copy + sidecars but NO gran meta -> fallback to the copy
+    writer
+        .append(
+            "w",
+            &DtsTensor::F32 { shape: vec![6, 10], data: w.data().to_vec() },
+        )
+        .unwrap();
+    writer
+        .append(
+            "w.codes",
+            &DtsTensor::U8 { shape: vec![6, 10], data: qw.codes.clone() },
+        )
+        .unwrap();
+    writer
+        .append(
+            "w.scales",
+            &DtsTensor::F32 { shape: vec![1, 10], data: qw.scales.scales.clone() },
+        )
+        .unwrap();
+    // `v`: codes-only WITH gran meta -> quantized-resident, no f32 copy
+    writer
+        .append(
+            "v.codes",
+            &DtsTensor::U8 { shape: vec![4, 8], data: qv.codes.clone() },
+        )
+        .unwrap();
+    writer
+        .append(
+            "v.scales",
+            &DtsTensor::F32 { shape: vec![1, 8], data: qv.scales.scales.clone() },
+        )
+        .unwrap();
+    let mut meta = std::collections::BTreeMap::new();
+    meta.insert("gran.v".to_string(), "channel".to_string());
+    writer.finish(&meta).unwrap();
+
+    let store = ShardedDts::open(&dir).unwrap();
+    let p = load_params_dequant_source(&store).unwrap();
+    assert_eq!(p.len(), 2);
+    // w: bitwise the stored f32 copy, NOT a dequantization of its codes
+    for (a, b) in p["w"].data().iter().zip(w.data()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+    // v: bitwise the dequantized codes
+    let vd = qv.dequantize();
+    for (a, b) in p["v"].data().iter().zip(vd.data()) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+
+    // the quantized-resident loader applies the same policy
+    let qp = QuantizedParams::load(&store).unwrap();
+    assert_eq!(qp.n_quantized(), 1);
+    assert!(qp.dense("w").is_ok());
+    assert!(qp.dense("v").is_err());
+
+    std::fs::remove_dir_all(&dir).unwrap();
+}
