@@ -13,6 +13,12 @@
 #                           (each asserts against the env-independent
 #                           in-memory pipeline AND the workers=1/depth=1
 #                           anchor store)
+#   ci/rust.sh chaos        tests/fault.rs across the fault matrix
+#                           {DAQ_FAULT_SEED: 0, 7, 1234} x
+#                           {DAQ_TEST_WORKERS: 1, 4}; the seed relocates
+#                           the injected faults (each test probes it into
+#                           a usable regime), the workers axis shakes the
+#                           retry/quarantine plumbing under parallelism
 #   ci/rust.sh              fast + full (the local pre-push default)
 #
 # Every cargo invocation passes --locked so drift in the vendored shims
@@ -48,11 +54,22 @@ run_determinism() {
   done
 }
 
+run_chaos() {
+  for seed in 0 7 1234; do
+    for workers in 1 4; do
+      echo "== chaos cell: fault_seed=${seed} workers=${workers} =="
+      DAQ_FAULT_SEED="$seed" DAQ_TEST_WORKERS="$workers" \
+        cargo test --locked -q --test fault
+    done
+  done
+}
+
 case "$mode" in
   fast) run_fast ;;
   msrv) run_msrv ;;
   full) run_full ;;
   determinism) run_determinism ;;
+  chaos) run_chaos ;;
   all)
     # style gates first: a fmt/clippy violation should surface in the
     # couple of minutes the fast lane promises, not after a full build
@@ -60,7 +77,7 @@ case "$mode" in
     run_full
     ;;
   *)
-    echo "usage: ci/rust.sh [fast|msrv|full|determinism|all]" >&2
+    echo "usage: ci/rust.sh [fast|msrv|full|determinism|chaos|all]" >&2
     exit 2
     ;;
 esac

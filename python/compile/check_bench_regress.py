@@ -17,11 +17,20 @@ gate is worse than none), telling the operator to re-baseline.
 Usage:
     check_bench_regress.py --current rust/BENCH_sweep.json \
                            --baseline rust/BENCH_baseline.json \
-                           [--threshold 0.15] [--write-baseline]
+                           [--threshold 0.15] [--checksum-overhead 0.05] \
+                           [--write-baseline]
 
 `--write-baseline` regenerates the baseline file from the current
 run's pipeline rows (used to commit a fresh baseline from a CI
 artifact) instead of gating.
+
+`--checksum-overhead X` adds an *intra-run* gate: for every
+(shape, granularity) that has both a `pipeline-streaming` row (CRC off)
+and a `pipeline-streaming-checksum` row (CRC on), the checksummed
+throughput must be within X of the plain one. Comparing two rows of the
+same run makes the integrity-layer price machine-independent — runner
+noise cancels out — so it can be gated far tighter than the
+cross-run threshold.
 
 Exit code 0 = no regression beyond the threshold.
 """
@@ -89,6 +98,45 @@ def write_baseline(path: str, current: dict, threshold: float) -> None:
     print(f"wrote {path} ({len(rows)} pipeline rows)")
 
 
+def check_checksum_overhead(cur_rows: dict, overhead: float) -> None:
+    """Intra-run gate: checksummed streaming throughput within
+    `overhead` of the checksum-free row for every (shape, granularity)
+    pair present. Exits non-zero on breach or if no pair exists."""
+    pairs = 0
+    breaches = []
+    for (variant, shape, gran), plain in sorted(cur_rows.items()):
+        if variant != "pipeline-streaming":
+            continue
+        crc = cur_rows.get(("pipeline-streaming-checksum", shape, gran))
+        if crc is None:
+            continue
+        pairs += 1
+        mname, mplain = metric(plain)
+        mcrc = crc.get(mname, 0.0)
+        floor = mplain * (1.0 - overhead)
+        ratio = mcrc / mplain if mplain else 0.0
+        status = "ok" if mcrc >= floor else "CHECKSUM OVERHEAD"
+        print(
+            f"{status:>10}: {shape}/{gran}  checksummed {mcrc:.2f} vs "
+            f"plain {mplain:.2f} Melem/s ({ratio:.3f}x, floor {floor:.2f})"
+        )
+        if mcrc < floor:
+            breaches.append((shape, gran))
+    if pairs == 0:
+        sys.exit(
+            "error: --checksum-overhead was requested but no "
+            "(pipeline-streaming, pipeline-streaming-checksum) row pair "
+            "exists in the current run"
+        )
+    if breaches:
+        names = ", ".join("/".join(b) for b in breaches)
+        sys.exit(
+            f"error: checksum overhead exceeds {overhead:.0%} of the "
+            f"checksum-free streaming throughput on: {names}"
+        )
+    print(f"ok: checksum overhead within {overhead:.0%} on {pairs} pair(s)")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", required=True, help="BENCH_sweep.json from this run")
@@ -98,6 +146,14 @@ def main() -> int:
         type=float,
         default=0.15,
         help="max allowed fractional Melem/s regression (default 0.15)",
+    )
+    ap.add_argument(
+        "--checksum-overhead",
+        type=float,
+        default=None,
+        help="max allowed intra-run throughput cost of per-payload "
+        "checksums: pipeline-streaming-checksum vs pipeline-streaming "
+        "(disabled unless given)",
     )
     ap.add_argument(
         "--write-baseline",
@@ -118,6 +174,8 @@ def main() -> int:
         sys.exit(f"error: {args.baseline} has no pipeline-*/serve-* rows")
     if not cur_rows:
         sys.exit(f"error: {args.current} has no pipeline-*/serve-* rows")
+    if args.checksum_overhead is not None:
+        check_checksum_overhead(cur_rows, args.checksum_overhead)
 
     compared = 0
     regressions = []

@@ -109,6 +109,86 @@ def main() -> int:
 
     check("reader refuses unknown version", bad_version)
 
+    # --- v2 checksum section ---
+
+    def checksum_section_present():
+        import struct
+        import zlib
+
+        cp = os.path.join(tmp, "crc.dts")
+        arr = np.arange(12, dtype=np.float32).reshape(3, 4)
+        dts.write_dts(cp, {"w": arr})
+        blob = open(cp, "rb").read()
+        version, _, n_tensor = struct.unpack_from("<III", blob, 4)
+        assert version == 2, f"writer emitted version {version}, wanted 2"
+        # the 4 bytes right before the payload are the tensor's CRC
+        stored = struct.unpack_from("<I", blob, len(blob) - arr.nbytes - 4)[0]
+        want = zlib.crc32(arr.tobytes()) & 0xFFFFFFFF
+        assert stored == want, f"stored {stored:#010x}, wanted {want:#010x}"
+        t2, _ = dts.read_dts(cp)
+        np.testing.assert_array_equal(t2["w"], arr)
+
+    check("v2 checksum section written and verified on read", checksum_section_present)
+
+    def flipped_byte_rejected():
+        cp = os.path.join(tmp, "flip.dts")
+        dts.write_dts(cp, {"w": np.arange(8, dtype=np.float32)})
+        blob = bytearray(open(cp, "rb").read())
+        blob[-2] ^= 0x20  # payload byte of "w"
+        with open(cp, "wb") as f:
+            f.write(bytes(blob))
+        try:
+            dts.read_dts(cp)
+        except ValueError as e:
+            assert "checksum mismatch" in str(e), str(e)
+            assert "'w'" in str(e), f"error must name the tensor: {e}"
+        else:
+            raise AssertionError("reader accepted a flipped payload byte")
+
+    check("flipped payload byte rejected with tensor name", flipped_byte_rejected)
+
+    def v1_store_reads_cleanly():
+        import struct
+
+        # hand-craft a v1 container (no checksum section) byte by byte
+        arr = np.arange(4, dtype=np.float32)
+        v1 = os.path.join(tmp, "v1.dts")
+        nb = b"w"
+        with open(v1, "wb") as f:
+            f.write(dts.MAGIC)
+            f.write(struct.pack("<III", 1, 0, 1))
+            f.write(struct.pack("<H", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<BB", 0, 1))
+            f.write(struct.pack("<Q", 4))
+            f.write(struct.pack("<QQ", 0, arr.nbytes))
+            f.write(arr.tobytes())
+        t2, _ = dts.read_dts(v1)
+        np.testing.assert_array_equal(t2["w"], arr)
+
+    check("v1 container without checksums still reads", v1_store_reads_cleanly)
+
+    def sharded_checksums_roundtrip():
+        sd = os.path.join(tmp, "sharded")
+        tensors = {f"t{i}": np.full((4,), i, np.float32) for i in range(3)}
+        mp = dts.write_sharded_dts(sd, tensors, shard_budget_bytes=16)
+        t2, _ = dts.read_sharded_dts(mp)
+        assert sorted(t2) == sorted(tensors)
+        # corrupt one shard's payload -> the sharded reader rejects it
+        shard0 = os.path.join(sd, "shard_00000.dts")
+        blob = bytearray(open(shard0, "rb").read())
+        blob[-1] ^= 0x04
+        with open(shard0, "wb") as f:
+            f.write(bytes(blob))
+        try:
+            dts.read_sharded_dts(mp)
+        except ValueError as e:
+            assert "checksum mismatch" in str(e), str(e)
+        else:
+            raise AssertionError("sharded reader accepted a corrupt shard")
+
+    check("sharded store emits + verifies checksums", sharded_checksums_roundtrip)
+
     # a large (but in-range) meta value round-trips through the u32 prefix
     def big_meta_roundtrip():
         big = "v" * 100_000

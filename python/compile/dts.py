@@ -5,7 +5,7 @@ build-time Python side (producer: train.py, aot.py) and the run-time Rust
 side (consumer: rust/src/io/dts.rs). Format (all integers little-endian):
 
     magic   : 4 bytes  b"DTS1"
-    version : u32      (currently 1)
+    version : u32      (currently 2; 1 = no checksum section)
     n_meta  : u32      number of metadata key/value pairs
     n_tensor: u32      number of tensors
     --- metadata entries, repeated n_meta times ---
@@ -13,6 +13,8 @@ side (consumer: rust/src/io/dts.rs). Format (all integers little-endian):
     --- index entries, repeated n_tensor times ---
     nlen u16, name utf8, dtype u8, ndim u8, dims u64 * ndim,
     offset u64 (from start of payload), nbytes u64
+    --- checksum section (version >= 2 only) ---
+    crc32 u32 * n_tensor (zlib CRC-32 of each payload, index order)
     --- payload: raw tensor bytes, contiguous C-order ---
 
 dtypes: 0 = f32, 1 = u8, 2 = i32, 3 = f64 (reserved), 4 = i64 (reserved).
@@ -26,12 +28,14 @@ resident at once.
 from __future__ import annotations
 
 import struct
+import zlib
 from dataclasses import dataclass
 
 import numpy as np
 
 MAGIC = b"DTS1"
-VERSION = 1
+VERSION = 2
+VERSION_NO_CHECKSUM = 1
 
 DTYPE_CODES = {
     np.dtype(np.float32): 0,
@@ -48,6 +52,7 @@ class TensorEntry:
     shape: tuple
     offset: int
     nbytes: int
+    crc32: int | None = None  # None for v1 containers (no checksum section)
 
 
 def write_dts(path: str, tensors: dict, meta: dict | None = None) -> None:
@@ -88,6 +93,8 @@ def write_dts(path: str, tensors: dict, meta: dict | None = None) -> None:
             for d in arr.shape:
                 f.write(struct.pack("<Q", d))
             f.write(struct.pack("<QQ", off, arr.nbytes))
+        for _, arr, _ in index:
+            f.write(struct.pack("<I", zlib.crc32(arr.tobytes()) & 0xFFFFFFFF))
         f.write(bytes(payload))
 
 
@@ -176,7 +183,7 @@ def read_dts(path: str) -> tuple[dict, dict]:
     if blob[:4] != MAGIC:
         raise ValueError(f"{path}: bad magic {blob[:4]!r}")
     version, n_meta, n_tensor = struct.unpack_from("<III", blob, 4)
-    if version != VERSION:
+    if version not in (VERSION, VERSION_NO_CHECKSUM):
         raise ValueError(f"{path}: unsupported version {version}")
     pos = 16
     meta = {}
@@ -202,9 +209,21 @@ def read_dts(path: str) -> tuple[dict, dict]:
         offset, nbytes = struct.unpack_from("<QQ", blob, pos)
         pos += 16
         entries.append(TensorEntry(name, CODE_DTYPES[dtype_code], dims, offset, nbytes))
+    if version >= VERSION:
+        # v2 checksum section: one u32 per tensor, in index order
+        for e in entries:
+            (e.crc32,) = struct.unpack_from("<I", blob, pos)
+            pos += 4
     tensors = {}
     base = pos
     for e in entries:
         raw = blob[base + e.offset : base + e.offset + e.nbytes]
+        if e.crc32 is not None:
+            got = zlib.crc32(raw) & 0xFFFFFFFF
+            if got != e.crc32:
+                raise ValueError(
+                    f"{path}: tensor {e.name!r}: checksum mismatch at payload "
+                    f"offset {e.offset} ({e.nbytes} bytes): stored "
+                    f"{e.crc32:#010x}, computed {got:#010x}")
         tensors[e.name] = np.frombuffer(raw, dtype=e.dtype).reshape(e.shape).copy()
     return tensors, meta

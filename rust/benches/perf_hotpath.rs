@@ -212,7 +212,11 @@ fn main() {
         let base_dir = std::env::temp_dir()
             .join(format!("daq_bench_stream_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&base_dir);
-        let scfg = StreamConfig::new(gran, method, workers);
+        // checksums off isolates the raw streaming tax; the second run
+        // with per-payload CRC-32 on (the default) prices the integrity
+        // layer — check_bench_regress.py gates the ratio between them
+        let mut scfg = StreamConfig::new(gran, method.clone(), workers);
+        scfg.checksums = false;
         let mut iter = 0usize;
         let stream = bench("pipeline (streaming)", 0, 3, || {
             iter += 1;
@@ -227,6 +231,21 @@ fn main() {
             .unwrap()
         });
         let _ = std::fs::remove_dir_all(&base_dir);
+        let ccfg = StreamConfig::new(gran, method, workers);
+        let mut citer = 0usize;
+        let stream_crc = bench("pipeline (streaming + checksums)", 0, 3, || {
+            citer += 1;
+            run_stream(
+                &post,
+                &base,
+                &quantizable,
+                None,
+                &base_dir.join(format!("crc{citer}")),
+                &ccfg,
+            )
+            .unwrap()
+        });
+        let _ = std::fs::remove_dir_all(&base_dir);
 
         let evals = (n_layers * dim * dim * n_candidates) as f64;
         let shape = format!("{n_layers}x{dim}x{dim}");
@@ -237,6 +256,7 @@ fn main() {
         for (variant, mean_s) in [
             ("pipeline-inmemory", mem.mean_s),
             ("pipeline-streaming", stream.mean_s),
+            ("pipeline-streaming-checksum", stream_crc.mean_s),
         ] {
             records.push(Record {
                 shape: shape.clone(),
@@ -394,7 +414,7 @@ fn main() {
         let new_tokens = if fast { 4 } else { 8 };
         let slots = 4usize;
         let reqs = gen_requests(n_req, 42);
-        let scfg = ServeConfig { slots, new_tokens };
+        let scfg = ServeConfig { slots, new_tokens, ..Default::default() };
         let total_tokens = (n_req * new_tokens) as f64;
 
         let fwd = NativeForward { params: &params, cfg, batch: slots };

@@ -88,11 +88,24 @@ COMMANDS:
                dequant-matmul; requires --engine native)
              --quantize (quantize first, then serve dequantized f32 —
                the legacy comparison path)
+             --deadline-ms MS (per-request deadline, admission ->
+               completion; a request past it is evicted at the next tick
+               with whatever it generated; native scheduler only)
+             --queue-budget N (admission control: beyond N queued
+               requests past the active slots, arrivals are shed instead
+               of queueing; native scheduler only)
              --engine native|pjrt (default native; pjrt serves the AOT
                artifact through the full-reforward loop)
   inspect    Print a container's metadata and tensor index (dtype, shape,
              payload bytes, totals) for a .dts file, a sharded-store
              directory, or a manifest.json
+             <path>
+  verify-store  Re-read every payload of a checkpoint store and verify
+             it against its stored CRC-32 (a .dts file, a shard
+             directory, or a manifest.json). Corrupt payloads are listed
+             with tensor, shard, and byte offset; exits non-zero if any
+             payload fails. v1 containers (no checksum section) read but
+             count as unverifiable
              <path>
   golden     Cross-check the Rust FP8 codec against the JAX golden file
              --artifacts DIR
@@ -108,6 +121,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         Some("tables") => cmd_tables(args),
         Some("serve") => cmd_serve(args),
         Some("inspect") => cmd_inspect(args),
+        Some("verify-store") => cmd_verify_store(args),
         Some("golden") => cmd_golden(args),
         Some("help") | None => {
             println!("{USAGE}");
@@ -530,6 +544,12 @@ fn print_serve_report(rep: &crate::serve::ServeReport, engine: &str, f32_bytes: 
     );
     println!("request latency: {}", rep.request_latency.summary());
     println!("step latency:    {}", rep.step_latency.summary());
+    if rep.shed + rep.timed_out + rep.errored > 0 {
+        println!(
+            "degraded: {} shed at admission, {} past deadline, {} errored",
+            rep.shed, rep.timed_out, rep.errored
+        );
+    }
     if f32_bytes > 0 {
         println!(
             "resident params: {:.2} MiB ({:.2}x of the {:.2} MiB f32 path)",
@@ -573,7 +593,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 
     let slots = args.usize_or("batch", 8).map_err(|e| anyhow!(e))?;
-    let scfg = crate::serve::ServeConfig { slots, new_tokens };
+    let deadline_ms = args
+        .get("deadline-ms")
+        .map(|s| s.parse::<f64>().map_err(|e| anyhow!("--deadline-ms {s:?}: {e}")))
+        .transpose()?;
+    let queue_budget = args
+        .get("queue-budget")
+        .map(|s| s.parse::<usize>().map_err(|e| anyhow!("--queue-budget {s:?}: {e}")))
+        .transpose()?;
+    let scfg = crate::serve::ServeConfig { slots, new_tokens, deadline_ms, queue_budget };
 
     // --quantize (run the quantization pipeline first) only makes sense
     // without a store; refuse rather than silently serve the store dense
@@ -724,6 +752,48 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `daq verify-store`: re-read every payload of a store through the
+/// checksum-verifying read path and report the damage. Reads are
+/// independent, so one corrupt shard never masks corruption elsewhere.
+fn cmd_verify_store(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .or_else(|| args.options.get("ckpt"))
+        .ok_or_else(|| {
+            anyhow!("usage: daq verify-store <file.dts | shard dir | manifest.json>")
+        })?;
+    let src = crate::io::open_source(path)?;
+    let mut ok = 0usize;
+    let mut unverified = 0usize;
+    let mut corrupt: Vec<String> = Vec::new();
+    for name in src.names() {
+        match src.read_tensor(&name) {
+            Ok(_) if src.crc32_of(&name).is_some() => ok += 1,
+            Ok(_) => unverified += 1,
+            Err(e) => {
+                println!("CORRUPT {name}: {e:#}");
+                corrupt.push(name.clone());
+            }
+        }
+    }
+    if unverified > 0 {
+        println!(
+            "note: {unverified} payloads sit in v1 containers (no checksum \
+             section) — they read back but cannot be verified"
+        );
+    }
+    if !corrupt.is_empty() {
+        bail!(
+            "{path}: {} of {} payloads corrupt ({ok} verified ok)",
+            corrupt.len(),
+            ok + unverified + corrupt.len()
+        );
+    }
+    println!("{path}: {ok} payloads verified ok ({unverified} unverifiable v1)");
+    Ok(())
+}
+
 fn cmd_golden(args: &Args) -> Result<()> {
     let dir = args.str_or("artifacts", "artifacts");
     let d = Dts::read(format!("{dir}/fp8_golden.dts"))?;
@@ -776,9 +846,17 @@ mod tests {
 
     #[test]
     fn usage_mentions_all_commands() {
-        for cmd in
-            ["quantize", "trace", "shard", "eval", "tables", "serve", "inspect", "golden"]
-        {
+        for cmd in [
+            "quantize",
+            "trace",
+            "shard",
+            "eval",
+            "tables",
+            "serve",
+            "inspect",
+            "verify-store",
+            "golden",
+        ] {
             assert!(USAGE.contains(cmd), "{cmd} missing from usage");
         }
         // the streaming mode's flags are documented
@@ -795,9 +873,23 @@ mod tests {
             assert!(USAGE.contains(flag), "{flag} missing from usage");
         }
         // the serving mode's flags are documented
-        for flag in ["--store", "--quantized", "--new-tokens", "--batch"] {
+        for flag in [
+            "--store",
+            "--quantized",
+            "--new-tokens",
+            "--batch",
+            "--deadline-ms",
+            "--queue-budget",
+        ] {
             assert!(USAGE.contains(flag), "{flag} missing from usage");
         }
+    }
+
+    #[test]
+    fn verify_store_requires_path() {
+        let args = Args::parse(["verify-store".to_string()]).unwrap();
+        let err = dispatch(&args).unwrap_err();
+        assert!(format!("{err:#}").contains("usage"), "{err:#}");
     }
 
     #[test]

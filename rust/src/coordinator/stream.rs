@@ -83,6 +83,15 @@ pub struct StreamConfig {
     /// graph (`daq trace` sidecar), or both cross-checked against each
     /// other.
     pub groups: GroupSource,
+    /// Retries per read for *transient* faults (network blips, injected
+    /// chaos) with exponential backoff; persistent corruption is never
+    /// retried — it quarantines the unit instead.
+    pub max_retries: usize,
+    /// Backoff before retry `k` is `retry_base_ms << (k-1)` milliseconds.
+    pub retry_base_ms: u64,
+    /// Per-payload CRC-32 checksums in the output shards (v2 containers).
+    /// On by default; the bench turns it off to isolate the overhead.
+    pub checksums: bool,
 }
 
 impl StreamConfig {
@@ -95,6 +104,9 @@ impl StreamConfig {
             shard_budget: crate::io::shard::DEFAULT_SHARD_MB << 20,
             resume: false,
             groups: GroupSource::Patterns,
+            max_retries: 3,
+            retry_base_ms: 10,
+            checksums: true,
         }
     }
 }
@@ -118,6 +130,11 @@ pub struct StreamOutcome {
     /// group, or one passthrough tensor, plus its outputs).
     /// `peak_live_bytes <= depth * this` holds.
     pub max_unit_bytes: usize,
+    /// Labels of units (and names of passthrough tensors) skipped because
+    /// their inputs are persistently corrupted. Each is recorded in the
+    /// journal; a resume after repairing the source re-quantizes exactly
+    /// these.
+    pub quarantined: Vec<String>,
     pub total_secs: f64,
 }
 
@@ -251,6 +268,17 @@ fn parse_outcome(j: &Json) -> Option<LayerOutcome> {
     })
 }
 
+/// Quarantine journal line: a structured record that a unit was skipped
+/// because its inputs are persistently corrupted. `parse_journal` ignores
+/// these (no `unit`/`layer` key), so a resumed run re-plans the unit —
+/// which is exactly right once the source is repaired.
+fn quarantine_line(label: &str, error: &str) -> String {
+    let mut o = BTreeMap::new();
+    o.insert("quarantined".to_string(), Json::Str(label.to_string()));
+    o.insert("error".to_string(), Json::Str(error.to_string()));
+    format!("{}\n", Json::Obj(o))
+}
+
 /// Parse a journal: (config json if present, last record per unit label —
 /// a singleton layer's label is its name). Malformed lines (e.g. a
 /// truncated tail) are skipped.
@@ -282,6 +310,47 @@ fn parse_journal(text: &str) -> (Option<Json>, BTreeMap<String, Vec<LayerOutcome
 }
 
 // ---------------------------------------------------------------------
+// fault handling
+
+/// Run `f`, retrying *transient* faults up to `cfg.max_retries` times
+/// with exponential backoff (`retry_base_ms << attempt`). Anything else
+/// — persistent corruption, missing tensors — propagates immediately.
+fn read_with_retry<T>(
+    cfg: &StreamConfig,
+    mut f: impl FnMut() -> Result<T>,
+) -> Result<T> {
+    let mut attempt = 0usize;
+    loop {
+        match f() {
+            Ok(v) => return Ok(v),
+            Err(e) if attempt < cfg.max_retries && crate::io::fault::is_transient(&e) => {
+                attempt += 1;
+                let shift = (attempt - 1).min(10) as u32;
+                let delay = cfg.retry_base_ms.saturating_mul(1 << shift);
+                if delay > 0 {
+                    std::thread::sleep(std::time::Duration::from_millis(delay));
+                }
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+/// Should this prefetch error quarantine the unit rather than abort the
+/// whole run? Corruption is per-unit damage — the store can keep making
+/// progress and a resume after repair re-quantizes the unit. Anything
+/// else (missing tensors, shape mismatches, bad grouping) is a
+/// configuration error that poisons the run and must abort loudly.
+/// String-matched because the vendored `anyhow` has no typed chain.
+fn is_quarantinable(e: &anyhow::Error) -> bool {
+    let s = format!("{e:#}");
+    s.contains("checksum mismatch")
+        || s.contains("payload of") // truncated/torn payload read
+        || s.contains(crate::io::fault::PERSISTENT_MARKER)
+        || s.contains(crate::io::fault::TRANSIENT_MARKER) // retries exhausted
+}
+
+// ---------------------------------------------------------------------
 // pipeline stages
 
 /// A prefetched unit in flight.
@@ -309,10 +378,18 @@ struct Done {
     footprint: usize,
 }
 
+/// What the writer receives for each scheduled unit: its quantized
+/// tensors, or notice that the prefetcher quarantined it.
+enum UnitResult {
+    Done(Done),
+    Quarantined { idx: usize, label: String, error: String },
+}
+
 struct WriterOut {
     writer: ShardWriter,
     computed: Vec<(usize, Vec<LayerOutcome>)>,
     max_unit_bytes: usize,
+    quarantined: Vec<String>,
 }
 
 /// Transform baselines are exactly the methods whose delta metrics are
@@ -534,6 +611,7 @@ fn run_stream_inner(
     } else {
         (ShardWriter::create(out_dir, cfg.shard_budget)?, BTreeMap::new())
     };
+    shard_writer.set_checksums(cfg.checksums);
 
     let mut journal = if cfg.resume {
         std::fs::OpenOptions::new()
@@ -578,19 +656,20 @@ fn run_stream_inner(
 
     let (job_tx, job_rx) = mpsc::channel::<Result<UnitJob>>();
     let job_rx = Mutex::new(job_rx);
-    let (done_tx, done_rx) = mpsc::channel::<Result<Done>>();
+    let (done_tx, done_rx) = mpsc::channel::<Result<UnitResult>>();
 
     let (gate, live, peak, job_rx) = (&gate, &live, &peak, &job_rx);
-    let shard_budget = cfg.shard_budget;
 
     let writer_out: Result<WriterOut> = std::thread::scope(|s| {
-        // stage 1: prefetch whole units through the gate
+        // stage 1: prefetch whole units through the gate, retrying
+        // transient faults and quarantining persistently corrupt units
+        let prefetch_done_tx = done_tx.clone();
         s.spawn(move || {
             for (idx, unit) in todo {
                 if !gate.acquire() {
                     return; // aborted by the writer
                 }
-                let msg = (|| -> Result<UnitJob> {
+                let msg = read_with_retry(cfg, || -> Result<UnitJob> {
                     let mut in_bytes = 0usize;
                     let mut members = Vec::with_capacity(unit.members().len());
                     for name in unit.members() {
@@ -631,10 +710,29 @@ fn run_stream_inner(
                     };
                     add_live(live, peak, in_bytes);
                     Ok(UnitJob { idx, unit: unit.clone(), members, act, ln_params, in_bytes })
-                })();
-                let stop = msg.is_err();
-                if job_tx.send(msg).is_err() || stop {
-                    return;
+                });
+                match msg {
+                    Ok(job) => {
+                        if job_tx.send(Ok(job)).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e) if is_quarantinable(&e) => {
+                        // the writer journals it, releases the permit,
+                        // and the pipeline moves on
+                        let q = UnitResult::Quarantined {
+                            idx,
+                            label: unit.label(),
+                            error: format!("{e:#}"),
+                        };
+                        if prefetch_done_tx.send(Ok(q)).is_err() {
+                            return;
+                        }
+                    }
+                    Err(e) => {
+                        let _ = job_tx.send(Err(e));
+                        return;
+                    }
                 }
             }
         });
@@ -677,7 +775,7 @@ fn run_stream_inner(
                         out_bytes,
                         footprint: in_bytes + out_bytes,
                     };
-                    if done_tx.send(Ok(d)).is_err() {
+                    if done_tx.send(Ok(UnitResult::Done(d))).is_err() {
                         break;
                     }
                 }
@@ -692,7 +790,7 @@ fn run_stream_inner(
                 expected,
                 &mut shard_writer,
                 &mut journal,
-                shard_budget,
+                cfg,
                 post,
                 &quant_set,
                 gate,
@@ -702,10 +800,11 @@ fn run_stream_inner(
             if r.is_err() {
                 gate.close();
             }
-            r.map(|(computed, max_unit_bytes)| WriterOut {
+            r.map(|(computed, max_unit_bytes, quarantined)| WriterOut {
                 writer: shard_writer,
                 computed,
                 max_unit_bytes,
+                quarantined,
             })
         });
         match h.join() {
@@ -713,17 +812,24 @@ fn run_stream_inner(
             Err(p) => std::panic::resume_unwind(p),
         }
     });
-    let WriterOut { writer, computed, max_unit_bytes } = writer_out?;
+    let WriterOut { writer, computed, max_unit_bytes, quarantined } = writer_out?;
 
     for (idx, outcomes) in computed {
         slots[idx] = Some(outcomes);
     }
     let mut layers: Vec<LayerOutcome> = Vec::with_capacity(quantizable.len());
     for (i, slot) in slots.into_iter().enumerate() {
-        let outcomes = slot.ok_or_else(|| {
-            anyhow!("unit {:?} was never quantized", plan.units[i].label())
-        })?;
-        layers.extend(outcomes);
+        match slot {
+            Some(outcomes) => layers.extend(outcomes),
+            None => {
+                // quarantined units are the only legitimate gaps: they
+                // were journaled and excluded from the store on purpose
+                let label = plan.units[i].label();
+                if !quarantined.iter().any(|q| q == &label) {
+                    bail!("unit {label:?} was never quantized");
+                }
+            }
+        }
     }
 
     let agg = if cfg.method.delta_defined() {
@@ -752,6 +858,7 @@ fn run_stream_inner(
         resumed: resumed_count,
         peak_live_bytes: peak.load(Ordering::SeqCst),
         max_unit_bytes,
+        quarantined,
         total_secs: 0.0, // stamped by run_stream
     })
 }
@@ -759,23 +866,26 @@ fn run_stream_inner(
 /// The writer stage body: drain completed units, persist them in plan
 /// order (journal lines flush before each shard roll; shards roll only at
 /// unit boundaries, so a unit never spans shards), then stream the
-/// non-quantizable passthrough tensors. Returns the computed outcomes and
-/// the largest single-unit footprint.
+/// non-quantizable passthrough tensors. Quarantined units are journaled
+/// and skipped in order. Returns the computed outcomes, the largest
+/// single-unit footprint, and the quarantined labels.
 #[allow(clippy::too_many_arguments)]
 fn write_stage(
-    done_rx: mpsc::Receiver<Result<Done>>,
+    done_rx: mpsc::Receiver<Result<UnitResult>>,
     mut expected: VecDeque<usize>,
     writer: &mut ShardWriter,
     journal: &mut std::fs::File,
-    shard_budget: u64,
+    cfg: &StreamConfig,
     post: &dyn TensorSource,
     quant_set: &BTreeSet<&String>,
     gate: &Gate,
     live: &AtomicUsize,
     peak: &AtomicUsize,
-) -> Result<(Vec<(usize, Vec<LayerOutcome>)>, usize)> {
-    let mut pending: BTreeMap<usize, Done> = BTreeMap::new();
+) -> Result<(Vec<(usize, Vec<LayerOutcome>)>, usize, Vec<String>)> {
+    let shard_budget = cfg.shard_budget;
+    let mut pending: BTreeMap<usize, UnitResult> = BTreeMap::new();
     let mut computed: Vec<(usize, Vec<LayerOutcome>)> = Vec::new();
+    let mut quarantined: Vec<String> = Vec::new();
     let mut pending_lines = String::new();
     let mut max_unit = 0usize;
 
@@ -790,11 +900,26 @@ fn write_stage(
         };
 
     for msg in done_rx {
-        let d = msg?;
-        pending.insert(d.idx, d);
+        let r = msg?;
+        let idx = match &r {
+            UnitResult::Done(d) => d.idx,
+            UnitResult::Quarantined { idx, .. } => *idx,
+        };
+        pending.insert(idx, r);
         while let Some(&idx) = expected.front() {
-            let Some(d) = pending.remove(&idx) else { break };
+            let Some(r) = pending.remove(&idx) else { break };
             expected.pop_front();
+            let d = match r {
+                UnitResult::Done(d) => d,
+                UnitResult::Quarantined { label, error, .. } => {
+                    // structured record; nothing of the unit lands in
+                    // shards, so a repaired resume re-plans exactly it
+                    pending_lines.push_str(&quarantine_line(&label, &error));
+                    quarantined.push(label);
+                    gate.release();
+                    continue;
+                }
+            };
             let Done { unit, outcomes, tensors, out_bytes, footprint, .. } = d;
             max_unit = max_unit.max(footprint);
             for (name, t) in &tensors {
@@ -826,12 +951,22 @@ fn write_stage(
 
     // passthrough: every non-quantizable tensor of the post checkpoint
     // not already written by a unit (folded layernorm affines are),
-    // streamed one at a time
+    // streamed one at a time — with the same retry/quarantine policy as
+    // the prefetcher, so one rotten embedding table doesn't kill a run
+    // that already quantized the whole model
     for name in post.names() {
         if quant_set.contains(&name) || writer.contains(&name) {
             continue;
         }
-        let t = post.read_tensor(&name)?;
+        let t = match read_with_retry(cfg, || post.read_tensor(&name)) {
+            Ok(t) => t,
+            Err(e) if is_quarantinable(&e) => {
+                pending_lines.push_str(&quarantine_line(&name, &format!("{e:#}")));
+                quarantined.push(name.clone());
+                continue;
+            }
+            Err(e) => return Err(e),
+        };
         let bytes = t.nbytes();
         max_unit = max_unit.max(bytes);
         add_live(live, peak, bytes);
@@ -846,7 +981,7 @@ fn write_stage(
 
     flush_lines(journal, &mut pending_lines)?;
     writer.roll()?;
-    Ok((computed, max_unit))
+    Ok((computed, max_unit, quarantined))
 }
 
 #[cfg(test)]

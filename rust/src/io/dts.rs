@@ -22,7 +22,12 @@ use anyhow::{bail, Context, Result};
 use crate::tensor::Tensor;
 
 const MAGIC: &[u8; 4] = b"DTS1";
-const VERSION: u32 = 1;
+/// Current container version: v2 appends a per-tensor CRC-32 section
+/// (one little-endian u32 per index entry, in index order) right after
+/// the index entries. v1 stores — no checksum section — still read
+/// cleanly; their entries simply carry no CRC and skip verification.
+const VERSION: u32 = 2;
+const VERSION_NO_CHECKSUM: u32 = 1;
 
 /// A tensor as stored in a DTS container.
 #[derive(Clone, Debug, PartialEq)]
@@ -76,6 +81,9 @@ pub struct TensorEntry {
     /// Byte offset from the start of the payload section.
     pub offset: u64,
     pub nbytes: u64,
+    /// CRC-32 (zlib) of the payload bytes; `None` for v1 containers,
+    /// which predate the checksum section.
+    pub crc32: Option<u32>,
 }
 
 impl TensorEntry {
@@ -126,7 +134,7 @@ impl DtsIndex {
             bail!("bad magic {magic:?}");
         }
         let version = read_u32(r)?;
-        if version != VERSION {
+        if version != VERSION && version != VERSION_NO_CHECKSUM {
             bail!("unsupported version {version}");
         }
         let n_meta = read_u32(r)? as usize;
@@ -157,7 +165,14 @@ impl DtsIndex {
             let offset = read_u64(r)?;
             let nbytes = read_u64(r)?;
             consumed += 2 + nlen as u64 + 2 + 8 * ndim as u64 + 16;
-            entries.push(TensorEntry { name, dtype, shape, offset, nbytes });
+            entries.push(TensorEntry { name, dtype, shape, offset, nbytes, crc32: None });
+        }
+        if version >= VERSION {
+            // v2 checksum section: one u32 per tensor, in index order
+            for e in entries.iter_mut() {
+                e.crc32 = Some(read_u32(r)?);
+            }
+            consumed += 4 * n_tensor as u64;
         }
         let mut lookup = BTreeMap::new();
         for (i, e) in entries.iter().enumerate() {
@@ -189,8 +204,21 @@ impl DtsIndex {
     }
 }
 
-/// Decode one tensor payload according to its index entry.
+/// Decode one tensor payload according to its index entry, verifying the
+/// v2 checksum first (v1 entries carry none and are decoded as-is).
 pub(crate) fn decode_payload(e: &TensorEntry, raw: Vec<u8>) -> Result<DtsTensor> {
+    if let Some(want) = e.crc32 {
+        let got = crate::util::crc32::crc32(&raw);
+        if got != want {
+            bail!(
+                "tensor {:?}: checksum mismatch at payload offset {} \
+                 ({} bytes): stored {want:#010x}, computed {got:#010x}",
+                e.name,
+                e.offset,
+                e.nbytes
+            );
+        }
+    }
     let n: usize = e.shape.iter().product();
     Ok(match e.dtype {
         0 => {
@@ -223,6 +251,26 @@ pub(crate) fn decode_payload(e: &TensorEntry, raw: Vec<u8>) -> Result<DtsTensor>
     })
 }
 
+/// CRC-32 of a tensor's payload, byte-for-byte as [`write_payload`]
+/// emits it (little-endian elements for f32/i32, raw bytes for u8).
+pub(crate) fn payload_crc32(t: &DtsTensor) -> u32 {
+    let mut c = crate::util::crc32::Crc32::new();
+    match t {
+        DtsTensor::F32 { data, .. } => {
+            for v in data {
+                c.update(&v.to_le_bytes());
+            }
+        }
+        DtsTensor::U8 { data, .. } => c.update(data),
+        DtsTensor::I32 { data, .. } => {
+            for v in data {
+                c.update(&v.to_le_bytes());
+            }
+        }
+    }
+    c.finalize()
+}
+
 /// Write one tensor's payload bytes.
 pub(crate) fn write_payload(w: &mut impl Write, t: &DtsTensor) -> Result<()> {
     match t {
@@ -245,13 +293,24 @@ pub(crate) fn write_payload(w: &mut impl Write, t: &DtsTensor) -> Result<()> {
 /// their final payload offsets. Length prefixes are guarded: a tensor or
 /// meta name longer than `u16::MAX` bytes or a meta value longer than
 /// `u32::MAX` bytes is an error instead of a silently truncated prefix.
+///
+/// The version is derived from the entries: all-checksummed writes a v2
+/// container with the CRC section, all-unchecksummed writes v1 (the
+/// bench uses this to isolate checksum overhead); a mix is a bug.
 pub(crate) fn write_index(
     w: &mut impl Write,
     meta: &BTreeMap<String, String>,
     entries: &[TensorEntry],
 ) -> Result<()> {
+    let version = if entries.iter().all(|e| e.crc32.is_some()) {
+        VERSION
+    } else if entries.iter().all(|e| e.crc32.is_none()) {
+        VERSION_NO_CHECKSUM
+    } else {
+        bail!("index mixes checksummed and checksum-free entries");
+    };
     w.write_all(MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&version.to_le_bytes())?;
     w.write_all(&(meta.len() as u32).to_le_bytes())?;
     w.write_all(&(entries.len() as u32).to_le_bytes())?;
 
@@ -286,6 +345,11 @@ pub(crate) fn write_index(
         }
         w.write_all(&e.offset.to_le_bytes())?;
         w.write_all(&e.nbytes.to_le_bytes())?;
+    }
+    if version == VERSION {
+        for e in entries {
+            w.write_all(&e.crc32.unwrap_or(0).to_le_bytes())?;
+        }
     }
     Ok(())
 }
@@ -444,6 +508,7 @@ impl Dts {
                 shape: t.shape().to_vec(),
                 offset,
                 nbytes: t.nbytes() as u64,
+                crc32: Some(payload_crc32(t)),
             });
             offset += t.nbytes() as u64;
         }
@@ -602,6 +667,96 @@ mod tests {
             "{err:#}"
         );
         let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn checksums_written_and_verified() {
+        let mut d = Dts::new();
+        d.insert("w", DtsTensor::F32 { shape: vec![4], data: vec![1.0, 2.0, 3.0, 4.0] });
+        d.insert("codes", DtsTensor::U8 { shape: vec![3], data: vec![5, 6, 7] });
+        let p = tmpfile("crc");
+        d.write(&p).unwrap();
+
+        // the index carries a CRC per entry and a clean read verifies it
+        let idx = DtsIndex::open(&p).unwrap();
+        assert!(idx.entries.iter().all(|e| e.crc32.is_some()));
+        assert_eq!(
+            idx.entry("w").unwrap().crc32,
+            Some(payload_crc32(d.get("w").unwrap()))
+        );
+        Dts::read(&p).unwrap();
+
+        // flip one payload byte -> both readers reject, naming the tensor
+        let mut bytes = std::fs::read(&p).unwrap();
+        let off = bytes.len() - 1; // last payload byte = "codes"
+        bytes[off] ^= 0x40;
+        std::fs::write(&p, &bytes).unwrap();
+        let err = format!("{:#}", Dts::read(&p).unwrap_err());
+        assert!(err.contains("checksum mismatch"), "{err}");
+        assert!(err.contains("codes"), "{err}");
+        let r = DtsReader::open(&p).unwrap();
+        assert!(r.read_tensor("w").is_ok());
+        let err = format!("{:#}", r.read_tensor("codes").unwrap_err());
+        assert!(err.contains("checksum mismatch"), "{err}");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn v1_container_without_checksums_reads_cleanly() {
+        // hand-write a v1 container through write_index (crc32: None)
+        let t = DtsTensor::F32 { shape: vec![2], data: vec![1.5, -2.5] };
+        let entries = vec![TensorEntry {
+            name: "w".into(),
+            dtype: t.dtype_code(),
+            shape: t.shape().to_vec(),
+            offset: 0,
+            nbytes: t.nbytes() as u64,
+            crc32: None,
+        }];
+        let p = tmpfile("v1read");
+        let mut w = BufWriter::new(File::create(&p).unwrap());
+        write_index(&mut w, &BTreeMap::new(), &entries).unwrap();
+        write_payload(&mut w, &t).unwrap();
+        w.flush().unwrap();
+
+        let bytes = std::fs::read(&p).unwrap();
+        assert_eq!(u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]), 1);
+        let d = Dts::read(&p).unwrap();
+        assert_eq!(d.get("w"), Some(&t));
+        let idx = DtsIndex::open(&p).unwrap();
+        assert_eq!(idx.entry("w").unwrap().crc32, None);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn mixed_checksum_entries_rejected() {
+        let t = DtsTensor::U8 { shape: vec![1], data: vec![0] };
+        let mk = |name: &str, crc| TensorEntry {
+            name: name.into(),
+            dtype: t.dtype_code(),
+            shape: t.shape().to_vec(),
+            offset: 0,
+            nbytes: t.nbytes() as u64,
+            crc32: crc,
+        };
+        let entries = vec![mk("a", Some(7)), mk("b", None)];
+        let mut buf = Vec::new();
+        let err = write_index(&mut buf, &BTreeMap::new(), &entries).unwrap_err();
+        assert!(format!("{err:#}").contains("mixes"), "{err:#}");
+    }
+
+    #[test]
+    fn unknown_version_rejected() {
+        let p = tmpfile("badver");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&99u32.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&p, &bytes).unwrap();
+        let err = format!("{:#}", Dts::read(&p).unwrap_err());
+        std::fs::remove_file(&p).unwrap();
+        assert!(err.contains("unsupported version 99"), "{err}");
     }
 
     #[test]

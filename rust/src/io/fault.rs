@@ -1,0 +1,340 @@
+//! Deterministic fault injection over [`TensorSource`] — the substrate
+//! for the chaos suite (`tests/fault.rs`) and for reproducing CI chaos
+//! failures locally.
+//!
+//! [`FaultSource`] wraps any source and injects *seeded* faults on
+//! `read_tensor`, so a failing run replays exactly from its seed:
+//!
+//! - **transient read errors** drawn from an advancing PRNG — the same
+//!   read retried later can succeed, which is what exercises the
+//!   prefetcher's backoff path;
+//! - **persistent corruption** decided per tensor *name* (seed ⊕ name
+//!   hash) — every read of an afflicted tensor fails until the store is
+//!   repaired, which is what exercises the quarantine path. Bit flips
+//!   and truncations are injected as the *detected* error (exactly what
+//!   the CRC/length verification in `io::dts` turns them into), so the
+//!   pipeline never consumes silently corrupted data — mirroring the
+//!   integrity guarantee the checksums provide on real disks;
+//! - **latency**, a fixed per-read sleep.
+//!
+//! For corruption that really lands on disk (and must be caught by the
+//! checksum layer itself), use [`flip_byte`] / [`truncate_file`].
+//!
+//! Classification is string-based because the vendored `anyhow` carries
+//! no typed chain: transient errors embed [`TRANSIENT_MARKER`] and are
+//! recognized by [`is_transient`].
+
+use std::collections::BTreeMap;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::io::dts::DtsTensor;
+use crate::io::TensorSource;
+use crate::util::rng::XorShift;
+
+/// Substring identifying an injected *transient* fault (retry may
+/// succeed). Kept stable: the prefetcher's retry classification and the
+/// chaos suite both match on it.
+pub const TRANSIENT_MARKER: &str = "injected transient fault";
+/// Substring identifying injected *persistent* corruption (retry is
+/// pointless; the unit must be quarantined).
+pub const PERSISTENT_MARKER: &str = "injected persistent corruption";
+
+/// Injection rates and seed. All rates default to 0 (no faults).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultConfig {
+    pub seed: u64,
+    /// Probability that any given read fails transiently.
+    pub read_error_rate: f64,
+    /// Probability that a tensor (by name) is persistently bit-flipped.
+    pub flip_rate: f64,
+    /// Probability that a tensor (by name) is persistently truncated.
+    pub truncate_rate: f64,
+    /// Fixed sleep per read, in milliseconds.
+    pub latency_ms: u64,
+}
+
+impl FaultConfig {
+    /// Read the config from `DAQ_FAULT_*` environment variables
+    /// (`DAQ_FAULT_SEED`, `DAQ_FAULT_READ_ERR`, `DAQ_FAULT_FLIP`,
+    /// `DAQ_FAULT_TRUNC`, `DAQ_FAULT_LATENCY_MS`); anything unset or
+    /// unparsable keeps its default.
+    pub fn from_env() -> FaultConfig {
+        fn num<T: std::str::FromStr>(key: &str, default: T) -> T {
+            std::env::var(key)
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(default)
+        }
+        FaultConfig {
+            seed: num("DAQ_FAULT_SEED", 0),
+            read_error_rate: num("DAQ_FAULT_READ_ERR", 0.0),
+            flip_rate: num("DAQ_FAULT_FLIP", 0.0),
+            truncate_rate: num("DAQ_FAULT_TRUNC", 0.0),
+            latency_ms: num("DAQ_FAULT_LATENCY_MS", 0),
+        }
+    }
+}
+
+/// Counts of faults injected so far, for test assertions.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    pub transient: usize,
+    pub persistent: usize,
+    pub reads: usize,
+}
+
+/// Is this error an injected transient fault (worth retrying)?
+pub fn is_transient(e: &anyhow::Error) -> bool {
+    format!("{e:#}").contains(TRANSIENT_MARKER)
+}
+
+/// FNV-1a, so per-name persistent faults are stable across runs and
+/// independent of read order.
+fn name_hash(name: &str) -> u64 {
+    let mut h = 0xCBF2_9CE4_8422_2325u64;
+    for &b in name.as_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// A [`TensorSource`] wrapper injecting seeded faults on payload reads.
+/// Index-only operations (names, shapes, metadata) pass through
+/// untouched — faults model payload I/O, not catalog access.
+pub struct FaultSource<'a> {
+    inner: &'a dyn TensorSource,
+    cfg: FaultConfig,
+    state: Mutex<(XorShift, FaultCounters)>,
+}
+
+impl<'a> FaultSource<'a> {
+    pub fn new(inner: &'a dyn TensorSource, cfg: FaultConfig) -> FaultSource<'a> {
+        FaultSource {
+            inner,
+            cfg,
+            state: Mutex::new((XorShift::new(cfg.seed), FaultCounters::default())),
+        }
+    }
+
+    /// Snapshot of the injection counters.
+    pub fn counters(&self) -> FaultCounters {
+        self.state.lock().expect("fault state poisoned").1
+    }
+
+    /// The persistent fault (if any) afflicting `name`, decided from the
+    /// seed and the name alone.
+    fn persistent_fault(&self, name: &str) -> Option<&'static str> {
+        let mut rng = XorShift::new(self.cfg.seed ^ name_hash(name));
+        if rng.f64() < self.cfg.flip_rate {
+            return Some("bit flip (checksum mismatch)");
+        }
+        if rng.f64() < self.cfg.truncate_rate {
+            return Some("truncated payload");
+        }
+        None
+    }
+}
+
+impl TensorSource for FaultSource<'_> {
+    fn names(&self) -> Vec<String> {
+        self.inner.names()
+    }
+
+    fn meta(&self) -> &BTreeMap<String, String> {
+        self.inner.meta()
+    }
+
+    fn contains(&self, name: &str) -> bool {
+        self.inner.contains(name)
+    }
+
+    fn shape_of(&self, name: &str) -> Option<Vec<usize>> {
+        self.inner.shape_of(name)
+    }
+
+    fn nbytes_of(&self, name: &str) -> Option<u64> {
+        self.inner.nbytes_of(name)
+    }
+
+    fn crc32_of(&self, name: &str) -> Option<u32> {
+        self.inner.crc32_of(name)
+    }
+
+    fn names_with_prefix(&self, prefix: &str) -> Vec<String> {
+        self.inner.names_with_prefix(prefix)
+    }
+
+    fn read_tensor(&self, name: &str) -> Result<DtsTensor> {
+        if self.cfg.latency_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(self.cfg.latency_ms));
+        }
+        {
+            let mut s = self.state.lock().expect("fault state poisoned");
+            s.1.reads += 1;
+            if let Some(kind) = self.persistent_fault(name) {
+                s.1.persistent += 1;
+                bail!("{PERSISTENT_MARKER}: {kind} in tensor {name:?}");
+            }
+            if s.0.f64() < self.cfg.read_error_rate {
+                s.1.transient += 1;
+                let n = s.1.transient;
+                bail!("{TRANSIENT_MARKER} #{n}: read of tensor {name:?}");
+            }
+        }
+        self.inner.read_tensor(name)
+    }
+}
+
+/// XOR one byte of a file in place (disk-level corruption for tests —
+/// goes through the real checksum verification, unlike the modeled
+/// faults above).
+pub fn flip_byte(path: impl AsRef<Path>, offset: u64, mask: u8) -> Result<()> {
+    let path = path.as_ref();
+    if mask == 0 {
+        bail!("flip mask 0 would leave {path:?} unchanged");
+    }
+    let mut f = std::fs::OpenOptions::new()
+        .read(true)
+        .write(true)
+        .open(path)
+        .with_context(|| format!("open {path:?}"))?;
+    f.seek(SeekFrom::Start(offset))?;
+    let mut b = [0u8; 1];
+    f.read_exact(&mut b)
+        .with_context(|| format!("read byte {offset} of {path:?}"))?;
+    f.seek(SeekFrom::Start(offset))?;
+    f.write_all(&[b[0] ^ mask])?;
+    f.sync_all()?;
+    Ok(())
+}
+
+/// Truncate a file to `len` bytes (torn-write simulation for tests).
+pub fn truncate_file(path: impl AsRef<Path>, len: u64) -> Result<()> {
+    let path = path.as_ref();
+    let f = std::fs::OpenOptions::new()
+        .write(true)
+        .open(path)
+        .with_context(|| format!("open {path:?}"))?;
+    f.set_len(len)
+        .with_context(|| format!("truncate {path:?} to {len}"))?;
+    f.sync_all()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::io::dts::Dts;
+    use crate::tensor::Tensor;
+
+    fn small_dts() -> Dts {
+        let mut d = Dts::new();
+        for (i, name) in ["a", "b", "c", "d"].iter().enumerate() {
+            let data: Vec<f32> = (0..8).map(|j| (i * 8 + j) as f32).collect();
+            d.insert_f32(name, &Tensor::new(vec![2, 4], data));
+        }
+        d
+    }
+
+    #[test]
+    fn no_faults_is_a_transparent_wrapper() {
+        let d = small_dts();
+        let fs = FaultSource::new(&d, FaultConfig::default());
+        assert_eq!(TensorSource::names(&fs), TensorSource::names(&d));
+        for name in ["a", "b", "c", "d"] {
+            assert_eq!(
+                fs.read_tensor(name).unwrap(),
+                TensorSource::read_tensor(&d, name).unwrap()
+            );
+        }
+        let c = fs.counters();
+        assert_eq!((c.transient, c.persistent, c.reads), (0, 0, 4));
+    }
+
+    #[test]
+    fn transient_faults_are_seeded_and_eventually_clear() {
+        let d = small_dts();
+        let cfg = FaultConfig { seed: 11, read_error_rate: 0.5, ..Default::default() };
+        // same seed -> identical fault sequence across instances
+        let outcomes = |src: &FaultSource| -> Vec<bool> {
+            (0..32).map(|_| src.read_tensor("a").is_ok()).collect()
+        };
+        let s1 = FaultSource::new(&d, cfg);
+        let s2 = FaultSource::new(&d, cfg);
+        let o1 = outcomes(&s1);
+        assert_eq!(o1, outcomes(&s2));
+        assert!(o1.iter().any(|ok| *ok), "some reads must succeed");
+        assert!(o1.iter().any(|ok| !*ok), "some reads must fail at rate 0.5");
+        // failures are transient-classified, and a bounded retry loop
+        // always gets through at rate 0.5
+        let s3 = FaultSource::new(&d, cfg);
+        for _ in 0..8 {
+            let mut ok = false;
+            for _ in 0..64 {
+                match s3.read_tensor("b") {
+                    Ok(_) => {
+                        ok = true;
+                        break;
+                    }
+                    Err(e) => assert!(is_transient(&e), "{e:#}"),
+                }
+            }
+            assert!(ok, "retry never cleared a 0.5-rate transient fault");
+        }
+    }
+
+    #[test]
+    fn persistent_faults_stick_to_names() {
+        let d = small_dts();
+        let cfg = FaultConfig { seed: 5, flip_rate: 0.5, ..Default::default() };
+        let fs = FaultSource::new(&d, cfg);
+        let afflicted: Vec<&str> = ["a", "b", "c", "d"]
+            .into_iter()
+            .filter(|n| fs.read_tensor(n).is_err())
+            .collect();
+        assert!(!afflicted.is_empty(), "rate 0.5 over 4 names hit none");
+        assert!(afflicted.len() < 4, "rate 0.5 over 4 names hit all");
+        for name in &afflicted {
+            // every retry fails identically, and never as transient
+            for _ in 0..4 {
+                let e = fs.read_tensor(name).unwrap_err();
+                assert!(!is_transient(&e), "{e:#}");
+                assert!(format!("{e:#}").contains(PERSISTENT_MARKER), "{e:#}");
+                assert!(format!("{e:#}").contains(name), "{e:#}");
+            }
+        }
+    }
+
+    #[test]
+    fn env_config_parses() {
+        std::env::set_var("DAQ_FAULT_SEED", "42");
+        std::env::set_var("DAQ_FAULT_READ_ERR", "0.25");
+        std::env::set_var("DAQ_FAULT_LATENCY_MS", "3");
+        let cfg = FaultConfig::from_env();
+        std::env::remove_var("DAQ_FAULT_SEED");
+        std::env::remove_var("DAQ_FAULT_READ_ERR");
+        std::env::remove_var("DAQ_FAULT_LATENCY_MS");
+        assert_eq!(cfg.seed, 42);
+        assert_eq!(cfg.read_error_rate, 0.25);
+        assert_eq!(cfg.flip_rate, 0.0);
+        assert_eq!(cfg.latency_ms, 3);
+    }
+
+    #[test]
+    fn disk_helpers_corrupt_in_place() {
+        let p = std::env::temp_dir()
+            .join(format!("daq_fault_disk_{}", std::process::id()));
+        std::fs::write(&p, [1u8, 2, 3, 4]).unwrap();
+        flip_byte(&p, 2, 0xFF).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), vec![1, 2, 3 ^ 0xFF, 4]);
+        assert!(flip_byte(&p, 0, 0).is_err(), "no-op mask rejected");
+        truncate_file(&p, 2).unwrap();
+        assert_eq!(std::fs::read(&p).unwrap(), vec![1, 2]);
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -8,6 +8,7 @@
 //! over any of them.
 
 pub mod dts;
+pub mod fault;
 pub mod shard;
 
 use std::collections::BTreeMap;
@@ -37,6 +38,14 @@ pub trait TensorSource: Sync {
     /// the serving path reports store-size vs resident-size from this
     /// without pulling a single payload.
     fn nbytes_of(&self, name: &str) -> Option<u64>;
+
+    /// Stored CRC-32 of a tensor's payload, when its container recorded
+    /// one (DTS v2+). `None` for v1 containers and purely in-memory
+    /// sources — `daq verify-store` uses this to tell "verified ok"
+    /// apart from "read back but unverifiable".
+    fn crc32_of(&self, _name: &str) -> Option<u32> {
+        None
+    }
 
     /// Peek-by-prefix: names starting with `prefix`, in container order,
     /// from the index alone (no payloads). The group planner uses this to
@@ -118,6 +127,10 @@ impl TensorSource for DtsReader {
         self.index.entry(name).map(|e| e.nbytes)
     }
 
+    fn crc32_of(&self, name: &str) -> Option<u32> {
+        self.index.entry(name).and_then(|e| e.crc32)
+    }
+
     fn read_tensor(&self, name: &str) -> Result<DtsTensor> {
         DtsReader::read_tensor(self, name)
     }
@@ -142,6 +155,10 @@ impl TensorSource for ShardedDts {
 
     fn nbytes_of(&self, name: &str) -> Option<u64> {
         self.entry(name).map(|(_, e)| e.nbytes)
+    }
+
+    fn crc32_of(&self, name: &str) -> Option<u32> {
+        self.entry(name).and_then(|(_, e)| e.crc32)
     }
 
     fn read_tensor(&self, name: &str) -> Result<DtsTensor> {

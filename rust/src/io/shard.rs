@@ -25,12 +25,15 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::fs::File;
-use std::io::{BufWriter, Write};
+use std::io::{BufReader, BufWriter, Read, Write};
 use std::path::{Path, PathBuf};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::io::dts::{write_index, write_payload, DtsIndex, DtsTensor, TensorEntry};
+use crate::io::dts::{
+    payload_crc32, write_index, write_payload, DtsIndex, DtsTensor, TensorEntry,
+};
+use crate::util::crc32::Crc32;
 use crate::util::json::Json;
 
 /// Manifest file name inside a sharded-store directory.
@@ -157,7 +160,10 @@ impl ShardedDts {
         let shard = &self.shards[si];
         let path = self.dir.join(&shard.file);
         let mut f = File::open(&path).with_context(|| format!("open {path:?}"))?;
-        shard.index.read_entry(&mut f, &shard.index.entries[ei])
+        shard
+            .index
+            .read_entry(&mut f, &shard.index.entries[ei])
+            .with_context(|| format!("shard {:?}", shard.file))
     }
 }
 
@@ -184,6 +190,7 @@ struct ShardRecord {
 pub struct ShardWriter {
     dir: PathBuf,
     budget: u64,
+    checksums: bool,
     shards: Vec<ShardRecord>,
     names_seen: BTreeSet<String>,
     // current (unfinalized) shard
@@ -207,6 +214,7 @@ impl ShardWriter {
         Ok(ShardWriter {
             dir,
             budget: budget_bytes.max(1),
+            checksums: true,
             shards: Vec::new(),
             names_seen: BTreeSet::new(),
             cur_entries: Vec::new(),
@@ -241,20 +249,35 @@ impl ShardWriter {
                 bytes: index.payload_bytes(),
             });
         }
-        // stale partial payloads / tmp finals from the interrupted run
-        for name in [".part", ".tmp"] {
-            let p = dir.join(format!("shard{name}"));
-            let _ = std::fs::remove_file(p);
+        // stale partial payloads / tmp finals from the interrupted run:
+        // sweep ANY *.part / *.tmp in the store directory (older writers
+        // and crashed converters leave differently named orphans), never
+        // trip over them
+        for entry in std::fs::read_dir(&dir).with_context(|| format!("read {dir:?}"))? {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if name.ends_with(".part") || name.ends_with(".tmp") {
+                let _ = std::fs::remove_file(entry.path());
+            }
         }
         Ok(ShardWriter {
             dir,
             budget: budget_bytes.max(1),
+            checksums: true,
             shards,
             names_seen,
             cur_entries: Vec::new(),
             cur_bytes: 0,
             part: None,
         })
+    }
+
+    /// Disable per-payload checksums: shards are written as v1 containers
+    /// with no CRC section and `roll` skips the finalize-time verify. The
+    /// bench uses this to isolate checksum overhead; production paths
+    /// leave it on.
+    pub fn set_checksums(&mut self, on: bool) {
+        self.checksums = on;
     }
 
     pub fn dir(&self) -> &Path {
@@ -306,6 +329,7 @@ impl ShardWriter {
             shape: t.shape().to_vec(),
             offset: self.cur_bytes,
             nbytes: t.nbytes() as u64,
+            crc32: self.checksums.then(|| payload_crc32(t)),
         });
         self.cur_bytes += t.nbytes() as u64;
         Ok(())
@@ -319,10 +343,50 @@ impl ShardWriter {
         Ok(())
     }
 
-    /// Finalize the current shard: flush the `.part` payload, write the
-    /// final `shard_NNNNN.dts` (header + index + payload) to a tmp file
-    /// and rename it into place, then delete the `.part`. No-op when
-    /// nothing is staged.
+    /// Re-read the synced `.part` payload and check every staged entry's
+    /// CRC against what `append` computed, so a corrupted staging file
+    /// (torn write, bad disk, injected fault) is caught *before* it is
+    /// finalized into a shard. Errors name the tensor, the shard it was
+    /// headed for, and the byte offset.
+    fn verify_part(&self, shard_file: &str) -> Result<()> {
+        let p = self.part_path();
+        let f = File::open(&p).with_context(|| format!("open {p:?}"))?;
+        let mut r = BufReader::new(f);
+        let mut buf = vec![0u8; 64 << 10];
+        // entries were appended sequentially, so one forward pass covers
+        // them all without seeking
+        for e in &self.cur_entries {
+            let Some(want) = e.crc32 else { continue };
+            let mut crc = Crc32::new();
+            let mut left = e.nbytes as usize;
+            while left > 0 {
+                let n = left.min(buf.len());
+                r.read_exact(&mut buf[..n]).with_context(|| {
+                    format!("re-read staged payload of {:?}", e.name)
+                })?;
+                crc.update(&buf[..n]);
+                left -= n;
+            }
+            let got = crc.finalize();
+            if got != want {
+                bail!(
+                    "tensor {:?}: staged payload corrupted before finalize of \
+                     shard {shard_file:?} at payload offset {} ({} bytes): \
+                     expected {want:#010x}, computed {got:#010x}",
+                    e.name,
+                    e.offset,
+                    e.nbytes
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Finalize the current shard: flush + fsync the `.part` payload,
+    /// verify its checksums, write the final `shard_NNNNN.dts`
+    /// (header + index + payload) to a tmp file, fsync, rename it into
+    /// place, and fsync the directory so the rename itself is durable —
+    /// a finalized shard can never be torn. No-op when nothing is staged.
     pub fn roll(&mut self) -> Result<()> {
         let Some(part) = self.part.take() else {
             return Ok(());
@@ -334,6 +398,7 @@ impl ShardWriter {
         drop(f);
 
         let file = shard_file_name(self.shards.len());
+        self.verify_part(&file)?;
         let tmp = self.dir.join("shard.tmp");
         {
             let out = File::create(&tmp).with_context(|| format!("create {tmp:?}"))?;
@@ -350,6 +415,11 @@ impl ShardWriter {
         }
         std::fs::rename(&tmp, self.dir.join(&file))
             .with_context(|| format!("rename {tmp:?}"))?;
+        // fsync the directory so the rename is durable before the .part
+        // is discarded (best-effort: not every platform can open a dir)
+        if let Ok(d) = File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
         std::fs::remove_file(self.part_path())?;
 
         self.shards.push(ShardRecord {
@@ -557,6 +627,98 @@ mod tests {
         w.roll().unwrap();
         drop(w);
         assert!(ShardWriter::create(&dir, 1).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn flipped_byte_in_shard_names_tensor_and_shard() {
+        let dir = tmpdir("corrupt");
+        let mut w = ShardWriter::create(&dir, 1 << 20).unwrap();
+        w.append("ok", &f32t(8, 1)).unwrap();
+        w.append("bad", &f32t(8, 2)).unwrap();
+        let manifest = w.finish(&BTreeMap::new()).unwrap();
+
+        // flip the last payload byte (belongs to "bad") in place
+        let shard = dir.join(shard_file_name(0));
+        let mut bytes = std::fs::read(&shard).unwrap();
+        let off = bytes.len() - 1;
+        bytes[off] ^= 0x01;
+        std::fs::write(&shard, &bytes).unwrap();
+
+        let s = ShardedDts::open(&manifest).unwrap();
+        assert!(s.read_tensor("ok").is_ok(), "untouched tensor still reads");
+        let err = format!("{:#}", s.read_tensor("bad").unwrap_err());
+        assert!(err.contains("checksum mismatch"), "{err}");
+        assert!(err.contains("bad"), "{err}");
+        assert!(err.contains("shard_00000.dts"), "{err}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn roll_catches_part_corrupted_on_disk() {
+        use std::io::{Seek, SeekFrom, Write as _};
+        let dir = tmpdir("tornpart");
+        let mut w = ShardWriter::create(&dir, 1 << 20).unwrap();
+        // 16 KiB tensor: BufWriter (8 KiB) has flushed the head to disk
+        w.append("big", &f32t(4096, 7)).unwrap();
+
+        // corrupt an already-flushed byte of the staging file in place
+        let part = dir.join("shard.part");
+        let mut f = std::fs::OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&part)
+            .unwrap();
+        let mut b = [0u8; 1];
+        std::io::Read::read_exact(&mut f, &mut b).unwrap();
+        f.seek(SeekFrom::Start(0)).unwrap();
+        f.write_all(&[b[0] ^ 0x10]).unwrap();
+        drop(f);
+
+        let err = format!("{:#}", w.roll().unwrap_err());
+        assert!(err.contains("staged payload corrupted"), "{err}");
+        assert!(err.contains("big"), "{err}");
+        assert!(err.contains("shard_00000.dts"), "{err}");
+        // nothing was finalized
+        assert!(!dir.join(shard_file_name(0)).exists());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn resume_sweeps_any_orphaned_part_and_tmp_files() {
+        let dir = tmpdir("orphans");
+        let mut w = ShardWriter::create(&dir, 1).unwrap();
+        w.append("a", &f32t(8, 1)).unwrap();
+        w.roll().unwrap();
+        drop(w);
+        for orphan in ["shard.part", "shard.tmp", "old_convert.part", "stale.tmp"] {
+            std::fs::write(dir.join(orphan), b"garbage").unwrap();
+        }
+
+        let w = ShardWriter::resume(&dir, 1).unwrap();
+        assert!(w.contains("a"));
+        for orphan in ["shard.part", "shard.tmp", "old_convert.part", "stale.tmp"] {
+            assert!(!dir.join(orphan).exists(), "{orphan} must be swept");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn checksums_off_writes_v1_shards() {
+        let dir = tmpdir("nocrc");
+        let mut w = ShardWriter::create(&dir, 1 << 20).unwrap();
+        w.set_checksums(false);
+        let t = f32t(8, 3);
+        w.append("a", &t).unwrap();
+        let manifest = w.finish(&BTreeMap::new()).unwrap();
+
+        let shard = dir.join(shard_file_name(0));
+        let bytes = std::fs::read(&shard).unwrap();
+        assert_eq!(u32::from_le_bytes([bytes[4], bytes[5], bytes[6], bytes[7]]), 1);
+        let s = ShardedDts::open(&manifest).unwrap();
+        let (_, e) = s.entry("a").unwrap();
+        assert_eq!(e.crc32, None);
+        assert_eq!(s.read_tensor("a").unwrap(), t);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -84,6 +84,27 @@ pub struct ServeConfig {
     pub slots: usize,
     /// Greedy tokens to decode per request (capped by the position table).
     pub new_tokens: usize,
+    /// Per-request deadline in milliseconds, measured admission ->
+    /// completion. A request past its deadline is evicted at the next
+    /// tick boundary with whatever it generated so far (`None` = no
+    /// deadline).
+    pub deadline_ms: Option<f64>,
+    /// Admission-control budget: the wait queue holds at most this many
+    /// requests beyond the `slots` in flight; arrivals past that are
+    /// shed up front instead of queueing unboundedly (`None` = admit
+    /// everything).
+    pub queue_budget: Option<usize>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            slots: 4,
+            new_tokens: 16,
+            deadline_ms: None,
+            queue_budget: None,
+        }
+    }
 }
 
 /// Serving report.
@@ -105,6 +126,14 @@ pub struct ServeReport {
     pub resident_param_bytes: usize,
     /// High-water mark of simultaneously active slots.
     pub peak_active_slots: usize,
+    /// Requests rejected at admission (queue over budget). Their
+    /// completions stay empty.
+    pub shed: usize,
+    /// Requests evicted past their deadline (partial completions kept).
+    pub timed_out: usize,
+    /// Requests dropped because their decode step returned an error or
+    /// panicked; the failure is contained to the slot.
+    pub errored: usize,
 }
 
 fn argmax(row: &[f32]) -> usize {
@@ -150,7 +179,19 @@ pub fn serve<D: TokenDecoder>(
             );
         }
     }
-    let mut queue: VecDeque<usize> = (0..requests.len()).collect();
+    // admission control: the wait queue caps at slots + queue_budget;
+    // everything past that is shed immediately rather than queued into
+    // an unbounded backlog (overload degrades by refusing work, not by
+    // blowing every deadline at once)
+    let cap = cfg.queue_budget.map(|b| cfg.slots.saturating_add(b));
+    let mut shed = 0usize;
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    for idx in 0..requests.len() {
+        match cap {
+            Some(c) if queue.len() >= c => shed += 1,
+            _ => queue.push_back(idx),
+        }
+    }
     let mut slots: Vec<Option<Active<D::Session>>> = Vec::new();
     slots.resize_with(cfg.slots, || None);
     let mut completions: Vec<Vec<i32>> = vec![Vec::new(); requests.len()];
@@ -161,7 +202,18 @@ pub fn serve<D: TokenDecoder>(
     let mut total_generated = 0usize;
     let mut steps = 0usize;
     let mut peak_active = 0usize;
+    let mut timed_out = 0usize;
+    let mut errored = 0usize;
     let t_all = Instant::now();
+
+    // per-slot fault isolation: a decoder step that errors or panics
+    // takes down its own request, never the batch
+    let step_isolated = |session: &mut D::Session, token: i32| -> Result<Vec<f32>> {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            dec.step(session, token)
+        }))
+        .unwrap_or_else(|_| Err(anyhow::anyhow!("decoder panicked during step")))
+    };
 
     let mut complete = |a: Active<D::Session>,
                         completions: &mut Vec<Vec<i32>>,
@@ -188,37 +240,44 @@ pub fn serve<D: TokenDecoder>(
             if slot.is_some() {
                 continue;
             }
-            let Some(idx) = queue.pop_front() else { break };
-            let prompt = &requests[idx].prompt;
-            // the admission timestamp precedes the prefill so the
-            // per-request latency really is admission -> completion
-            // (prompt replay included)
-            let admitted = Instant::now();
-            let mut session = dec.start();
-            for &tok in &prompt[..prompt.len() - 1] {
-                dec.step(&mut session, tok)?;
-            }
-            // room left in the position table caps the generation budget
-            // (feeding the token at position p requires p < max_pos)
-            let budget = cfg.new_tokens.min(max_pos - prompt.len() + 1);
-            let a = Active {
-                idx,
-                session,
-                next_input: *prompt.last().expect("validated non-empty"),
-                generated: Vec::with_capacity(budget),
-                budget,
-                admitted,
-            };
-            if budget == 0 {
-                complete(
-                    a,
-                    &mut completions,
-                    &mut request_latency,
-                    &mut sig_match,
-                    &mut sig_total,
-                );
-            } else {
-                *slot = Some(a);
+            'admit: while let Some(idx) = queue.pop_front() {
+                let prompt = &requests[idx].prompt;
+                // the admission timestamp precedes the prefill so the
+                // per-request latency really is admission -> completion
+                // (prompt replay included)
+                let admitted = Instant::now();
+                let mut session = dec.start();
+                for &tok in &prompt[..prompt.len() - 1] {
+                    if step_isolated(&mut session, tok).is_err() {
+                        // contained: this request is dropped and the
+                        // slot admits the next queued one
+                        errored += 1;
+                        continue 'admit;
+                    }
+                }
+                // room left in the position table caps the generation
+                // budget (feeding the token at position p needs p < max_pos)
+                let budget = cfg.new_tokens.min(max_pos - prompt.len() + 1);
+                let a = Active {
+                    idx,
+                    session,
+                    next_input: *prompt.last().expect("validated non-empty"),
+                    generated: Vec::with_capacity(budget),
+                    budget,
+                    admitted,
+                };
+                if budget == 0 {
+                    complete(
+                        a,
+                        &mut completions,
+                        &mut request_latency,
+                        &mut sig_match,
+                        &mut sig_total,
+                    );
+                } else {
+                    *slot = Some(a);
+                    break;
+                }
             }
         }
 
@@ -231,11 +290,36 @@ pub fn serve<D: TokenDecoder>(
             continue; // zero-budget admissions drained the slots; refill
         }
 
-        // one tick: every active request decodes exactly one token
+        // one tick: every active request decodes exactly one token.
+        // Deadline eviction happens at the tick boundary (the request
+        // keeps what it generated so far), and a faulting step takes
+        // down only its own slot.
         let t_tick = Instant::now();
         for slot in slots.iter_mut() {
             let Some(a) = slot.as_mut() else { continue };
-            let logits = dec.step(&mut a.session, a.next_input)?;
+            let expired = cfg
+                .deadline_ms
+                .is_some_and(|d| a.admitted.elapsed().as_secs_f64() * 1e3 > d);
+            if expired {
+                let late = slot.take().expect("checked");
+                timed_out += 1;
+                complete(
+                    late,
+                    &mut completions,
+                    &mut request_latency,
+                    &mut sig_match,
+                    &mut sig_total,
+                );
+                continue;
+            }
+            let logits = match step_isolated(&mut a.session, a.next_input) {
+                Ok(l) => l,
+                Err(_) => {
+                    *slot = None;
+                    errored += 1;
+                    continue;
+                }
+            };
             let best = argmax(&logits) as i32;
             a.generated.push(best);
             a.next_input = best;
@@ -272,6 +356,9 @@ pub fn serve<D: TokenDecoder>(
         completions,
         resident_param_bytes: dec.resident_param_bytes(),
         peak_active_slots: peak_active,
+        shed,
+        timed_out,
+        errored,
     })
 }
 
@@ -364,6 +451,9 @@ pub fn serve_reforward(
         completions,
         resident_param_bytes,
         peak_active_slots: b,
+        shed: 0,
+        timed_out: 0,
+        errored: 0,
     })
 }
 
@@ -456,9 +546,10 @@ mod tests {
     fn scheduler_decodes_and_scores_style() {
         let dec = MockDecoder { vocab: 64, max_pos: 32 };
         let reqs = gen_requests(6, 9);
-        let cfg = ServeConfig { slots: 4, new_tokens: 3 };
+        let cfg = ServeConfig { slots: 4, new_tokens: 3, ..Default::default() };
         let rep = serve(&dec, &reqs, &cfg).unwrap();
         assert_eq!(rep.requests, 6);
+        assert_eq!((rep.shed, rep.timed_out, rep.errored), (0, 0, 0));
         assert_eq!(rep.completions.len(), 6);
         for (req, gen) in reqs.iter().zip(&rep.completions) {
             assert_eq!(gen.as_slice(), &expected_signature(&req.prompt));
@@ -477,7 +568,7 @@ mod tests {
         // scheduler never has more than 2 active
         let dec = MockDecoder { vocab: 64, max_pos: 32 };
         let reqs = gen_requests(7, 11);
-        let cfg = ServeConfig { slots: 2, new_tokens: 4 };
+        let cfg = ServeConfig { slots: 2, new_tokens: 4, ..Default::default() };
         let rep = serve(&dec, &reqs, &cfg).unwrap();
         assert_eq!(rep.request_latency.count(), 7);
         assert!(rep.peak_active_slots <= 2);
@@ -494,13 +585,21 @@ mod tests {
         // surface a clean error through the Result API
         let dec = MockDecoder { vocab: 64, max_pos: 10 };
         let reqs = gen_requests(2, 5); // 14-token prompts
-        let err = serve(&dec, &reqs, &ServeConfig { slots: 2, new_tokens: 2 })
-            .unwrap_err();
+        let err = serve(
+            &dec,
+            &reqs,
+            &ServeConfig { slots: 2, new_tokens: 2, ..Default::default() },
+        )
+        .unwrap_err();
         assert!(format!("{err:#}").contains("position table"), "{err:#}");
 
         let empty = vec![Request { prompt: Vec::new() }];
-        let err = serve(&dec, &empty, &ServeConfig { slots: 1, new_tokens: 1 })
-            .unwrap_err();
+        let err = serve(
+            &dec,
+            &empty,
+            &ServeConfig { slots: 1, new_tokens: 1, ..Default::default() },
+        )
+        .unwrap_err();
         assert!(format!("{err:#}").contains("empty prompt"), "{err:#}");
     }
 
@@ -510,7 +609,7 @@ mod tests {
         // exactly positions 13 and 14 -> 2 generated tokens
         let dec = MockDecoder { vocab: 64, max_pos: 15 };
         let reqs = gen_requests(3, 13);
-        let cfg = ServeConfig { slots: 2, new_tokens: 8 };
+        let cfg = ServeConfig { slots: 2, new_tokens: 8, ..Default::default() };
         let rep = serve(&dec, &reqs, &cfg).unwrap();
         for gen in &rep.completions {
             assert_eq!(gen.len(), 2);
@@ -575,8 +674,113 @@ mod tests {
         let dec = MockDecoder { vocab: 64, max_pos: 32 };
         let fwd = MockForward { batch: 4, seq: 32, vocab: 64 };
         let reqs = gen_requests(9, 17);
-        let a = serve(&dec, &reqs, &ServeConfig { slots: 3, new_tokens: 3 }).unwrap();
+        let a = serve(
+            &dec,
+            &reqs,
+            &ServeConfig { slots: 3, new_tokens: 3, ..Default::default() },
+        )
+        .unwrap();
         let b = serve_reforward(&fwd, &reqs, 3, 0).unwrap();
         assert_eq!(a.completions, b.completions);
+    }
+
+    #[test]
+    fn overload_sheds_requests_past_the_queue_budget() {
+        // 10 requests, 2 slots, wait queue of 3: the first 5 serve
+        // normally and bitwise-correctly, the back 5 are refused up front
+        let dec = MockDecoder { vocab: 64, max_pos: 32 };
+        let reqs = gen_requests(10, 21);
+        let cfg = ServeConfig {
+            slots: 2,
+            new_tokens: 3,
+            queue_budget: Some(3),
+            ..Default::default()
+        };
+        let rep = serve(&dec, &reqs, &cfg).unwrap();
+        assert_eq!(rep.shed, 5);
+        assert_eq!(rep.timed_out, 0);
+        assert_eq!(rep.errored, 0);
+        assert_eq!(rep.request_latency.count(), 5);
+        for (req, gen) in reqs.iter().take(5).zip(rep.completions.iter().take(5)) {
+            assert_eq!(gen.as_slice(), &expected_signature(&req.prompt));
+        }
+        for gen in rep.completions.iter().skip(5) {
+            assert!(gen.is_empty(), "shed requests must not decode");
+        }
+    }
+
+    #[test]
+    fn expired_deadline_evicts_at_the_tick_boundary() {
+        // an already-expired deadline evicts every request on its first
+        // tick, before it generates a token; the run still terminates
+        // and every eviction is counted + latency-recorded
+        let dec = MockDecoder { vocab: 64, max_pos: 32 };
+        let reqs = gen_requests(4, 31);
+        let cfg = ServeConfig {
+            slots: 2,
+            new_tokens: 4,
+            deadline_ms: Some(0.0),
+            ..Default::default()
+        };
+        let rep = serve(&dec, &reqs, &cfg).unwrap();
+        assert_eq!(rep.timed_out, 4);
+        assert_eq!(rep.shed, 0);
+        assert_eq!(rep.request_latency.count(), 4);
+        for gen in &rep.completions {
+            assert!(gen.is_empty(), "expired requests must keep only partial output");
+        }
+    }
+
+    /// Decoder that panics the moment it is fed a poison token; wraps the
+    /// well-behaved mock for everything else.
+    struct PanickyDecoder {
+        inner: MockDecoder,
+        poison: i32,
+    }
+
+    impl TokenDecoder for PanickyDecoder {
+        type Session = Vec<i32>;
+
+        fn start(&self) -> Vec<i32> {
+            self.inner.start()
+        }
+
+        fn step(&self, s: &mut Vec<i32>, token: i32) -> Result<Vec<f32>> {
+            if token == self.poison {
+                panic!("poison token fed to decoder");
+            }
+            self.inner.step(s, token)
+        }
+
+        fn max_positions(&self) -> usize {
+            self.inner.max_positions()
+        }
+
+        fn resident_param_bytes(&self) -> usize {
+            self.inner.resident_param_bytes()
+        }
+    }
+
+    #[test]
+    fn poisoned_request_is_contained_to_its_slot() {
+        // one request carries a token that makes the decoder panic; the
+        // panic is confined to that slot and every other request decodes
+        // to exactly what it would have without the poison
+        let dec = PanickyDecoder {
+            inner: MockDecoder { vocab: 64, max_pos: 32 },
+            poison: tokens::PAD,
+        };
+        let mut reqs = gen_requests(5, 9);
+        reqs[2].prompt[1] = tokens::PAD;
+        let cfg = ServeConfig { slots: 2, new_tokens: 3, ..Default::default() };
+        let rep = serve(&dec, &reqs, &cfg).unwrap();
+        assert_eq!(rep.errored, 1);
+        assert!(rep.completions[2].is_empty());
+        for (i, (req, gen)) in reqs.iter().zip(&rep.completions).enumerate() {
+            if i == 2 {
+                continue;
+            }
+            assert_eq!(gen.as_slice(), &expected_signature(&req.prompt));
+        }
     }
 }

@@ -1,0 +1,105 @@
+//! CRC-32 (ISO-HDLC / zlib) — the checksum behind the DTS v2 integrity
+//! section, dependency-free and bit-identical to Python's `zlib.crc32`.
+//!
+//! Reflected polynomial 0xEDB88320, init and xorout 0xFFFFFFFF. The
+//! lookup table is built in a `const` so the hot path is one table load
+//! and one shift per byte.
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut crc = i as u32;
+        let mut bit = 0;
+        while bit < 8 {
+            crc = if crc & 1 != 0 { (crc >> 1) ^ 0xEDB8_8320 } else { crc >> 1 };
+            bit += 1;
+        }
+        table[i] = crc;
+        i += 1;
+    }
+    table
+}
+
+const TABLE: [u32; 256] = build_table();
+
+/// Incremental CRC-32 state, for checksumming data that is produced in
+/// pieces (the shard writer streams payloads section by section).
+#[derive(Clone, Debug)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Default for Crc32 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Crc32 {
+    pub fn new() -> Self {
+        Self { state: 0xFFFF_FFFF }
+    }
+
+    #[inline]
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut crc = self.state;
+        for &b in bytes {
+            crc = (crc >> 8) ^ TABLE[((crc ^ b as u32) & 0xFF) as usize];
+        }
+        self.state = crc;
+    }
+
+    /// Final digest; the state itself is untouched, so interleaved
+    /// peeking (verify-as-you-stream) stays valid.
+    #[inline]
+    pub fn finalize(&self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+/// One-shot CRC-32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_vector() {
+        // the canonical CRC-32/ISO-HDLC check value
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn zlib_parity_vectors() {
+        // pinned against CPython: zlib.crc32(b"") etc.
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+        assert_eq!(crc32(b"hello world"), 0x0D4A_1185);
+        assert_eq!(crc32(&[0u8; 32]), 0x190A_55AD);
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let data: Vec<u8> = (0..1024u32).map(|i| (i * 31 % 251) as u8).collect();
+        let mut c = Crc32::new();
+        for chunk in data.chunks(17) {
+            c.update(chunk);
+        }
+        assert_eq!(c.finalize(), crc32(&data));
+    }
+
+    #[test]
+    fn finalize_does_not_consume() {
+        let mut c = Crc32::new();
+        c.update(b"123");
+        let _ = c.finalize();
+        c.update(b"456789");
+        assert_eq!(c.finalize(), crc32(b"123456789"));
+    }
+}

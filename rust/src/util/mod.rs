@@ -7,6 +7,7 @@
 
 pub mod bench;
 pub mod cliargs;
+pub mod crc32;
 pub mod json;
 pub mod proptest;
 pub mod rng;

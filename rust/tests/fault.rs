@@ -1,0 +1,512 @@
+//! Chaos suite: end-to-end fault tolerance of the quantize-and-serve
+//! path under deterministic fault injection (`io::fault`).
+//!
+//! The acceptance invariants:
+//! 1. **no silent corruption** — a truncated shard or a single flipped
+//!    payload byte (codes *or* scales) fails loudly, naming the tensor
+//!    and the shard, before any logits are produced;
+//! 2. **transient faults are invisible** — with the prefetcher retrying,
+//!    an injected-blip run produces a store bitwise-identical to the
+//!    fault-free run;
+//! 3. **persistent corruption degrades, never aborts** — afflicted units
+//!    are quarantined (journaled, skipped), the rest of the store is
+//!    still written, and a resume over the repaired source reconverges
+//!    to the fault-free bytes tensor-for-tensor;
+//! 4. **the scheduler contains request-level faults** — overload is shed
+//!    at admission, slow requests die at their deadline, a faulty decode
+//!    kills only its own slot, and every surviving request's tokens are
+//!    bitwise what a fault-free run produces.
+//!
+//! The CI chaos lane sweeps `DAQ_FAULT_SEED` x `DAQ_TEST_WORKERS`; every
+//! cell must pass (seeds are probed into a usable regime, so an unlucky
+//! seed relocates the faults instead of weakening the assertions).
+
+use std::collections::BTreeSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+use daq::coordinator::stream::{run_stream, StreamConfig, RESUME_JOURNAL};
+use daq::coordinator::Method;
+use daq::eval::decode::TokenDecoder;
+use daq::eval::QuantizedParams;
+use daq::experiments::quantizable_from_source;
+use daq::io::dts::{Dts, DtsIndex, DtsTensor};
+use daq::io::fault::{
+    flip_byte, truncate_file, FaultConfig, FaultSource, PERSISTENT_MARKER,
+};
+use daq::io::shard::ShardedDts;
+use daq::io::TensorSource;
+use daq::quant::Granularity;
+use daq::serve::{gen_requests, serve, ServeConfig};
+use daq::tensor::Tensor;
+use daq::util::rng::XorShift;
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("daq_faulttest_{tag}_{}", std::process::id()))
+}
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// Base seed for the injected faults; the CI chaos matrix varies it.
+fn fault_seed() -> u64 {
+    env_u64("DAQ_FAULT_SEED", 0)
+}
+
+/// Streaming config matching the chaos matrix cell: `DAQ_TEST_WORKERS`
+/// varies unit-parallelism, retries back off without sleeping so the
+/// suite stays fast, and the small shard budget forces multi-shard
+/// stores (so corruption and quarantine cross shard boundaries).
+fn chaos_stream_cfg() -> StreamConfig {
+    let mut cfg = StreamConfig::new(
+        Granularity::PerChannel,
+        Method::AbsMax,
+        env_usize("DAQ_TEST_WORKERS", 2),
+    );
+    cfg.shard_budget = 4 << 10;
+    cfg.retry_base_ms = 0;
+    cfg
+}
+
+/// Synthetic (post, base) pair, same shape family as the streaming
+/// suite: quantizable GEMMs plus layernorm/embedding passthroughs.
+fn fake_ckpts(seed: u64, n_layers: usize, dim: usize) -> (Dts, Dts) {
+    let mut rng = XorShift::new(seed);
+    let mut base = Dts::new();
+    let mut post = Dts::new();
+    base.meta.insert("vocab".into(), "64".into());
+    post.meta.insert("vocab".into(), "64".into());
+    for i in 0..n_layers {
+        let name = match i % 3 {
+            0 => format!("l{i}.wq"),
+            1 => format!("l{i}.w1"),
+            _ => format!("l{i}.w2"),
+        };
+        let (r, c) = (dim, dim + 8 * (i % 2));
+        let wb = Tensor::new(vec![r, c], rng.normal_vec(r * c, 0.1));
+        let wp = Tensor::new(
+            vec![r, c],
+            wb.data().iter().map(|&b| b + rng.normal() * 0.002).collect(),
+        );
+        base.insert_f32(&name, &wb);
+        post.insert_f32(&name, &wp);
+        let g = Tensor::full(vec![r], 1.0);
+        base.insert_f32(&format!("l{i}.ln1.g"), &g);
+        post.insert_f32(&format!("l{i}.ln1.g"), &g);
+    }
+    let embed = Tensor::new(vec![16, dim], rng.normal_vec(16 * dim, 0.1));
+    base.insert_f32("embed", &embed);
+    post.insert_f32("embed", &embed);
+    (post, base)
+}
+
+/// Quantize a fresh synthetic model into `tag`'s directory; returns the
+/// store dir and the quantizable layer names.
+fn build_store(tag: &str) -> (PathBuf, Vec<String>) {
+    let (post, base) = fake_ckpts(13, 5, 16);
+    let quantizable = quantizable_from_source(&post);
+    let dir = tmp(tag);
+    let _ = std::fs::remove_dir_all(&dir);
+    run_stream(&post, &base, &quantizable, None, &dir, &chaos_stream_cfg()).unwrap();
+    (dir, quantizable)
+}
+
+/// Absolute file position and length of one tensor's payload inside its
+/// shard (index entries store payload-section-relative offsets).
+fn payload_pos(dir: &Path, name: &str) -> (PathBuf, u64, u64) {
+    let store = ShardedDts::open(dir).unwrap();
+    let (shard, _) = store.entry(name).expect("tensor in store");
+    let shard_path = dir.join(shard);
+    let idx = DtsIndex::open(&shard_path).unwrap();
+    let flen = std::fs::metadata(&shard_path).unwrap().len();
+    let base = flen - idx.payload_bytes();
+    let e = idx.entry(name).expect("tensor in shard index");
+    (shard_path, base + e.offset, e.nbytes)
+}
+
+fn assert_tensor_bits_eq(a: &DtsTensor, b: &DtsTensor, what: &str) {
+    match (a, b) {
+        (
+            DtsTensor::F32 { shape: sa, data: da },
+            DtsTensor::F32 { shape: sb, data: db },
+        ) => {
+            assert_eq!(sa, sb, "{what}: shape");
+            assert_eq!(da.len(), db.len(), "{what}: length");
+            for (i, (x, y)) in da.iter().zip(db).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{what}[{i}]");
+            }
+        }
+        (
+            DtsTensor::U8 { shape: sa, data: da },
+            DtsTensor::U8 { shape: sb, data: db },
+        ) => {
+            assert_eq!(sa, sb, "{what}: shape");
+            assert_eq!(da, db, "{what}: bytes");
+        }
+        _ => panic!("{what}: dtype mismatch"),
+    }
+}
+
+/// Tensor-for-tensor equality of two stores: same name *set*, bitwise
+/// payloads, same metadata. Deliberately order-insensitive — a resumed
+/// run packs re-quantized units into later shards than the fault-free
+/// run did, so shard layout may differ while content must not.
+fn assert_stores_equivalent(a: &Path, b: &Path) {
+    let sa = ShardedDts::open(a).unwrap();
+    let sb = ShardedDts::open(b).unwrap();
+    let na: BTreeSet<String> = TensorSource::names(&sa).into_iter().collect();
+    let nb: BTreeSet<String> = TensorSource::names(&sb).into_iter().collect();
+    assert_eq!(na, nb, "stores hold different tensor sets");
+    for name in &na {
+        assert_tensor_bits_eq(
+            &sa.read_tensor(name).unwrap(),
+            &sb.read_tensor(name).unwrap(),
+            name,
+        );
+    }
+    assert_eq!(TensorSource::meta(&sa), TensorSource::meta(&sb), "metadata");
+}
+
+// ---------------------------------------------------------------------
+// 1. Corruption detection: no silent wrong logits, ever.
+// ---------------------------------------------------------------------
+
+/// A torn write (truncated shard) fails the payload read, naming the
+/// tensor and the shard — and the quantized-resident loader refuses the
+/// store instead of serving from it.
+#[test]
+fn truncated_shard_is_detected_and_named() {
+    let (dir, quantizable) = build_store("trunc");
+    let target = format!("{}.codes", quantizable[0]);
+    let (shard_path, off, nbytes) = payload_pos(&dir, &target);
+    truncate_file(&shard_path, off + nbytes - 1).unwrap();
+
+    let store = ShardedDts::open(&dir).unwrap();
+    let msg = format!("{:#}", store.read_tensor(&target).unwrap_err());
+    assert!(msg.contains(&target), "error must name the tensor: {msg}");
+    assert!(msg.contains("payload of"), "{msg}");
+    let shard_name = shard_path.file_name().unwrap().to_str().unwrap();
+    assert!(msg.contains(shard_name), "error must name the shard: {msg}");
+
+    // never silent wrong logits: the loader fails, it does not serve
+    assert!(QuantizedParams::load(&store).is_err());
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// One flipped bit in a *codes* payload trips the stored CRC-32 on read.
+#[test]
+fn flipped_codes_byte_fails_checksum_naming_tensor_and_shard() {
+    let (dir, quantizable) = build_store("flipcodes");
+    let store = ShardedDts::open(&dir).unwrap();
+    // the streamed store is v2: every payload carries a CRC and reads
+    // back verified before we corrupt anything
+    for name in TensorSource::names(&store) {
+        assert!(store.crc32_of(&name).is_some(), "{name}: no stored CRC");
+        store.read_tensor(&name).unwrap();
+    }
+    let target = format!("{}.codes", quantizable[0]);
+    let (shard_path, off, nbytes) = payload_pos(&dir, &target);
+    flip_byte(&shard_path, off + nbytes / 2, 0x20).unwrap();
+
+    let store = ShardedDts::open(&dir).unwrap();
+    let msg = format!("{:#}", store.read_tensor(&target).unwrap_err());
+    assert!(msg.contains("checksum mismatch"), "{msg}");
+    assert!(msg.contains(&target), "error must name the tensor: {msg}");
+    let shard_name = shard_path.file_name().unwrap().to_str().unwrap();
+    assert!(msg.contains(shard_name), "error must name the shard: {msg}");
+
+    let e = QuantizedParams::load(&store).unwrap_err();
+    assert!(format!("{e:#}").contains("checksum mismatch"), "{e:#}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// Same guarantee for a *scales* payload — a flipped scale byte would
+/// silently rescale a whole channel if it were not checksummed.
+#[test]
+fn flipped_scales_byte_fails_checksum_naming_tensor_and_shard() {
+    let (dir, quantizable) = build_store("flipscales");
+    let target = format!("{}.scales", quantizable[1 % quantizable.len()]);
+    let (shard_path, off, nbytes) = payload_pos(&dir, &target);
+    flip_byte(&shard_path, off + nbytes / 2, 0x01).unwrap();
+
+    let store = ShardedDts::open(&dir).unwrap();
+    let msg = format!("{:#}", store.read_tensor(&target).unwrap_err());
+    assert!(msg.contains("checksum mismatch"), "{msg}");
+    assert!(msg.contains(&target), "error must name the tensor: {msg}");
+
+    let e = QuantizedParams::load(&store).unwrap_err();
+    assert!(format!("{e:#}").contains("checksum mismatch"), "{e:#}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// 2. Transient faults: retried into invisibility.
+// ---------------------------------------------------------------------
+
+/// With transient read errors injected at a rate the retry budget
+/// covers, the streamed store is bitwise-identical to the fault-free
+/// run — same shard layout, same payload bytes, same metadata.
+#[test]
+fn transient_read_faults_retry_to_the_fault_free_store() {
+    let (post, base) = fake_ckpts(29, 6, 16);
+    let quantizable = quantizable_from_source(&post);
+    let mut cfg = chaos_stream_cfg();
+    cfg.max_retries = 12;
+
+    let ref_dir = tmp("transient_ref");
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    run_stream(&post, &base, &quantizable, None, &ref_dir, &cfg).unwrap();
+
+    // probe the seed forward until the very first PRNG draw injects, so
+    // every matrix cell provably exercises the retry path (the shared
+    // fault RNG draws once per read, starting at the seed)
+    let rate = 0.2;
+    let seed = (fault_seed()..)
+        .find(|&s| XorShift::new(s).f64() < rate)
+        .expect("open-ended seed probe");
+    let fcfg = FaultConfig { seed, read_error_rate: rate, ..Default::default() };
+    let fs = FaultSource::new(&post, fcfg);
+
+    let out_dir = tmp("transient_out");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let outcome = run_stream(&fs, &base, &quantizable, None, &out_dir, &cfg).unwrap();
+
+    let c = fs.counters();
+    assert!(c.transient > 0, "probed seed must inject at least one fault");
+    assert_eq!(c.persistent, 0);
+    assert!(
+        outcome.quarantined.is_empty(),
+        "transient faults must never quarantine: {:?}",
+        outcome.quarantined
+    );
+    // bitwise-identical, *including* shard packing order
+    let sa = ShardedDts::open(&out_dir).unwrap();
+    let sb = ShardedDts::open(&ref_dir).unwrap();
+    assert_eq!(TensorSource::names(&sa), TensorSource::names(&sb));
+    assert_stores_equivalent(&out_dir, &ref_dir);
+
+    std::fs::remove_dir_all(&out_dir).unwrap();
+    std::fs::remove_dir_all(&ref_dir).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// 3. Persistent corruption: quarantine, then reconverge after repair.
+// ---------------------------------------------------------------------
+
+/// Persistently corrupt tensors are quarantined (journaled, skipped —
+/// the pipeline finishes the rest), and a `resume` over the repaired
+/// source re-quantizes exactly the quarantined units, converging to the
+/// fault-free store tensor-for-tensor.
+#[test]
+fn persistent_corruption_quarantines_then_resume_reconverges() {
+    let (post, base) = fake_ckpts(31, 6, 16);
+    let quantizable = quantizable_from_source(&post);
+    let cfg = chaos_stream_cfg();
+
+    let ref_dir = tmp("quarantine_ref");
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    run_stream(&post, &base, &quantizable, None, &ref_dir, &cfg).unwrap();
+
+    // probe the seed until the per-name fault set afflicts at least one
+    // quantizable layer but not all of them: the run must both
+    // quarantine *and* make progress. Persistent faults depend only on
+    // (seed, name), so probing reads predicts the run exactly.
+    let all_names: Vec<String> = TensorSource::names(&post);
+    let mut fcfg = FaultConfig {
+        flip_rate: 0.25,
+        truncate_rate: 0.1,
+        ..Default::default()
+    };
+    let mut afflicted: BTreeSet<String> = BTreeSet::new();
+    let mut found = false;
+    for k in 0..512u64 {
+        fcfg.seed = fault_seed().wrapping_add(k.wrapping_mul(0x9E37_79B9));
+        let probe = FaultSource::new(&post, fcfg);
+        afflicted = all_names
+            .iter()
+            .filter(|n| probe.read_tensor(n).is_err())
+            .cloned()
+            .collect();
+        let hit = quantizable.iter().filter(|q| afflicted.contains(*q)).count();
+        if hit >= 1 && hit < quantizable.len() {
+            found = true;
+            break;
+        }
+    }
+    assert!(found, "no usable fault seed in 512 probes");
+
+    let fs = FaultSource::new(&post, fcfg);
+    let out_dir = tmp("quarantine_out");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let outcome = run_stream(&fs, &base, &quantizable, None, &out_dir, &cfg).unwrap();
+
+    // exactly the afflicted names were quarantined — no more, no less
+    let got: BTreeSet<String> = outcome.quarantined.iter().cloned().collect();
+    assert_eq!(got, afflicted, "quarantine set != injected fault set");
+    // quarantined tensors are *absent*, not silently wrong
+    let partial = ShardedDts::open(&out_dir).unwrap();
+    for name in &afflicted {
+        assert!(
+            !TensorSource::contains(&partial, name)
+                && !partial.contains(&format!("{name}.codes")),
+            "{name}: quarantined tensor leaked into the store"
+        );
+    }
+    // each quarantine is journaled with its error, for the repair loop
+    let journal = std::fs::read_to_string(out_dir.join(RESUME_JOURNAL)).unwrap();
+    for name in &afflicted {
+        let line = journal
+            .lines()
+            .find(|l| l.contains("quarantined") && l.contains(name.as_str()));
+        assert!(line.is_some(), "{name}: no quarantine journal line");
+        assert!(
+            line.unwrap().contains(PERSISTENT_MARKER),
+            "{name}: journal line lost the error: {}",
+            line.unwrap()
+        );
+    }
+
+    // "repair" = read the clean source; resume re-quantizes exactly the
+    // quarantined units and reconverges to the fault-free bytes
+    let mut rcfg = cfg.clone();
+    rcfg.resume = true;
+    let resumed = run_stream(&post, &base, &quantizable, None, &out_dir, &rcfg).unwrap();
+    assert!(resumed.quarantined.is_empty());
+    assert!(resumed.resumed > 0, "clean units must resume, not recompute");
+    assert_stores_equivalent(&out_dir, &ref_dir);
+
+    std::fs::remove_dir_all(&out_dir).unwrap();
+    std::fs::remove_dir_all(&ref_dir).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// 4. Serving: shed, deadline, and per-slot fault containment.
+// ---------------------------------------------------------------------
+
+/// Deterministic decoder for scheduler chaos: next token is a hash of
+/// the consumed history, one step optionally sleeps, and feeding the
+/// poison token fails the step (an injected decode fault).
+struct ChaosDecoder {
+    vocab: usize,
+    max_pos: usize,
+    poison: Option<i32>,
+    step_delay_ms: u64,
+}
+
+impl TokenDecoder for ChaosDecoder {
+    type Session = Vec<i32>;
+
+    fn start(&self) -> Vec<i32> {
+        Vec::new()
+    }
+
+    fn step(&self, s: &mut Vec<i32>, token: i32) -> Result<Vec<f32>> {
+        if self.step_delay_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(self.step_delay_ms));
+        }
+        if self.poison == Some(token) {
+            bail!("injected decoder fault on token {token}");
+        }
+        s.push(token);
+        let mut h = 0i64;
+        for &t in s.iter() {
+            h = h.wrapping_mul(31).wrapping_add(t as i64);
+        }
+        let mut logits = vec![0.0f32; self.vocab];
+        logits[h.rem_euclid(self.vocab as i64) as usize] = 1.0;
+        Ok(logits)
+    }
+
+    fn max_positions(&self) -> usize {
+        self.max_pos
+    }
+
+    fn resident_param_bytes(&self) -> usize {
+        4096
+    }
+}
+
+/// Overload + decode faults together: requests past the admission budget
+/// are shed, poisoned requests die in their own slot, and every survivor
+/// decodes tokens bitwise-equal to the fault-free run.
+#[test]
+fn scheduler_survivors_are_bitwise_unchanged_under_shed_and_faults() {
+    let dec = ChaosDecoder { vocab: 64, max_pos: 32, poison: Some(-7), step_delay_ms: 0 };
+    let clean = gen_requests(12, 21);
+    // fault-free reference: everything admitted, nothing poisoned
+    let reference = serve(
+        &dec,
+        &clean,
+        &ServeConfig { slots: 2, new_tokens: 4, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!((reference.shed, reference.timed_out, reference.errored), (0, 0, 0));
+
+    // chaos run: slots 2 + queue budget 5 admits the first 7 of 12;
+    // requests 3 and 6 carry the poison token in their prompt
+    let mut reqs = clean.clone();
+    reqs[3].prompt[1] = -7;
+    reqs[6].prompt[1] = -7;
+    let rep = serve(
+        &dec,
+        &reqs,
+        &ServeConfig {
+            slots: 2,
+            new_tokens: 4,
+            queue_budget: Some(5),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(rep.requests, 12);
+    assert_eq!(rep.shed, 5, "12 arrivals into slots 2 + budget 5");
+    assert_eq!(rep.errored, 2, "both poisoned requests, nothing else");
+    assert_eq!(rep.timed_out, 0);
+    assert_eq!(rep.request_latency.count(), 5, "only clean admitted requests finish");
+    for idx in 0..12 {
+        if idx == 3 || idx == 6 {
+            assert!(rep.completions[idx].is_empty(), "poisoned request {idx} decoded");
+        } else if idx >= 7 {
+            assert!(rep.completions[idx].is_empty(), "shed request {idx} decoded");
+        } else {
+            assert_eq!(
+                rep.completions[idx], reference.completions[idx],
+                "surviving request {idx} diverged from the fault-free run"
+            );
+            assert_eq!(rep.completions[idx].len(), 4);
+        }
+    }
+}
+
+/// A uniformly slow decoder against a tight deadline: every request is
+/// evicted at its first tick boundary with its (empty) partial output,
+/// the run terminates, and the evictions are all accounted for.
+#[test]
+fn slow_decoder_requests_all_die_at_the_deadline() {
+    let dec = ChaosDecoder { vocab: 64, max_pos: 32, poison: None, step_delay_ms: 2 };
+    let reqs = gen_requests(5, 33);
+    let rep = serve(
+        &dec,
+        &reqs,
+        &ServeConfig {
+            slots: 2,
+            new_tokens: 6,
+            deadline_ms: Some(1.0),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // prefill alone takes ~26ms per request (13 steps x 2ms), so the
+    // 1ms deadline has always expired by the first tick
+    assert_eq!(rep.timed_out, 5);
+    assert_eq!((rep.shed, rep.errored), (0, 0));
+    assert_eq!(rep.request_latency.count(), 5, "evicted requests still complete");
+    for gen in &rep.completions {
+        assert!(gen.is_empty(), "no tokens fit inside the deadline");
+    }
+}

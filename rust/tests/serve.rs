@@ -109,7 +109,7 @@ fn quantized_store_serves_end_to_end() {
     let rep = serve(
         &Decoder::new(&qp, cfg),
         &reqs,
-        &ServeConfig { slots: 3, new_tokens: 4 },
+        &ServeConfig { slots: 3, new_tokens: 4, ..Default::default() },
     )
     .unwrap();
     assert_eq!(rep.requests, 6);
@@ -128,7 +128,7 @@ fn quantized_store_serves_end_to_end() {
     let rep_dense = serve(
         &dec_dense,
         &reqs,
-        &ServeConfig { slots: 3, new_tokens: 4 },
+        &ServeConfig { slots: 3, new_tokens: 4, ..Default::default() },
     )
     .unwrap();
     let nfwd = NativeForward { params: &dense, cfg, batch: 3 };
