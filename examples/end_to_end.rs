@@ -22,14 +22,23 @@ use daq::quant::{absmax_scales, Granularity};
 use daq::report::{fmt3, fmt_l2, fmt_pct, Table};
 use daq::search::Objective;
 use daq::serve::{gen_requests, serve_reforward};
-use daq::util::timer::Stopwatch;
+use daq::util::telemetry::{self, Telemetry};
+
+/// Phase timing via the telemetry registry: wall time lands in a
+/// `<name>.seconds` histogram, so the end-of-run phase-attribution table
+/// is the same one `daq quantize`/`daq serve` print.
+fn measure<T>(tel: &Telemetry, name: &str, f: impl FnOnce() -> T) -> T {
+    let _t = tel.histogram(&format!("{name}.seconds")).start_timer();
+    f()
+}
 
 fn main() -> anyhow::Result<()> {
-    let mut sw = Stopwatch::new();
+    let tel = Telemetry::new("end-to-end");
+    let _ctx = telemetry::set_current(tel.clone());
     let dir = std::env::var("DAQ_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
 
     // ---- 1. codec golden cross-check ----
-    sw.measure("1. fp8 golden cross-check", || -> anyhow::Result<()> {
+    measure(&tel, "1. fp8 golden cross-check", || -> anyhow::Result<()> {
         let d = Dts::read(format!("{dir}/fp8_golden.dts"))?;
         let inputs = d.tensor_f32("inputs")?.into_data();
         let qdq = d.tensor_f32("qdq")?.into_data();
@@ -45,10 +54,10 @@ fn main() -> anyhow::Result<()> {
     })?;
 
     // ---- 2. PJRT runtime + kernel cross-check ----
-    let lab = sw.measure("2. open lab (PJRT)", || Lab::open(&dir, true))?;
+    let lab = measure(&tel, "2. open lab (PJRT)", || Lab::open(&dir, true))?;
     let rt = lab.rt.as_ref().unwrap();
     println!("   PJRT platform: {}", rt.platform());
-    sw.measure("2b. pallas sweep == native sweep", || -> anyhow::Result<()> {
+    measure(&tel, "2b. pallas sweep == native sweep", || -> anyhow::Result<()> {
         let name = &lab.quantizable[0];
         let wp = lab.post.tensor_f32(name)?;
         let wb = lab.base.tensor_f32(name)?;
@@ -98,10 +107,10 @@ fn main() -> anyhow::Result<()> {
     for (label, gran, method) in variants {
         let keep = matches!(&method,
             Method::Search { objective: Objective::SignRate, .. });
-        let out = sw.measure(&format!("3. quantize {label}"), || {
+        let out = measure(&tel, &format!("3. quantize {label}"), || {
             lab.quantize(gran, method.clone())
         })?;
-        let (s, g) = sw.measure(&format!("4. eval {label}"), || {
+        let (s, g) = measure(&tel, &format!("4. eval {label}"), || {
             lab.rubric(&out.params)
         })?;
         let a = out.agg.as_ref().unwrap();
@@ -117,7 +126,7 @@ fn main() -> anyhow::Result<()> {
     //         reforward loop serves here; `daq serve` native uses the
     //         continuous-batching incremental scheduler) ----
     let params = daq_sign_params.expect("daq-sign variant ran");
-    let rep = sw.measure("5. serve 32 requests", || {
+    let rep = measure(&tel, "5. serve 32 requests", || {
         let fwd = PjrtForward { rt, params: &params, batch: rt.manifest.serve_batch };
         serve_reforward(&fwd, &gen_requests(32, 42), 8, params_bytes(&params))
     })?;
@@ -128,7 +137,7 @@ fn main() -> anyhow::Result<()> {
         100.0 * rep.style_adherence
     );
 
-    println!("\nphase breakdown:\n{}", sw.report());
+    println!("\n{}", tel.snapshot().render());
     println!("END-TO-END OK");
     Ok(())
 }

@@ -32,6 +32,11 @@ same run makes the integrity-layer price machine-independent — runner
 noise cancels out — so it can be gated far tighter than the
 cross-run threshold.
 
+`--telemetry-overhead X` is the same intra-run pattern for the
+telemetry layer: `pipeline-streaming-telemetry` vs `pipeline-streaming`
+(Melem/s) and `serve-quantized-telemetry` vs `serve-quantized`
+(tokens/s) must each stay within X of the uninstrumented row.
+
 Exit code 0 = no regression beyond the threshold.
 """
 
@@ -137,6 +142,55 @@ def check_checksum_overhead(cur_rows: dict, overhead: float) -> None:
     print(f"ok: checksum overhead within {overhead:.0%} on {pairs} pair(s)")
 
 
+# (uninstrumented variant, instrumented variant) pairs priced by the
+# --telemetry-overhead intra-run gate
+TELEMETRY_PAIRS = (
+    ("pipeline-streaming", "pipeline-streaming-telemetry"),
+    ("serve-quantized", "serve-quantized-telemetry"),
+)
+
+
+def check_telemetry_overhead(cur_rows: dict, overhead: float) -> None:
+    """Intra-run gate: instrumented throughput within `overhead` of the
+    matching uninstrumented row for every TELEMETRY_PAIRS pair present.
+    Exits non-zero on breach or if no pair exists at all."""
+    pairs = 0
+    breaches = []
+    for plain_variant, tel_variant in TELEMETRY_PAIRS:
+        for (variant, shape, gran), plain in sorted(cur_rows.items()):
+            if variant != plain_variant:
+                continue
+            tel = cur_rows.get((tel_variant, shape, gran))
+            if tel is None:
+                continue
+            pairs += 1
+            mname, mplain = metric(plain)
+            mtel = tel.get(mname, 0.0)
+            floor = mplain * (1.0 - overhead)
+            ratio = mtel / mplain if mplain else 0.0
+            unit = "Melem/s" if mname == "melem_per_s" else "tok/s"
+            status = "ok" if mtel >= floor else "TELEMETRY OVERHEAD"
+            print(
+                f"{status:>10}: {tel_variant} {shape}/{gran}  "
+                f"instrumented {mtel:.2f} vs plain {mplain:.2f} {unit} "
+                f"({ratio:.3f}x, floor {floor:.2f})"
+            )
+            if mtel < floor:
+                breaches.append((tel_variant, shape, gran))
+    if pairs == 0:
+        sys.exit(
+            "error: --telemetry-overhead was requested but no "
+            "(uninstrumented, -telemetry) row pair exists in the current run"
+        )
+    if breaches:
+        names = ", ".join("/".join(b) for b in breaches)
+        sys.exit(
+            f"error: telemetry overhead exceeds {overhead:.0%} of the "
+            f"uninstrumented throughput on: {names}"
+        )
+    print(f"ok: telemetry overhead within {overhead:.0%} on {pairs} pair(s)")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", required=True, help="BENCH_sweep.json from this run")
@@ -153,6 +207,14 @@ def main() -> int:
         default=None,
         help="max allowed intra-run throughput cost of per-payload "
         "checksums: pipeline-streaming-checksum vs pipeline-streaming "
+        "(disabled unless given)",
+    )
+    ap.add_argument(
+        "--telemetry-overhead",
+        type=float,
+        default=None,
+        help="max allowed intra-run throughput cost of live telemetry: "
+        "each *-telemetry row vs its uninstrumented pair "
         "(disabled unless given)",
     )
     ap.add_argument(
@@ -176,6 +238,8 @@ def main() -> int:
         sys.exit(f"error: {args.current} has no pipeline-*/serve-* rows")
     if args.checksum_overhead is not None:
         check_checksum_overhead(cur_rows, args.checksum_overhead)
+    if args.telemetry_overhead is not None:
+        check_telemetry_overhead(cur_rows, args.telemetry_overhead)
 
     compared = 0
     regressions = []

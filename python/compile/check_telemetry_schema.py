@@ -1,0 +1,348 @@
+#!/usr/bin/env python3
+"""Schema gate for the telemetry layer's machine-readable outputs.
+
+Validates the three artifacts `util::telemetry` emits against the
+committed `telemetry_schema.json`:
+
+- ``--metrics metrics.json`` — the registry snapshot written by
+  ``daq quantize --stream --metrics-out`` (and at every shard-roll
+  boundary). Required keys, counter non-negativity, bucket-vector
+  lengths, and the per-histogram invariant ``sum(buckets) == count``.
+- ``--events events.jsonl`` — the structured trace written by
+  ``--trace-out``. Every line must parse, carry the required keys,
+  have monotone non-decreasing ``ts_us``, a single run id, a known
+  ``kind``, and spans must carry ``dur_us``.
+- ``--exposition metrics.txt`` — a captured ``GET /metrics`` body
+  (Prometheus text format 0.0.4): every sample belongs to a declared
+  ``# TYPE`` family, histogram buckets are cumulative and end at
+  ``+Inf`` with the ``_count`` value, counters are non-negative.
+
+With no file arguments the script validates embedded fixtures (both
+well-formed and deliberately broken ones) — the CI python job runs this
+self-test so the gate itself is gated.
+
+Exit code 0 = every requested artifact is well-formed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import re
+import sys
+
+SCHEMA_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "telemetry_schema.json")
+
+METRIC_NAME = re.compile(r"^[a-zA-Z_:][a-zA-Z0-9_:]*$")
+
+
+class SchemaError(Exception):
+    pass
+
+
+def fail(msg: str) -> None:
+    raise SchemaError(msg)
+
+
+def load_schema(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != "daq-telemetry":
+        fail(f"{path}: not a daq-telemetry schema document")
+    return doc
+
+
+def is_num(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool)
+
+
+def check_metrics(doc: dict, schema: dict) -> None:
+    """Validate one metrics.json registry snapshot."""
+    spec = schema["metrics"]
+    if not isinstance(doc, dict):
+        fail("metrics document is not an object")
+    for key in spec["required"]:
+        if key not in doc:
+            fail(f"metrics document missing required key {key!r}")
+    if not isinstance(doc["run_id"], str) or not doc["run_id"]:
+        fail("run_id must be a non-empty string")
+
+    bounds = doc["bucket_bounds"]
+    if not isinstance(bounds, list) or len(bounds) != spec["bucket_bounds_len"]:
+        fail(f"bucket_bounds must be a list of {spec['bucket_bounds_len']} bounds")
+    if not all(is_num(b) and b > 0 for b in bounds):
+        fail("bucket_bounds must be positive numbers")
+    if any(b >= a for b, a in zip(bounds, bounds[1:])):
+        fail("bucket_bounds must be strictly increasing")
+
+    if not isinstance(doc["counters"], dict):
+        fail("counters must be an object")
+    for name, v in doc["counters"].items():
+        if not is_num(v) or v < 0 or v != int(v):
+            fail(f"counter {name!r} must be a non-negative integer, got {v!r}")
+
+    if not isinstance(doc["gauges"], dict):
+        fail("gauges must be an object")
+    for name, v in doc["gauges"].items():
+        if not is_num(v) or not math.isfinite(v):
+            fail(f"gauge {name!r} must be a finite number, got {v!r}")
+
+    hspec = spec["histogram"]
+    if not isinstance(doc["histograms"], dict):
+        fail("histograms must be an object")
+    for name, h in doc["histograms"].items():
+        if not isinstance(h, dict):
+            fail(f"histogram {name!r} is not an object")
+        for key in hspec["required"]:
+            if key not in h:
+                fail(f"histogram {name!r} missing {key!r}")
+        if not is_num(h["count"]) or h["count"] < 0 or h["count"] != int(h["count"]):
+            fail(f"histogram {name!r}: count must be a non-negative integer")
+        if not is_num(h["sum"]) or not math.isfinite(h["sum"]):
+            fail(f"histogram {name!r}: sum must be a finite number")
+        buckets = h["buckets"]
+        if not isinstance(buckets, list) or len(buckets) != hspec["buckets_len"]:
+            fail(f"histogram {name!r}: buckets must be a list of "
+                 f"{hspec['buckets_len']} counts (last is +Inf)")
+        if not all(is_num(b) and b >= 0 and b == int(b) for b in buckets):
+            fail(f"histogram {name!r}: bucket counts must be non-negative integers")
+        if sum(buckets) != h["count"]:
+            fail(f"histogram {name!r}: sum(buckets) == {sum(buckets)} "
+                 f"!= count == {h['count']}")
+
+
+def check_events(lines: list, schema: dict) -> int:
+    """Validate a JSONL trace; returns the number of records checked."""
+    spec = schema["events"]
+    last_ts = -math.inf
+    run_id = None
+    n = 0
+    for i, line in enumerate(lines):
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            doc = json.loads(line)
+        except json.JSONDecodeError as e:
+            fail(f"trace line {i}: unparseable JSON ({e})")
+        if not isinstance(doc, dict):
+            fail(f"trace line {i}: not an object")
+        for key in spec["required"]:
+            if key not in doc:
+                fail(f"trace line {i}: missing required key {key!r}")
+        ts = doc["ts_us"]
+        if not is_num(ts) or ts < 0:
+            fail(f"trace line {i}: ts_us must be a non-negative number")
+        if ts < last_ts:
+            fail(f"trace line {i}: ts_us went backwards ({ts} < {last_ts})")
+        last_ts = ts
+        if run_id is None:
+            run_id = doc["run"]
+        elif doc["run"] != run_id:
+            fail(f"trace line {i}: run id changed mid-trace "
+                 f"({doc['run']!r} != {run_id!r})")
+        kind = doc["kind"]
+        if kind not in spec["kinds"]:
+            fail(f"trace line {i}: unknown kind {kind!r}")
+        if kind == "span":
+            for key in spec["span_required"]:
+                if key not in doc:
+                    fail(f"trace line {i}: span missing {key!r}")
+            if not is_num(doc["dur_us"]) or doc["dur_us"] < 0:
+                fail(f"trace line {i}: dur_us must be a non-negative number")
+        n += 1
+    return n
+
+
+def check_exposition(text: str) -> int:
+    """Validate a Prometheus text-format body; returns the sample count."""
+    declared: dict[str, str] = {}
+    samples = 0
+    # per-histogram running state for cumulativity / +Inf checks
+    hist_state: dict[str, dict] = {}
+    for i, line in enumerate(text.splitlines()):
+        if not line.strip():
+            continue
+        if line.startswith("# TYPE "):
+            parts = line.split()
+            if len(parts) != 4:
+                fail(f"exposition line {i}: malformed TYPE line: {line!r}")
+            _, _, name, mtype = parts
+            if mtype not in ("counter", "gauge", "histogram"):
+                fail(f"exposition line {i}: unknown metric type {mtype!r}")
+            if not METRIC_NAME.match(name):
+                fail(f"exposition line {i}: invalid metric name {name!r}")
+            declared[name] = mtype
+            if mtype == "histogram":
+                hist_state[name] = {"last_cum": -1, "inf": None, "count": None}
+            continue
+        if line.startswith("#"):
+            continue
+        m = re.match(r"^([a-zA-Z_:][a-zA-Z0-9_:]*)(\{[^}]*\})?\s+(\S+)$", line)
+        if m is None:
+            fail(f"exposition line {i}: malformed sample: {line!r}")
+        name, labels, raw = m.groups()
+        try:
+            value = float(raw)
+        except ValueError:
+            fail(f"exposition line {i}: non-numeric value {raw!r}")
+        family, part = name, None
+        for suffix in ("_total", "_bucket", "_sum", "_count"):
+            if name.endswith(suffix):
+                family, part = name[: -len(suffix)], suffix
+                break
+        if part == "_total":
+            if declared.get(name) != "counter":
+                fail(f"exposition line {i}: sample {name!r} has no "
+                     f"counter TYPE declaration")
+            if value < 0:
+                fail(f"exposition line {i}: counter {name!r} is negative")
+        elif part in ("_bucket", "_sum", "_count") and family in hist_state:
+            st = hist_state[family]
+            if part == "_bucket":
+                if not labels or 'le="' not in labels:
+                    fail(f"exposition line {i}: bucket without le label")
+                if value < st["last_cum"]:
+                    fail(f"exposition line {i}: histogram {family!r} "
+                         f"buckets are not cumulative")
+                st["last_cum"] = value
+                if 'le="+Inf"' in labels:
+                    st["inf"] = value
+            elif part == "_count":
+                st["count"] = value
+        else:
+            if declared.get(name) != "gauge":
+                fail(f"exposition line {i}: sample {name!r} has no "
+                     f"TYPE declaration")
+        samples += 1
+    for family, st in hist_state.items():
+        if st["inf"] is None:
+            fail(f"histogram {family!r} has no +Inf bucket")
+        if st["count"] is not None and st["inf"] != st["count"]:
+            fail(f"histogram {family!r}: +Inf bucket ({st['inf']}) "
+                 f"!= _count ({st['count']})")
+    if samples == 0:
+        fail("exposition body contains no samples")
+    return samples
+
+
+# ---------------------------------------------------------------------
+# embedded self-test fixtures (run when no file arguments are given)
+
+GOOD_METRICS = {
+    "run_id": "selftest-1",
+    "bucket_bounds": [1e-6 * 4**i for i in range(16)],
+    "counters": {"stream.retries": 2, "shard.rolls": 3},
+    "gauges": {"serve.slot_occupancy": 4.0},
+    "histograms": {
+        "stream.read.seconds": {
+            "count": 5,
+            "sum": 0.012,
+            "buckets": [0, 0, 1, 2, 2] + [0] * 12,
+        }
+    },
+}
+
+GOOD_EVENTS = [
+    '{"ts_us": 10.0, "run": "r", "kind": "span", "name": "stream.read", "dur_us": 42.0}',
+    '{"ts_us": 11.0, "run": "r", "kind": "event", "name": "stream.retry", "attempt": 1}',
+    '{"ts_us": 11.0, "run": "r", "kind": "span", "name": "stream.write", "dur_us": 0.0}',
+]
+
+GOOD_EXPOSITION = """\
+# TYPE daq_stream_retries_total counter
+daq_stream_retries_total 2
+# TYPE daq_serve_slot_occupancy gauge
+daq_serve_slot_occupancy 4
+# TYPE daq_stream_read_seconds histogram
+daq_stream_read_seconds_bucket{le="1e-6"} 0
+daq_stream_read_seconds_bucket{le="4e-6"} 1
+daq_stream_read_seconds_bucket{le="+Inf"} 5
+daq_stream_read_seconds_sum 0.012
+daq_stream_read_seconds_count 5
+"""
+
+
+def selftest(schema: dict) -> None:
+    check_metrics(GOOD_METRICS, schema)
+    assert check_events(GOOD_EVENTS, schema) == 3
+    assert check_exposition(GOOD_EXPOSITION) == 7
+
+    def must_fail(what: str, fn) -> None:
+        try:
+            fn()
+        except SchemaError:
+            return
+        sys.exit(f"selftest: {what} was accepted but must be rejected")
+
+    bad_counter = json.loads(json.dumps(GOOD_METRICS))
+    bad_counter["counters"]["stream.retries"] = -1
+    must_fail("negative counter", lambda: check_metrics(bad_counter, schema))
+
+    bad_hist = json.loads(json.dumps(GOOD_METRICS))
+    bad_hist["histograms"]["stream.read.seconds"]["count"] = 99
+    must_fail("buckets/count mismatch", lambda: check_metrics(bad_hist, schema))
+
+    missing_key = {k: v for k, v in GOOD_METRICS.items() if k != "run_id"}
+    must_fail("missing run_id", lambda: check_metrics(missing_key, schema))
+
+    non_monotonic = [GOOD_EVENTS[1], GOOD_EVENTS[0]]
+    must_fail("non-monotonic ts_us", lambda: check_events(non_monotonic, schema))
+
+    spanless = ['{"ts_us": 1, "run": "r", "kind": "span", "name": "x"}']
+    must_fail("span without dur_us", lambda: check_events(spanless, schema))
+
+    undeclared = "daq_mystery_total 3\n"
+    must_fail("undeclared sample", lambda: check_exposition(undeclared))
+
+    shrinking = (
+        "# TYPE daq_h histogram\n"
+        'daq_h_bucket{le="1e-6"} 5\n'
+        'daq_h_bucket{le="+Inf"} 3\n'
+        "daq_h_sum 1\ndaq_h_count 3\n"
+    )
+    must_fail("non-cumulative buckets", lambda: check_exposition(shrinking))
+
+    print("ok: telemetry schema selftest passed (3 artifacts, 7 rejections)")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--metrics", help="metrics.json snapshot to validate")
+    ap.add_argument("--events", help="events.jsonl trace to validate")
+    ap.add_argument("--exposition", help="captured GET /metrics body to validate")
+    ap.add_argument("--schema", default=SCHEMA_PATH,
+                    help=f"schema document (default {SCHEMA_PATH})")
+    args = ap.parse_args()
+
+    try:
+        schema = load_schema(args.schema)
+        if not (args.metrics or args.events or args.exposition):
+            selftest(schema)
+            return 0
+        if args.metrics:
+            with open(args.metrics) as f:
+                doc = json.load(f)
+            check_metrics(doc, schema)
+            print(f"ok: {args.metrics} is a well-formed registry snapshot")
+        if args.events:
+            with open(args.events) as f:
+                n = check_events(f.readlines(), schema)
+            print(f"ok: {args.events} is a well-formed trace ({n} records)")
+        if args.exposition:
+            with open(args.exposition) as f:
+                n = check_exposition(f.read())
+            print(f"ok: {args.exposition} is well-formed exposition text "
+                  f"({n} samples)")
+    except (OSError, json.JSONDecodeError) as e:
+        sys.exit(f"error: {e}")
+    except SchemaError as e:
+        sys.exit(f"error: {e}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

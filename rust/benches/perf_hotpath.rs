@@ -20,6 +20,7 @@ use daq::search::Objective;
 use daq::tensor::Tensor;
 use daq::util::bench::bench;
 use daq::util::rng::XorShift;
+use daq::util::telemetry::{self, Telemetry};
 
 fn pair(r: usize, c: usize, seed: u64) -> (Tensor, Tensor) {
     let mut rng = XorShift::new(seed);
@@ -247,6 +248,27 @@ fn main() {
         });
         let _ = std::fs::remove_dir_all(&base_dir);
 
+        // telemetry on (live registry: spans, counters, roll snapshots)
+        // against the same checksums-off config as `pipeline-streaming`:
+        // this pair prices the instrumentation itself, and
+        // check_bench_regress.py --telemetry-overhead gates it intra-run
+        let tguard = telemetry::set_current(Telemetry::new("bench-stream"));
+        let mut titer = 0usize;
+        let stream_tel = bench("pipeline (streaming + telemetry)", 0, 3, || {
+            titer += 1;
+            run_stream(
+                &post,
+                &base,
+                &quantizable,
+                None,
+                &base_dir.join(format!("tel{titer}")),
+                &scfg,
+            )
+            .unwrap()
+        });
+        drop(tguard);
+        let _ = std::fs::remove_dir_all(&base_dir);
+
         let evals = (n_layers * dim * dim * n_candidates) as f64;
         let shape = format!("{n_layers}x{dim}x{dim}");
         let mut t = Table::new(
@@ -257,6 +279,7 @@ fn main() {
             ("pipeline-inmemory", mem.mean_s),
             ("pipeline-streaming", stream.mean_s),
             ("pipeline-streaming-checksum", stream_crc.mean_s),
+            ("pipeline-streaming-telemetry", stream_tel.mean_s),
         ] {
             records.push(Record {
                 shape: shape.clone(),
@@ -429,6 +452,16 @@ fn main() {
         let quant = bench("serve quantized", 0, 3, || {
             serve(&qdec, &reqs, &scfg).unwrap()
         });
+        // same quantized workload with a live registry; the Decoder
+        // captures its step counter at construction, so it is rebuilt
+        // inside the instrumented context exactly like a real serve run.
+        // check_bench_regress.py gates this pair within 3% intra-run.
+        let tguard = telemetry::set_current(Telemetry::new("bench-serve"));
+        let qdec_tel = Decoder::new(&qp, cfg);
+        let quant_tel = bench("serve quantized + telemetry", 0, 3, || {
+            serve(&qdec_tel, &reqs, &scfg).unwrap()
+        });
+        drop(tguard);
 
         let shape = format!(
             "{}x{}x{}x{}",
@@ -443,6 +476,7 @@ fn main() {
             ("serve-reforward", reforward.mean_s, params_bytes(&params)),
             ("serve-inmemory", inmem.mean_s, params_bytes(&params)),
             ("serve-quantized", quant.mean_s, qp.resident_param_bytes()),
+            ("serve-quantized-telemetry", quant_tel.mean_s, qp.resident_param_bytes()),
         ] {
             let tok_s = total_tokens / mean_s;
             serve_rows.push(format!(

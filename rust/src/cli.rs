@@ -16,6 +16,7 @@ use crate::search::Objective;
 use crate::tensor::Tensor;
 use crate::util::cliargs::Args;
 use crate::util::rng::XorShift;
+use crate::util::telemetry::{self, MetricsServer, Telemetry};
 
 pub const USAGE: &str = "\
 daq — Delta-Aware Quantization pipeline (paper reproduction)
@@ -54,6 +55,10 @@ COMMANDS:
                they are cross-checked and any disagreement is an error)
              --graph PATH (traced-graph sidecar; default is the
                checkpoint's sibling <stem>.graph.dts / DIR/graph.dts)
+             --metrics-out FILE (streaming only: snapshot the telemetry
+               registry to FILE as JSON at every shard-roll boundary)
+             --trace-out FILE (streaming only: structured JSONL trace,
+               one object per span/event with monotonic timestamps)
   trace      Record the checkpoint's dataflow graph (index-only — no
              payload is read) and persist it as a DTS sidecar so
              streaming runs can derive transform groups for any tensor
@@ -96,6 +101,9 @@ COMMANDS:
                of queueing; native scheduler only)
              --engine native|pjrt (default native; pjrt serves the AOT
                artifact through the full-reforward loop)
+             --metrics-addr HOST:PORT (serve Prometheus-style text on
+               GET /metrics from a background thread while running,
+               e.g. --metrics-addr 127.0.0.1:9184)
   inspect    Print a container's metadata and tensor index (dtype, shape,
              payload bytes, totals) for a .dts file, a sharded-store
              directory, or a manifest.json
@@ -113,6 +121,16 @@ COMMANDS:
 ";
 
 pub fn dispatch(args: &Args) -> Result<()> {
+    // one telemetry registry per invocation, installed as the calling
+    // thread's context — every subsystem (pipeline, sweep, serve, shard
+    // writer) finds it through `telemetry::current()`; library callers
+    // that never install one get the passive default for free
+    let run_id = format!(
+        "{}-{}",
+        args.subcommand.as_deref().unwrap_or("help"),
+        std::process::id()
+    );
+    let _tg = telemetry::set_current(Telemetry::new(&run_id));
     match args.subcommand.as_deref() {
         Some("quantize") => cmd_quantize(args),
         Some("trace") => cmd_trace(args),
@@ -180,7 +198,7 @@ fn cmd_quantize(args: &Args) -> Result<()> {
     }
     // refuse rather than silently ignore: the in-memory path always uses
     // ARTIFACTS/calib.dts and the name-pattern grouping
-    for flag in ["groups", "calib", "group-source", "graph"] {
+    for flag in ["groups", "calib", "group-source", "graph", "metrics-out", "trace-out"] {
         if args.get(flag).is_some() {
             bail!("--{flag} requires --stream");
         }
@@ -215,6 +233,10 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         out.write_checkpoint(path, &lab.post.meta)?;
         println!("wrote {path}");
     }
+    let phases = telemetry::current().snapshot().render();
+    if !phases.is_empty() {
+        println!("{phases}");
+    }
     Ok(())
 }
 
@@ -246,6 +268,10 @@ fn cmd_quantize_stream(args: &Args) -> Result<()> {
         .map_err(|e| anyhow!(e))? as u64)
         << 20;
     cfg.resume = args.flag("resume");
+    cfg.metrics_out = args.get("metrics-out").map(PathBuf::from);
+    if let Some(p) = args.get("trace-out") {
+        telemetry::current().set_trace_out(Path::new(p))?;
+    }
     // refuse rather than silently ignore flags the method cannot use
     // (validated before any checkpoint I/O so mistakes fail fast)
     if cfg.method.delta_defined() {
@@ -348,6 +374,12 @@ fn cmd_quantize_stream(args: &Args) -> Result<()> {
         cfg.depth
     );
     println!("wrote {}", out.manifest.display());
+    // phase attribution (gate-wait vs read vs compute vs write) + fault
+    // counters, printed at the end of every run without any flags
+    let phases = out.telemetry.render();
+    if !phases.is_empty() {
+        println!("{phases}");
+    }
     Ok(())
 }
 
@@ -558,6 +590,12 @@ fn print_serve_report(rep: &crate::serve::ServeReport, engine: &str, f32_bytes: 
             f32_bytes as f64 / (1 << 20) as f64,
         );
     }
+    // phase attribution (prefill vs decode vs queue wait) + shed/evict
+    // counters, printed at the end of every run without any flags
+    let phases = rep.telemetry.render();
+    if !phases.is_empty() {
+        println!("{phases}");
+    }
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -567,6 +605,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let store = args.get("store");
     let dir = args.str_or("artifacts", "artifacts");
     let reqs = crate::serve::gen_requests(n, 42);
+
+    // live observability: a background thread serves the registry as
+    // Prometheus text on GET /metrics for the whole run (both engines);
+    // the binding stays alive until this command returns
+    let _metrics_server = args
+        .get("metrics-addr")
+        .map(|addr| MetricsServer::bind(addr, telemetry::current()))
+        .transpose()?;
 
     // PJRT serves the AOT full-sequence graph via the reforward loop;
     // the incremental scheduler is native-only.
@@ -869,6 +915,8 @@ mod tests {
             "--method",
             "--group-source",
             "--graph",
+            "--metrics-out",
+            "--trace-out",
         ] {
             assert!(USAGE.contains(flag), "{flag} missing from usage");
         }
@@ -880,6 +928,7 @@ mod tests {
             "--batch",
             "--deadline-ms",
             "--queue-budget",
+            "--metrics-addr",
         ] {
             assert!(USAGE.contains(flag), "{flag} missing from usage");
         }

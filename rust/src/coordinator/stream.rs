@@ -55,6 +55,7 @@ use crate::quant::{Granularity, QuantizedTensor};
 use crate::search::TiledSweep;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
+use crate::util::telemetry::{self, Snapshot, Telemetry};
 use crate::util::timer::time;
 
 use super::group::{GroupPlan, GroupSource, Unit};
@@ -92,6 +93,10 @@ pub struct StreamConfig {
     /// Per-payload CRC-32 checksums in the output shards (v2 containers).
     /// On by default; the bench turns it off to isolate the overhead.
     pub checksums: bool,
+    /// Snapshot the telemetry registry to this file at every shard-roll
+    /// boundary (`--metrics-out metrics.json`). The snapshot is a whole
+    /// document rewrite, so a crashed run leaves the last consistent one.
+    pub metrics_out: Option<PathBuf>,
 }
 
 impl StreamConfig {
@@ -107,6 +112,7 @@ impl StreamConfig {
             max_retries: 3,
             retry_base_ms: 10,
             checksums: true,
+            metrics_out: None,
         }
     }
 }
@@ -136,6 +142,9 @@ pub struct StreamOutcome {
     /// these.
     pub quarantined: Vec<String>,
     pub total_secs: f64,
+    /// End-of-run view of the run's telemetry registry (phase spans,
+    /// fault counters). Empty when no telemetry context was installed.
+    pub telemetry: Snapshot,
 }
 
 // ---------------------------------------------------------------------
@@ -325,6 +334,17 @@ fn read_with_retry<T>(
             Ok(v) => return Ok(v),
             Err(e) if attempt < cfg.max_retries && crate::io::fault::is_transient(&e) => {
                 attempt += 1;
+                // retries are rare by construction; registry lookups here
+                // are off the hot path
+                let tel = telemetry::current();
+                tel.counter("stream.retries").incr();
+                tel.event(
+                    "stream.retry",
+                    &[
+                        ("attempt", telemetry::field(attempt)),
+                        ("error", telemetry::field(format!("{e:#}"))),
+                    ],
+                );
                 let shift = (attempt - 1).min(10) as u32;
                 let delay = cfg.retry_base_ms.saturating_mul(1 << shift);
                 if delay > 0 {
@@ -507,10 +527,15 @@ pub fn run_stream(
         );
     }
 
+    let tel = telemetry::current();
     let (out, total_secs) =
         time(|| run_stream_inner(post, base, quantizable, calib, out_dir, cfg));
     let mut out = out?;
     out.total_secs = total_secs;
+    out.telemetry = tel.snapshot();
+    if let Some(p) = &cfg.metrics_out {
+        tel.write_metrics_file(p)?;
+    }
     Ok(out)
 }
 
@@ -660,15 +685,30 @@ fn run_stream_inner(
 
     let (gate, live, peak, job_rx) = (&gate, &live, &peak, &job_rx);
 
+    // scoped threads don't inherit the spawner's thread-local telemetry;
+    // re-install the run's instance on every stage thread
+    let tel = telemetry::current();
+
     let writer_out: Result<WriterOut> = std::thread::scope(|s| {
         // stage 1: prefetch whole units through the gate, retrying
         // transient faults and quarantining persistently corrupt units
         let prefetch_done_tx = done_tx.clone();
+        let tel_prefetch = tel.clone();
         s.spawn(move || {
+            let _tg = telemetry::set_current(tel_prefetch.clone());
             for (idx, unit) in todo {
-                if !gate.acquire() {
+                let admitted = {
+                    let _s = tel_prefetch.span("stream.gate_wait");
+                    gate.acquire()
+                };
+                if !admitted {
                     return; // aborted by the writer
                 }
+                let read_span = crate::span!(
+                    tel_prefetch,
+                    "stream.read",
+                    "unit" = unit.label(),
+                );
                 let msg = read_with_retry(cfg, || -> Result<UnitJob> {
                     let mut in_bytes = 0usize;
                     let mut members = Vec::with_capacity(unit.members().len());
@@ -711,6 +751,7 @@ fn run_stream_inner(
                     add_live(live, peak, in_bytes);
                     Ok(UnitJob { idx, unit: unit.clone(), members, act, ln_params, in_bytes })
                 });
+                drop(read_span);
                 match msg {
                     Ok(job) => {
                         if job_tx.send(Ok(job)).is_err() {
@@ -740,7 +781,9 @@ fn run_stream_inner(
         // stage 2: quantize on `outer` workers × `intra` tile threads
         for _ in 0..outer {
             let done_tx = done_tx.clone();
+            let tel_worker = tel.clone();
             s.spawn(move || {
+                let _tg = telemetry::set_current(tel_worker.clone());
                 let engine = TiledSweep::new(intra);
                 loop {
                     let msg = job_rx.lock().unwrap().recv();
@@ -753,9 +796,14 @@ fn run_stream_inner(
                         Ok(Ok(j)) => j,
                     };
                     let UnitJob { idx, unit, members, act, ln_params, in_bytes } = job;
-                    let quantized = quantize_unit(
-                        &unit, members, act, ln_params, cfg, &engine,
-                    );
+                    let quantized = {
+                        let _s = crate::span!(
+                            tel_worker,
+                            "stream.compute",
+                            "unit" = unit.label(),
+                        );
+                        quantize_unit(&unit, members, act, ln_params, cfg, &engine)
+                    };
                     let (outcomes, tensors) = match quantized {
                         Ok(v) => v,
                         Err(e) => {
@@ -784,7 +832,9 @@ fn run_stream_inner(
         drop(done_tx);
 
         // stage 3: write completed units in fixed plan order
+        let tel_writer = tel.clone();
         let h = s.spawn(move || -> Result<WriterOut> {
+            let _tg = telemetry::set_current(tel_writer);
             let r = write_stage(
                 done_rx,
                 expected,
@@ -859,7 +909,8 @@ fn run_stream_inner(
         peak_live_bytes: peak.load(Ordering::SeqCst),
         max_unit_bytes,
         quarantined,
-        total_secs: 0.0, // stamped by run_stream
+        total_secs: 0.0,               // stamped by run_stream
+        telemetry: Snapshot::default(), // stamped by run_stream
     })
 }
 
@@ -889,6 +940,29 @@ fn write_stage(
     let mut pending_lines = String::new();
     let mut max_unit = 0usize;
 
+    // handles hoisted out of the drain loop: updates are lock-free
+    let tel = telemetry::current();
+    let quarantine_counter = tel.counter("stream.quarantined");
+    let write_hist = tel.histogram("stream.write.seconds");
+    let quarantine = |counter: &crate::util::telemetry::Counter,
+                      label: &str,
+                      error: &str| {
+        counter.incr();
+        tel.event(
+            "stream.quarantine",
+            &[
+                ("unit", telemetry::field(label)),
+                ("error", telemetry::field(error)),
+            ],
+        );
+    };
+    let roll_snapshot = |tel: &Telemetry| -> Result<()> {
+        match &cfg.metrics_out {
+            Some(p) => tel.write_metrics_file(p),
+            None => Ok(()),
+        }
+    };
+
     let flush_lines =
         |journal: &mut std::fs::File, lines: &mut String| -> Result<()> {
             if !lines.is_empty() {
@@ -915,6 +989,7 @@ fn write_stage(
                     // structured record; nothing of the unit lands in
                     // shards, so a repaired resume re-plans exactly it
                     pending_lines.push_str(&quarantine_line(&label, &error));
+                    quarantine(&quarantine_counter, &label, &error);
                     quarantined.push(label);
                     gate.release();
                     continue;
@@ -922,8 +997,11 @@ fn write_stage(
             };
             let Done { unit, outcomes, tensors, out_bytes, footprint, .. } = d;
             max_unit = max_unit.max(footprint);
-            for (name, t) in &tensors {
-                writer.append(name, t)?;
+            {
+                let _s = crate::span!(tel, "stream.write", "unit" = unit.label());
+                for (name, t) in &tensors {
+                    writer.append(name, t)?;
+                }
             }
             let shard = shard_file_name(writer.current_shard_index());
             pending_lines.push_str(&match &unit {
@@ -939,6 +1017,7 @@ fn write_stage(
                 // are always recorded (resume safety invariant)
                 flush_lines(journal, &mut pending_lines)?;
                 writer.roll()?;
+                roll_snapshot(&tel)?;
             }
         }
     }
@@ -961,7 +1040,9 @@ fn write_stage(
         let t = match read_with_retry(cfg, || post.read_tensor(&name)) {
             Ok(t) => t,
             Err(e) if is_quarantinable(&e) => {
-                pending_lines.push_str(&quarantine_line(&name, &format!("{e:#}")));
+                let err = format!("{e:#}");
+                pending_lines.push_str(&quarantine_line(&name, &err));
+                quarantine(&quarantine_counter, &name, &err);
                 quarantined.push(name.clone());
                 continue;
             }
@@ -970,17 +1051,22 @@ fn write_stage(
         let bytes = t.nbytes();
         max_unit = max_unit.max(bytes);
         add_live(live, peak, bytes);
-        writer.append(&name, &t)?;
+        {
+            let _t = write_hist.start_timer();
+            writer.append(&name, &t)?;
+        }
         drop(t);
         sub_live(live, bytes);
         if writer.current_bytes() >= shard_budget {
             flush_lines(journal, &mut pending_lines)?;
             writer.roll()?;
+            roll_snapshot(&tel)?;
         }
     }
 
     flush_lines(journal, &mut pending_lines)?;
     writer.roll()?;
+    roll_snapshot(&tel)?;
     Ok((computed, max_unit, quarantined))
 }
 

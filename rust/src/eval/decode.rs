@@ -26,6 +26,7 @@ use anyhow::{anyhow, bail, Result};
 use crate::quant::matvec_quant_into;
 use crate::tensor::ops::gelu;
 use crate::tensor::Tensor;
+use crate::util::telemetry;
 
 use super::model_native::ModelCfg;
 use super::quantstore::{QParam, QuantizedParams};
@@ -228,6 +229,10 @@ pub struct Decoder<'p> {
     src: &'p dyn ParamSource,
     pub cfg: ModelCfg,
     layers: Vec<LayerNames>,
+    /// Captured once at construction from the builder thread's telemetry
+    /// context: `step` is the serving hot loop and must not touch the
+    /// registry (or thread-locals) per token.
+    steps: telemetry::Counter,
 }
 
 impl<'p> Decoder<'p> {
@@ -246,7 +251,8 @@ impl<'p> Decoder<'p> {
                 w2: format!("l{l}.w2"),
             })
             .collect();
-        Decoder { src, cfg, layers }
+        let steps = telemetry::current().counter("decode.steps");
+        Decoder { src, cfg, layers, steps }
     }
 
     pub fn session(&self) -> DecodeSession {
@@ -378,6 +384,7 @@ impl<'p> Decoder<'p> {
         let mut logits = vec![0.0f32; cfg.vocab];
         self.src.matvec_into("head", h, &mut logits, scratch_v)?;
         *s_pos += 1;
+        self.steps.incr();
         Ok(logits)
     }
 

@@ -35,6 +35,7 @@ use crate::io::dts::{
 };
 use crate::util::crc32::Crc32;
 use crate::util::json::Json;
+use crate::util::telemetry::{self, Counter};
 
 /// Manifest file name inside a sharded-store directory.
 pub const MANIFEST_NAME: &str = "manifest.json";
@@ -197,6 +198,28 @@ pub struct ShardWriter {
     cur_entries: Vec<TensorEntry>,
     cur_bytes: u64,
     part: Option<BufWriter<File>>,
+    tel: WriterTelemetry,
+}
+
+/// Counter handles captured from the constructing thread's telemetry
+/// context — the writer itself may later run on a different thread (the
+/// streaming pipeline hands it to the writer stage), so the handles are
+/// bound once at `create`/`resume` time.
+struct WriterTelemetry {
+    rolls: Counter,
+    crc_verified: Counter,
+    bytes_written: Counter,
+}
+
+impl WriterTelemetry {
+    fn capture() -> WriterTelemetry {
+        let tel = telemetry::current();
+        WriterTelemetry {
+            rolls: tel.counter("shard.rolls"),
+            crc_verified: tel.counter("shard.checksum_verified"),
+            bytes_written: tel.counter("shard.bytes_written"),
+        }
+    }
 }
 
 impl ShardWriter {
@@ -220,6 +243,7 @@ impl ShardWriter {
             cur_entries: Vec::new(),
             cur_bytes: 0,
             part: None,
+            tel: WriterTelemetry::capture(),
         })
     }
 
@@ -269,6 +293,7 @@ impl ShardWriter {
             cur_entries: Vec::new(),
             cur_bytes: 0,
             part: None,
+            tel: WriterTelemetry::capture(),
         })
     }
 
@@ -332,6 +357,7 @@ impl ShardWriter {
             crc32: self.checksums.then(|| payload_crc32(t)),
         });
         self.cur_bytes += t.nbytes() as u64;
+        self.tel.bytes_written.add(t.nbytes() as u64);
         Ok(())
     }
 
@@ -378,6 +404,7 @@ impl ShardWriter {
                     e.nbytes
                 );
             }
+            self.tel.crc_verified.incr();
         }
         Ok(())
     }
@@ -429,6 +456,7 @@ impl ShardWriter {
         });
         self.cur_entries.clear();
         self.cur_bytes = 0;
+        self.tel.rolls.incr();
         Ok(())
     }
 

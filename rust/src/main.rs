@@ -12,17 +12,18 @@
 
 use daq::cli;
 use daq::util::cliargs::Args;
+use daq::util::telemetry;
 
 fn main() {
     let args = match Args::from_env() {
         Ok(a) => a,
         Err(e) => {
-            eprintln!("error: {e}\n{}", cli::USAGE);
+            telemetry::warn(&format!("error: {e}\n{}", cli::USAGE));
             std::process::exit(2);
         }
     };
     if let Err(e) = cli::dispatch(&args) {
-        eprintln!("error: {e:#}");
+        telemetry::warn(&format!("error: {e:#}"));
         std::process::exit(1);
     }
 }

@@ -24,6 +24,7 @@ use super::tile::{self, eval_tile, sign_i8, TileView};
 use super::DeltaStats;
 use crate::quant::ScaleGrid;
 use crate::tensor::Tensor;
+use crate::util::telemetry;
 use crate::util::threadpool::par_map_slice;
 
 /// Precomputed candidate-invariant sweep state for one (layer,
@@ -130,6 +131,15 @@ impl SweepPlan {
         if nc == 0 {
             return Vec::new();
         }
+        // telemetry handles resolve on the calling thread (which owns the
+        // installed context); the tile closure captures the plain atomic
+        // handles, so pool threads need no context of their own. All
+        // observations are count-valued or commuting adds, keeping
+        // snapshots bitwise-identical for every worker count.
+        let tel = telemetry::current();
+        let tile_hist = tel.histogram("sweep.tile.seconds");
+        let cand_hist = tel.histogram("sweep.tile.candidates");
+        let t0 = tel.enabled().then(std::time::Instant::now);
         let nr = self.scales.len();
         // per-candidate scale and reciprocal tables: the only divisions in
         // the whole evaluation (candidates × regions, not × elements)
@@ -149,6 +159,8 @@ impl SweepPlan {
             .map(|lo| (lo, (lo + self.tile).min(n_elems)))
             .collect();
         let parts = par_map_slice(workers, &tiles, |&(lo, hi)| {
+            let _t = tile_hist.start_timer();
+            cand_hist.observe(nc as f64);
             eval_tile(
                 &TileView {
                     p: &self.p[lo..hi],
@@ -181,6 +193,15 @@ impl SweepPlan {
         }
         for st in &mut stats {
             st.npost = self.npost;
+        }
+        if let Some(t0) = t0 {
+            let evaluated = (nc * n_elems) as u64;
+            tel.counter("sweep.candidates_evaluated").add(evaluated);
+            let secs = t0.elapsed().as_secs_f64();
+            if secs > 0.0 {
+                tel.gauge("sweep.melem_per_s")
+                    .set(evaluated as f64 / secs / 1e6);
+            }
         }
         stats
     }

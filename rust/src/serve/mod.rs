@@ -26,6 +26,7 @@ use anyhow::{bail, Result};
 use crate::eval::decode::TokenDecoder;
 use crate::eval::ForwardFn;
 use crate::util::rng::XorShift;
+use crate::util::telemetry::{self, Snapshot};
 use crate::util::timer::LatencyStats;
 
 /// Token constants mirroring `python/compile/corpus.py`.
@@ -134,6 +135,10 @@ pub struct ServeReport {
     /// Requests dropped because their decode step returned an error or
     /// panicked; the failure is contained to the slot.
     pub errored: usize,
+    /// End-of-run view of the run's telemetry registry (prefill/decode/
+    /// queue-wait histograms, shed/evict counters, occupancy gauges).
+    /// Empty when no telemetry context was installed.
+    pub telemetry: Snapshot,
 }
 
 fn argmax(row: &[f32]) -> usize {
@@ -192,6 +197,21 @@ pub fn serve<D: TokenDecoder>(
             _ => queue.push_back(idx),
         }
     }
+
+    // telemetry handles hoisted out of the scheduler loop: every update
+    // below is one relaxed atomic op (or a no-op without a context)
+    let tel = telemetry::current();
+    let prefill_hist = tel.histogram("serve.prefill.seconds");
+    let decode_hist = tel.histogram("serve.decode.seconds");
+    let queue_hist = tel.histogram("serve.queue_wait.seconds");
+    let shed_counter = tel.counter("serve.shed");
+    let timed_out_counter = tel.counter("serve.timed_out");
+    let errored_counter = tel.counter("serve.errored");
+    let completed_counter = tel.counter("serve.completed");
+    let occupancy_gauge = tel.gauge("serve.slot_occupancy");
+    tel.gauge("serve.resident_param_bytes")
+        .set(dec.resident_param_bytes() as f64);
+    shed_counter.add(shed as u64);
     let mut slots: Vec<Option<Active<D::Session>>> = Vec::new();
     slots.resize_with(cfg.slots, || None);
     let mut completions: Vec<Vec<i32>> = vec![Vec::new(); requests.len()];
@@ -246,14 +266,20 @@ pub fn serve<D: TokenDecoder>(
                 // per-request latency really is admission -> completion
                 // (prompt replay included)
                 let admitted = Instant::now();
+                queue_hist.observe(admitted.duration_since(t_all).as_secs_f64());
                 let mut session = dec.start();
-                for &tok in &prompt[..prompt.len() - 1] {
-                    if step_isolated(&mut session, tok).is_err() {
-                        // contained: this request is dropped and the
-                        // slot admits the next queued one
-                        errored += 1;
-                        continue 'admit;
-                    }
+                let prefill_ok = {
+                    let _t = prefill_hist.start_timer();
+                    prompt[..prompt.len() - 1]
+                        .iter()
+                        .all(|&tok| step_isolated(&mut session, tok).is_ok())
+                };
+                if !prefill_ok {
+                    // contained: this request is dropped and the
+                    // slot admits the next queued one
+                    errored += 1;
+                    errored_counter.incr();
+                    continue 'admit;
                 }
                 // room left in the position table caps the generation
                 // budget (feeding the token at position p needs p < max_pos)
@@ -267,6 +293,7 @@ pub fn serve<D: TokenDecoder>(
                     admitted,
                 };
                 if budget == 0 {
+                    completed_counter.incr();
                     complete(
                         a,
                         &mut completions,
@@ -282,6 +309,7 @@ pub fn serve<D: TokenDecoder>(
         }
 
         let active = slots.iter().filter(|s| s.is_some()).count();
+        occupancy_gauge.set(active as f64);
         peak_active = peak_active.max(active);
         if active == 0 {
             if queue.is_empty() {
@@ -303,6 +331,7 @@ pub fn serve<D: TokenDecoder>(
             if expired {
                 let late = slot.take().expect("checked");
                 timed_out += 1;
+                timed_out_counter.incr();
                 complete(
                     late,
                     &mut completions,
@@ -312,11 +341,16 @@ pub fn serve<D: TokenDecoder>(
                 );
                 continue;
             }
-            let logits = match step_isolated(&mut a.session, a.next_input) {
+            let stepped = {
+                let _t = decode_hist.start_timer();
+                step_isolated(&mut a.session, a.next_input)
+            };
+            let logits = match stepped {
                 Ok(l) => l,
                 Err(_) => {
                     *slot = None;
                     errored += 1;
+                    errored_counter.incr();
                     continue;
                 }
             };
@@ -326,6 +360,7 @@ pub fn serve<D: TokenDecoder>(
             total_generated += 1;
             if a.generated.len() >= a.budget {
                 let done = slot.take().expect("checked");
+                completed_counter.incr();
                 complete(
                     done,
                     &mut completions,
@@ -359,6 +394,7 @@ pub fn serve<D: TokenDecoder>(
         shed,
         timed_out,
         errored,
+        telemetry: tel.snapshot(),
     })
 }
 
@@ -454,6 +490,7 @@ pub fn serve_reforward(
         shed: 0,
         timed_out: 0,
         errored: 0,
+        telemetry: telemetry::current().snapshot(),
     })
 }
 

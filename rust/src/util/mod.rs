@@ -1,9 +1,11 @@
 //! In-repo substrates for everything the offline crate registry lacks:
-//! PRNG, property testing, CLI parsing, JSON, timing, and a thread pool.
+//! PRNG, property testing, CLI parsing, JSON, timing, telemetry, and a
+//! thread pool.
 //!
 //! The offline registry only carries the `xla` crate closure, so the usual
-//! suspects (rand, proptest, clap, serde_json, criterion, rayon/tokio) are
-//! reimplemented here at the scale this project needs.
+//! suspects (rand, proptest, clap, serde_json, criterion, rayon/tokio,
+//! prometheus/tracing) are reimplemented here at the scale this project
+//! needs.
 
 pub mod bench;
 pub mod cliargs;
@@ -11,5 +13,6 @@ pub mod crc32;
 pub mod json;
 pub mod proptest;
 pub mod rng;
+pub mod telemetry;
 pub mod threadpool;
 pub mod timer;

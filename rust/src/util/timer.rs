@@ -1,5 +1,9 @@
 //! Lightweight wall-clock timing helpers used across benches and the
 //! coordinator's progress reporting.
+//!
+//! Phase breakdowns live in `util::telemetry` (spans recording into
+//! `<name>.seconds` histograms); this module keeps only the primitives
+//! that don't need a registry.
 
 use std::time::Instant;
 
@@ -8,41 +12,6 @@ pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
     let t0 = Instant::now();
     let out = f();
     (out, t0.elapsed().as_secs_f64())
-}
-
-/// Simple accumulating stopwatch for phase breakdowns.
-#[derive(Default)]
-pub struct Stopwatch {
-    phases: Vec<(String, f64)>,
-}
-
-impl Stopwatch {
-    pub fn new() -> Self {
-        Self::default()
-    }
-
-    pub fn measure<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
-        let (out, secs) = time(f);
-        self.phases.push((name.to_string(), secs));
-        out
-    }
-
-    pub fn phases(&self) -> &[(String, f64)] {
-        &self.phases
-    }
-
-    pub fn total(&self) -> f64 {
-        self.phases.iter().map(|(_, s)| s).sum()
-    }
-
-    pub fn report(&self) -> String {
-        let mut out = String::new();
-        for (name, secs) in &self.phases {
-            out.push_str(&format!("{name:<28} {:>9.3}s\n", secs));
-        }
-        out.push_str(&format!("{:<28} {:>9.3}s\n", "TOTAL", self.total()));
-        out
-    }
 }
 
 /// Latency statistics accumulator (used by the serving loop).
@@ -102,15 +71,6 @@ mod tests {
         });
         assert_eq!(v, 42);
         assert!(secs >= 0.009, "{secs}");
-    }
-
-    #[test]
-    fn stopwatch_accumulates() {
-        let mut sw = Stopwatch::new();
-        sw.measure("a", || ());
-        sw.measure("b", || ());
-        assert_eq!(sw.phases().len(), 2);
-        assert!(sw.report().contains("TOTAL"));
     }
 
     #[test]

@@ -39,7 +39,9 @@ use daq::io::TensorSource;
 use daq::quant::Granularity;
 use daq::serve::{gen_requests, serve, ServeConfig};
 use daq::tensor::Tensor;
+use daq::util::json::Json;
 use daq::util::rng::XorShift;
+use daq::util::telemetry::{self, Telemetry};
 
 fn tmp(tag: &str) -> PathBuf {
     std::env::temp_dir().join(format!("daq_faulttest_{tag}_{}", std::process::id()))
@@ -509,4 +511,123 @@ fn slow_decoder_requests_all_die_at_the_deadline() {
     for gen in &rep.completions {
         assert!(gen.is_empty(), "no tokens fit inside the deadline");
     }
+}
+
+// ---------------------------------------------------------------------
+// 5. Telemetry: the trace is a faithful journal of the chaos.
+// ---------------------------------------------------------------------
+
+/// Under mixed transient + persistent fault injection the JSONL trace
+/// stays well-formed — every line parses, timestamps are monotone, and
+/// every retry and every quarantine the pipeline performed has exactly
+/// one matching trace event (cross-checked against the registry
+/// counters and the outcome's quarantine list).
+#[test]
+fn trace_journal_is_well_formed_under_chaos() {
+    let (post, base) = fake_ckpts(37, 6, 16);
+    let all_names: Vec<String> = TensorSource::names(&post);
+    let quantizable = quantizable_from_source(&post);
+    let mut cfg = chaos_stream_cfg();
+    cfg.max_retries = 12;
+
+    // probe the seed until (a) the very first shared-RNG draw injects a
+    // transient fault — so the run provably retries at least once — and
+    // (b) the per-name persistent fault set afflicts some but not all
+    // quantizable layers — so the run both quarantines and progresses.
+    // Persistent faults are checked before the transient draw, so the
+    // probe's marker-based classification predicts the run exactly.
+    let rate = 0.2;
+    let mut fcfg = FaultConfig {
+        read_error_rate: rate,
+        flip_rate: 0.25,
+        truncate_rate: 0.1,
+        ..Default::default()
+    };
+    let mut found = false;
+    for k in 0..4096u64 {
+        fcfg.seed = fault_seed().wrapping_add(k.wrapping_mul(0x9E37_79B9));
+        if XorShift::new(fcfg.seed).f64() >= rate {
+            continue;
+        }
+        let probe = FaultSource::new(&post, fcfg);
+        let afflicted: BTreeSet<String> = all_names
+            .iter()
+            .filter(|n| {
+                probe
+                    .read_tensor(n)
+                    .err()
+                    .is_some_and(|e| format!("{e:#}").contains(PERSISTENT_MARKER))
+            })
+            .cloned()
+            .collect();
+        let hit = quantizable.iter().filter(|q| afflicted.contains(*q)).count();
+        if hit >= 1 && hit < quantizable.len() && afflicted.len() < all_names.len() {
+            found = true;
+            break;
+        }
+    }
+    assert!(found, "no usable fault seed in 4096 probes");
+
+    let tel = Telemetry::new("chaos-trace");
+    let trace = tmp("trace_journal").with_extension("jsonl");
+    let _ = std::fs::remove_file(&trace);
+    tel.set_trace_out(&trace).unwrap();
+    let _tg = telemetry::set_current(tel);
+
+    let fs = FaultSource::new(&post, fcfg);
+    let out_dir = tmp("trace_out");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let outcome = run_stream(&fs, &base, &quantizable, None, &out_dir, &cfg).unwrap();
+    assert!(!outcome.quarantined.is_empty(), "probed seed must quarantine");
+
+    let text = std::fs::read_to_string(&trace).unwrap();
+    let mut last_ts = f64::NEG_INFINITY;
+    let (mut retries, mut quarantines, mut spans) = (0u64, 0u64, 0u64);
+    for (i, line) in text.lines().enumerate() {
+        let doc = Json::parse(line)
+            .unwrap_or_else(|e| panic!("trace line {i} unparseable ({e:?}): {line}"));
+        for key in ["ts_us", "run", "kind", "name"] {
+            assert!(doc.get(key).is_some(), "trace line {i} missing {key}: {line}");
+        }
+        assert_eq!(doc.get("run").and_then(Json::as_str), Some("chaos-trace"));
+        let ts = doc.get("ts_us").and_then(Json::as_f64).unwrap();
+        assert!(ts >= last_ts, "trace line {i}: ts_us went backwards");
+        last_ts = ts;
+        let kind = doc.get("kind").and_then(Json::as_str).unwrap();
+        let name = doc.get("name").and_then(Json::as_str).unwrap();
+        match kind {
+            "span" => {
+                spans += 1;
+                assert!(
+                    doc.get("dur_us").and_then(Json::as_f64).is_some_and(|d| d >= 0.0),
+                    "trace line {i}: span without dur_us"
+                );
+            }
+            "event" => match name {
+                "stream.retry" => {
+                    retries += 1;
+                    assert!(doc.get("attempt").is_some(), "retry event lost its attempt");
+                }
+                "stream.quarantine" => {
+                    quarantines += 1;
+                    let unit = doc.get("unit").and_then(Json::as_str).unwrap();
+                    assert!(
+                        outcome.quarantined.iter().any(|q| unit.contains(q.as_str())),
+                        "quarantine event for unknown unit {unit:?}"
+                    );
+                }
+                _ => {}
+            },
+            other => panic!("trace line {i}: unknown kind {other:?}"),
+        }
+    }
+    assert!(spans > 0, "no spans traced");
+    // 1:1 accounting: the trace neither drops nor invents faults
+    assert!(retries > 0, "probed seed must retry at least once");
+    assert_eq!(retries, outcome.telemetry.counters["stream.retries"]);
+    assert_eq!(quarantines, outcome.quarantined.len() as u64);
+    assert_eq!(quarantines, outcome.telemetry.counters["stream.quarantined"]);
+
+    std::fs::remove_dir_all(&out_dir).unwrap();
+    std::fs::remove_file(&trace).unwrap();
 }

@@ -32,7 +32,9 @@ use daq::io::shard::{shard_dts_file, ShardedDts};
 use daq::quant::Granularity;
 use daq::search::Objective;
 use daq::tensor::Tensor;
+use daq::util::json::Json;
 use daq::util::rng::XorShift;
+use daq::util::telemetry::{self, Telemetry};
 
 fn tmp(tag: &str) -> PathBuf {
     std::env::temp_dir().join(format!("daq_streamtest_{tag}_{}", std::process::id()))
@@ -961,4 +963,117 @@ fn stream_determinism_across_workers_and_depth() {
     assert_stores_identical(&anchor_dir, &cell_dir);
     std::fs::remove_dir_all(&anchor_dir).unwrap();
     std::fs::remove_dir_all(&cell_dir).unwrap();
+}
+
+/// Telemetry inherits the sweep's determinism contract: counters are
+/// commuting atomic adds and every histogram records once per
+/// unit/tile/append, so the snapshot's count-type metrics are
+/// bitwise-identical for any worker count. Only wall-time-valued
+/// metrics (gauges, histogram sums over seconds) may differ.
+#[test]
+fn telemetry_snapshot_deterministic_across_worker_counts() {
+    let (post, base) = fake_ckpts(91, 6, 24);
+    let quantizable = quantizable_from_source(&post);
+    let method = Method::Search {
+        objective: Objective::SignRate,
+        range: (0.8, 1.25),
+    };
+
+    let run = |workers: usize, tag: &str| {
+        let _tg = telemetry::set_current(Telemetry::new(&format!("det-w{workers}")));
+        let out_dir = tmp(tag);
+        let _ = std::fs::remove_dir_all(&out_dir);
+        let mut cfg = StreamConfig::new(Granularity::Block(16), method.clone(), workers);
+        cfg.shard_budget = 8192;
+        let out =
+            run_stream(&post, &base, &quantizable, None, &out_dir, &cfg).unwrap();
+        std::fs::remove_dir_all(&out_dir).unwrap();
+        out.telemetry
+    };
+    let a = run(1, "tel_det_w1");
+    let b = run(4, "tel_det_w4");
+
+    // the full counter map — retries, quarantines, shard rolls, bytes
+    // written, candidates evaluated — is identical, not merely close
+    assert_eq!(a.counters, b.counters);
+    assert!(a.counters["shard.rolls"] >= 1);
+    assert!(a.counters["shard.bytes_written"] > 0);
+    assert!(a.counters["sweep.candidates_evaluated"] > 0);
+    assert_eq!(a.counters["stream.quarantined"], 0);
+
+    // same histograms registered, same observation counts everywhere
+    assert_eq!(
+        a.histograms.keys().collect::<Vec<_>>(),
+        b.histograms.keys().collect::<Vec<_>>()
+    );
+    for (name, ha) in &a.histograms {
+        assert_eq!(ha.count, b.histograms[name].count, "{name} count");
+    }
+    assert!(a.histograms["stream.compute.seconds"].count > 0);
+
+    // count-valued observations (candidates per tile): the entire bucket
+    // vector and the exact integer-valued sum are bitwise-identical
+    let (ca, cb) = (&a.histograms["sweep.tile.candidates"], &b.histograms["sweep.tile.candidates"]);
+    assert!(ca.count > 0);
+    assert_eq!(ca.buckets, cb.buckets);
+    assert_eq!(ca.sum.to_bits(), cb.sum.to_bits());
+}
+
+/// `StreamConfig::metrics_out` materialises the registry as JSON at
+/// every shard-roll boundary plus end of run — an interrupted run still
+/// leaves its last-roll snapshot behind for inspection.
+#[test]
+fn telemetry_metrics_out_written_at_shard_rolls() {
+    let (post, base) = fake_ckpts(92, 4, 24);
+    let quantizable = quantizable_from_source(&post);
+    let _tg = telemetry::set_current(Telemetry::new("metrics-out-test"));
+
+    let out_dir = tmp("tel_mout");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let metrics = tmp("tel_mout_metrics").with_extension("json");
+    let _ = std::fs::remove_file(&metrics);
+    let mut cfg = test_stream_cfg(
+        Granularity::Block(16),
+        Method::Search { objective: Objective::SignRate, range: (0.8, 1.25) },
+    );
+    cfg.shard_budget = 8192;
+    cfg.metrics_out = Some(metrics.clone());
+    let out = run_stream(&post, &base, &quantizable, None, &out_dir, &cfg).unwrap();
+    assert!(!out.telemetry.is_empty());
+
+    let text = std::fs::read_to_string(&metrics).unwrap();
+    let doc = Json::parse(&text).unwrap();
+    assert_eq!(doc.get("run_id").and_then(Json::as_str), Some("metrics-out-test"));
+    for key in ["bucket_bounds", "counters", "gauges", "histograms"] {
+        assert!(doc.get(key).is_some(), "metrics.json missing {key}");
+    }
+    let Some(Json::Obj(counters)) = doc.get("counters") else {
+        panic!("counters is not an object")
+    };
+    assert!(counters.values().all(|v| v.as_f64().unwrap() >= 0.0));
+    assert!(counters["shard.rolls"].as_f64().unwrap() >= 1.0);
+
+    std::fs::remove_dir_all(&out_dir).unwrap();
+    std::fs::remove_file(&metrics).unwrap();
+}
+
+/// Library callers that never install a context get the passive default
+/// registry: the run records nothing and the outcome snapshot is empty.
+/// (Context is thread-local, so concurrently running tests that do
+/// install one cannot leak into this thread.)
+#[test]
+fn telemetry_default_is_passive_for_library_callers() {
+    let (post, base) = fake_ckpts(93, 3, 24);
+    let quantizable = quantizable_from_source(&post);
+    let out_dir = tmp("tel_passive");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let mut cfg = test_stream_cfg(
+        Granularity::Block(16),
+        Method::Search { objective: Objective::SignRate, range: (0.8, 1.25) },
+    );
+    cfg.shard_budget = 8192;
+    let out = run_stream(&post, &base, &quantizable, None, &out_dir, &cfg).unwrap();
+    assert!(out.telemetry.is_empty(), "default registry must be passive");
+    assert_eq!(out.telemetry, Default::default());
+    std::fs::remove_dir_all(&out_dir).unwrap();
 }
