@@ -1,8 +1,9 @@
 #!/usr/bin/env bash
 # Tier-1 gate for the rust/ crate, split into CI lanes. Run from anywhere.
 #
-#   ci/rust.sh fast         style gates only: rustfmt + clippy (-D warnings) —
-#                           the quick PR signal, fails in a couple of minutes
+#   ci/rust.sh fast         style gates only: rustfmt + clippy (-D warnings) +
+#                           rustdoc (-D warnings, --no-deps) — the quick PR
+#                           signal, fails in a couple of minutes
 #   ci/rust.sh msrv         cargo check on the pinned MSRV toolchain (the
 #                           rust-fast matrix's second cell: fmt/clippy output
 #                           varies across versions, a type check does not)
@@ -33,6 +34,9 @@ mode="${1:-all}"
 run_fast() {
   cargo fmt --check
   cargo clippy --locked --all-targets -- -D warnings
+  # rustdoc is a gate, not a suggestion: broken intra-doc links or
+  # malformed doc comments fail the lane like any other warning
+  RUSTDOCFLAGS="-D warnings" cargo doc --locked --no-deps
 }
 
 run_msrv() {

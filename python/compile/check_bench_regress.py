@@ -37,6 +37,13 @@ telemetry layer: `pipeline-streaming-telemetry` vs `pipeline-streaming`
 (Melem/s) and `serve-quantized-telemetry` vs `serve-quantized`
 (tokens/s) must each stay within X of the uninstrumented row.
 
+`--mt-scaling X` is the intra-run gate for slot-parallel decode:
+`serve-quantized-mt` tokens/s must be >= X * `serve-quantized` for
+every (shape, granularity) that has both rows. Like the other
+intra-run gates it compares two rows of the same run, so runner noise
+cancels and the scaling floor is machine-independent (given the
+runner's advertised core count).
+
 Exit code 0 = no regression beyond the threshold.
 """
 
@@ -191,6 +198,46 @@ def check_telemetry_overhead(cur_rows: dict, overhead: float) -> None:
     print(f"ok: telemetry overhead within {overhead:.0%} on {pairs} pair(s)")
 
 
+def check_mt_scaling(cur_rows: dict, scaling: float) -> None:
+    """Intra-run gate: multi-threaded serve throughput at least
+    `scaling`x the single-threaded quantized row for every
+    (shape, granularity) pair present. Exits non-zero on breach or if
+    no pair exists at all."""
+    pairs = 0
+    breaches = []
+    for (variant, shape, gran), serial in sorted(cur_rows.items()):
+        if variant != "serve-quantized":
+            continue
+        mt = cur_rows.get(("serve-quantized-mt", shape, gran))
+        if mt is None:
+            continue
+        pairs += 1
+        mname, mserial = metric(serial)
+        mmt = mt.get(mname, 0.0)
+        floor = mserial * scaling
+        ratio = mmt / mserial if mserial else 0.0
+        status = "ok" if mmt >= floor else "MT SCALING"
+        print(
+            f"{status:>10}: {shape}/{gran}  mt {mmt:.2f} vs "
+            f"serial {mserial:.2f} tok/s ({ratio:.3f}x, floor {floor:.2f})"
+        )
+        if mmt < floor:
+            breaches.append((shape, gran))
+    if pairs == 0:
+        sys.exit(
+            "error: --mt-scaling was requested but no "
+            "(serve-quantized, serve-quantized-mt) row pair exists in "
+            "the current run"
+        )
+    if breaches:
+        names = ", ".join("/".join(b) for b in breaches)
+        sys.exit(
+            f"error: serve-quantized-mt scales below {scaling:.2f}x of "
+            f"the single-threaded quantized throughput on: {names}"
+        )
+    print(f"ok: mt scaling >= {scaling:.2f}x on {pairs} pair(s)")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", required=True, help="BENCH_sweep.json from this run")
@@ -218,6 +265,14 @@ def main() -> int:
         "(disabled unless given)",
     )
     ap.add_argument(
+        "--mt-scaling",
+        type=float,
+        default=None,
+        help="min required intra-run throughput ratio of "
+        "serve-quantized-mt vs serve-quantized "
+        "(disabled unless given)",
+    )
+    ap.add_argument(
         "--write-baseline",
         action="store_true",
         help="regenerate the baseline from the current run instead of gating",
@@ -240,6 +295,8 @@ def main() -> int:
         check_checksum_overhead(cur_rows, args.checksum_overhead)
     if args.telemetry_overhead is not None:
         check_telemetry_overhead(cur_rows, args.telemetry_overhead)
+    if args.mt_scaling is not None:
+        check_mt_scaling(cur_rows, args.mt_scaling)
 
     compared = 0
     regressions = []

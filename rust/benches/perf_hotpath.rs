@@ -452,6 +452,21 @@ fn main() {
         let quant = bench("serve quantized", 0, 3, || {
             serve(&qdec, &reqs, &scfg).unwrap()
         });
+        // slot-parallel decode: same quantized decoder, ticks fanned out
+        // across worker threads. Completions must stay bitwise-identical
+        // to the serial run (the determinism contract); tokens/s scaling
+        // vs the serial row is gated in CI via --mt-scaling.
+        let mt_workers = cores.clamp(1, slots);
+        let scfg_mt = ServeConfig { workers: mt_workers, ..scfg };
+        let quant_mt = bench("serve quantized mt", 0, 3, || {
+            serve(&qdec, &reqs, &scfg_mt).unwrap()
+        });
+        let rep_serial = serve(&qdec, &reqs, &scfg).unwrap();
+        let rep_mt = serve(&qdec, &reqs, &scfg_mt).unwrap();
+        assert_eq!(
+            rep_serial.completions, rep_mt.completions,
+            "multi-threaded serve must produce bitwise-identical completions"
+        );
         // same quantized workload with a live registry; the Decoder
         // captures its step counter at construction, so it is rebuilt
         // inside the instrumented context exactly like a real serve run.
@@ -470,18 +485,19 @@ fn main() {
         let gran = Granularity::Block(128);
         let mut t = Table::new(
             "Serving: full-reforward vs incremental vs quantized-resident",
-            &["variant", "slots", "mean ms", "tok/s", "resident MiB", "vs reforward"],
+            &["variant", "slots", "workers", "mean ms", "tok/s", "resident MiB", "vs reforward"],
         );
-        for (variant, mean_s, resident) in [
-            ("serve-reforward", reforward.mean_s, params_bytes(&params)),
-            ("serve-inmemory", inmem.mean_s, params_bytes(&params)),
-            ("serve-quantized", quant.mean_s, qp.resident_param_bytes()),
-            ("serve-quantized-telemetry", quant_tel.mean_s, qp.resident_param_bytes()),
+        for (variant, mean_s, resident, w) in [
+            ("serve-reforward", reforward.mean_s, params_bytes(&params), 1),
+            ("serve-inmemory", inmem.mean_s, params_bytes(&params), 1),
+            ("serve-quantized", quant.mean_s, qp.resident_param_bytes(), 1),
+            ("serve-quantized-mt", quant_mt.mean_s, qp.resident_param_bytes(), mt_workers),
+            ("serve-quantized-telemetry", quant_tel.mean_s, qp.resident_param_bytes(), 1),
         ] {
             let tok_s = total_tokens / mean_s;
             serve_rows.push(format!(
                 "{{\"shape\": \"{shape}\", \"granularity\": \"{}\", \
-                 \"variant\": \"{variant}\", \"workers\": {slots}, \
+                 \"variant\": \"{variant}\", \"workers\": {w}, \
                  \"mean_ms\": {:.4}, \"tokens_per_s\": {tok_s:.2}, \
                  \"resident_param_bytes\": {resident}, \
                  \"speedup_vs_reforward\": {:.3}}}",
@@ -492,6 +508,7 @@ fn main() {
             t.row(vec![
                 variant.into(),
                 slots.to_string(),
+                w.to_string(),
                 format!("{:.2}", mean_s * 1e3),
                 format!("{tok_s:.1}"),
                 format!("{:.3}", resident as f64 / (1 << 20) as f64),

@@ -99,6 +99,13 @@ COMMANDS:
              --queue-budget N (admission control: beyond N queued
                requests past the active slots, arrivals are shed instead
                of queueing; native scheduler only)
+             --serve-workers N (threads the tick fans active slots out
+               over, default = available cores; completions are
+               bitwise-identical for any value; native scheduler only)
+             --prefill-chunk N (max prompt tokens one prefill tick
+               consumes per slot, so a long prompt cannot head-of-line
+               block running decodes; 0 = whole prompt in one batched
+               forward, the default; native scheduler only)
              --engine native|pjrt (default native; pjrt serves the AOT
                artifact through the full-reforward loop)
              --metrics-addr HOST:PORT (serve Prometheus-style text on
@@ -567,10 +574,11 @@ fn cmd_tables(args: &Args) -> Result<()> {
 
 fn print_serve_report(rep: &crate::serve::ServeReport, engine: &str, f32_bytes: usize) {
     println!(
-        "served {} requests over {} slots ({engine}) | {:.1} tok/s \
-         | style adherence {:.1}%",
+        "served {} requests over {} slots x {} workers ({engine}) \
+         | {:.1} tok/s | style adherence {:.1}%",
         rep.requests,
         rep.slots,
+        rep.workers,
         rep.tokens_per_sec,
         100.0 * rep.style_adherence
     );
@@ -647,7 +655,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .get("queue-budget")
         .map(|s| s.parse::<usize>().map_err(|e| anyhow!("--queue-budget {s:?}: {e}")))
         .transpose()?;
-    let scfg = crate::serve::ServeConfig { slots, new_tokens, deadline_ms, queue_budget };
+    // decode ticks scale with cores by default; the slot-order merge
+    // keeps completions bitwise-identical regardless
+    let default_workers = std::thread::available_parallelism().map_or(1, |n| n.get());
+    let workers = args
+        .usize_or("serve-workers", default_workers)
+        .map_err(|e| anyhow!(e))?;
+    let prefill_chunk = args.usize_or("prefill-chunk", 0).map_err(|e| anyhow!(e))?;
+    let scfg = crate::serve::ServeConfig {
+        slots,
+        new_tokens,
+        deadline_ms,
+        queue_budget,
+        workers,
+        prefill_chunk,
+    };
 
     // --quantize (run the quantization pipeline first) only makes sense
     // without a store; refuse rather than silently serve the store dense
@@ -928,6 +950,8 @@ mod tests {
             "--batch",
             "--deadline-ms",
             "--queue-budget",
+            "--serve-workers",
+            "--prefill-chunk",
             "--metrics-addr",
         ] {
             assert!(USAGE.contains(flag), "{flag} missing from usage");

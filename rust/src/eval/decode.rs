@@ -23,18 +23,22 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::quant::matvec_quant_into;
+use crate::quant::{matmul_quant_rows_into, matvec_quant_into};
 use crate::tensor::ops::gelu;
 use crate::tensor::Tensor;
 use crate::util::telemetry;
 
-use super::model_native::ModelCfg;
+use super::model_native::{embed_rows_at, ModelCfg};
 use super::quantstore::{QParam, QuantizedParams};
 use super::{params_bytes, Params};
 
 /// Read access to model parameters for the decoder: dense views for the
 /// small parameters, row-streamed GEMM products for the weights.
-pub trait ParamSource {
+///
+/// `Sync` is a supertrait: one parameter store is shared by every decode
+/// slot, and the serve scheduler fans slots out across worker threads
+/// (reads only — nothing here takes `&mut self`).
+pub trait ParamSource: Sync {
     /// Dense view of a non-GEMM parameter (embeddings, layernorm affine).
     fn dense(&self, name: &str) -> Result<&Tensor>;
 
@@ -51,6 +55,30 @@ pub trait ParamSource {
         out: &mut [f32],
         row_scratch: &mut [f32],
     ) -> Result<()>;
+
+    /// `out[M,N] = x[M,K] @ W[K,N]` over flat row-major slices — the
+    /// batched-prefill GEMM. The default implementation runs
+    /// [`Self::matvec_into`] once per row, so every source is
+    /// bitwise-identical to the single-row path by construction; the
+    /// quantized store overrides it with the k-outer
+    /// [`crate::quant::matmul_quant_rows_into`] so each weight row
+    /// dequantizes once per chunk instead of once per token.
+    fn matmul_rows_into(
+        &self,
+        name: &str,
+        x: &[f32],
+        rows: usize,
+        out: &mut [f32],
+        row_scratch: &mut [f32],
+    ) -> Result<()> {
+        let (k, n) = self.gemm_dims(name)?;
+        assert_eq!(x.len(), rows * k);
+        assert_eq!(out.len(), rows * n);
+        for (xr, or) in x.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
+            self.matvec_into(name, xr, or, row_scratch)?;
+        }
+        Ok(())
+    }
 
     /// Bytes the parameter set occupies resident in memory.
     fn resident_param_bytes(&self) -> usize;
@@ -128,6 +156,32 @@ impl ParamSource for QuantizedParams {
             }
             Some(QParam::Plain(t)) => {
                 matvec_dense(x, t, out);
+                Ok(())
+            }
+            None => bail!("missing param {name:?}"),
+        }
+    }
+
+    fn matmul_rows_into(
+        &self,
+        name: &str,
+        x: &[f32],
+        rows: usize,
+        out: &mut [f32],
+        row_scratch: &mut [f32],
+    ) -> Result<()> {
+        match self.get(name) {
+            Some(QParam::Quant(q)) => {
+                matmul_quant_rows_into(x, rows, q, out, row_scratch);
+                Ok(())
+            }
+            Some(QParam::Plain(t)) => {
+                for (xr, or) in x
+                    .chunks_exact(t.rows())
+                    .zip(out.chunks_exact_mut(t.cols()))
+                {
+                    matvec_dense(xr, t, or);
+                }
                 Ok(())
             }
             None => bail!("missing param {name:?}"),
@@ -236,6 +290,8 @@ pub struct Decoder<'p> {
 }
 
 impl<'p> Decoder<'p> {
+    /// Build a decoder over `src` (dense or quantized-resident params).
+    /// Build a decoder over `src` (dense or quantized-resident params).
     pub fn new(src: &'p dyn ParamSource, cfg: ModelCfg) -> Decoder<'p> {
         let layers = (0..cfg.n_layer)
             .map(|l| LayerNames {
@@ -255,6 +311,10 @@ impl<'p> Decoder<'p> {
         Decoder { src, cfg, layers, steps }
     }
 
+    /// Fresh per-request state: empty KV caches, position 0, scratch
+    /// buffers sized for the model.
+    /// Fresh per-request state: empty KV caches, position 0, scratch
+    /// buffers sized for the model.
     pub fn session(&self) -> DecodeSession {
         let d = self.cfg.d_model;
         DecodeSession {
@@ -388,14 +448,159 @@ impl<'p> Decoder<'p> {
         Ok(logits)
     }
 
+    /// Consume a contiguous run of prompt tokens in one batched forward,
+    /// writing all per-layer K/V cache rows in bulk and discarding the
+    /// logits — the admission path of the serving scheduler.
+    ///
+    /// Two wins over replaying [`Self::step`] per token: each weight row
+    /// dequantizes/streams **once per chunk** instead of once per token
+    /// (the GEMMs run through [`ParamSource::matmul_rows_into`]), and the
+    /// final layernorm + vocab-wide head projection are skipped entirely
+    /// (they only produce logits, which prefill discards; the K/V state
+    /// they read is unaffected).
+    ///
+    /// The cache rows written are bitwise-identical to `tokens.len()`
+    /// successive `step` calls: same embedding expression at the same
+    /// absolute positions ([`embed_rows_at`]), same per-row layernorm /
+    /// attention / GELU bodies, and per output row the batched GEMM
+    /// accumulates in the same ascending-k order as the matvec. Row `i`
+    /// of the chunk attends over cache prefix `0..=t0+i` only, exactly as
+    /// the sequential replay would.
+    pub fn prefill(&self, s: &mut DecodeSession, tokens: &[i32]) -> Result<()> {
+        if tokens.is_empty() {
+            return Ok(());
+        }
+        let cfg = &self.cfg;
+        let (d, dh) = (cfg.d_model, cfg.d_model / cfg.n_head);
+        let c = tokens.len();
+        let t0 = s.pos;
+        if t0 + c > cfg.seq_len {
+            bail!(
+                "prefill of {c} tokens at position {t0} beyond seq_len {}",
+                cfg.seq_len
+            );
+        }
+        // validate every token before touching the caches: a rejected
+        // prefill must leave the session exactly as it was
+        for &token in tokens {
+            if token < 0 || token as usize >= cfg.vocab {
+                bail!("token {token} outside vocab {}", cfg.vocab);
+            }
+        }
+        let embed = self.src.dense("embed")?;
+        let pos = self.src.dense("pos")?;
+
+        // chunk-sized working set ([c, d] / [c, d_ff] row-major) — one
+        // allocation burst per admitted chunk, not per token
+        let mut x = vec![0.0f32; c * d];
+        let mut h = vec![0.0f32; c * d];
+        let mut qm = vec![0.0f32; c * d];
+        let mut km = vec![0.0f32; c * d];
+        let mut vm = vec![0.0f32; c * d];
+        let mut att = vec![0.0f32; c * d];
+        let mut proj = vec![0.0f32; c * d];
+        let mut mm = vec![0.0f32; c * cfg.d_ff];
+        let mut m2 = vec![0.0f32; c * d];
+
+        embed_rows_at(embed, pos, t0, tokens, &mut x);
+
+        let DecodeSession {
+            pos: s_pos,
+            kcache,
+            vcache,
+            scores,
+            scratch_d,
+            scratch_ff,
+            ..
+        } = s;
+
+        let scale = 1.0 / (dh as f32).sqrt();
+        for l in 0..cfg.n_layer {
+            let names = &self.layers[l];
+            // --- attention block ---
+            let g1 = self.src.dense(&names.ln1_g)?;
+            let b1 = self.src.dense(&names.ln1_b)?;
+            for (xr, hr) in x.chunks_exact(d).zip(h.chunks_exact_mut(d)) {
+                layernorm_vec(xr, g1.data(), b1.data(), hr);
+            }
+            self.src.matmul_rows_into(&names.wq, &h, c, &mut qm, scratch_d)?;
+            self.src.matmul_rows_into(&names.wk, &h, c, &mut km, scratch_d)?;
+            self.src.matmul_rows_into(&names.wv, &h, c, &mut vm, scratch_d)?;
+            kcache[l].extend_from_slice(&km);
+            vcache[l].extend_from_slice(&vm);
+
+            // per-row causal attention over the cache prefix: row i sees
+            // positions 0..=t0+i — later rows of this same chunk are in
+            // the cache already but stay outside the score range, exactly
+            // as if they had not been written yet
+            let kc = &kcache[l];
+            let vc = &vcache[l];
+            for i in 0..c {
+                let t = t0 + i;
+                let qrow = &qm[i * d..(i + 1) * d];
+                for hd in 0..cfg.n_head {
+                    scores.clear();
+                    scores.resize(t + 1, 0.0);
+                    for (tk, sc) in scores.iter_mut().enumerate() {
+                        let mut acc = 0.0f32;
+                        let krow = &kc[tk * d..(tk + 1) * d];
+                        for j in 0..dh {
+                            acc += qrow[hd * dh + j] * krow[hd * dh + j];
+                        }
+                        *sc = acc * scale;
+                    }
+                    softmax_vec(scores);
+                    for j in 0..dh {
+                        let mut acc = 0.0f32;
+                        for (tk, sc) in scores.iter().enumerate() {
+                            acc += sc * vc[tk * d + hd * dh + j];
+                        }
+                        att[i * d + hd * dh + j] = acc;
+                    }
+                }
+            }
+            self.src.matmul_rows_into(&names.wo, &att, c, &mut proj, scratch_d)?;
+            for (xj, pj) in x.iter_mut().zip(proj.iter()) {
+                *xj += pj;
+            }
+
+            // --- MLP block ---
+            let g2 = self.src.dense(&names.ln2_g)?;
+            let b2 = self.src.dense(&names.ln2_b)?;
+            for (xr, hr) in x.chunks_exact(d).zip(h.chunks_exact_mut(d)) {
+                layernorm_vec(xr, g2.data(), b2.data(), hr);
+            }
+            self.src.matmul_rows_into(&names.w1, &h, c, &mut mm, scratch_ff)?;
+            for v in mm.iter_mut() {
+                *v = gelu(*v);
+            }
+            self.src.matmul_rows_into(&names.w2, &mm, c, &mut m2, scratch_d)?;
+            for (xj, mj) in x.iter_mut().zip(m2.iter()) {
+                *xj += mj;
+            }
+        }
+        // no lnf/head: prefill produces cache state, not logits
+        *s_pos += c;
+        self.steps.add(c as u64);
+        Ok(())
+    }
+
+    /// Bytes the parameter source keeps resident while serving.
+    /// Bytes the parameter source keeps resident while serving.
     pub fn resident_param_bytes(&self) -> usize {
         self.src.resident_param_bytes()
     }
 }
 
 /// What the continuous-batching scheduler needs from a decoding engine —
-/// exactly the four operations `serve::serve` calls, no more. Implemented
-/// by [`Decoder`] for real models and by mocks in the serve tests.
+/// exactly the operations [`crate::serve::serve`] calls, no more.
+/// Implemented by [`Decoder`] for real models and by mocks in the serve
+/// tests.
+///
+/// Implementors must be `Sync` and their sessions `Send`: the scheduler
+/// shares one decoder across its worker threads and hands each slot's
+/// session to whichever worker ticks it (one slot is only ever touched by
+/// one worker at a time).
 pub trait TokenDecoder {
     type Session;
 
@@ -403,6 +608,18 @@ pub trait TokenDecoder {
 
     /// Consume one token, return the next-token logits row.
     fn step(&self, s: &mut Self::Session, token: i32) -> Result<Vec<f32>>;
+
+    /// Consume a run of prompt tokens, discarding the logits — the
+    /// admission path. The default implementation replays [`Self::step`]
+    /// token by token; [`Decoder`] overrides it with a batched forward
+    /// that writes the K/V caches in bulk (bitwise-identical cache state,
+    /// one weight-row dequantization per chunk instead of per token).
+    fn prefill(&self, s: &mut Self::Session, tokens: &[i32]) -> Result<()> {
+        for &t in tokens {
+            self.step(s, t)?;
+        }
+        Ok(())
+    }
 
     /// Hard cap on the position cursor (the positional-embedding table).
     fn max_positions(&self) -> usize;
@@ -419,6 +636,10 @@ impl TokenDecoder for Decoder<'_> {
 
     fn step(&self, s: &mut DecodeSession, token: i32) -> Result<Vec<f32>> {
         Decoder::step(self, s, token)
+    }
+
+    fn prefill(&self, s: &mut DecodeSession, tokens: &[i32]) -> Result<()> {
+        Decoder::prefill(self, s, tokens)
     }
 
     fn max_positions(&self) -> usize {
@@ -497,6 +718,64 @@ mod tests {
             TokenDecoder::resident_param_bytes(&dec),
             QuantizedParams::resident_param_bytes(&qp)
         );
+    }
+
+    #[test]
+    fn batched_prefill_is_bitwise_token_by_token() {
+        let cfg = tiny_cfg();
+        let params = synth_params(&cfg, 23);
+        let qp = synth_quantized(&params, &gemm_names(&cfg), Granularity::Block(4));
+        let tokens = vec![2i32, 9, 4, 1, 11];
+        let last = 6i32;
+        let sources: [&dyn ParamSource; 2] = [&params, &qp];
+        for (si, src) in sources.iter().enumerate() {
+            let dec = Decoder::new(*src, cfg);
+            // reference: token-by-token replay
+            let mut s_ref = dec.session();
+            for &tok in &tokens {
+                dec.step(&mut s_ref, tok).unwrap();
+            }
+            let want = dec.step(&mut s_ref, last).unwrap();
+            // batched, split across two chunks so the second starts at a
+            // nonzero position cursor
+            let mut s_bat = dec.session();
+            dec.prefill(&mut s_bat, &tokens[..3]).unwrap();
+            assert_eq!(s_bat.pos(), 3);
+            dec.prefill(&mut s_bat, &tokens[3..]).unwrap();
+            assert_eq!(s_bat.pos(), tokens.len());
+            assert_eq!(s_bat.cache_bytes(), {
+                let mut s2 = dec.session();
+                for &tok in &tokens {
+                    dec.step(&mut s2, tok).unwrap();
+                }
+                s2.cache_bytes()
+            });
+            let got = dec.step(&mut s_bat, last).unwrap();
+            for (j, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "src {si} logit {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_validates_before_touching_the_session() {
+        let cfg = tiny_cfg();
+        let params = synth_params(&cfg, 29);
+        let dec = Decoder::new(&params, cfg);
+        let mut s = dec.session();
+        // bad token anywhere in the chunk: rejected, session untouched
+        assert!(dec.prefill(&mut s, &[1, 2, -1]).is_err());
+        assert!(dec.prefill(&mut s, &[1, 2, cfg.vocab as i32]).is_err());
+        assert_eq!(s.pos(), 0);
+        assert_eq!(s.cache_bytes(), 0);
+        // overlong chunk: rejected up front
+        let long = vec![1i32; cfg.seq_len + 1];
+        let err = dec.prefill(&mut s, &long).unwrap_err();
+        assert!(format!("{err:#}").contains("seq_len"), "{err:#}");
+        assert_eq!(s.pos(), 0);
+        // empty chunk is a no-op
+        dec.prefill(&mut s, &[]).unwrap();
+        assert_eq!(s.pos(), 0);
     }
 
     #[test]

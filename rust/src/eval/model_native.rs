@@ -169,6 +169,29 @@ pub fn embed_rows(embed: &Tensor, pos: &Tensor, batch: usize, tokens: &[i32]) ->
     x
 }
 
+/// Token + learned positional embedding for a contiguous token run
+/// *starting at absolute position `t0`*, written into a flat `[c, d]`
+/// buffer — the batched-prefill counterpart of [`embed_rows`], which
+/// always embeds from position 0. Same per-element expression
+/// (`embed[tok, j] + pos[t, j]`), so a chunked prefill embeds bitwise
+/// what the full forward embeds at the same positions.
+pub fn embed_rows_at(
+    embed: &Tensor,
+    pos: &Tensor,
+    t0: usize,
+    tokens: &[i32],
+    out: &mut [f32],
+) {
+    let d = embed.cols();
+    assert_eq!(out.len(), tokens.len() * d);
+    for (i, (&token, orow)) in tokens.iter().zip(out.chunks_exact_mut(d)).enumerate() {
+        let tok = token as usize;
+        for (j, oj) in orow.iter_mut().enumerate() {
+            *oj = embed.at2(tok, j) + pos.at2(t0 + i, j);
+        }
+    }
+}
+
 /// Causal softmax attention over `n_head` heads — shared by the dense and
 /// quantized backends. (The incremental decoder reproduces this loop one
 /// query row at a time against its KV cache; `eval::decode` pins the

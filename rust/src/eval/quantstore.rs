@@ -62,6 +62,7 @@ pub struct QuantizedParams {
 }
 
 impl QuantizedParams {
+    /// An empty store (populate with [`QuantizedParams::insert`]).
     pub fn new() -> Self {
         Self::default()
     }
@@ -158,22 +159,27 @@ impl QuantizedParams {
         QuantizedParams { map }
     }
 
+    /// Insert (or replace) one named parameter.
     pub fn insert(&mut self, name: impl Into<String>, p: QParam) {
         self.map.insert(name.into(), p);
     }
 
+    /// Look up one parameter by name.
     pub fn get(&self, name: &str) -> Option<&QParam> {
         self.map.get(name)
     }
 
+    /// Whether a parameter with this name exists.
     pub fn contains(&self, name: &str) -> bool {
         self.map.contains_key(name)
     }
 
+    /// Number of stored parameters (quantized + plain).
     pub fn len(&self) -> usize {
         self.map.len()
     }
 
+    /// Whether the store holds no parameters.
     pub fn is_empty(&self) -> bool {
         self.map.is_empty()
     }

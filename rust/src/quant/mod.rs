@@ -316,6 +316,44 @@ pub fn matvec_quant_into(
     }
 }
 
+/// Multi-row fused dequant-matmul over flat slices — the batched-prefill
+/// counterpart of [`matvec_quant_into`]: `out[M,N] = x[M,K] @ Q[K,N]`
+/// with `x` row-major in a caller-owned buffer. Runs k-outer like
+/// [`matmul_quant`], so each weight row dequantizes through the LUT
+/// *once* per call and is consumed by all `m` activation rows — this
+/// amortization is why prefilling a whole prompt chunk in one forward
+/// beats replaying it token-by-token.
+///
+/// Per output row the contributions accumulate in the same ascending-k
+/// order (with the same `aik == 0` skip) as [`matvec_quant_into`], so the
+/// result is bitwise-identical to `m` independent matvec calls.
+pub fn matmul_quant_rows_into(
+    x: &[f32],
+    m: usize,
+    q: &QuantizedTensor,
+    out: &mut [f32],
+    row_scratch: &mut [f32],
+) {
+    let (k, n) = q.shape;
+    assert_eq!(x.len(), m * k, "matmul_quant_rows x len {} vs {m}x{k}", x.len());
+    assert_eq!(out.len(), m * n);
+    assert_eq!(row_scratch.len(), n);
+    out.fill(0.0);
+    for kk in 0..k {
+        q.dequant_row_into(kk, row_scratch);
+        for i in 0..m {
+            let aik = x[i * k + kk];
+            if aik == 0.0 {
+                continue;
+            }
+            let orow = &mut out[i * n..(i + 1) * n];
+            for (oj, wj) in orow.iter_mut().zip(row_scratch.iter()) {
+                *oj += aik * wj;
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -481,6 +519,40 @@ mod tests {
             let mut scratch = vec![0.0f32; 20];
             matvec_quant_into(x.row(0), &q, &mut out, &mut scratch);
             for (a, b) in out.iter().zip(fused.row(0)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{gran:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn batched_rows_matmul_is_bitwise_matvec() {
+        let mut rng = XorShift::new(31);
+        for gran in [
+            Granularity::PerTensor,
+            Granularity::PerChannel,
+            Granularity::Block(16),
+        ] {
+            let w = rand_w(24, 20, 11);
+            let q = quantize(&w, gran, 1.0);
+            let m = 5;
+            let mut xd = rng.normal_vec(m * 24, 0.5);
+            xd[7] = 0.0;
+            xd[60] = 0.0;
+            let mut batched = vec![0.0f32; m * 20];
+            let mut scratch = vec![0.0f32; 20];
+            matmul_quant_rows_into(&xd, m, &q, &mut batched, &mut scratch);
+            // each output row bitwise-matches the single-row decode kernel
+            let mut row = vec![0.0f32; 20];
+            for i in 0..m {
+                matvec_quant_into(&xd[i * 24..(i + 1) * 24], &q, &mut row, &mut scratch);
+                for (a, b) in batched[i * 20..(i + 1) * 20].iter().zip(&row) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{gran:?} row {i}");
+                }
+            }
+            // and the tensor-level fused GEMM
+            let x = Tensor::new(vec![m, 24], xd);
+            let fused = matmul_quant(&x, &q);
+            for (a, b) in batched.iter().zip(fused.data()) {
                 assert_eq!(a.to_bits(), b.to_bits(), "{gran:?}");
             }
         }

@@ -2,12 +2,23 @@
 //! model.
 //!
 //! The scheduler owns a fixed set of decode **slots**. Requests queue for
-//! admission, join the active batch the moment a slot frees up, decode
-//! one token per scheduler tick through their own incremental
-//! [`TokenDecoder`] session (per-layer KV cache, O(t) per token), and
-//! leave the batch the moment they finish — a long request never holds
-//! short ones hostage, and latency percentiles are **per request**
-//! (admission → completion), not shared across a lock-stepped batch.
+//! admission, join the active batch the moment a slot frees up, and leave
+//! the batch the moment they finish — a long request never holds short
+//! ones hostage, and latency percentiles are **per request** (admission →
+//! completion), not shared across a lock-stepped batch.
+//!
+//! Each scheduler tick fans the active slots out across
+//! [`ServeConfig::workers`] threads ([`par_map_mut`]): a slot in its
+//! prefill phase consumes the next [`ServeConfig::prefill_chunk`] prompt
+//! tokens in one batched forward ([`TokenDecoder::prefill`] — bulk KV
+//! writes, no logits), and a slot in its decode phase consumes one token
+//! through its own incremental session (per-layer KV cache, O(t) per
+//! token). Prefill is interleaved with running decodes tick-by-tick, so a
+//! long prompt cannot head-of-line-block the batch. Workers only touch
+//! their own slots' sessions, and the coordinator merges results in fixed
+//! slot order — completions, latency stats, and telemetry count-metrics
+//! are **bitwise-identical for any worker count** (the same contract the
+//! tiled sweep honors).
 //!
 //! The pre-refactor full-reforward loop survives as
 //! [`serve_reforward`]: it re-runs the whole-sequence forward for every
@@ -27,6 +38,7 @@ use crate::eval::decode::TokenDecoder;
 use crate::eval::ForwardFn;
 use crate::util::rng::XorShift;
 use crate::util::telemetry::{self, Snapshot};
+use crate::util::threadpool::par_map_mut;
 use crate::util::timer::LatencyStats;
 
 /// Token constants mirroring `python/compile/corpus.py`.
@@ -95,6 +107,15 @@ pub struct ServeConfig {
     /// shed up front instead of queueing unboundedly (`None` = admit
     /// everything).
     pub queue_budget: Option<usize>,
+    /// Worker threads the tick fans active slots out over. `0` and `1`
+    /// both mean serial (no threads spawned). Completions and telemetry
+    /// count-metrics are bitwise-identical for any value.
+    pub workers: usize,
+    /// Max prompt tokens one prefill tick consumes per slot; `0` means
+    /// the whole remaining prompt in one chunk. Smaller chunks trade
+    /// prefill throughput for decode latency of the already-running
+    /// slots (head-of-line fairness).
+    pub prefill_chunk: usize,
 }
 
 impl Default for ServeConfig {
@@ -104,6 +125,8 @@ impl Default for ServeConfig {
             new_tokens: 16,
             deadline_ms: None,
             queue_budget: None,
+            workers: 1,
+            prefill_chunk: 0,
         }
     }
 }
@@ -112,6 +135,8 @@ impl Default for ServeConfig {
 pub struct ServeReport {
     pub requests: usize,
     pub slots: usize,
+    /// Effective tick worker threads (1 for the serial/reforward paths).
+    pub workers: usize,
     pub new_tokens_per_request: usize,
     /// Scheduler ticks (continuous path) or forward batches (reforward).
     pub steps: usize,
@@ -151,9 +176,26 @@ fn argmax(row: &[f32]) -> usize {
     best
 }
 
+/// Where an active slot is in its lifecycle: still consuming prompt
+/// tokens (chunk by chunk), or generating.
+#[derive(Clone, Copy)]
+enum Phase {
+    Prefill { consumed: usize },
+    Decode,
+}
+
+/// What one slot's tick produced, returned from the worker to the
+/// coordinator, which applies all bookkeeping in fixed slot order.
+enum TickOutcome {
+    Prefilled,
+    Decoded(Vec<f32>),
+    Failed,
+}
+
 struct Active<S> {
     idx: usize,
     session: S,
+    phase: Phase,
     next_input: i32,
     generated: Vec<i32>,
     budget: usize,
@@ -161,13 +203,20 @@ struct Active<S> {
 }
 
 /// Run the continuous-batching scheduler: up to `cfg.slots` requests
-/// decode concurrently, each through its own incremental session; a
-/// finishing request frees its slot for the next queued one immediately.
-pub fn serve<D: TokenDecoder>(
-    dec: &D,
-    requests: &[Request],
-    cfg: &ServeConfig,
-) -> Result<ServeReport> {
+/// prefill/decode concurrently across `cfg.workers` threads, each through
+/// its own incremental session; a finishing request frees its slot for
+/// the next queued one immediately.
+///
+/// Determinism contract: workers only mutate their own slot's session,
+/// and every cross-slot effect (argmax, completion bookkeeping, latency
+/// stats) is applied by the coordinator in fixed slot order — the report's
+/// completions and telemetry count-metrics are bitwise-identical for any
+/// `cfg.workers` value.
+pub fn serve<D>(dec: &D, requests: &[Request], cfg: &ServeConfig) -> Result<ServeReport>
+where
+    D: TokenDecoder + Sync,
+    D::Session: Send,
+{
     assert!(cfg.slots > 0, "need at least one decode slot");
     let max_pos = dec.max_positions();
     // validate the whole workload up front: a malformed request must
@@ -208,9 +257,14 @@ pub fn serve<D: TokenDecoder>(
     let timed_out_counter = tel.counter("serve.timed_out");
     let errored_counter = tel.counter("serve.errored");
     let completed_counter = tel.counter("serve.completed");
+    let prefill_chunks_counter = tel.counter("serve.prefill.chunks");
     let occupancy_gauge = tel.gauge("serve.slot_occupancy");
     tel.gauge("serve.resident_param_bytes")
         .set(dec.resident_param_bytes() as f64);
+    // gauge, not a label on the count metrics: a per-worker label would
+    // break the counter-map determinism contract across worker counts
+    let workers = cfg.workers.max(1);
+    tel.gauge("serve.workers").set(workers as f64);
     shed_counter.add(shed as u64);
     let mut slots: Vec<Option<Active<D::Session>>> = Vec::new();
     slots.resize_with(cfg.slots, || None);
@@ -226,13 +280,65 @@ pub fn serve<D: TokenDecoder>(
     let mut errored = 0usize;
     let t_all = Instant::now();
 
-    // per-slot fault isolation: a decoder step that errors or panics
-    // takes down its own request, never the batch
+    // per-slot fault isolation: a decoder step/prefill that errors or
+    // panics takes down its own request, never the batch
     let step_isolated = |session: &mut D::Session, token: i32| -> Result<Vec<f32>> {
         std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             dec.step(session, token)
         }))
         .unwrap_or_else(|_| Err(anyhow::anyhow!("decoder panicked during step")))
+    };
+    let prefill_isolated = |session: &mut D::Session, toks: &[i32]| -> Result<()> {
+        std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            dec.prefill(session, toks)
+        }))
+        .unwrap_or_else(|_| Err(anyhow::anyhow!("decoder panicked during prefill")))
+    };
+
+    // one slot's unit of work for one tick, run on whichever worker
+    // claims the slot: a prefill chunk or a decode step. Only this slot's
+    // own state is touched; cross-slot bookkeeping stays on the
+    // coordinator. Telemetry handles are lock-free and their count
+    // updates commute, so recording from workers preserves determinism.
+    let tick_slot = |a: &mut Active<D::Session>| -> TickOutcome {
+        match a.phase {
+            Phase::Prefill { consumed } => {
+                let prompt = &requests[a.idx].prompt;
+                // the final prompt token is not prefilled: it becomes the
+                // first decode input (its logits are the first prediction)
+                let end = prompt.len() - 1;
+                let len = match cfg.prefill_chunk {
+                    0 => end - consumed,
+                    c => c.min(end - consumed),
+                };
+                let ok = {
+                    let _t = prefill_hist.start_timer();
+                    prefill_isolated(&mut a.session, &prompt[consumed..consumed + len])
+                        .is_ok()
+                };
+                if !ok {
+                    return TickOutcome::Failed;
+                }
+                prefill_chunks_counter.incr();
+                let consumed = consumed + len;
+                a.phase = if consumed >= end {
+                    Phase::Decode
+                } else {
+                    Phase::Prefill { consumed }
+                };
+                TickOutcome::Prefilled
+            }
+            Phase::Decode => {
+                let stepped = {
+                    let _t = decode_hist.start_timer();
+                    step_isolated(&mut a.session, a.next_input)
+                };
+                match stepped {
+                    Ok(logits) => TickOutcome::Decoded(logits),
+                    Err(_) => TickOutcome::Failed,
+                }
+            }
+        }
     };
 
     let mut complete = |a: Active<D::Session>,
@@ -252,41 +358,34 @@ pub fn serve<D: TokenDecoder>(
     };
 
     loop {
-        // admission: fill every free slot from the queue. The prompt
-        // prefills here (one decode step per prompt token — the session
-        // cursor advances to prompt_len - 1, and the last prompt token
-        // becomes the first decode input).
+        // admission: fill every free slot from the queue. Admission only
+        // allocates the session and occupies the slot — the prompt is
+        // consumed chunk-by-chunk inside ticks (interleaved with running
+        // decodes), so a long prompt cannot head-of-line-block the batch.
         for slot in slots.iter_mut() {
             if slot.is_some() {
                 continue;
             }
-            'admit: while let Some(idx) = queue.pop_front() {
+            while let Some(idx) = queue.pop_front() {
                 let prompt = &requests[idx].prompt;
-                // the admission timestamp precedes the prefill so the
-                // per-request latency really is admission -> completion
-                // (prompt replay included)
+                // the admission timestamp precedes the prefill phase so
+                // the per-request latency really is admission ->
+                // completion (prompt consumption included)
                 let admitted = Instant::now();
                 queue_hist.observe(admitted.duration_since(t_all).as_secs_f64());
-                let mut session = dec.start();
-                let prefill_ok = {
-                    let _t = prefill_hist.start_timer();
-                    prompt[..prompt.len() - 1]
-                        .iter()
-                        .all(|&tok| step_isolated(&mut session, tok).is_ok())
-                };
-                if !prefill_ok {
-                    // contained: this request is dropped and the
-                    // slot admits the next queued one
-                    errored += 1;
-                    errored_counter.incr();
-                    continue 'admit;
-                }
                 // room left in the position table caps the generation
                 // budget (feeding the token at position p needs p < max_pos)
                 let budget = cfg.new_tokens.min(max_pos - prompt.len() + 1);
                 let a = Active {
                     idx,
-                    session,
+                    session: dec.start(),
+                    // a 1-token prompt has nothing to prefill: the lone
+                    // token is already the first decode input
+                    phase: if prompt.len() > 1 {
+                        Phase::Prefill { consumed: 0 }
+                    } else {
+                        Phase::Decode
+                    },
                     next_input: *prompt.last().expect("validated non-empty"),
                     generated: Vec::with_capacity(budget),
                     budget,
@@ -318,10 +417,11 @@ pub fn serve<D: TokenDecoder>(
             continue; // zero-budget admissions drained the slots; refill
         }
 
-        // one tick: every active request decodes exactly one token.
-        // Deadline eviction happens at the tick boundary (the request
-        // keeps what it generated so far), and a faulting step takes
-        // down only its own slot.
+        // one tick: every active slot does one unit of work (a prefill
+        // chunk or a decode step). Deadline eviction happens first, at
+        // the tick boundary (the request keeps what it generated so
+        // far); then the surviving slots fan out across the workers and
+        // the coordinator merges outcomes in fixed slot order.
         let t_tick = Instant::now();
         for slot in slots.iter_mut() {
             let Some(a) = slot.as_mut() else { continue };
@@ -339,35 +439,54 @@ pub fn serve<D: TokenDecoder>(
                     &mut sig_match,
                     &mut sig_total,
                 );
-                continue;
             }
-            let stepped = {
-                let _t = decode_hist.start_timer();
-                step_isolated(&mut a.session, a.next_input)
-            };
-            let logits = match stepped {
-                Ok(l) => l,
-                Err(_) => {
-                    *slot = None;
+        }
+
+        let mut work: Vec<&mut Active<D::Session>> = Vec::with_capacity(cfg.slots);
+        let mut work_slots: Vec<usize> = Vec::with_capacity(cfg.slots);
+        for (i, slot) in slots.iter_mut().enumerate() {
+            if let Some(a) = slot.as_mut() {
+                work_slots.push(i);
+                work.push(a);
+            }
+        }
+        if work.is_empty() {
+            // every active slot was deadline-evicted this tick
+            step_latency.record(t_tick.elapsed().as_secs_f64() * 1e3);
+            steps += 1;
+            continue;
+        }
+        let outcomes = par_map_mut(workers, &mut work, |a| tick_slot(a));
+        drop(work);
+
+        // merge in fixed slot order: everything below is coordinator-side
+        // and independent of which worker ran which slot
+        for (&slot_i, outcome) in work_slots.iter().zip(outcomes) {
+            match outcome {
+                TickOutcome::Prefilled => {}
+                TickOutcome::Failed => {
+                    slots[slot_i] = None;
                     errored += 1;
                     errored_counter.incr();
-                    continue;
                 }
-            };
-            let best = argmax(&logits) as i32;
-            a.generated.push(best);
-            a.next_input = best;
-            total_generated += 1;
-            if a.generated.len() >= a.budget {
-                let done = slot.take().expect("checked");
-                completed_counter.incr();
-                complete(
-                    done,
-                    &mut completions,
-                    &mut request_latency,
-                    &mut sig_match,
-                    &mut sig_total,
-                );
+                TickOutcome::Decoded(logits) => {
+                    let a = slots[slot_i].as_mut().expect("worked slot is active");
+                    let best = argmax(&logits) as i32;
+                    a.generated.push(best);
+                    a.next_input = best;
+                    total_generated += 1;
+                    if a.generated.len() >= a.budget {
+                        let done = slots[slot_i].take().expect("checked");
+                        completed_counter.incr();
+                        complete(
+                            done,
+                            &mut completions,
+                            &mut request_latency,
+                            &mut sig_match,
+                            &mut sig_total,
+                        );
+                    }
+                }
             }
         }
         step_latency.record(t_tick.elapsed().as_secs_f64() * 1e3);
@@ -378,6 +497,7 @@ pub fn serve<D: TokenDecoder>(
     Ok(ServeReport {
         requests: requests.len(),
         slots: cfg.slots,
+        workers,
         new_tokens_per_request: cfg.new_tokens,
         steps,
         step_latency,
@@ -474,6 +594,7 @@ pub fn serve_reforward(
     Ok(ServeReport {
         requests: requests.len(),
         slots: b,
+        workers: 1,
         new_tokens_per_request: new_tokens,
         steps,
         step_latency,
@@ -796,6 +917,65 @@ mod tests {
         fn resident_param_bytes(&self) -> usize {
             self.inner.resident_param_bytes()
         }
+    }
+
+    #[test]
+    fn completions_identical_for_any_worker_count_and_chunk() {
+        // the core determinism contract: slot-order merge makes the
+        // report independent of both the worker count and how the prompt
+        // is chunked into prefill ticks
+        let reqs = gen_requests(9, 33);
+        let mut reference: Option<Vec<Vec<i32>>> = None;
+        for workers in [1, 2, 4, 8] {
+            for chunk in [0, 1, 5, 16] {
+                let dec = MockDecoder { vocab: 64, max_pos: 32 };
+                let cfg = ServeConfig {
+                    slots: 3,
+                    new_tokens: 3,
+                    workers,
+                    prefill_chunk: chunk,
+                    ..Default::default()
+                };
+                let rep = serve(&dec, &reqs, &cfg).unwrap();
+                assert_eq!(rep.workers, workers.max(1));
+                assert_eq!((rep.shed, rep.timed_out, rep.errored), (0, 0, 0));
+                match &reference {
+                    None => reference = Some(rep.completions),
+                    Some(want) => assert_eq!(
+                        &rep.completions, want,
+                        "workers={workers} chunk={chunk}"
+                    ),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_spreads_the_prompt_over_ticks() {
+        // 13 prefill tokens: chunk=0 consumes them in 1 tick, chunk=3
+        // needs ceil(13/3)=5 ticks — same completions, more ticks
+        let reqs = gen_requests(2, 39);
+        let run = |chunk: usize| {
+            let dec = MockDecoder { vocab: 64, max_pos: 32 };
+            serve(
+                &dec,
+                &reqs,
+                &ServeConfig {
+                    slots: 2,
+                    new_tokens: 3,
+                    prefill_chunk: chunk,
+                    ..Default::default()
+                },
+            )
+            .unwrap()
+        };
+        let whole = run(0);
+        let chunked = run(3);
+        assert_eq!(whole.completions, chunked.completions);
+        // both slots admit on tick 1: whole = 1 prefill + 3 decode ticks,
+        // chunked = 5 prefill + 3 decode ticks
+        assert_eq!(whole.steps, 4, "steps = {}", whole.steps);
+        assert_eq!(chunked.steps, 8, "steps = {}", chunked.steps);
     }
 
     #[test]

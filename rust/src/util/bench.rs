@@ -1,7 +1,7 @@
 //! Micro-benchmark harness (criterion is not in the offline registry).
 //!
 //! Each `cargo bench` target is a `harness = false` binary that uses
-//! [`Bench`] for warmed-up, repeated measurements with simple statistics,
+//! [`bench`] for warmed-up, repeated measurements with simple statistics,
 //! and the `report` module for the paper-shaped tables.
 
 use std::time::Instant;

@@ -126,16 +126,19 @@ enum Metric {
 pub struct Counter(Option<Arc<AtomicU64>>);
 
 impl Counter {
+    /// Add `n` to the counter (relaxed; commutes across threads).
     pub fn add(&self, n: u64) {
         if let Some(c) = &self.0 {
             c.fetch_add(n, Ordering::Relaxed);
         }
     }
 
+    /// Add 1 to the counter.
     pub fn incr(&self) {
         self.add(1);
     }
 
+    /// Current counter value (0 for a disabled handle).
     pub fn value(&self) -> u64 {
         self.0.as_ref().map_or(0, |c| c.load(Ordering::Relaxed))
     }
@@ -146,6 +149,7 @@ impl Counter {
 pub struct Gauge(Option<Arc<AtomicU64>>);
 
 impl Gauge {
+    /// Overwrite the gauge with `v` (last write wins).
     pub fn set(&self, v: f64) {
         if let Some(c) = &self.0 {
             c.store(v.to_bits(), Ordering::Relaxed);
@@ -158,12 +162,14 @@ impl Gauge {
 pub struct Histogram(Option<Arc<HistCell>>);
 
 impl Histogram {
+    /// Record one observation into the fixed bucket layout.
     pub fn observe(&self, v: f64) {
         if let Some(h) = &self.0 {
             h.observe(v);
         }
     }
 
+    /// Whether this handle is backed by a live registry.
     pub fn is_enabled(&self) -> bool {
         self.0.is_some()
     }
@@ -213,6 +219,7 @@ impl std::fmt::Debug for Telemetry {
 }
 
 impl Telemetry {
+    /// Build an enabled registry tagged with `run_id`.
     pub fn new(run_id: &str) -> Arc<Telemetry> {
         Arc::new(Telemetry {
             inner: Some(Inner {
@@ -231,10 +238,12 @@ impl Telemetry {
         DISABLED.get_or_init(|| Arc::new(Telemetry { inner: None })).clone()
     }
 
+    /// Whether this registry records anything at all.
     pub fn enabled(&self) -> bool {
         self.inner.is_some()
     }
 
+    /// The run identifier (empty for the disabled instance).
     pub fn run_id(&self) -> &str {
         self.inner.as_ref().map_or("", |i| i.run_id.as_str())
     }
@@ -254,6 +263,8 @@ impl Telemetry {
         Some(inner)
     }
 
+    /// Handle to the monotonic counter `name`, registering it on
+    /// first use. Cold path (registry mutex) — hoist out of hot loops.
     pub fn counter(&self, name: &str) -> Counter {
         let Some(inner) = self.metric(name, || Metric::Counter(Arc::new(AtomicU64::new(0))))
         else {
@@ -265,6 +276,7 @@ impl Telemetry {
         }
     }
 
+    /// Handle to the gauge `name`, registering it on first use.
     pub fn gauge(&self, name: &str) -> Gauge {
         let Some(inner) = self.metric(name, || Metric::Gauge(Arc::new(AtomicU64::new(0))))
         else {
@@ -276,6 +288,7 @@ impl Telemetry {
         }
     }
 
+    /// Handle to the histogram `name`, registering it on first use.
     pub fn histogram(&self, name: &str) -> Histogram {
         let Some(inner) = self.metric(name, || Metric::Hist(Arc::new(HistCell::new())))
         else {
@@ -473,6 +486,7 @@ impl ToField for String {
     }
 }
 
+/// Coerce a value into a [`Json`] trace field (used by [`span!`](crate::span)).
 pub fn field(v: impl ToField) -> Json {
     v.to_field()
 }
@@ -535,6 +549,7 @@ pub struct Snapshot {
 }
 
 impl Snapshot {
+    /// True when nothing was recorded (the disabled-registry snapshot).
     pub fn is_empty(&self) -> bool {
         self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
     }
@@ -729,6 +744,7 @@ impl MetricsServer {
         Ok(MetricsServer { addr: local, stop, handle: Some(handle) })
     }
 
+    /// The bound listen address (useful with a `:0` ephemeral port).
     pub fn addr(&self) -> SocketAddr {
         self.addr
     }
@@ -812,14 +828,17 @@ pub fn log(level: LogLevel, msg: &str) {
     }
 }
 
+/// [`log`] at warn level.
 pub fn warn(msg: &str) {
     log(LogLevel::Warn, msg);
 }
 
+/// [`log`] at info level.
 pub fn info(msg: &str) {
     log(LogLevel::Info, msg);
 }
 
+/// [`log`] at debug level.
 pub fn debug(msg: &str) {
     log(LogLevel::Debug, msg);
 }

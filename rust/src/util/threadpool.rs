@@ -143,6 +143,54 @@ where
         .collect()
 }
 
+/// Scoped parallel map over a *mutable* slice: like [`par_map_slice`] but
+/// each item is handed to the closure as `&mut I`, so a worker may mutate
+/// its item in place (a decode slot advancing its own KV cache) while the
+/// closure's return value carries whatever the coordinator needs back.
+///
+/// The slice is split into `workers` contiguous chunks, one scoped thread
+/// per chunk, each walking its chunk in order. Results are flattened back
+/// in chunk order, so the output is index-aligned with `items` and —
+/// because no item is touched by more than one thread and each result is
+/// computed independently — bitwise-deterministic for any `workers` value.
+/// `workers <= 1` (or a single item) degenerates to a serial loop with no
+/// threads spawned.
+///
+/// This is the engine under the serve scheduler's decode tick: each active
+/// slot steps (or prefills) independently, and the coordinator merges the
+/// returned logits in fixed slot order.
+pub fn par_map_mut<I, T, F>(workers: usize, items: &mut [I], f: F) -> Vec<T>
+where
+    I: Send,
+    T: Send,
+    F: Fn(&mut I) -> T + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.clamp(1, n);
+    if workers == 1 {
+        return items.iter_mut().map(f).collect();
+    }
+    let chunk = n.div_ceil(workers);
+    let fr = &f;
+    let per_chunk: Vec<Vec<T>> = thread::scope(|s| {
+        let handles: Vec<_> = items
+            .chunks_mut(chunk)
+            .map(|ch| s.spawn(move || ch.iter_mut().map(fr).collect::<Vec<T>>()))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| match h.join() {
+                Ok(v) => v,
+                Err(e) => std::panic::resume_unwind(e),
+            })
+            .collect()
+    });
+    per_chunk.into_iter().flatten().collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -246,6 +294,39 @@ mod tests {
                 panic!("tile boom");
             }
             i
+        });
+    }
+
+    #[test]
+    fn mut_map_mutates_in_place_and_preserves_order() {
+        let serial: Vec<u64> = (0..97u64).map(|i| i * 3).collect();
+        for workers in [1, 2, 4, 16] {
+            let mut items: Vec<u64> = (0..97).collect();
+            let out = par_map_mut(workers, &mut items, |i| {
+                *i *= 3;
+                *i
+            });
+            assert_eq!(out, serial, "workers={workers}");
+            assert_eq!(items, serial, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn mut_map_empty() {
+        let mut items: Vec<u8> = Vec::new();
+        let out: Vec<u8> = par_map_mut(4, &mut items, |&mut b| b);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    #[should_panic]
+    fn mut_map_propagates_panics() {
+        let mut items = vec![1, 2, 3, 4];
+        par_map_mut(2, &mut items, |i| {
+            if *i == 3 {
+                panic!("slot boom");
+            }
+            *i
         });
     }
 

@@ -3,6 +3,7 @@
 //! forward / incremental decode / continuous-batching scheduler, end to
 //! end, plus the sharded-store coverage for the dequantizing loader.
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
 
 use daq::coordinator::stream::{run_stream, StreamConfig};
@@ -19,6 +20,7 @@ use daq::io::TensorSource;
 use daq::quant::{quantize, Granularity};
 use daq::serve::{gen_requests, serve, serve_reforward, ServeConfig};
 use daq::tensor::Tensor;
+use daq::util::telemetry::{self, Telemetry};
 
 fn tmp(tag: &str) -> PathBuf {
     std::env::temp_dir().join(format!("daq_servetest_{tag}_{}", std::process::id()))
@@ -136,6 +138,106 @@ fn quantized_store_serves_end_to_end() {
     assert_eq!(rep_dense.completions, reforward_dense.completions);
 
     std::fs::remove_dir_all(&out_dir).unwrap();
+}
+
+/// The tentpole determinism contract, end to end over a real model:
+/// identical `ServeReport` completions AND identical telemetry
+/// count-metrics (counter map, histogram counts) for every cell of
+/// {workers: 1, 4} x {prefill_chunk: 0, 16}. Workers only mutate their
+/// own slot's session and the coordinator merges in fixed slot order,
+/// so the thread count must be unobservable in anything counted; the
+/// 14-token prompts prefill in a single chunk under both settings, so
+/// chunking must be unobservable here too.
+#[test]
+fn serve_is_deterministic_across_workers_and_prefill_chunking() {
+    let cfg = serve_cfg();
+    let params = synth_params(&cfg, 77);
+    let reqs = gen_requests(6, 11);
+
+    type CountMaps = (Vec<Vec<i32>>, BTreeMap<String, u64>, BTreeMap<String, u64>);
+    let mut reference: Option<CountMaps> = None;
+    for workers in [1usize, 4] {
+        for chunk in [0usize, 16] {
+            // the Decoder captures its step counter at construction, so
+            // it is rebuilt inside each cell's registry context
+            let guard = telemetry::set_current(Telemetry::new(&format!(
+                "serve-det-w{workers}-c{chunk}"
+            )));
+            let dec = Decoder::new(&params, cfg);
+            let rep = serve(
+                &dec,
+                &reqs,
+                &ServeConfig {
+                    slots: 3,
+                    new_tokens: 4,
+                    workers,
+                    prefill_chunk: chunk,
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            drop(guard);
+
+            assert_eq!(rep.workers, workers, "w={workers} chunk={chunk}");
+            assert_eq!(rep.requests, 6);
+            assert_eq!(rep.timed_out, 0);
+            assert_eq!(rep.errored, 0);
+            let counters = rep.telemetry.counters.clone();
+            let hist_counts: BTreeMap<String, u64> = rep
+                .telemetry
+                .histograms
+                .iter()
+                .map(|(k, h)| (k.clone(), h.count))
+                .collect();
+            match &reference {
+                None => reference = Some((rep.completions, counters, hist_counts)),
+                Some((comp0, counters0, hist0)) => {
+                    assert_eq!(
+                        &rep.completions, comp0,
+                        "completions differ at w={workers} chunk={chunk}"
+                    );
+                    assert_eq!(
+                        &counters, counters0,
+                        "counter map differs at w={workers} chunk={chunk}"
+                    );
+                    assert_eq!(
+                        &hist_counts, hist0,
+                        "histogram counts differ at w={workers} chunk={chunk}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Deadline eviction is coordinator-side bookkeeping and must keep
+/// firing at tick boundaries when the decode fan-out runs on multiple
+/// workers: a zero deadline evicts every slot at its first tick, before
+/// any token lands, regardless of thread count.
+#[test]
+fn deadline_eviction_under_multithreaded_decode() {
+    let cfg = serve_cfg();
+    let params = synth_params(&cfg, 78);
+    let dec = Decoder::new(&params, cfg);
+    let reqs = gen_requests(4, 3);
+    let rep = serve(
+        &dec,
+        &reqs,
+        &ServeConfig {
+            slots: 2,
+            new_tokens: 4,
+            deadline_ms: Some(0.0),
+            workers: 4,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    assert_eq!(rep.requests, 4);
+    assert_eq!(rep.timed_out, 4);
+    assert_eq!(rep.request_latency.count(), 4);
+    for gen in &rep.completions {
+        assert!(gen.is_empty(), "evicted-at-admission request decoded tokens");
+    }
 }
 
 /// The codes-without-`gran.<name>`-meta fallback path over a sharded
