@@ -11,7 +11,7 @@ use crate::eval::trace::{model_cfg_for, sidecar_path, trace_graph, TraceGraph};
 use crate::eval::{load_params, params_bytes, QuantizedParams};
 use crate::experiments::{table1, table2, table_search, Lab};
 use crate::io::dts::Dts;
-use crate::quant::Granularity;
+use crate::quant::{CodeFormat, Descriptor, Granularity};
 use crate::search::Objective;
 use crate::tensor::Tensor;
 use crate::util::cliargs::Args;
@@ -28,7 +28,14 @@ COMMANDS:
              --artifacts DIR (default artifacts)
              --method absmax|sign|cos|mse|smoothquant|awq (default sign;
                --metric is an alias)
-             --gran block|channel|tensor|blockN (default block)
+             --gran block|channel|tensor|blockN (default: block for fp8,
+               blockG for int4:G — the scale-group width)
+             --format fp8-e4m3|fp8-e5m2|int4[:GROUP] (code format for the
+               delta methods, default fp8-e4m3; int4 packs two codes per
+               byte, GROUP defaults to 64)
+             --residual-rank K (delta methods only: store a rank-K
+               low-rank residual of dW - Q(dW) as <name>.res_u/.res_v
+               and apply it after the quantized GEMM; default 0)
              --range lo,hi (default 0.8,1.25)
              --engine native|pjrt (default native)
              --out FILE (write quantized checkpoint)
@@ -113,14 +120,17 @@ COMMANDS:
                e.g. --metrics-addr 127.0.0.1:9184)
   inspect    Print a container's metadata and tensor index (dtype, shape,
              payload bytes, totals) for a .dts file, a sharded-store
-             directory, or a manifest.json
+             directory, or a manifest.json. Quantized stores additionally
+             decode their fmt.<name> descriptors: code format,
+             bits/element, packed codes bytes, and residual sidecars
              <path>
   verify-store  Re-read every payload of a checkpoint store and verify
              it against its stored CRC-32 (a .dts file, a shard
              directory, or a manifest.json). Corrupt payloads are listed
              with tensor, shard, and byte offset; exits non-zero if any
              payload fails. v1 containers (no checksum section) read but
-             count as unverifiable
+             count as unverifiable. fmt.<name> descriptors are parsed and
+             cross-checked against the stored sidecar shapes
              <path>
   golden     Cross-check the Rust FP8 codec against the JAX golden file
              --artifacts DIR
@@ -172,6 +182,37 @@ fn parse_method(args: &Args) -> Result<Method> {
     })
 }
 
+/// Parse `--format` / `--residual-rank` against the chosen method. The
+/// transform baselines re-quantize folded weights with the paper's FP8
+/// E4M3 codec and define no ΔW to fit a residual against, so anything
+/// non-default there is a hard error rather than a silent ignore.
+fn parse_format(args: &Args, method: &Method) -> Result<(CodeFormat, usize)> {
+    let format = match args.get("format") {
+        Some(s) => CodeFormat::parse(s).map_err(|e| anyhow!(e))?,
+        None => CodeFormat::Fp8E4m3,
+    };
+    let residual_rank = args.usize_or("residual-rank", 0).map_err(|e| anyhow!(e))?;
+    if !method.delta_defined()
+        && (format != CodeFormat::Fp8E4m3 || residual_rank > 0)
+    {
+        bail!(
+            "--format / --residual-rank only apply to the delta methods \
+             (absmax / search): {} always stores fp8-e4m3 without a residual",
+            method.label()
+        );
+    }
+    Ok((format, residual_rank))
+}
+
+/// Resolve `--gran`: an explicit spelling wins; otherwise the format's
+/// default (the paper's block-128 for FP8, `Block(G)` for `int4:G`).
+fn parse_gran(args: &Args, format: CodeFormat) -> Result<Granularity> {
+    match args.get("gran") {
+        Some(s) => Granularity::parse(s).map_err(|e| anyhow!(e)),
+        None => Ok(format.default_granularity()),
+    }
+}
+
 fn open_lab(args: &Args) -> Result<Lab> {
     let dir = args.str_or("artifacts", "artifacts");
     let use_pjrt = args.str_or("engine", "native") == "pjrt";
@@ -210,17 +251,28 @@ fn cmd_quantize(args: &Args) -> Result<()> {
             bail!("--{flag} requires --stream");
         }
     }
-    let lab = open_lab(args)?;
-    let gran = Granularity::parse(&args.str_or("gran", "block")).map_err(|e| anyhow!(e))?;
+    // flag validation before any artifact I/O so mistakes fail fast
     let method = parse_method(args)?;
+    let (format, residual_rank) = parse_format(args, &method)?;
+    let gran = parse_gran(args, format)?;
+    if args.str_or("engine", "native") == "pjrt"
+        && (format != CodeFormat::Fp8E4m3 || residual_rank > 0)
+    {
+        bail!(
+            "--format / --residual-rank require --engine native (the PJRT \
+             sweep kernels are compiled for the FP8 E4M3 grid)"
+        );
+    }
+    let lab = open_lab(args)?;
     println!(
-        "quantizing {} layers  method={}  gran={}  engine={}",
+        "quantizing {} layers  method={}  gran={}  format={}  engine={}",
         lab.quantizable.len(),
         method.label(),
         gran.label(),
+        format.label(),
         if lab.rt.is_some() { "pjrt" } else { "native" }
     );
-    let out = lab.quantize(gran, method.clone())?;
+    let out = lab.quantize_fmt(gran, method.clone(), format, residual_rank)?;
 
     println!("{}", layer_table(&out.layers).render());
     if let Some(a) = &out.agg {
@@ -260,8 +312,9 @@ fn cmd_quantize_stream(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("--stream needs --out DIR for the sharded store"))?;
     let dir = args.str_or("artifacts", "artifacts");
 
-    let gran = Granularity::parse(&args.str_or("gran", "block")).map_err(|e| anyhow!(e))?;
     let method = parse_method(args)?;
+    let (format, residual_rank) = parse_format(args, &method)?;
+    let gran = parse_gran(args, format)?;
     let workers = args
         .usize_or(
             "workers",
@@ -269,6 +322,8 @@ fn cmd_quantize_stream(args: &Args) -> Result<()> {
         )
         .map_err(|e| anyhow!(e))?;
     let mut cfg = crate::coordinator::stream::StreamConfig::new(gran, method, workers);
+    cfg.format = format;
+    cfg.residual_rank = residual_rank;
     cfg.depth = args.usize_or("depth", cfg.depth).map_err(|e| anyhow!(e))?;
     cfg.shard_budget = (args
         .usize_or("shard-mb", crate::io::shard::DEFAULT_SHARD_MB as usize)
@@ -332,11 +387,12 @@ fn cmd_quantize_stream(args: &Args) -> Result<()> {
     }
 
     println!(
-        "streaming {} layers  method={}  gran={}  workers={}  depth={}  \
-         shard-budget={}MiB{}",
+        "streaming {} layers  method={}  gran={}  format={}  workers={}  \
+         depth={}  shard-budget={}MiB{}",
         quantizable.len(),
         cfg.method.label(),
         cfg.granularity.label(),
+        cfg.format.label(),
         cfg.workers,
         cfg.depth,
         cfg.shard_budget >> 20,
@@ -752,6 +808,36 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Decode the `fmt.<name>` descriptors of a quantized store: code format,
+/// bits/element, packed codes bytes (matching the index's `nbytes_of`,
+/// which for sub-byte formats is *less* than elements × 1 byte), and the
+/// residual sidecar pair when present. An unparsable descriptor is a hard
+/// error — a store that cannot be described cannot be loaded either.
+fn print_format_summary(
+    meta: &std::collections::BTreeMap<String, String>,
+    nbytes_of: &dyn Fn(&str) -> Option<u64>,
+) -> Result<()> {
+    for (k, v) in meta {
+        let Some(name) = k.strip_prefix("fmt.") else { continue };
+        let d = Descriptor::parse(v).map_err(|e| anyhow!("{k} = {v:?}: {e}"))?;
+        let codes = nbytes_of(&format!("{name}.codes")).unwrap_or(0);
+        let residual = if d.residual_rank > 0 {
+            let res = nbytes_of(&format!("{name}.res_u")).unwrap_or(0)
+                + nbytes_of(&format!("{name}.res_v")).unwrap_or(0);
+            format!("  + rank-{} residual ({res} B)", d.residual_rank)
+        } else {
+            String::new()
+        };
+        println!(
+            "  format {name:<24} {:<10} {} b/elem  gran {:<9} {codes} B packed{residual}",
+            d.format.label(),
+            d.format.bits_per_element(),
+            d.granularity.label(),
+        );
+    }
+    Ok(())
+}
+
 fn cmd_inspect(args: &Args) -> Result<()> {
     let path = args
         .positional
@@ -774,6 +860,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
                 e.nbytes
             );
         }
+        print_format_summary(&s.meta, &|n| s.entry(n).map(|(_, e)| e.nbytes))?;
         println!(
             "  total: {} tensors, {} payload bytes, {} shards",
             s.names().len(),
@@ -796,6 +883,7 @@ fn cmd_inspect(args: &Args) -> Result<()> {
                 e.nbytes
             );
         }
+        print_format_summary(&idx.meta, &|n| idx.entry(n).map(|e| e.nbytes))?;
         println!(
             "  total: {} tensors, {} payload bytes",
             idx.entries.len(),
@@ -857,6 +945,54 @@ fn cmd_verify_store(args: &Args) -> Result<()> {
             corrupt.len(),
             ok + unverified + corrupt.len()
         );
+    }
+    // structural pass: every fmt.<name> descriptor must parse and agree
+    // with the sidecars it describes — packed codes shape, scales
+    // presence, and the residual pair when a rank is declared
+    let mut described = 0usize;
+    for (k, v) in src.meta() {
+        let Some(name) = k.strip_prefix("fmt.") else { continue };
+        let d = Descriptor::parse(v)
+            .map_err(|e| anyhow!("{path}: {k} = {v:?}: {e}"))?;
+        let codes_name = format!("{name}.codes");
+        let Some(shape) = src.shape_of(&codes_name) else {
+            bail!("{path}: {k} describes a quantized tensor but {codes_name} is missing");
+        };
+        match d.cols {
+            Some(c) => {
+                let want = d.format.packed_row_bytes(c);
+                if shape.len() != 2 || shape[1] != want {
+                    bail!(
+                        "{path}: {codes_name} shape {shape:?} does not match \
+                         its descriptor ({} expects {want} packed bytes per \
+                         row for cols={c})",
+                        d.format.label()
+                    );
+                }
+            }
+            None if d.format.is_sub_byte() => bail!(
+                "{path}: {k} = {v:?} is sub-byte but lacks the cols= field \
+                 needed to recover the logical width"
+            ),
+            None => {}
+        }
+        if !src.contains(&format!("{name}.scales")) {
+            bail!("{path}: {k} describes a quantized tensor but {name}.scales is missing");
+        }
+        if d.residual_rank > 0 {
+            for side in ["res_u", "res_v"] {
+                if !src.contains(&format!("{name}.{side}")) {
+                    bail!(
+                        "{path}: {k} declares res={} but {name}.{side} is missing",
+                        d.residual_rank
+                    );
+                }
+            }
+        }
+        described += 1;
+    }
+    if described > 0 {
+        println!("{path}: {described} format descriptors consistent");
     }
     println!("{path}: {ok} payloads verified ok ({unverified} unverifiable v1)");
     Ok(())
@@ -939,6 +1075,8 @@ mod tests {
             "--graph",
             "--metrics-out",
             "--trace-out",
+            "--format",
+            "--residual-rank",
         ] {
             assert!(USAGE.contains(flag), "{flag} missing from usage");
         }
@@ -1146,6 +1284,151 @@ mod tests {
         .unwrap();
         let err = dispatch(&args).unwrap_err();
         assert!(format!("{err:#}").contains("daq trace"), "{err:#}");
+    }
+
+    #[test]
+    fn format_flag_validation() {
+        // unknown formats are hard errors naming the valid set — before
+        // any artifact I/O, so this fails on the flag, not the missing lab
+        let args = Args::parse([
+            "quantize".to_string(),
+            "--format".into(),
+            "int9".into(),
+        ])
+        .unwrap();
+        let err = dispatch(&args).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("fp8-e4m3 | fp8-e5m2 | int4"),
+            "{err:#}"
+        );
+
+        // --residual-rank on a transform baseline is a hard error
+        let args = Args::parse([
+            "quantize".to_string(),
+            "--method".into(),
+            "smoothquant".into(),
+            "--residual-rank".into(),
+            "2".into(),
+        ])
+        .unwrap();
+        let err = dispatch(&args).unwrap_err();
+        assert!(format!("{err:#}").contains("delta methods"), "{err:#}");
+
+        // and through the streaming path
+        let args = Args::parse([
+            "quantize".to_string(),
+            "--stream".into(),
+            "--out".into(),
+            "/tmp/daq_fmt_cli_test".into(),
+            "--method".into(),
+            "awq".into(),
+            "--format".into(),
+            "int4:32".into(),
+        ])
+        .unwrap();
+        let err = dispatch(&args).unwrap_err();
+        assert!(format!("{err:#}").contains("delta methods"), "{err:#}");
+    }
+
+    #[test]
+    fn int4_group_defaults_granularity() {
+        let args = Args::parse([
+            "quantize".to_string(),
+            "--format".into(),
+            "int4:32".into(),
+        ])
+        .unwrap();
+        let (fmt, rank) = parse_format(&args, &Method::AbsMax).unwrap();
+        assert_eq!(fmt, CodeFormat::Int4 { group: 32 });
+        assert_eq!(rank, 0);
+        assert_eq!(parse_gran(&args, fmt).unwrap(), Granularity::Block(32));
+        // an explicit --gran wins over the format default
+        let args = Args::parse([
+            "quantize".to_string(),
+            "--format".into(),
+            "int4".into(),
+            "--gran".into(),
+            "channel".into(),
+        ])
+        .unwrap();
+        assert_eq!(
+            parse_gran(&args, CodeFormat::Int4 { group: 64 }).unwrap(),
+            Granularity::PerChannel
+        );
+        // no flags: the paper's FP8 block-128 default
+        let args = Args::parse(["quantize".to_string()]).unwrap();
+        let (fmt, rank) = parse_format(&args, &Method::AbsMax).unwrap();
+        assert_eq!(fmt, CodeFormat::Fp8E4m3);
+        assert_eq!(rank, 0);
+        assert_eq!(parse_gran(&args, fmt).unwrap(), Granularity::Block(128));
+    }
+
+    #[test]
+    fn inspect_and_verify_store_decode_format_descriptors() {
+        use crate::io::dts::DtsTensor;
+        let dir =
+            std::env::temp_dir().join(format!("daq_cli_fmt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+
+        let w = demo_tensor(6, 9, 3);
+        let q = crate::quant::quantize_fmt(
+            &w,
+            Granularity::Block(4),
+            CodeFormat::Int4 { group: 4 },
+            1.0,
+            2,
+        );
+        let fmt = q.format();
+        let mut d = Dts::new();
+        d.meta.insert("fmt.w".into(), Descriptor::for_tensor(&q).to_meta());
+        d.insert("w.codes", DtsTensor::U8 {
+            shape: vec![q.shape.0, fmt.packed_row_bytes(q.shape.1)],
+            data: q.codes.clone(),
+        });
+        d.insert_f32("w.scales", &Tensor::new(
+            vec![q.scales.grid_rows, q.scales.grid_cols],
+            q.scales.scales.clone(),
+        ));
+        let lr = q.residual.as_ref().unwrap();
+        d.insert_f32("w.res_u", &Tensor::new(vec![q.shape.0, lr.k], lr.u.clone()));
+        d.insert_f32("w.res_v", &Tensor::new(vec![lr.k, q.shape.1], lr.v.clone()));
+        let store = dir.join("store.dts");
+        d.write(&store).unwrap();
+        let p = store.to_str().unwrap().to_string();
+
+        // both commands decode the descriptor and exit clean
+        dispatch(&Args::parse(["inspect".to_string(), p.clone()]).unwrap()).unwrap();
+        dispatch(&Args::parse(["verify-store".to_string(), p]).unwrap()).unwrap();
+
+        // a sub-byte descriptor without cols= is rejected by both
+        d.meta.insert("fmt.w".into(), "int4:4;block4;res=2".into());
+        let bad = dir.join("bad.dts");
+        d.write(&bad).unwrap();
+        let p = bad.to_str().unwrap().to_string();
+        let err = dispatch(&Args::parse(["verify-store".to_string(), p]).unwrap())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("cols"), "{err:#}");
+
+        // a descriptor declaring a residual that is not there is rejected
+        let mut d = Dts::new();
+        d.meta.insert("fmt.w".into(), Descriptor::for_tensor(&q).to_meta());
+        d.insert("w.codes", DtsTensor::U8 {
+            shape: vec![q.shape.0, fmt.packed_row_bytes(q.shape.1)],
+            data: q.codes.clone(),
+        });
+        d.insert_f32("w.scales", &Tensor::new(
+            vec![q.scales.grid_rows, q.scales.grid_cols],
+            q.scales.scales.clone(),
+        ));
+        d.insert_f32("w.res_u", &Tensor::new(vec![q.shape.0, lr.k], lr.u.clone()));
+        let gone = dir.join("gone.dts");
+        d.write(&gone).unwrap();
+        let p = gone.to_str().unwrap().to_string();
+        let err = dispatch(&Args::parse(["verify-store".to_string(), p]).unwrap())
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("res_v"), "{err:#}");
+
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -19,7 +19,10 @@ use crate::baselines;
 use crate::eval::Params;
 use crate::io::dts::{Dts, DtsTensor};
 use crate::metrics::DeltaStats;
-use crate::quant::{absmax_scales, quantize_with_scales, Granularity, QuantizedTensor};
+use crate::quant::{
+    absmax_scales, absmax_scales_fmt, quantize_with_scales, CodeFormat, Descriptor,
+    Granularity, QuantizedTensor,
+};
 use crate::runtime::{PjrtSweep, Runtime};
 use crate::search::{search_scale_with, Objective, SearchConfig, TiledSweep};
 use crate::tensor::Tensor;
@@ -77,6 +80,28 @@ pub struct PipelineConfig {
     pub granularity: Granularity,
     pub method: Method,
     pub engine: Engine,
+    /// Code format the delta methods quantize into (Table-2's bits axis).
+    /// Transform baselines always store FP8 E4M3; other formats are
+    /// rejected up front.
+    pub format: CodeFormat,
+    /// Rank of the optional low-rank correction fitted against the
+    /// quantization residual ΔW − Q(ΔW); 0 disables it. Delta methods
+    /// only.
+    pub residual_rank: usize,
+}
+
+impl PipelineConfig {
+    /// FP8 E4M3, no residual — the storage form every pre-`CodeFormat`
+    /// call site used.
+    pub fn new(granularity: Granularity, method: Method, engine: Engine) -> Self {
+        PipelineConfig {
+            granularity,
+            method,
+            engine,
+            format: CodeFormat::Fp8E4m3,
+            residual_rank: 0,
+        }
+    }
 }
 
 /// Per-layer outcome.
@@ -109,32 +134,45 @@ pub struct PipelineOutcome {
 impl PipelineOutcome {
     /// Persist as a DTS checkpoint: dequantized f32 weights (for the eval
     /// path) plus `<name>.codes` / `<name>.scales` sidecars (the compact
-    /// storage form) and per-layer α in metadata.
+    /// storage form, packed two-codes-per-byte for sub-byte formats), the
+    /// optional `<name>.res_u` / `<name>.res_v` low-rank residual pair,
+    /// and per-layer α + `fmt.<name>` descriptors in metadata.
     pub fn write_checkpoint(&self, path: &str, src_meta: &BTreeMap<String, String>)
         -> Result<()> {
         let mut d = Dts::new();
         d.meta = src_meta.clone();
-        d.meta.insert("quantized".into(), "fp8_e4m3".into());
         for (name, q) in &self.quantized {
             d.meta.insert(
                 format!("alpha.{name}"),
                 format!("{}", self.layers.iter()
                     .find(|l| &l.name == name).map(|l| l.alpha).unwrap_or(1.0)),
             );
-            // granularity label so loaders can rebuild the ScaleGrid from
-            // the sidecars alone (block size is ambiguous from grid dims)
+            // structured per-tensor descriptor (format, granularity,
+            // residual rank, logical cols for sub-byte packing) — all a
+            // loader needs to rebuild the tensor from the sidecars alone
             d.meta.insert(
-                format!("gran.{name}"),
-                q.scales.granularity.label(),
+                format!("fmt.{name}"),
+                Descriptor::for_tensor(q).to_meta(),
             );
+            let fmt = q.format();
             d.insert(&format!("{name}.codes"), DtsTensor::U8 {
-                shape: vec![q.shape.0, q.shape.1],
+                shape: vec![q.shape.0, fmt.packed_row_bytes(q.shape.1)],
                 data: q.codes.clone(),
             });
             d.insert(&format!("{name}.scales"), DtsTensor::F32 {
                 shape: vec![q.scales.grid_rows, q.scales.grid_cols],
                 data: q.scales.scales.clone(),
             });
+            if let Some(lr) = &q.residual {
+                d.insert(&format!("{name}.res_u"), DtsTensor::F32 {
+                    shape: vec![q.shape.0, lr.k],
+                    data: lr.u.clone(),
+                });
+                d.insert(&format!("{name}.res_v"), DtsTensor::F32 {
+                    shape: vec![lr.k, q.shape.1],
+                    data: lr.v.clone(),
+                });
+            }
         }
         // dequantized weights + untouched params, in a stable order
         let mut names: Vec<&String> = self.params.keys().collect();
@@ -181,6 +219,15 @@ pub fn run_pipeline_grouped(
              (smoothquant / awq)"
         );
     }
+    if !cfg.method.delta_defined()
+        && (cfg.format != CodeFormat::Fp8E4m3 || cfg.residual_rank > 0)
+    {
+        bail!(
+            "--format / --residual-rank only apply to the delta methods \
+             (absmax / search): {} always stores fp8-e4m3 without a residual",
+            cfg.method.label()
+        );
+    }
     // start from the post-trained parameters; quantized layers get
     // replaced below
     let mut params = Params::new();
@@ -217,17 +264,20 @@ type LayerBundle = (Vec<LayerOutcome>, BTreeMap<String, QuantizedTensor>);
 /// unit of work shared by the in-memory pipeline and the streaming driver
 /// (`coordinator::stream`). Both paths call exactly this function, which
 /// is what makes their outputs bitwise-identical.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn quantize_delta_layer(
     name: &str,
     wp: &Tensor,
     wb: &Tensor,
     method: &Method,
     gran: Granularity,
+    format: CodeFormat,
+    residual_rank: usize,
     engine: &dyn crate::search::SweepEngine,
 ) -> (LayerOutcome, QuantizedTensor) {
     let ((alpha, evals, stats, q), secs) = time(|| {
-        let s0 = absmax_scales(wp, gran);
-        match method {
+        let s0 = absmax_scales_fmt(wp, gran, format);
+        let (alpha, evals, stats, mut q) = match method {
             Method::AbsMax => {
                 let st = engine.sweep(wp, wb, &s0, &[1.0])[0];
                 let q = quantize_with_scales(wp, &s0, 1.0);
@@ -240,7 +290,11 @@ pub(crate) fn quantize_delta_layer(
                 (res.alpha, res.evals, res.stats, q)
             }
             _ => unreachable!("transformed methods handled elsewhere"),
+        };
+        if residual_rank > 0 {
+            q.attach_residual(wp, residual_rank);
         }
+        (alpha, evals, stats, q)
     });
     (
         LayerOutcome {
@@ -287,9 +341,11 @@ fn run_delta_methods(
 
     let gran = cfg.granularity;
     let method = cfg.method.clone();
+    let format = cfg.format;
+    let residual_rank = cfg.residual_rank;
 
     let work = move |j: Job, engine: &dyn crate::search::SweepEngine| -> (LayerOutcome, QuantizedTensor) {
-        quantize_delta_layer(&j.name, &j.wp, &j.wb, &method, gran, engine)
+        quantize_delta_layer(&j.name, &j.wp, &j.wb, &method, gran, format, residual_rank, engine)
     };
 
     let results: Vec<(LayerOutcome, QuantizedTensor)> = match cfg.engine {
@@ -530,11 +586,11 @@ mod tests {
     #[test]
     fn absmax_pipeline_quantizes_every_layer_once() {
         let (post, base, names) = fake_ckpts(1);
-        let cfg = PipelineConfig {
-            granularity: Granularity::Block(16),
-            method: Method::AbsMax,
-            engine: Engine::Native { workers: 2 },
-        };
+        let cfg = PipelineConfig::new(
+            Granularity::Block(16),
+            Method::AbsMax,
+            Engine::Native { workers: 2 },
+        );
         let out = run_pipeline(&post, &base, &names, None, &cfg, None).unwrap();
         assert_eq!(out.layers.len(), names.len());
         assert_eq!(out.quantized.len(), names.len());
@@ -550,10 +606,12 @@ mod tests {
     #[test]
     fn search_pipeline_beats_or_matches_absmax_objective() {
         let (post, base, names) = fake_ckpts(2);
-        let mk = |method| PipelineConfig {
-            granularity: Granularity::PerChannel,
-            method,
-            engine: Engine::Native { workers: 1 },
+        let mk = |method| {
+            PipelineConfig::new(
+                Granularity::PerChannel,
+                method,
+                Engine::Native { workers: 1 },
+            )
         };
         let absmax =
             run_pipeline(&post, &base, &names, None, &mk(Method::AbsMax), None).unwrap();
@@ -574,13 +632,15 @@ mod tests {
     #[test]
     fn worker_count_does_not_change_results() {
         let (post, base, names) = fake_ckpts(3);
-        let mk = |workers| PipelineConfig {
-            granularity: Granularity::Block(16),
-            method: Method::Search {
-                objective: Objective::CosSim,
-                range: (0.9, 1.11),
-            },
-            engine: Engine::Native { workers },
+        let mk = |workers| {
+            PipelineConfig::new(
+                Granularity::Block(16),
+                Method::Search {
+                    objective: Objective::CosSim,
+                    range: (0.9, 1.11),
+                },
+                Engine::Native { workers },
+            )
         };
         let a = run_pipeline(&post, &base, &names, None, &mk(1), None).unwrap();
         let b = run_pipeline(&post, &base, &names, None, &mk(4), None).unwrap();
@@ -593,11 +653,11 @@ mod tests {
     #[test]
     fn smoothquant_requires_calib() {
         let (post, base, names) = fake_ckpts(4);
-        let cfg = PipelineConfig {
-            granularity: Granularity::PerChannel,
-            method: Method::SmoothQuant { alpha: 0.5 },
-            engine: Engine::Native { workers: 1 },
-        };
+        let cfg = PipelineConfig::new(
+            Granularity::PerChannel,
+            Method::SmoothQuant { alpha: 0.5 },
+            Engine::Native { workers: 1 },
+        );
         assert!(run_pipeline(&post, &base, &names, None, &cfg, None).is_err());
     }
 
@@ -605,11 +665,11 @@ mod tests {
     fn smoothquant_folds_layernorm_and_has_no_delta_stats() {
         let (post, base, names) = fake_ckpts(5);
         let calib = fake_calib(&names, &post);
-        let cfg = PipelineConfig {
-            granularity: Granularity::PerChannel,
-            method: Method::SmoothQuant { alpha: 0.5 },
-            engine: Engine::Native { workers: 1 },
-        };
+        let cfg = PipelineConfig::new(
+            Granularity::PerChannel,
+            Method::SmoothQuant { alpha: 0.5 },
+            Engine::Native { workers: 1 },
+        );
         let out = run_pipeline(&post, &base, &names, Some(&calib), &cfg, None).unwrap();
         assert!(out.agg.is_none());
         assert!(out.layers.iter().all(|l| l.stats.is_none()));
@@ -622,11 +682,11 @@ mod tests {
     fn awq_pipeline_runs() {
         let (post, base, names) = fake_ckpts(6);
         let calib = fake_calib(&names, &post);
-        let cfg = PipelineConfig {
-            granularity: Granularity::PerChannel,
-            method: Method::Awq,
-            engine: Engine::Native { workers: 1 },
-        };
+        let cfg = PipelineConfig::new(
+            Granularity::PerChannel,
+            Method::Awq,
+            Engine::Native { workers: 1 },
+        );
         let out = run_pipeline(&post, &base, &names, Some(&calib), &cfg, None).unwrap();
         assert_eq!(out.layers.len(), names.len());
         assert!(out.agg.is_none());
@@ -635,25 +695,97 @@ mod tests {
     #[test]
     fn checkpoint_roundtrip() {
         let (post, base, names) = fake_ckpts(7);
-        let cfg = PipelineConfig {
-            granularity: Granularity::Block(16),
-            method: Method::AbsMax,
-            engine: Engine::Native { workers: 1 },
-        };
+        let cfg = PipelineConfig::new(
+            Granularity::Block(16),
+            Method::AbsMax,
+            Engine::Native { workers: 1 },
+        );
         let out = run_pipeline(&post, &base, &names, None, &cfg, None).unwrap();
         let path = std::env::temp_dir().join(format!("daq_ckpt_{}.dts", std::process::id()));
         out.write_checkpoint(path.to_str().unwrap(), &post.meta).unwrap();
         let rd = Dts::read(&path).unwrap();
         std::fs::remove_file(&path).unwrap();
-        assert_eq!(rd.meta.get("quantized").map(|s| s.as_str()), Some("fp8_e4m3"));
+        // legacy stringly meta is gone; the structured descriptor replaces
+        // both the top-level marker and the per-name granularity label
+        assert!(rd.meta.get("quantized").is_none());
         for n in &names {
             assert!(rd.contains(n));
             assert!(rd.contains(&format!("{n}.codes")));
             assert!(rd.contains(&format!("{n}.scales")));
+            assert!(rd.meta.get(&format!("gran.{n}")).is_none());
             assert_eq!(
-                rd.meta.get(&format!("gran.{n}")).map(|s| s.as_str()),
-                Some("block16")
+                rd.meta.get(&format!("fmt.{n}")).map(|s| s.as_str()),
+                Some("fp8-e4m3;block16")
             );
+        }
+    }
+
+    #[test]
+    fn transform_methods_reject_format_and_residual() {
+        let (post, base, names) = fake_ckpts(9);
+        let calib = fake_calib(&names, &post);
+        let mut cfg = PipelineConfig::new(
+            Granularity::PerChannel,
+            Method::SmoothQuant { alpha: 0.5 },
+            Engine::Native { workers: 1 },
+        );
+        cfg.format = CodeFormat::Int4 { group: 16 };
+        let err = run_pipeline(&post, &base, &names, Some(&calib), &cfg, None)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("delta methods"), "{err:#}");
+
+        let mut cfg = PipelineConfig::new(
+            Granularity::PerChannel,
+            Method::Awq,
+            Engine::Native { workers: 1 },
+        );
+        cfg.residual_rank = 1;
+        let err = run_pipeline(&post, &base, &names, Some(&calib), &cfg, None)
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("delta methods"), "{err:#}");
+    }
+
+    #[test]
+    fn int4_residual_pipeline_and_checkpoint_layout() {
+        let (post, base, names) = fake_ckpts(10);
+        let mut cfg = PipelineConfig::new(
+            Granularity::Block(16),
+            Method::AbsMax,
+            Engine::Native { workers: 2 },
+        );
+        cfg.format = CodeFormat::Int4 { group: 16 };
+        cfg.residual_rank = 2;
+        let out = run_pipeline(&post, &base, &names, None, &cfg, None).unwrap();
+        for n in &names {
+            let q = &out.quantized[n];
+            assert_eq!(q.format(), CodeFormat::Int4 { group: 16 });
+            assert_eq!(q.residual.as_ref().unwrap().k, 2);
+            // the eval-ready params include the residual correction
+            assert_eq!(out.params[n], q.dequantize(), "{n}");
+        }
+        let path = std::env::temp_dir()
+            .join(format!("daq_ckpt_int4_{}.dts", std::process::id()));
+        out.write_checkpoint(path.to_str().unwrap(), &post.meta).unwrap();
+        let rd = Dts::read(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        assert!(rd.meta.get("quantized").is_none());
+        for n in &names {
+            let q = &out.quantized[n];
+            let (rows, cols) = q.shape;
+            assert_eq!(
+                rd.meta.get(&format!("fmt.{n}")).map(|s| s.as_str()),
+                Some(format!("int4:16;block16;res=2;cols={cols}").as_str()),
+                "{n}"
+            );
+            // codes land packed: two INT4 codes per byte, U8 shape
+            // [rows, ceil(cols/2)]
+            let (shape, data) = rd.tensor_u8(&format!("{n}.codes")).unwrap();
+            assert_eq!(shape, vec![rows, cols.div_ceil(2)], "{n}");
+            assert_eq!(data, q.codes, "{n}");
+            let u = rd.get(&format!("{n}.res_u")).unwrap();
+            assert_eq!(u.shape(), &[rows, 2], "{n}");
+            let v = rd.get(&format!("{n}.res_v")).unwrap();
+            assert_eq!(v.shape(), &[2, cols], "{n}");
         }
     }
 
@@ -663,14 +795,14 @@ mod tests {
         // must reproduce the coordinator's dequantized weights bit-for-bit
         let (post, base, names) = fake_ckpts(8);
         for gran in [Granularity::Block(16), Granularity::PerChannel] {
-            let cfg = PipelineConfig {
-                granularity: gran,
-                method: Method::Search {
+            let cfg = PipelineConfig::new(
+                gran,
+                Method::Search {
                     objective: Objective::SignRate,
                     range: (0.8, 1.25),
                 },
-                engine: Engine::Native { workers: 2 },
-            };
+                Engine::Native { workers: 2 },
+            );
             let out = run_pipeline(&post, &base, &names, None, &cfg, None).unwrap();
             let path = std::env::temp_dir().join(format!(
                 "daq_ckpt_dequant_{}_{}.dts",

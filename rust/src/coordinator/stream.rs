@@ -51,7 +51,7 @@ use crate::io::dts::DtsTensor;
 use crate::io::shard::{shard_file_name, ShardWriter};
 use crate::io::TensorSource;
 use crate::metrics::DeltaStats;
-use crate::quant::{Granularity, QuantizedTensor};
+use crate::quant::{CodeFormat, Descriptor, Granularity, QuantizedTensor};
 use crate::search::TiledSweep;
 use crate::tensor::Tensor;
 use crate::util::json::Json;
@@ -73,6 +73,13 @@ pub struct StreamConfig {
     pub method: Method,
     /// Total worker budget, split between unit- and tile-parallelism.
     pub workers: usize,
+    /// Code format the delta methods quantize into; the transform
+    /// baselines always store FP8 E4M3 (other formats are rejected up
+    /// front, mirroring the in-memory pipeline).
+    pub format: CodeFormat,
+    /// Rank of the optional low-rank residual correction (0 = none);
+    /// delta methods only.
+    pub residual_rank: usize,
     /// K: maximum units admitted (read but not yet written).
     pub depth: usize,
     /// Output shard payload budget in bytes.
@@ -105,6 +112,8 @@ impl StreamConfig {
             granularity,
             method,
             workers: workers.max(1),
+            format: CodeFormat::Fp8E4m3,
+            residual_rank: 0,
             depth: workers.max(2),
             shard_budget: crate::io::shard::DEFAULT_SHARD_MB << 20,
             resume: false,
@@ -205,6 +214,8 @@ fn config_line(cfg: &StreamConfig) -> String {
     let mut c = BTreeMap::new();
     c.insert("gran".to_string(), Json::Str(cfg.granularity.label()));
     c.insert("method".to_string(), Json::Str(cfg.method.label()));
+    c.insert("format".to_string(), Json::Str(cfg.format.label()));
+    c.insert("res".to_string(), Json::Num(cfg.residual_rank as f64));
     let mut o = BTreeMap::new();
     o.insert("config".to_string(), Json::Obj(c));
     format!("{}\n", Json::Obj(o))
@@ -455,8 +466,16 @@ fn quantize_unit(
             .next()
             .ok_or_else(|| anyhow!("delta unit with no members"))?;
         let wb = wb.ok_or_else(|| anyhow!("{name}: missing base weight"))?;
-        let (outcome, q) =
-            quantize_delta_layer(&name, &wp, &wb, &cfg.method, cfg.granularity, engine);
+        let (outcome, q) = quantize_delta_layer(
+            &name,
+            &wp,
+            &wb,
+            &cfg.method,
+            cfg.granularity,
+            cfg.format,
+            cfg.residual_rank,
+            engine,
+        );
         Ok((vec![outcome], unit_tensors(vec![(name, q)], None)))
     }
 }
@@ -467,12 +486,16 @@ fn unit_tensors(
     quantized: Vec<(String, QuantizedTensor)>,
     ln_fold: Option<(String, String, Tensor, Tensor)>,
 ) -> Vec<(String, DtsTensor)> {
-    let mut tensors = Vec::with_capacity(quantized.len() * 3 + 2);
+    let mut tensors = Vec::with_capacity(quantized.len() * 5 + 2);
     for (name, q) in quantized {
         let deq = q.dequantize();
+        let fmt = q.format();
         tensors.push((
             format!("{name}.codes"),
-            DtsTensor::U8 { shape: vec![q.shape.0, q.shape.1], data: q.codes },
+            DtsTensor::U8 {
+                shape: vec![q.shape.0, fmt.packed_row_bytes(q.shape.1)],
+                data: q.codes,
+            },
         ));
         tensors.push((
             format!("{name}.scales"),
@@ -481,6 +504,16 @@ fn unit_tensors(
                 data: q.scales.scales,
             },
         ));
+        if let Some(lr) = q.residual {
+            tensors.push((
+                format!("{name}.res_u"),
+                DtsTensor::F32 { shape: vec![q.shape.0, lr.k], data: lr.u },
+            ));
+            tensors.push((
+                format!("{name}.res_v"),
+                DtsTensor::F32 { shape: vec![lr.k, q.shape.1], data: lr.v },
+            ));
+        }
         tensors.push((
             name,
             DtsTensor::F32 { shape: deq.shape().to_vec(), data: deq.into_data() },
@@ -517,6 +550,14 @@ pub fn run_stream(
             bail!(
                 "{} requires calibration stats (pass an activation-stat \
                  sidecar via --calib)",
+                cfg.method.label()
+            );
+        }
+        if cfg.format != CodeFormat::Fp8E4m3 || cfg.residual_rank > 0 {
+            bail!(
+                "--format / --residual-rank only apply to the delta methods \
+                 (absmax / search): {} always stores fp8-e4m3 without a \
+                 residual",
                 cfg.method.label()
             );
         }
@@ -585,12 +626,27 @@ fn run_stream_inner(
         if let Some(c) = &config {
             let gran = c.get("gran").and_then(|g| g.as_str()).unwrap_or("");
             let method = c.get("method").and_then(|m| m.as_str()).unwrap_or("");
-            if gran != cfg.granularity.label() || method != cfg.method.label() {
+            // journals from before the CodeFormat API carry no format
+            // fields; they were all FP8 E4M3 with no residual
+            let fmt = c
+                .get("format")
+                .and_then(|f| f.as_str())
+                .unwrap_or("fp8-e4m3")
+                .to_string();
+            let res = c.get("res").and_then(|r| r.as_usize()).unwrap_or(0);
+            if gran != cfg.granularity.label()
+                || method != cfg.method.label()
+                || fmt != cfg.format.label()
+                || res != cfg.residual_rank
+            {
                 bail!(
                     "{out_dir:?}: resume journal was written by gran={gran} \
-                     method={method}, current run is gran={} method={}",
+                     method={method} format={fmt} res={res}, current run is \
+                     gran={} method={} format={} res={}",
                     cfg.granularity.label(),
-                    cfg.method.label()
+                    cfg.method.label(),
+                    cfg.format.label(),
+                    cfg.residual_rank
                 );
             }
         }
@@ -601,7 +657,15 @@ fn run_stream_inner(
         let mut resumed = BTreeMap::new();
         for unit in &plan.units {
             let label = unit.label();
-            let written = unit.written_names();
+            let mut written = unit.written_names();
+            if cfg.residual_rank > 0 {
+                // residual sidecars ride along with every member of a
+                // delta unit (the transform path rejects residuals above)
+                for m in unit.members() {
+                    written.push(format!("{m}.res_u"));
+                    written.push(format!("{m}.res_v"));
+                }
+            }
             let present = written.iter().filter(|p| w.contains(p)).count();
             if present == written.len() {
                 match recorded.remove(&label) {
@@ -892,12 +956,22 @@ fn run_stream_inner(
         None
     };
 
-    // store-level metadata, mirroring `PipelineOutcome::write_checkpoint`
+    // store-level metadata, mirroring `PipelineOutcome::write_checkpoint`:
+    // one structured `fmt.<name>` descriptor per quantized tensor. The
+    // whole run shares one (format, granularity, rank) triple, so the
+    // descriptor only varies in its per-tensor `cols` field.
     let mut meta = post.meta().clone();
-    meta.insert("quantized".into(), "fp8_e4m3".into());
     for l in &layers {
         meta.insert(format!("alpha.{}", l.name), l.alpha.to_string());
-        meta.insert(format!("gran.{}", l.name), cfg.granularity.label());
+        let d = Descriptor {
+            format: cfg.format,
+            granularity: cfg.granularity,
+            // same clamp `attach_residual` applies, so the descriptor
+            // matches the one `write_checkpoint` derives from the tensor
+            residual_rank: cfg.residual_rank.min(l.shape.0.min(l.shape.1)),
+            cols: cfg.format.is_sub_byte().then_some(l.shape.1),
+        };
+        meta.insert(format!("fmt.{}", l.name), d.to_meta());
     }
     let manifest = writer.finish(&meta)?;
 

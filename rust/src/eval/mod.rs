@@ -35,12 +35,17 @@ pub fn load_params(d: &Dts) -> Result<Params> {
 }
 
 /// Like [`load_params`] but skips non-f32 tensors and quantization
-/// sidecars (`*.codes`, `*.scales`) — the loader for quantized
-/// checkpoints written by `PipelineOutcome::write_checkpoint`.
+/// sidecars (`*.codes`, `*.scales`, `*.res_u`, `*.res_v`) — the loader
+/// for quantized checkpoints written by
+/// `PipelineOutcome::write_checkpoint`.
 pub fn load_params_filtered(d: &Dts) -> Result<Params> {
     let mut p = Params::new();
     for name in d.names() {
-        if name.ends_with(".codes") || name.ends_with(".scales") {
+        if name.ends_with(".codes")
+            || name.ends_with(".scales")
+            || name.ends_with(".res_u")
+            || name.ends_with(".res_v")
+        {
             continue;
         }
         if let Ok(t) = d.tensor_f32(name) {
@@ -51,9 +56,11 @@ pub fn load_params_filtered(d: &Dts) -> Result<Params> {
 }
 
 /// Load a checkpoint preferring the compact quantized sidecars: every
-/// `<name>.codes` / `<name>.scales` pair is bulk-dequantized through the
-/// shared E4M3 decode table (`fp8::decode_lut`) instead of trusting (or
-/// even requiring) a stored f32 copy — the serving-path loader. Tensors
+/// `<name>.codes` / `<name>.scales` pair is bulk-dequantized through its
+/// format's decode path (`CodeFormat::decode_row_into` — FP8 LUTs or
+/// INT4 nibble unpacking, per the `fmt.<name>` descriptor), with the
+/// low-rank residual applied when present, instead of trusting (or even
+/// requiring) a stored f32 copy — the serving-path loader. Tensors
 /// without sidecars load as plain f32; non-f32 extras are skipped.
 pub fn load_params_dequant(d: &Dts) -> Result<Params> {
     load_params_dequant_source(d)

@@ -526,17 +526,33 @@ pub fn synth_params(cfg: &ModelCfg, seed: u64) -> HashMap<String, Tensor> {
 }
 
 /// Quantize every GEMM weight of a [`synth_params`] map in place into a
-/// [`QuantizedParams`] store (AbsMax, the given granularity) — the
-/// quantized-side twin of [`synth_params`] for benches and tests.
+/// [`QuantizedParams`] store (AbsMax FP8 E4M3, the given granularity) —
+/// the quantized-side twin of [`synth_params`] for benches and tests.
 pub fn synth_quantized(
     params: &HashMap<String, Tensor>,
     quantizable: &[String],
     gran: crate::quant::Granularity,
 ) -> QuantizedParams {
+    synth_quantized_fmt(params, quantizable, gran, crate::quant::CodeFormat::Fp8E4m3, 0)
+}
+
+/// [`synth_quantized`] for any code format, optionally fitting a rank-k
+/// residual per quantized weight — the builder behind the per-format
+/// serve tests and the INT4 bench rows.
+pub fn synth_quantized_fmt(
+    params: &HashMap<String, Tensor>,
+    quantizable: &[String],
+    gran: crate::quant::Granularity,
+    fmt: crate::quant::CodeFormat,
+    residual_rank: usize,
+) -> QuantizedParams {
     let mut qp = QuantizedParams::new();
     for (name, t) in params {
         if quantizable.iter().any(|q| q == name) {
-            qp.insert(name.clone(), QParam::Quant(crate::quant::quantize(t, gran, 1.0)));
+            qp.insert(
+                name.clone(),
+                QParam::Quant(crate::quant::quantize_fmt(t, gran, fmt, 1.0, residual_rank)),
+            );
         } else {
             qp.insert(name.clone(), QParam::Plain(t.clone()));
         }

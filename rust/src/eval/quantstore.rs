@@ -19,7 +19,9 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::io::dts::DtsTensor;
 use crate::io::TensorSource;
-use crate::quant::{Granularity, QuantizedTensor, ScaleGrid};
+use crate::quant::{
+    CodeFormat, Descriptor, Granularity, LowRank, QuantizedTensor, ScaleGrid,
+};
 use crate::tensor::Tensor;
 
 use super::Params;
@@ -68,11 +70,18 @@ impl QuantizedParams {
     }
 
     /// Load from any checkpoint backend. Mirrors the dequantizing
-    /// loader's name derivation exactly: a `.codes`/`.scales` suffix only
-    /// counts as a sidecar when its counterpart exists, codes-only
-    /// checkpoints (no stored f32 copy) load fine, and codes without the
-    /// `gran.<name>` metadata fall back to the stored f32 copy
-    /// (pre-metadata checkpoints).
+    /// loader's name derivation exactly: a `.codes`/`.scales`
+    /// (`.res_u`/`.res_v`) suffix only counts as a sidecar when the
+    /// `.codes` counterpart exists, codes-only checkpoints (no stored f32
+    /// copy) load fine, and codes with neither a `fmt.<name>` descriptor
+    /// nor the legacy `gran.<name>` metadata fall back to the stored f32
+    /// copy (pre-metadata checkpoints).
+    ///
+    /// The per-tensor [`Descriptor`] (`fmt.<name>`) is the source of
+    /// truth for format, granularity, residual rank, and — for sub-byte
+    /// formats, whose packed codes shape is ambiguous — the logical
+    /// column count. Legacy stores carrying only `gran.<name>` load
+    /// through a compat shim as FP8 E4M3 without a residual.
     pub fn load(d: &dyn TensorSource) -> Result<QuantizedParams> {
         let mut map = HashMap::new();
         let mut names: Vec<String> = Vec::new();
@@ -89,6 +98,15 @@ impl QuantizedParams {
                     continue;
                 }
                 name.clone()
+            } else if let Some(stem) = name
+                .strip_suffix(".res_u")
+                .or_else(|| name.strip_suffix(".res_v"))
+            {
+                // residual factor sidecars load with their quantized owner
+                if d.contains(&format!("{stem}.codes")) {
+                    continue;
+                }
+                name.clone()
             } else {
                 name.clone()
             };
@@ -100,24 +118,54 @@ impl QuantizedParams {
             let codes_name = format!("{name}.codes");
             let scales_name = format!("{name}.scales");
             let has_codes = d.contains(&codes_name);
-            let gran_label = d.meta().get(&format!("gran.{name}"));
-            if has_codes && d.contains(&scales_name) && gran_label.is_some() {
+            let desc = Self::descriptor_for(d, name)?;
+            if has_codes && d.contains(&scales_name) && desc.is_some() {
+                let desc = desc.expect("checked");
+                let fmt = desc.format;
                 let (cshape, codes) = d.tensor_u8(&codes_name)?;
                 if cshape.len() != 2 {
                     bail!("{codes_name}: expected 2-D codes, got {cshape:?}");
                 }
-                let (rows, cols) = (cshape[0], cshape[1]);
-                let gran = Granularity::parse(gran_label.expect("checked"))
-                    .map_err(|e| anyhow!(e))?;
+                let rows = cshape[0];
+                // logical columns: the descriptor's for sub-byte formats
+                // (the packed shape can't distinguish 2n from 2n−1), the
+                // codes shape for byte-wide ones
+                let cols = match desc.cols {
+                    Some(c) => {
+                        if fmt.packed_row_bytes(c) != cshape[1] {
+                            bail!(
+                                "{codes_name}: packed shape {cshape:?} does not \
+                                 match cols={c} of format {}",
+                                fmt.label()
+                            );
+                        }
+                        c
+                    }
+                    None if fmt.is_sub_byte() => bail!(
+                        "{name}: sub-byte format {} requires a cols field in \
+                         its fmt.{name} descriptor",
+                        fmt.label()
+                    ),
+                    None => cshape[1],
+                };
                 let scales = d.tensor_f32(&scales_name)?.into_data();
-                let grid = ScaleGrid::from_sidecar(gran, rows, cols, scales)
-                    .map_err(|e| anyhow!("{name}: {e}"))?;
-                let q = QuantizedTensor { shape: (rows, cols), codes, scales: grid };
+                let grid = ScaleGrid::from_sidecar(desc.granularity, rows, cols, scales)
+                    .map_err(|e| anyhow!("{name}: {e}"))?
+                    .with_format(fmt);
+                let residual =
+                    Self::load_residual(d, name, desc.residual_rank, rows, cols)?;
+                let q = QuantizedTensor {
+                    shape: (rows, cols),
+                    codes,
+                    scales: grid,
+                    residual,
+                };
                 map.insert(name.clone(), QParam::Quant(q));
             } else {
                 match d.read_tensor(name) {
-                    // pre-metadata checkpoints (codes but no `gran.<name>`
-                    // meta) and plain tensors: use the stored f32 copy
+                    // pre-metadata checkpoints (codes but no `fmt.<name>` /
+                    // `gran.<name>` meta) and plain tensors: use the stored
+                    // f32 copy
                     Ok(DtsTensor::F32 { shape, data }) => {
                         map.insert(name.clone(), QParam::Plain(Tensor::new(shape, data)));
                     }
@@ -133,13 +181,57 @@ impl QuantizedParams {
                     }
                     Ok(_) | Err(_) => bail!(
                         "{name}: {codes_name} present but cannot dequantize \
-                         (missing {scales_name} or gran.{name} metadata) and no \
+                         (missing {scales_name} or fmt.{name} metadata) and no \
                          f32 copy is stored"
                     ),
                 }
             }
         }
         Ok(QuantizedParams { map })
+    }
+
+    /// Resolve the per-tensor store descriptor: the structured
+    /// `fmt.<name>` value when present, else the legacy `gran.<name>`
+    /// label shimmed to FP8 E4M3 / rank 0, else `None` (not quantized, or
+    /// a pre-metadata store).
+    fn descriptor_for(d: &dyn TensorSource, name: &str) -> Result<Option<Descriptor>> {
+        if let Some(s) = d.meta().get(&format!("fmt.{name}")) {
+            return Descriptor::parse(s)
+                .map(Some)
+                .map_err(|e| anyhow!("{name}: {e}"));
+        }
+        match d.meta().get(&format!("gran.{name}")) {
+            Some(g) => Ok(Some(Descriptor {
+                format: CodeFormat::Fp8E4m3,
+                granularity: Granularity::parse(g).map_err(|e| anyhow!("{name}: {e}"))?,
+                residual_rank: 0,
+                cols: None,
+            })),
+            None => Ok(None),
+        }
+    }
+
+    /// Load the `.res_u` / `.res_v` factor pair a descriptor of rank > 0
+    /// promises, validating factor shapes against the logical dims.
+    fn load_residual(
+        d: &dyn TensorSource,
+        name: &str,
+        k: usize,
+        rows: usize,
+        cols: usize,
+    ) -> Result<Option<LowRank>> {
+        if k == 0 {
+            return Ok(None);
+        }
+        let u = d.tensor_f32(&format!("{name}.res_u"))?;
+        let v = d.tensor_f32(&format!("{name}.res_v"))?;
+        if u.shape() != [rows, k] {
+            bail!("{name}.res_u: shape {:?}, wanted [{rows}, {k}]", u.shape());
+        }
+        if v.shape() != [k, cols] {
+            bail!("{name}.res_v: shape {:?}, wanted [{k}, {cols}]", v.shape());
+        }
+        Ok(Some(LowRank { k, u: u.into_data(), v: v.into_data() }))
     }
 
     /// Build from a pipeline outcome's in-memory results: storage-form
@@ -323,6 +415,85 @@ mod tests {
                 other.map(|p| p.numel())
             ),
         }
+    }
+
+    #[test]
+    fn fmt_descriptor_store_loads_every_format_with_residual() {
+        use crate::quant::quantize_fmt;
+        let mut rng = XorShift::new(53);
+        // odd column count: exercises the packed-shape/cols disambiguation
+        let w = Tensor::new(vec![9, 13], rng.normal_vec(9 * 13, 0.1));
+        for fmt in [
+            CodeFormat::Fp8E4m3,
+            CodeFormat::Fp8E5m2,
+            CodeFormat::Int4 { group: 4 },
+        ] {
+            let q = quantize_fmt(&w, Granularity::Block(4), fmt, 1.0, 2);
+            let lr = q.residual.as_ref().unwrap();
+            let mut d = Dts::new();
+            d.meta.insert("fmt.w".into(), Descriptor::for_tensor(&q).to_meta());
+            d.insert(
+                "w.codes",
+                DtsTensor::U8 {
+                    shape: vec![9, fmt.packed_row_bytes(13)],
+                    data: q.codes.clone(),
+                },
+            );
+            d.insert(
+                "w.scales",
+                DtsTensor::F32 {
+                    shape: vec![q.scales.grid_rows, q.scales.grid_cols],
+                    data: q.scales.scales.clone(),
+                },
+            );
+            d.insert(
+                "w.res_u",
+                DtsTensor::F32 { shape: vec![9, lr.k], data: lr.u.clone() },
+            );
+            d.insert(
+                "w.res_v",
+                DtsTensor::F32 { shape: vec![lr.k, 13], data: lr.v.clone() },
+            );
+            let qp = QuantizedParams::load(&d).unwrap();
+            assert_eq!(qp.n_quantized(), 1, "{}", fmt.label());
+            // factor sidecars never surface as standalone params
+            assert!(!qp.contains("w.res_u") && !qp.contains("w.res_v"));
+            assert_eq!(qp.resident_param_bytes(), q.nbytes(), "{}", fmt.label());
+            let got = match qp.get("w") {
+                Some(QParam::Quant(g)) => g,
+                other => panic!("{}: {:?}", fmt.label(), other.map(|p| p.numel())),
+            };
+            assert_eq!(got.format(), fmt);
+            assert_eq!(got.residual.as_ref().unwrap().k, 2);
+            for (a, b) in got.dequantize().data().iter().zip(q.dequantize().data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{}", fmt.label());
+            }
+        }
+    }
+
+    #[test]
+    fn sub_byte_store_without_cols_is_rejected() {
+        use crate::quant::quantize_fmt;
+        let mut rng = XorShift::new(59);
+        let w = Tensor::new(vec![4, 6], rng.normal_vec(24, 0.1));
+        let fmt = CodeFormat::Int4 { group: 2 };
+        let q = quantize_fmt(&w, Granularity::Block(2), fmt, 1.0, 0);
+        let mut d = Dts::new();
+        // descriptor is missing the mandatory cols field for a sub-byte fmt
+        d.meta.insert("fmt.w".into(), "int4:2;block2".into());
+        d.insert(
+            "w.codes",
+            DtsTensor::U8 { shape: vec![4, 3], data: q.codes.clone() },
+        );
+        d.insert(
+            "w.scales",
+            DtsTensor::F32 {
+                shape: vec![q.scales.grid_rows, q.scales.grid_cols],
+                data: q.scales.scales.clone(),
+            },
+        );
+        let err = QuantizedParams::load(&d).unwrap_err();
+        assert!(format!("{err:#}").contains("cols"), "{err:#}");
     }
 
     #[test]

@@ -11,7 +11,7 @@ use crate::coordinator::{run_pipeline, Engine, Method, PipelineConfig, PipelineO
 use crate::eval::{eval_rubric, load_params, EvalSet, NativeForward, Params, PjrtForward};
 use crate::eval::model_native::ModelCfg;
 use crate::io::dts::Dts;
-use crate::quant::Granularity;
+use crate::quant::{CodeFormat, Granularity};
 use crate::report::{fmt3, fmt_l2, fmt_pct, na, Table};
 use crate::runtime::Runtime;
 use crate::search::Objective;
@@ -68,10 +68,25 @@ impl Lab {
         }
     }
 
-    /// Run one pipeline configuration.
+    /// Run one pipeline configuration (default fp8-e4m3 code format,
+    /// no residual).
     pub fn quantize(&self, granularity: Granularity, method: Method)
         -> Result<PipelineOutcome> {
-        let cfg = PipelineConfig { granularity, method, engine: self.engine() };
+        self.quantize_fmt(granularity, method, CodeFormat::Fp8E4m3, 0)
+    }
+
+    /// Run one pipeline configuration under an explicit code format and
+    /// residual rank (the CLI's `--format` / `--residual-rank` path).
+    pub fn quantize_fmt(
+        &self,
+        granularity: Granularity,
+        method: Method,
+        format: CodeFormat,
+        residual_rank: usize,
+    ) -> Result<PipelineOutcome> {
+        let mut cfg = PipelineConfig::new(granularity, method, self.engine());
+        cfg.format = format;
+        cfg.residual_rank = residual_rank;
         run_pipeline(&self.post, &self.base, &self.quantizable,
                      Some(&self.calib), &cfg, self.rt.as_ref())
     }
@@ -80,11 +95,11 @@ impl Lab {
     /// by perf comparisons).
     pub fn quantize_native(&self, granularity: Granularity, method: Method)
         -> Result<PipelineOutcome> {
-        let cfg = PipelineConfig {
+        let cfg = PipelineConfig::new(
             granularity,
             method,
-            engine: Engine::Native { workers: self.workers },
-        };
+            Engine::Native { workers: self.workers },
+        );
         run_pipeline(&self.post, &self.base, &self.quantizable,
                      Some(&self.calib), &cfg, None)
     }

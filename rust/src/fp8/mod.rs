@@ -11,7 +11,7 @@
 //! use — out-of-range values clamp to ±448 rather than becoming NaN).
 
 mod e5m2;
-pub use e5m2::{decode_e5m2, encode_e5m2, qdq_e5m2};
+pub use e5m2::{decode_e5m2, encode_e5m2, qdq_e5m2, E5M2_MAX};
 
 /// Largest finite E4M3 value.
 pub const E4M3_MAX: f32 = 448.0;
@@ -125,6 +125,15 @@ pub fn e5m2_ratio() -> f32 {
     e5m2::E5M2_MAX / E4M3_MAX
 }
 
+/// Reciprocal-scale quantize–dequantize on the E5M2 grid:
+/// `qdq_e5m2(x · s⁻¹) · s`. The E5M2 instantiation of the canonical
+/// scaled projection — same contract as [`qdq_e4m3_scaled`] (`inv_s`
+/// built by [`recip_scale`]).
+#[inline(always)]
+pub fn qdq_e5m2_scaled(x: f32, inv_s: f32, s: f32) -> f32 {
+    qdq_e5m2(x * inv_s) * s
+}
+
 /// Decode table for fast bulk dequantization (NaN codes decode to NaN).
 pub fn decode_table() -> [f32; 256] {
     let mut t = [0.0f32; 256];
@@ -155,6 +164,34 @@ static DECODE_LUT: std::sync::OnceLock<[f32; 256]> = std::sync::OnceLock::new();
 /// [`decode_e4m3`] per element or rebuilding the table per tensor.
 pub fn decode_lut() -> &'static [f32; 256] {
     DECODE_LUT.get_or_init(decode_table)
+}
+
+/// E5M2 decode table (NaN codes decode to NaN).
+pub fn decode_table_e5m2() -> [f32; 256] {
+    let mut t = [0.0f32; 256];
+    for (c, slot) in t.iter_mut().enumerate() {
+        *slot = decode_e5m2(c as u8);
+    }
+    t
+}
+
+static DECODE_LUT_E5M2: std::sync::OnceLock<[f32; 256]> = std::sync::OnceLock::new();
+
+/// Process-wide E5M2 decode table — the E5M2 twin of [`decode_lut`].
+pub fn decode_lut_e5m2() -> &'static [f32; 256] {
+    DECODE_LUT_E5M2.get_or_init(decode_table_e5m2)
+}
+
+/// Bulk-decode a slice of E5M2 codes through the shared E5M2 LUT — the
+/// E5M2 twin of [`decode_slice_into`], used by the quantized-resident
+/// read paths when a tensor's `CodeFormat` is `fp8-e5m2`.
+#[inline]
+pub fn decode_slice_into_e5m2(codes: &[u8], out: &mut [f32]) {
+    assert_eq!(codes.len(), out.len());
+    let table = decode_lut_e5m2();
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = table[c as usize];
+    }
 }
 
 #[cfg(test)]
@@ -317,6 +354,37 @@ mod tests {
             let q = qdq_e4m3_scaled(x, inv, s);
             let grid = qdq_e4m3(x * inv);
             assert_eq!(q.to_bits(), (grid * s).to_bits());
+        }
+    }
+
+    #[test]
+    fn e5m2_lut_and_scaled_qdq_match_scalar_paths() {
+        let lut = decode_lut_e5m2();
+        for c in 0u16..256 {
+            let want = decode_e5m2(c as u8);
+            if want.is_nan() {
+                assert!(lut[c as usize].is_nan());
+            } else {
+                assert_eq!(lut[c as usize].to_bits(), want.to_bits());
+            }
+        }
+        assert!(std::ptr::eq(lut, decode_lut_e5m2()));
+        let codes: Vec<u8> = (0..=255).collect();
+        let mut out = vec![0.0f32; 256];
+        decode_slice_into_e5m2(&codes, &mut out);
+        for (c, v) in codes.iter().zip(&out) {
+            let want = decode_e5m2(*c);
+            assert!(want.is_nan() && v.is_nan() || v.to_bits() == want.to_bits());
+        }
+        let s = 0.21f32;
+        let inv = 1.0 / s;
+        let mut rng = crate::util::rng::XorShift::new(17);
+        for _ in 0..10_000 {
+            let x = (rng.f32() - 0.5) * 50.0;
+            assert_eq!(
+                qdq_e5m2_scaled(x, inv, s).to_bits(),
+                (qdq_e5m2(x * inv) * s).to_bits()
+            );
         }
     }
 

@@ -133,8 +133,9 @@ pub fn delta_stats(w_post: &Tensor, w_base: &Tensor, w_quant: &Tensor) -> DeltaS
 /// [`SweepPlan`](sweep::SweepPlan), which hoists all candidate-invariant
 /// state out of the loop and is verified against this function across
 /// every granularity. Both use the canonical reciprocal-multiply scaled
-/// projection [`fp8::qdq_e4m3_scaled`] (`qdq(p·s⁻¹)·s`), so their sign
-/// counts match bit-for-bit.
+/// projection (`qdq(p·s⁻¹)·s`, [`fp8::qdq_e4m3_scaled`] and its
+/// per-format twins, dispatched on the grid's `CodeFormat`), so their
+/// sign counts match bit-for-bit at every format.
 pub fn sweep_native(
     w_post: &Tensor,
     w_base: &Tensor,
@@ -147,6 +148,7 @@ pub fn sweep_native(
     let mut stats = vec![DeltaStats::default(); nc];
     let wp = w_post.data();
     let wb = w_base.data();
+    let fmt = s0.format;
     for r in 0..rows {
         for c in 0..cols {
             let idx = r * cols + c;
@@ -159,7 +161,7 @@ pub fn sweep_native(
             for (k, &alpha) in alphas.iter().enumerate() {
                 let s = s_base * alpha;
                 let inv_s = fp8::recip_scale(s);
-                let q = fp8::qdq_e4m3_scaled(p, inv_s, s);
+                let q = fmt.qdq_scaled(p, inv_s, s);
                 let dq = q - b;
                 let err = q - p;
                 let st = &mut stats[k];
@@ -219,6 +221,7 @@ pub fn sweep_native_regions(
     let mut sq = vec![0.0f64; nc];
     let mut scales = vec![0.0f32; nc];
     let mut inv_scales = vec![0.0f32; nc];
+    let fmt = s0.format;
 
     let mut do_region = |r0: usize, r1: usize, c0: usize, c1: usize, s_base: f32| {
         for (k, &alpha) in alphas.iter().enumerate() {
@@ -234,7 +237,7 @@ pub fn sweep_native_regions(
                 let dp64 = dp as f64;
                 npost_total += dp64 * dp64;
                 for k in 0..nc {
-                    let q = fp8::qdq_e4m3_scaled(p, inv_scales[k], scales[k]);
+                    let q = fmt.qdq_scaled(p, inv_scales[k], scales[k]);
                     let dq = q - b;
                     let err = q - p;
                     agree[k] += (sign(dq) == sp) as u64;
@@ -273,7 +276,7 @@ pub fn sweep_native_regions(
                     let dp64 = dp as f64;
                     npost_total += dp64 * dp64;
                     for k in 0..nc {
-                        let q = fp8::qdq_e4m3_scaled(
+                        let q = fmt.qdq_scaled(
                             p,
                             inv_col_scales[k * cols + c],
                             col_scales[k * cols + c],
@@ -388,6 +391,31 @@ mod tests {
             assert!((sw.nq - direct.nq).abs() < 1e-9);
             assert!((sw.sq - direct.sq).abs() < 1e-9);
             assert_eq!(sw.n, direct.n);
+        }
+    }
+
+    #[test]
+    fn sweep_matches_pointwise_stats_every_format() {
+        use crate::quant::{absmax_scales_fmt, CodeFormat};
+        let (wp, wb) = pair(48, 70, 0.003, 55);
+        let alphas = [0.7f32, 1.0, 1.3];
+        for fmt in [CodeFormat::Fp8E5m2, CodeFormat::Int4 { group: 32 }] {
+            let s0 = absmax_scales_fmt(&wp, Granularity::Block(32), fmt);
+            let sweep = sweep_native(&wp, &wb, &s0, &alphas);
+            let regions = sweep_native_regions(&wp, &wb, &s0, &alphas);
+            for (k, &alpha) in alphas.iter().enumerate() {
+                let wq = qdq(&wp, &s0, alpha);
+                let direct = delta_stats(&wp, &wb, &wq);
+                let sw = &sweep[k];
+                assert_eq!(sw.agree, direct.agree, "{fmt:?} alpha {alpha}");
+                assert!((sw.dot - direct.dot).abs() < 1e-9, "{fmt:?}");
+                assert!((sw.nq - direct.nq).abs() < 1e-9, "{fmt:?}");
+                assert!((sw.sq - direct.sq).abs() < 1e-9, "{fmt:?}");
+                assert_eq!(sw.n, direct.n);
+                let rg = &regions[k];
+                assert_eq!(rg.agree, direct.agree, "{fmt:?} regions");
+                assert!((rg.sq - direct.sq).abs() < 1e-9 * direct.sq.max(1e-9));
+            }
         }
     }
 

@@ -22,7 +22,7 @@
 
 use super::tile::{self, eval_tile, sign_i8, TileView};
 use super::DeltaStats;
-use crate::quant::ScaleGrid;
+use crate::quant::{CodeFormat, ScaleGrid};
 use crate::tensor::Tensor;
 use crate::util::telemetry;
 use crate::util::threadpool::par_map_slice;
@@ -44,6 +44,9 @@ pub struct SweepPlan {
     scale_idx: Vec<u32>,
     /// Compact per-region base scales (copied from the `ScaleGrid`).
     scales: Vec<f32>,
+    /// Code format captured from the `ScaleGrid`: selects the qdq
+    /// projection the tile kernel is monomorphized over.
+    format: CodeFormat,
     /// Σ Δp² — candidate-invariant, accumulated in element order (bitwise
     /// identical to `sweep_native`'s per-candidate accumulation).
     npost: f64,
@@ -93,6 +96,7 @@ impl SweepPlan {
             sp,
             scale_idx,
             scales: s0.scales.clone(),
+            format: s0.format,
             npost,
             tile,
         }
@@ -125,8 +129,29 @@ impl SweepPlan {
     ///
     /// Bitwise-deterministic across `workers`: tiles are fixed by the
     /// plan, each tile's partial is computed independently, and partials
-    /// merge in tile order regardless of which thread ran them.
+    /// merge in tile order regardless of which thread ran them. The qdq
+    /// projection dispatches on the plan's [`CodeFormat`] — the same fn
+    /// items the pointwise `sweep_native` reference uses, so every format
+    /// keeps the planned/native agreement the E4M3 path has always had.
     pub fn eval_with_workers(&self, alphas: &[f32], workers: usize) -> Vec<DeltaStats> {
+        match self.format {
+            CodeFormat::Fp8E4m3 => {
+                self.eval_impl(alphas, workers, crate::fp8::qdq_e4m3_scaled)
+            }
+            CodeFormat::Fp8E5m2 => {
+                self.eval_impl(alphas, workers, crate::fp8::qdq_e5m2_scaled)
+            }
+            CodeFormat::Int4 { .. } => {
+                self.eval_impl(alphas, workers, crate::quant::format::qdq_int4_scaled)
+            }
+        }
+    }
+
+    /// Monomorphized evaluation body (see [`Self::eval_with_workers`]).
+    fn eval_impl<F>(&self, alphas: &[f32], workers: usize, qdq: F) -> Vec<DeltaStats>
+    where
+        F: Fn(f32, f32, f32) -> f32 + Sync,
+    {
         let nc = alphas.len();
         if nc == 0 {
             return Vec::new();
@@ -173,6 +198,7 @@ impl SweepPlan {
                 &inv_tab,
                 nr,
                 nc,
+                &qdq,
             )
         });
 
@@ -294,6 +320,41 @@ mod tests {
                 assert_close(g.dot, w.dot, "dot");
                 assert_close(g.nq, w.nq, "nq");
                 assert_close(g.sq, w.sq, "sq");
+            }
+        }
+    }
+
+    #[test]
+    fn planned_matches_sweep_native_every_format() {
+        use crate::quant::{absmax_scales_fmt, CodeFormat};
+        let (wp, wb) = pair(96, 130, 0.003, 25); // odd-ish cols, ragged blocks
+        let alphas: Vec<f32> = (0..16).map(|i| 0.75 + 0.03 * i as f32).collect();
+        for fmt in [
+            CodeFormat::Fp8E5m2,
+            CodeFormat::Int4 { group: 64 },
+            CodeFormat::Int4 { group: 32 },
+        ] {
+            let gran = fmt.default_granularity();
+            let s0 = absmax_scales_fmt(&wp, gran, fmt);
+            let want = sweep_native(&wp, &wb, &s0, &alphas);
+            let plan = SweepPlan::with_tile(&wp, &wb, &s0, 512);
+            let base = plan.eval_with_workers(&alphas, 1);
+            for (k, (g, w)) in base.iter().zip(&want).enumerate() {
+                let tag = format!("{fmt:?} cand {k}");
+                assert_eq!(g.agree, w.agree, "{tag} agree");
+                assert_eq!(g.n, w.n, "{tag} n");
+                assert_eq!(g.npost.to_bits(), w.npost.to_bits(), "{tag} npost");
+                assert_close(g.dot, w.dot, &format!("{tag} dot"));
+                assert_close(g.nq, w.nq, &format!("{tag} nq"));
+                assert_close(g.sq, w.sq, &format!("{tag} sq"));
+            }
+            // bitwise determinism for any worker count, per format
+            for workers in [2usize, 4, 8] {
+                assert_eq!(
+                    plan.eval_with_workers(&alphas, workers),
+                    base,
+                    "{fmt:?} workers {workers}"
+                );
             }
         }
     }

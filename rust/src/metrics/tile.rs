@@ -5,7 +5,10 @@
 //! candidate streams over it. The inner loop is branch- and division-free:
 //!
 //! * the scale and its reciprocal come from per-candidate tables computed
-//!   once per batch (`fp8::qdq_e4m3_scaled` — reciprocal-multiply qdq);
+//!   once per batch, fed to the caller-supplied reciprocal-multiply qdq
+//!   projection (`fp8::qdq_e4m3_scaled` or its per-format twins, see
+//!   [`crate::quant::CodeFormat`] — the kernel is generic, monomorphized
+//!   per projection);
 //! * sign agreement counts through integer compares (`setcc`-style, no
 //!   data-dependent branches);
 //! * per-candidate sums accumulate in registers and merge at the tile
@@ -15,8 +18,6 @@
 //! floated): f32 partials lose ~1e-5 relative accuracy per 2k-element
 //! tile, which would break the 1e-9 agreement bar against `sweep_native`,
 //! and f64 adds cost the same as f32 on scalar CPUs.
-
-use crate::fp8;
 
 /// Elements per tile: ~2k elements × ~17 B of per-element plan state
 /// (p, b, Δp, sign, scale index) ≈ 34 KB — sized to sit in L1/L2 while
@@ -57,13 +58,17 @@ pub struct TileStats {
 /// `s_tab` / `inv_tab` are laid out `[candidate][region]` with
 /// `n_regions` columns: `s_tab[k·R + r] = scales[r]·α_k` and
 /// `inv_tab[k·R + r] = 1 / s_tab[k·R + r]` — the exact same scalar
-/// computation `sweep_native` performs per element, hoisted.
-pub fn eval_tile(
+/// computation `sweep_native` performs per element, hoisted. `qdq` is the
+/// format's scaled projection `(x, s⁻¹, s) → qdq(x·s⁻¹)·s`; passing the
+/// same fn item the pointwise reference uses keeps the two engines
+/// bit-identical per format.
+pub fn eval_tile<F: Fn(f32, f32, f32) -> f32>(
     v: &TileView,
     s_tab: &[f32],
     inv_tab: &[f32],
     n_regions: usize,
     n_candidates: usize,
+    qdq: F,
 ) -> TileStats {
     let len = v.p.len();
     debug_assert_eq!(v.b.len(), len);
@@ -86,7 +91,7 @@ pub fn eval_tile(
         let (mut dot, mut nq, mut sq) = (0.0f64, 0.0f64, 0.0f64);
         for i in 0..len {
             let si = v.scale_idx[i] as usize;
-            let q = fp8::qdq_e4m3_scaled(v.p[i], inv_row[si], s_row[si]);
+            let q = qdq(v.p[i], inv_row[si], s_row[si]);
             let dq = q - v.b[i];
             let err = q - v.p[i];
             agree += (sign_i8(dq) == v.sp[i]) as u64;
@@ -137,7 +142,7 @@ mod tests {
             sp: &[sign_i8(dp)],
             scale_idx: &[0],
         };
-        let st = eval_tile(&v, &[s], &[inv], 1, 1);
+        let st = eval_tile(&v, &[s], &[inv], 1, 1, crate::fp8::qdq_e4m3_scaled);
         let q = crate::fp8::qdq_e4m3_scaled(p, inv, s);
         let dq = q - b;
         let err = q - p;
@@ -150,7 +155,8 @@ mod tests {
     #[test]
     fn empty_tile_is_all_zero() {
         let v = TileView { p: &[], b: &[], dp: &[], sp: &[], scale_idx: &[] };
-        let st = eval_tile(&v, &[1.0, 2.0], &[1.0, 0.5], 1, 2);
+        let st =
+            eval_tile(&v, &[1.0, 2.0], &[1.0, 0.5], 1, 2, crate::fp8::qdq_e4m3_scaled);
         assert_eq!(st.agree, vec![0, 0]);
         assert_eq!(st.dot, vec![0.0, 0.0]);
     }

@@ -1,0 +1,483 @@
+//! First-class code formats for quantized storage.
+//!
+//! A [`CodeFormat`] owns everything that differs between the storable code
+//! families — the value grid (`qmax`), the scaled quantize–dequantize
+//! projection, bits per element, the packed sidecar layout, and bulk
+//! decode — so the rest of the pipeline (sweep engine, coordinator
+//! writers, `QuantizedParams` loader, fused dequant-matmul, CLI) can
+//! dispatch on one enum instead of hardcoding FP8 E4M3.
+//!
+//! Formats:
+//!
+//! | label        | grid                    | bits | codes layout              |
+//! | ------------ | ----------------------- | ---- | ------------------------- |
+//! | `fp8-e4m3`   | E4M3FN, max ±448        | 8    | 1 byte / element          |
+//! | `fp8-e5m2`   | E5M2, max ±57344        | 8    | 1 byte / element          |
+//! | `int4[:G]`   | symmetric INT4, ±7      | 4    | 2 codes / byte, row-packed |
+//!
+//! INT4 codes are stored biased (`code = q + 8`, `q ∈ [−7, 7]`, so codes
+//! occupy `[1, 15]` and nibble `0` is never produced by the encoder) and
+//! packed two per byte **per row**: row `r` starts at byte
+//! `r · ⌈cols/2⌉`, the low nibble holds the even column and the high
+//! nibble the odd column, and a row with an odd column count zero-pads the
+//! final high nibble. Row-aligned packing is what lets the fused
+//! dequant-matmul decode one row at a time without cross-row nibble
+//! straddling. The `G` in `int4:G` is the scale-group width: the CLI maps
+//! it to [`Granularity::Block`]`(G)` when no explicit `--gran` is given.
+//!
+//! The per-tensor store metadata is a [`Descriptor`]
+//! (`fmt.<name> = "<format>;<granularity>[;res=<k>][;cols=<n>]"`), the
+//! structured replacement for the legacy `quantized: "fp8_e4m3"` +
+//! `gran.<name>` metadata pair (old stores still load through a compat
+//! shim in `eval::quantstore`). `cols` records the logical column count
+//! for sub-byte formats, where the packed codes shape alone cannot
+//! distinguish an even column count from the preceding odd one.
+//!
+//! See `docs/FORMATS.md` for the full format table, sidecar layout, and
+//! the low-rank residual math.
+
+use crate::fp8;
+
+use super::Granularity;
+
+/// Largest representable INT4 magnitude (symmetric grid, −8 unused).
+pub const INT4_MAX: f32 = 7.0;
+
+/// Decode LUT for biased INT4 nibbles: `code & 0xF` → `code − 8` as f32.
+/// Nibble 0 (−8) is never produced by [`encode_int4`] but decodes to a
+/// well-defined value so corrupt stores fail loudly in value space, not UB.
+pub const INT4_DECODE: [f32; 16] = [
+    -8.0, -7.0, -6.0, -5.0, -4.0, -3.0, -2.0, -1.0, 0.0, 1.0, 2.0, 3.0, 4.0,
+    5.0, 6.0, 7.0,
+];
+
+/// The valid `--format` spellings, quoted by every parse error.
+pub const VALID_FORMATS: &str = "fp8-e4m3 | fp8-e5m2 | int4[:GROUP]";
+
+/// A storable code family: the value grid plus its packed byte layout.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CodeFormat {
+    /// FP8 E4M3FN — the paper's format; 1 byte/element.
+    Fp8E4m3,
+    /// FP8 E5M2 — wider range, coarser mantissa; 1 byte/element.
+    Fp8E5m2,
+    /// Symmetric INT4 with scale groups of width `group`; 2 codes/byte.
+    Int4 {
+        /// Scale-group width (the `G` of `int4:G`); defaults the scale
+        /// granularity to `Block(G)` when the CLI gets no explicit `--gran`.
+        group: usize,
+    },
+}
+
+impl Default for CodeFormat {
+    fn default() -> Self {
+        CodeFormat::Fp8E4m3
+    }
+}
+
+impl CodeFormat {
+    /// Parse a format label: `fp8-e4m3`, `fp8-e5m2`, `int4` (group 64) or
+    /// `int4:G`. Unknown spellings are hard errors naming the valid set.
+    pub fn parse(s: &str) -> Result<CodeFormat, String> {
+        match s {
+            "fp8-e4m3" => Ok(CodeFormat::Fp8E4m3),
+            "fp8-e5m2" => Ok(CodeFormat::Fp8E5m2),
+            "int4" => Ok(CodeFormat::Int4 { group: 64 }),
+            other => {
+                if let Some(g) = other.strip_prefix("int4:") {
+                    match g.parse::<usize>() {
+                        Ok(group) if group > 0 => {
+                            return Ok(CodeFormat::Int4 { group });
+                        }
+                        _ => {}
+                    }
+                }
+                Err(format!("bad format {other:?} (valid: {VALID_FORMATS})"))
+            }
+        }
+    }
+
+    /// Canonical label, `parse`-roundtrippable.
+    pub fn label(&self) -> String {
+        match self {
+            CodeFormat::Fp8E4m3 => "fp8-e4m3".into(),
+            CodeFormat::Fp8E5m2 => "fp8-e5m2".into(),
+            CodeFormat::Int4 { group } => format!("int4:{group}"),
+        }
+    }
+
+    /// Largest representable magnitude — the `Qmax` of the AbsMax scale
+    /// init `s0 = max|W| / Qmax` (Algorithm 1 line 3).
+    pub fn qmax(&self) -> f32 {
+        match self {
+            CodeFormat::Fp8E4m3 => fp8::E4M3_MAX,
+            CodeFormat::Fp8E5m2 => fp8::E5M2_MAX,
+            CodeFormat::Int4 { .. } => INT4_MAX,
+        }
+    }
+
+    /// Code width in bits.
+    pub fn bits_per_element(&self) -> usize {
+        match self {
+            CodeFormat::Fp8E4m3 | CodeFormat::Fp8E5m2 => 8,
+            CodeFormat::Int4 { .. } => 4,
+        }
+    }
+
+    /// Whether codes pack below one byte per element.
+    pub fn is_sub_byte(&self) -> bool {
+        self.bits_per_element() < 8
+    }
+
+    /// Packed bytes one `cols`-wide row of codes occupies (the row stride
+    /// of the codes buffer).
+    pub fn packed_row_bytes(&self, cols: usize) -> usize {
+        match self {
+            CodeFormat::Fp8E4m3 | CodeFormat::Fp8E5m2 => cols,
+            CodeFormat::Int4 { .. } => cols.div_ceil(2),
+        }
+    }
+
+    /// Packed bytes a full `rows`×`cols` codes buffer occupies.
+    pub fn packed_len(&self, rows: usize, cols: usize) -> usize {
+        rows * self.packed_row_bytes(cols)
+    }
+
+    /// The scale granularity this format implies when the caller gives
+    /// none: the paper's Block(128) for FP8, `Block(G)` for `int4:G`.
+    pub fn default_granularity(&self) -> Granularity {
+        match self {
+            CodeFormat::Fp8E4m3 | CodeFormat::Fp8E5m2 => Granularity::Block(128),
+            CodeFormat::Int4 { group } => Granularity::Block(*group),
+        }
+    }
+
+    /// The format's scaled quantize–dequantize projection
+    /// `qdq(x · s⁻¹) · s` — the same reciprocal-multiply form as
+    /// [`fp8::qdq_e4m3_scaled`], dispatched. Every engine (pointwise
+    /// sweeps, the tiled `SweepPlan`, the storage quantizer) must go
+    /// through the same per-format function so they stay bit-identical.
+    #[inline(always)]
+    pub fn qdq_scaled(&self, x: f32, inv_s: f32, s: f32) -> f32 {
+        match self {
+            CodeFormat::Fp8E4m3 => fp8::qdq_e4m3_scaled(x, inv_s, s),
+            CodeFormat::Fp8E5m2 => fp8::qdq_e5m2_scaled(x, inv_s, s),
+            CodeFormat::Int4 { .. } => qdq_int4_scaled(x, inv_s, s),
+        }
+    }
+
+    /// Bulk-decode one packed row of codes into `out` (len = logical
+    /// cols). FP8 rows decode through the shared 256-entry LUTs; INT4
+    /// rows unpack nibbles through [`INT4_DECODE`].
+    #[inline]
+    pub fn decode_row_into(&self, row: &[u8], out: &mut [f32]) {
+        match self {
+            CodeFormat::Fp8E4m3 => fp8::decode_slice_into(row, out),
+            CodeFormat::Fp8E5m2 => fp8::decode_slice_into_e5m2(row, out),
+            CodeFormat::Int4 { .. } => decode_int4_slice_into(row, out),
+        }
+    }
+}
+
+/// Project onto the symmetric INT4 grid `{−7, …, 7}` (saturating RNE).
+#[inline(always)]
+pub fn qdq_int4(x: f32) -> f32 {
+    x.clamp(-INT4_MAX, INT4_MAX).round_ties_even()
+}
+
+/// Reciprocal-scale INT4 quantize–dequantize: `qdq_int4(x · s⁻¹) · s` —
+/// the INT4 instantiation of the pipeline's canonical scaled projection
+/// (see [`fp8::qdq_e4m3_scaled`] for the contract on `inv_s`).
+#[inline(always)]
+pub fn qdq_int4_scaled(x: f32, inv_s: f32, s: f32) -> f32 {
+    qdq_int4(x * inv_s) * s
+}
+
+/// Encode one value to its biased INT4 nibble (`q + 8 ∈ [1, 15]`).
+/// NaN encodes to the zero code (8), matching the FP8 encoders' policy of
+/// never letting a degenerate input poison the store.
+#[inline(always)]
+pub fn encode_int4(x: f32) -> u8 {
+    let q = qdq_int4(x);
+    if q.is_nan() {
+        return 8;
+    }
+    (q + 8.0) as u8
+}
+
+/// Pack unpacked nibble codes two-per-byte (low nibble first). An odd
+/// length zero-pads the final high nibble.
+pub fn pack_int4(unpacked: &[u8]) -> Vec<u8> {
+    let mut out = vec![0u8; unpacked.len().div_ceil(2)];
+    for (i, &c) in unpacked.iter().enumerate() {
+        if i % 2 == 0 {
+            out[i / 2] |= c & 0x0F;
+        } else {
+            out[i / 2] |= (c & 0x0F) << 4;
+        }
+    }
+    out
+}
+
+/// Unpack `n` nibble codes from their packed form (inverse of
+/// [`pack_int4`]; the pad nibble of an odd-length buffer is not returned).
+pub fn unpack_int4(packed: &[u8], n: usize) -> Vec<u8> {
+    assert_eq!(packed.len(), n.div_ceil(2), "packed len vs n={n}");
+    let mut out = vec![0u8; n];
+    for (i, o) in out.iter_mut().enumerate() {
+        let b = packed[i / 2];
+        *o = if i % 2 == 0 { b & 0x0F } else { b >> 4 };
+    }
+    out
+}
+
+/// Bulk-decode a packed INT4 row into f32 values through [`INT4_DECODE`].
+#[inline]
+pub fn decode_int4_slice_into(packed: &[u8], out: &mut [f32]) {
+    assert_eq!(packed.len(), out.len().div_ceil(2), "packed row len");
+    for (i, o) in out.iter_mut().enumerate() {
+        let b = packed[i / 2];
+        let code = if i % 2 == 0 { b & 0x0F } else { b >> 4 };
+        *o = INT4_DECODE[code as usize];
+    }
+}
+
+/// The per-tensor store descriptor behind the `fmt.<name>` metadata key:
+/// everything a loader needs to reconstruct a [`super::QuantizedTensor`]
+/// from its sidecars without per-format name conventions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Descriptor {
+    /// Code family of the `.codes` sidecar.
+    pub format: CodeFormat,
+    /// Scale granularity of the `.scales` sidecar.
+    pub granularity: Granularity,
+    /// Rank of the `.res_u`/`.res_v` low-rank residual pair (0 = none).
+    pub residual_rank: usize,
+    /// Logical column count — present for sub-byte formats, where the
+    /// packed codes shape cannot distinguish `2n` columns from `2n−1`.
+    pub cols: Option<usize>,
+}
+
+impl Descriptor {
+    /// Describe an existing quantized tensor (the writers' path: the
+    /// tensor itself is the source of truth, not the pipeline config).
+    pub fn for_tensor(q: &super::QuantizedTensor) -> Descriptor {
+        Descriptor {
+            format: q.scales.format,
+            granularity: q.scales.granularity,
+            residual_rank: q.residual.as_ref().map_or(0, |r| r.k),
+            cols: q.scales.format.is_sub_byte().then_some(q.shape.1),
+        }
+    }
+
+    /// Serialize to the `fmt.<name>` metadata value:
+    /// `<format>;<granularity>[;res=<k>][;cols=<n>]`.
+    pub fn to_meta(&self) -> String {
+        let mut s = format!("{};{}", self.format.label(), self.granularity.label());
+        if self.residual_rank > 0 {
+            s.push_str(&format!(";res={}", self.residual_rank));
+        }
+        if let Some(c) = self.cols {
+            s.push_str(&format!(";cols={c}"));
+        }
+        s
+    }
+
+    /// Parse a `fmt.<name>` metadata value (inverse of
+    /// [`Descriptor::to_meta`]; unknown fields are hard errors).
+    pub fn parse(s: &str) -> Result<Descriptor, String> {
+        let mut parts = s.split(';');
+        let format = CodeFormat::parse(
+            parts.next().ok_or_else(|| format!("empty fmt descriptor {s:?}"))?,
+        )?;
+        let granularity = Granularity::parse(
+            parts
+                .next()
+                .ok_or_else(|| format!("fmt descriptor {s:?} missing granularity"))?,
+        )?;
+        let mut residual_rank = 0usize;
+        let mut cols = None;
+        for p in parts {
+            if let Some(k) = p.strip_prefix("res=") {
+                residual_rank = k
+                    .parse()
+                    .map_err(|_| format!("bad residual rank in fmt descriptor {s:?}"))?;
+            } else if let Some(c) = p.strip_prefix("cols=") {
+                cols = Some(c.parse().map_err(|_| {
+                    format!("bad cols field in fmt descriptor {s:?}")
+                })?);
+            } else {
+                return Err(format!("unknown field {p:?} in fmt descriptor {s:?}"));
+            }
+        }
+        Ok(Descriptor { format, granularity, residual_rank, cols })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        for s in ["fp8-e4m3", "fp8-e5m2", "int4:64", "int4:128", "int4:7"] {
+            let f = CodeFormat::parse(s).unwrap();
+            assert_eq!(f.label(), s);
+            assert_eq!(CodeFormat::parse(&f.label()).unwrap(), f);
+        }
+        assert_eq!(
+            CodeFormat::parse("int4").unwrap(),
+            CodeFormat::Int4 { group: 64 }
+        );
+        for bad in ["fp8", "int4:", "int4:0", "int4:x", "e4m3", "int8", ""] {
+            let err = CodeFormat::parse(bad).unwrap_err();
+            assert!(err.contains(VALID_FORMATS), "{bad:?}: {err}");
+        }
+    }
+
+    #[test]
+    fn qmax_and_bits() {
+        assert_eq!(CodeFormat::Fp8E4m3.qmax(), 448.0);
+        assert_eq!(CodeFormat::Fp8E5m2.qmax(), 57344.0);
+        assert_eq!(CodeFormat::Int4 { group: 64 }.qmax(), 7.0);
+        assert_eq!(CodeFormat::Fp8E4m3.bits_per_element(), 8);
+        assert_eq!(CodeFormat::Int4 { group: 64 }.bits_per_element(), 4);
+        assert!(CodeFormat::Int4 { group: 64 }.is_sub_byte());
+        assert!(!CodeFormat::Fp8E5m2.is_sub_byte());
+    }
+
+    #[test]
+    fn packed_layout() {
+        let i4 = CodeFormat::Int4 { group: 64 };
+        assert_eq!(i4.packed_row_bytes(8), 4);
+        assert_eq!(i4.packed_row_bytes(7), 4); // odd row pads the hi nibble
+        assert_eq!(i4.packed_len(3, 7), 12);
+        assert_eq!(CodeFormat::Fp8E4m3.packed_row_bytes(7), 7);
+        assert_eq!(
+            i4.default_granularity(),
+            crate::quant::Granularity::Block(64)
+        );
+    }
+
+    #[test]
+    fn int4_grid_is_symmetric_and_saturating() {
+        assert_eq!(qdq_int4(100.0), 7.0);
+        assert_eq!(qdq_int4(-100.0), -7.0);
+        assert_eq!(qdq_int4(0.49), 0.0);
+        assert_eq!(qdq_int4(0.5), 0.0); // tie to even
+        assert_eq!(qdq_int4(1.5), 2.0);
+        assert_eq!(qdq_int4(-2.5), -2.0);
+        for q in -7..=7 {
+            let v = q as f32;
+            assert_eq!(qdq_int4(v), v); // grid values are fixed points
+            let code = encode_int4(v);
+            assert!((1..=15).contains(&code), "code {code}");
+            assert_eq!(INT4_DECODE[code as usize], v);
+        }
+        assert_eq!(encode_int4(f32::NAN), 8);
+        assert_eq!(INT4_DECODE[8], 0.0);
+    }
+
+    #[test]
+    fn qdq_scaled_dispatch_matches_direct() {
+        let (s, inv) = (0.037f32, 1.0 / 0.037f32);
+        for x in [-3.2f32, -0.01, 0.0, 0.4, 2.9, 17.0] {
+            assert_eq!(
+                CodeFormat::Int4 { group: 8 }.qdq_scaled(x, inv, s).to_bits(),
+                qdq_int4_scaled(x, inv, s).to_bits()
+            );
+            assert_eq!(
+                CodeFormat::Fp8E4m3.qdq_scaled(x, inv, s).to_bits(),
+                crate::fp8::qdq_e4m3_scaled(x, inv, s).to_bits()
+            );
+            assert_eq!(
+                CodeFormat::Fp8E5m2.qdq_scaled(x, inv, s).to_bits(),
+                crate::fp8::qdq_e5m2_scaled(x, inv, s).to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn pack_unpack_hand_cases() {
+        // even length: [1, 15] -> 0xF1 (lo nibble first)
+        assert_eq!(pack_int4(&[1, 15]), vec![0xF1]);
+        // odd length: pad nibble is zero
+        assert_eq!(pack_int4(&[9, 2, 7]), vec![0x29, 0x07]);
+        assert_eq!(unpack_int4(&[0x29, 0x07], 3), vec![9, 2, 7]);
+        let mut out = vec![0.0f32; 3];
+        decode_int4_slice_into(&[0x29, 0x07], &mut out);
+        assert_eq!(out, vec![1.0, -6.0, -1.0]);
+    }
+
+    #[test]
+    fn proptest_pack_roundtrip_odd_lengths_and_group_boundaries() {
+        use crate::util::proptest::{run, Config};
+        run("int4 pack/unpack roundtrip", Config::default(), |g| {
+            // bias lengths toward group boundaries (±1 around multiples
+            // of the scale-group width) and odd counts
+            let group = *g.pick(&[2usize, 3, 64, 128]);
+            let n = match g.usize_range(0, 2) {
+                0 => g.usize_range(1, 257),
+                1 => group * g.usize_range(1, 4),
+                _ => (group * g.usize_range(1, 4)).saturating_sub(1).max(1),
+            };
+            let codes: Vec<u8> =
+                (0..n).map(|_| g.usize_range(1, 15) as u8).collect();
+            let packed = pack_int4(&codes);
+            assert_eq!(packed.len(), n.div_ceil(2));
+            assert_eq!(unpack_int4(&packed, n), codes);
+            // the decode path agrees with unpack + LUT
+            let mut dec = vec![0.0f32; n];
+            decode_int4_slice_into(&packed, &mut dec);
+            for (c, d) in codes.iter().zip(&dec) {
+                assert_eq!(INT4_DECODE[*c as usize].to_bits(), d.to_bits());
+            }
+            // odd lengths leave the pad nibble zero
+            if n % 2 == 1 {
+                assert_eq!(packed[n / 2] >> 4, 0);
+            }
+        });
+    }
+
+    #[test]
+    fn descriptor_meta_roundtrip() {
+        let cases = [
+            Descriptor {
+                format: CodeFormat::Fp8E4m3,
+                granularity: Granularity::Block(128),
+                residual_rank: 0,
+                cols: None,
+            },
+            Descriptor {
+                format: CodeFormat::Fp8E5m2,
+                granularity: Granularity::PerChannel,
+                residual_rank: 2,
+                cols: None,
+            },
+            Descriptor {
+                format: CodeFormat::Int4 { group: 64 },
+                granularity: Granularity::Block(64),
+                residual_rank: 4,
+                cols: Some(129),
+            },
+        ];
+        for d in cases {
+            let s = d.to_meta();
+            assert_eq!(Descriptor::parse(&s).unwrap(), d, "{s}");
+        }
+        assert_eq!(
+            cases[2].to_meta(),
+            "int4:64;block64;res=4;cols=129"
+        );
+        assert_eq!(cases[0].to_meta(), "fp8-e4m3;block128");
+        for bad in [
+            "",
+            "fp8-e4m3",
+            "int4:64;bogus",
+            "fp8-e4m3;block128;res=x",
+            "fp8-e4m3;block128;huh=1",
+        ] {
+            assert!(Descriptor::parse(bad).is_err(), "{bad:?}");
+        }
+    }
+}

@@ -1,13 +1,21 @@
 //! Quantizer core: scale granularities, AbsMax scale initialization, and
 //! the scale-parameterized quantize–dequantize operator `Q_s(W)` (paper
-//! Eq. 4) in its FP8 E4M3 instantiation.
+//! Eq. 4), instantiated for every [`CodeFormat`] (FP8 E4M3/E5M2, packed
+//! INT4) plus an optional low-rank residual correction.
 //!
 //! Granularities match the paper's setup (§3.1): block-wise with block
 //! size 128 (the DeepSeek-V3 FP8 convention) and per-channel
-//! (per output column). Per-tensor is included for ablations.
+//! (per output column). Per-tensor is included for ablations. The code
+//! format rides on the [`ScaleGrid`] (the sweep needs `Qmax` and the
+//! projection; storage needs the packed layout), so every existing
+//! `s0`-threading API picks formats up without signature changes.
 
 use crate::fp8;
 use crate::tensor::Tensor;
+
+pub mod format;
+
+pub use format::{CodeFormat, Descriptor};
 
 /// Scale granularity for `Q_s`.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -54,6 +62,9 @@ impl Granularity {
 #[derive(Clone, Debug)]
 pub struct ScaleGrid {
     pub granularity: Granularity,
+    /// Code format the scales were initialized for (sets `Qmax` and the
+    /// qdq projection everywhere this grid flows).
+    pub format: CodeFormat,
     /// Weight dims this grid was built for.
     pub rows: usize,
     pub cols: usize,
@@ -104,9 +115,10 @@ impl ScaleGrid {
     }
 
     /// Rebuild a grid from checkpoint sidecar data: the granularity (from
-    /// the `gran.<name>` metadata `write_checkpoint` stores) plus the
-    /// compact scales. Validates that the grid dims implied by the
-    /// granularity match the sidecar length.
+    /// the `fmt.<name>` descriptor `write_checkpoint` stores, or the
+    /// legacy `gran.<name>` metadata) plus the compact scales. Validates
+    /// that the grid dims implied by the granularity match the sidecar
+    /// length.
     pub fn from_sidecar(
         granularity: Granularity,
         rows: usize,
@@ -126,18 +138,46 @@ impl ScaleGrid {
                 grid_rows * grid_cols
             ));
         }
-        Ok(ScaleGrid { granularity, rows, cols, grid_rows, grid_cols, scales })
+        Ok(ScaleGrid {
+            granularity,
+            format: CodeFormat::Fp8E4m3,
+            rows,
+            cols,
+            grid_rows,
+            grid_cols,
+            scales,
+        })
+    }
+
+    /// Rebind the grid to a code format (builder for loaders that learn
+    /// the format from a `fmt.<name>` descriptor after
+    /// [`Self::from_sidecar`]).
+    pub fn with_format(mut self, format: CodeFormat) -> ScaleGrid {
+        self.format = format;
+        self
     }
 }
 
-/// AbsMax scale initialization (Algorithm 1 line 3: s0 = max|W| / Qmax).
+/// AbsMax scale initialization (Algorithm 1 line 3: s0 = max|W| / Qmax)
+/// in the paper's FP8 E4M3 format. See [`absmax_scales_fmt`].
+pub fn absmax_scales(w: &Tensor, granularity: Granularity) -> ScaleGrid {
+    absmax_scales_fmt(w, granularity, CodeFormat::Fp8E4m3)
+}
+
+/// AbsMax scale initialization for any code format (Algorithm 1 line 3:
+/// s0 = max|W| / Qmax, with `Qmax` = [`CodeFormat::qmax`]).
 /// All-zero groups get scale 1 to avoid division by zero, and scales are
 /// floored at `f32::MIN_POSITIVE` (smallest normal): the pipeline's
 /// canonical projection multiplies by the reciprocal
-/// ([`fp8::qdq_e4m3_scaled`]), and a subnormal scale would make `1/s`
-/// overflow to infinity (NaN stats, saturated codes). Groups that small
-/// (max|W| ≲ 5e-36) carry no usable signal either way.
-pub fn absmax_scales(w: &Tensor, granularity: Granularity) -> ScaleGrid {
+/// ([`fp8::qdq_e4m3_scaled`] and its per-format twins), and a subnormal
+/// scale would make `1/s` overflow to infinity (NaN stats, saturated
+/// codes). Groups that small (max|W| ≲ 5e-36) carry no usable signal
+/// either way.
+pub fn absmax_scales_fmt(
+    w: &Tensor,
+    granularity: Granularity,
+    format: CodeFormat,
+) -> ScaleGrid {
     let (rows, cols) = (w.rows(), w.cols());
     let (grid_rows, grid_cols, mut scales) = match granularity {
         Granularity::PerTensor => (1, 1, vec![0.0f32; 1]),
@@ -161,26 +201,153 @@ pub fn absmax_scales(w: &Tensor, granularity: Granularity) -> ScaleGrid {
             }
         }
     }
+    let qmax = format.qmax();
     for s in &mut scales {
         *s = if *s > 0.0 {
-            (*s / fp8::E4M3_MAX).max(f32::MIN_POSITIVE)
+            (*s / qmax).max(f32::MIN_POSITIVE)
         } else {
             1.0
         };
     }
-    ScaleGrid { granularity, rows, cols, grid_rows, grid_cols, scales }
+    ScaleGrid { granularity, format, rows, cols, grid_rows, grid_cols, scales }
 }
 
-/// A quantized tensor: E4M3 codes + final scales (storage format, the
-/// `Ŵ, (s*)⁻¹` pair Algorithm 1 returns).
+/// A rank-k correction `U·Vᵀ` to a quantized tensor: the power-iteration
+/// SVD of the quantization residual `W − Q(W)` with the singular values
+/// folded into `u`. Stored as the `<name>.res_u`/`<name>.res_v` sidecar
+/// pair and applied *after* the quantized decode (see
+/// [`QuantizedTensor::dequant_row_into`]), so every consumer — full
+/// dequantize, fused dequant-matmul, serving — inherits the correction
+/// in the same accumulation order.
+#[derive(Clone, Debug)]
+pub struct LowRank {
+    /// Rank (number of components).
+    pub k: usize,
+    /// Left factors, row-major `[rows, k]`, σ folded in.
+    pub u: Vec<f32>,
+    /// Right factors, row-major `[k, cols]`, unit-norm rows.
+    pub v: Vec<f32>,
+}
+
+impl LowRank {
+    /// Storage footprint in bytes (both factor sidecars).
+    pub fn nbytes(&self) -> usize {
+        (self.u.len() + self.v.len()) * 4
+    }
+}
+
+/// Rank-k approximation of `m` by deterministic power iteration with
+/// deflation: for each component, a fixed-seed start vector is iterated a
+/// fixed number of times, σ is folded into `u`, and `σ·u·vᵀ` is deflated
+/// from a working copy before the next component. Fully sequential f32
+/// arithmetic — bitwise-deterministic for any worker count by
+/// construction. Returns `None` for rank 0 or an empty matrix; `k` is
+/// clamped to `min(rows, cols)`.
+pub fn low_rank_approx(m: &Tensor, k: usize) -> Option<LowRank> {
+    const ITERS: usize = 8;
+    let (rows, cols) = (m.rows(), m.cols());
+    let k = k.min(rows).min(cols);
+    if k == 0 || rows == 0 || cols == 0 {
+        return None;
+    }
+    let mut work: Vec<f32> = m.data().to_vec();
+    let mut u_all = vec![0.0f32; rows * k];
+    let mut v_all = vec![0.0f32; k * cols];
+    let mut u = vec![0.0f32; rows];
+    for t in 0..k {
+        // fixed-seed start per component: deterministic, and distinct
+        // seeds keep components from starting parallel
+        let mut rng = crate::util::rng::XorShift::new(0xDA0_5EED ^ (t as u64 + 1));
+        let mut v = rng.normal_vec(cols, 1.0);
+        normalize(&mut v);
+        let mut sigma = 0.0f32;
+        for _ in 0..ITERS {
+            // u = work · v
+            for (i, ui) in u.iter_mut().enumerate() {
+                let row = &work[i * cols..(i + 1) * cols];
+                let mut acc = 0.0f32;
+                for (wj, vj) in row.iter().zip(&v) {
+                    acc += wj * vj;
+                }
+                *ui = acc;
+            }
+            if normalize(&mut u) == 0.0 {
+                sigma = 0.0;
+                break;
+            }
+            // v = workᵀ · u ; σ = ‖v‖
+            v.fill(0.0);
+            for (i, ui) in u.iter().enumerate() {
+                let row = &work[i * cols..(i + 1) * cols];
+                for (vj, wj) in v.iter_mut().zip(row) {
+                    *vj += ui * wj;
+                }
+            }
+            sigma = normalize(&mut v);
+            if sigma == 0.0 {
+                break;
+            }
+        }
+        if sigma == 0.0 {
+            // residual is (numerically) exhausted: leave the remaining
+            // components zero — they contribute nothing
+            break;
+        }
+        // fold σ into u, store, deflate
+        for (i, ui) in u.iter().enumerate() {
+            let su = sigma * ui;
+            u_all[i * k + t] = su;
+            let row = &mut work[i * cols..(i + 1) * cols];
+            for (wj, vj) in row.iter_mut().zip(&v) {
+                *wj -= su * vj;
+            }
+        }
+        v_all[t * cols..(t + 1) * cols].copy_from_slice(&v);
+    }
+    Some(LowRank { k, u: u_all, v: v_all })
+}
+
+/// Normalize in place, returning the original 2-norm (0 leaves the
+/// vector untouched).
+fn normalize(v: &mut [f32]) -> f32 {
+    let mut ss = 0.0f32;
+    for x in v.iter() {
+        ss += x * x;
+    }
+    let n = ss.sqrt();
+    if n > 0.0 && n.is_finite() {
+        let inv = 1.0 / n;
+        for x in v.iter_mut() {
+            *x *= inv;
+        }
+        n
+    } else {
+        0.0
+    }
+}
+
+/// A quantized tensor: packed codes + final scales (storage format, the
+/// `Ŵ, (s*)⁻¹` pair Algorithm 1 returns), in the code format the scales
+/// carry, plus an optional low-rank residual correction.
 #[derive(Clone, Debug)]
 pub struct QuantizedTensor {
+    /// Logical (unpacked) dims.
     pub shape: (usize, usize),
+    /// Packed codes, `shape.0 ×` [`CodeFormat::packed_row_bytes`] bytes.
     pub codes: Vec<u8>,
     pub scales: ScaleGrid,
+    /// Optional rank-k correction added after the scale multiply.
+    pub residual: Option<LowRank>,
 }
 
 impl QuantizedTensor {
+    /// Code format of the packed `codes` (lives on the scale grid so the
+    /// sweep and the storage form can never disagree).
+    #[inline(always)]
+    pub fn format(&self) -> CodeFormat {
+        self.scales.format
+    }
+
     pub fn dequantize(&self) -> Tensor {
         let (rows, cols) = self.shape;
         let mut out = vec![0.0f32; rows * cols];
@@ -193,20 +360,59 @@ impl QuantizedTensor {
     /// Dequantize one row into a caller-provided buffer — the unit of the
     /// fused dequant-matmul: only `cols` f32 ever exist at once, not the
     /// whole matrix. Bitwise-identical to the corresponding
-    /// [`Self::dequantize`] row (same LUT value, same scale multiply).
+    /// [`Self::dequantize`] row (same LUT value, same scale multiply,
+    /// same residual accumulation order), which is what keeps every
+    /// kernel built on it bitwise-equal to dense over
+    /// [`Self::dequantize`] at every format, with or without residual.
     #[inline]
     pub fn dequant_row_into(&self, r: usize, out: &mut [f32]) {
         let (_, cols) = self.shape;
         assert_eq!(out.len(), cols);
-        fp8::decode_slice_into(&self.codes[r * cols..(r + 1) * cols], out);
+        let fmt = self.scales.format;
+        let rb = fmt.packed_row_bytes(cols);
+        fmt.decode_row_into(&self.codes[r * rb..(r + 1) * rb], out);
         for (c, o) in out.iter_mut().enumerate() {
             *o *= self.scales.at(r, c);
         }
+        if let Some(lr) = &self.residual {
+            let urow = &lr.u[r * lr.k..(r + 1) * lr.k];
+            for (t, ut) in urow.iter().enumerate() {
+                let vrow = &lr.v[t * cols..(t + 1) * cols];
+                for (o, vj) in out.iter_mut().zip(vrow) {
+                    *o += ut * vj;
+                }
+            }
+        }
     }
 
-    /// Storage footprint in bytes (codes + scales).
+    /// Attach a rank-k residual correction fitted against `target`:
+    /// the power-iteration SVD of `target − dequantize()`. Replaces any
+    /// existing residual (the fit is against the codes alone). No-op at
+    /// rank 0.
+    pub fn attach_residual(&mut self, target: &Tensor, k: usize) {
+        self.residual = None;
+        if k == 0 {
+            return;
+        }
+        let deq = self.dequantize();
+        let resid = Tensor::new(
+            vec![self.shape.0, self.shape.1],
+            target
+                .data()
+                .iter()
+                .zip(deq.data())
+                .map(|(t, d)| t - d)
+                .collect(),
+        );
+        self.residual = low_rank_approx(&resid, k);
+    }
+
+    /// Storage footprint in bytes (packed codes + scales + residual
+    /// factors).
     pub fn nbytes(&self) -> usize {
-        self.codes.len() + self.scales.scales.len() * 4
+        self.codes.len()
+            + self.scales.scales.len() * 4
+            + self.residual.as_ref().map_or(0, |r| r.nbytes())
     }
 
     /// Compression ratio vs f32 storage.
@@ -215,42 +421,84 @@ impl QuantizedTensor {
     }
 }
 
-/// Quantize `w` with scales `s0·alpha`, returning the storage form.
+/// Quantize `w` with scales `s0·alpha`, returning the storage form in the
+/// format the grid carries.
 ///
 /// Uses the canonical reciprocal-multiply projection (`encode(w·s⁻¹)`,
-/// see [`fp8::qdq_e4m3_scaled`]) so the stored codes are bit-identical to
-/// what the fused sweep scored during the scale search.
+/// see [`fp8::qdq_e4m3_scaled`] and its per-format twins) so the stored
+/// codes are bit-identical to what the fused sweep scored during the
+/// scale search. INT4 codes pack two per byte with row-aligned strides
+/// (see [`format`]).
 pub fn quantize_with_scales(w: &Tensor, s0: &ScaleGrid, alpha: f32) -> QuantizedTensor {
     let (rows, cols) = (w.rows(), w.cols());
-    let mut codes = vec![0u8; rows * cols];
+    let fmt = s0.format;
+    let rb = fmt.packed_row_bytes(cols);
+    let mut codes = vec![0u8; rows * rb];
     for r in 0..rows {
+        let row = &mut codes[r * rb..(r + 1) * rb];
         for c in 0..cols {
             let s = s0.at(r, c) * alpha;
             let inv_s = fp8::recip_scale(s);
-            codes[r * cols + c] = fp8::encode_e4m3(w.at2(r, c) * inv_s);
+            let x = w.at2(r, c) * inv_s;
+            match fmt {
+                CodeFormat::Fp8E4m3 => row[c] = fp8::encode_e4m3(x),
+                CodeFormat::Fp8E5m2 => row[c] = fp8::encode_e5m2(x),
+                CodeFormat::Int4 { .. } => {
+                    let nib = format::encode_int4(x);
+                    if c % 2 == 0 {
+                        row[c / 2] |= nib & 0x0F;
+                    } else {
+                        row[c / 2] |= nib << 4;
+                    }
+                }
+            }
         }
     }
-    QuantizedTensor { shape: (rows, cols), codes, scales: s0.scaled(alpha) }
+    QuantizedTensor {
+        shape: (rows, cols),
+        codes,
+        scales: s0.scaled(alpha),
+        residual: None,
+    }
 }
 
-/// Convenience: AbsMax-initialize and quantize in one step.
+/// Convenience: AbsMax-initialize and quantize in one step (E4M3).
 pub fn quantize(w: &Tensor, granularity: Granularity, alpha: f32) -> QuantizedTensor {
     let s0 = absmax_scales(w, granularity);
     quantize_with_scales(w, &s0, alpha)
 }
 
+/// Convenience: AbsMax-initialize and quantize in one step for any
+/// format, optionally fitting a rank-`residual_rank` correction against
+/// `w` afterwards.
+pub fn quantize_fmt(
+    w: &Tensor,
+    granularity: Granularity,
+    fmt: CodeFormat,
+    alpha: f32,
+    residual_rank: usize,
+) -> QuantizedTensor {
+    let s0 = absmax_scales_fmt(w, granularity, fmt);
+    let mut q = quantize_with_scales(w, &s0, alpha);
+    if residual_rank > 0 {
+        q.attach_residual(w, residual_rank);
+    }
+    q
+}
+
 /// Quantize–dequantize without storing codes (the `Q_s(W)` used by metric
-/// evaluation): out[i] = qdq_e4m3(w[i] · s[i]⁻¹) · s[i] — the same
-/// reciprocal-multiply form as the fused sweep, so pointwise stats and
-/// sweep stats agree bit-for-bit.
+/// evaluation): out[i] = qdq(w[i] · s[i]⁻¹) · s[i] on the grid's format —
+/// the same reciprocal-multiply form as the fused sweep, so pointwise
+/// stats and sweep stats agree bit-for-bit.
 pub fn qdq(w: &Tensor, s0: &ScaleGrid, alpha: f32) -> Tensor {
     let (rows, cols) = (w.rows(), w.cols());
+    let fmt = s0.format;
     let mut out = vec![0.0f32; rows * cols];
     for r in 0..rows {
         for c in 0..cols {
             let s = s0.at(r, c) * alpha;
             let inv_s = fp8::recip_scale(s);
-            out[r * cols + c] = fp8::qdq_e4m3_scaled(w.at2(r, c), inv_s, s);
+            out[r * cols + c] = fmt.qdq_scaled(w.at2(r, c), inv_s, s);
         }
     }
     Tensor::new(vec![rows, cols], out)
@@ -578,6 +826,142 @@ mod tests {
         let s0 = absmax_scales(&w, Granularity::PerTensor);
         let s2 = s0.scaled(2.0);
         assert!((s2.at(0, 0) - 2.0 * s0.at(0, 0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn every_format_quantize_dequantize_matches_qdq() {
+        // dequantize(quantize(w)) == qdq(w) bitwise at every format,
+        // including odd column counts (packed INT4 tail nibbles)
+        let w = rand_w(33, 29, 12);
+        for fmt in [
+            CodeFormat::Fp8E4m3,
+            CodeFormat::Fp8E5m2,
+            CodeFormat::Int4 { group: 16 },
+        ] {
+            let s0 = absmax_scales_fmt(&w, Granularity::Block(16), fmt);
+            let q = quantize_with_scales(&w, &s0, 1.0);
+            assert_eq!(q.format(), fmt);
+            assert_eq!(q.codes.len(), fmt.packed_len(33, 29));
+            let deq = q.dequantize();
+            let direct = qdq(&w, &s0, 1.0);
+            for (a, b) in deq.data().iter().zip(direct.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{fmt:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn int4_fused_matmul_is_bitwise_dense_odd_cols() {
+        use crate::tensor::ops::matmul;
+        let mut rng = XorShift::new(51);
+        let w = rand_w(24, 19, 13); // odd cols: packed rows pad a nibble
+        for rank in [0usize, 3] {
+            let q = quantize_fmt(&w, Granularity::Block(8), CodeFormat::Int4 { group: 8 }, 1.0, rank);
+            assert_eq!(q.residual.is_some(), rank > 0);
+            let mut xd = rng.normal_vec(5 * 24, 0.5);
+            xd[3] = 0.0;
+            let x = Tensor::new(vec![5, 24], xd);
+            let dense = matmul(&x, &q.dequantize());
+            let fused = matmul_quant(&x, &q);
+            for (a, b) in fused.data().iter().zip(dense.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "rank {rank}");
+            }
+            let mut out = vec![0.0f32; 19];
+            let mut scratch = vec![0.0f32; 19];
+            matvec_quant_into(x.row(0), &q, &mut out, &mut scratch);
+            for (a, b) in out.iter().zip(fused.row(0)) {
+                assert_eq!(a.to_bits(), b.to_bits(), "rank {rank}");
+            }
+            let mut batched = vec![0.0f32; 5 * 19];
+            matmul_quant_rows_into(x.data(), 5, &q, &mut batched, &mut scratch);
+            for (a, b) in batched.iter().zip(fused.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "rank {rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn int4_compression_ratio_and_nbytes() {
+        let w = rand_w(128, 128, 14);
+        let q = quantize_fmt(&w, Granularity::Block(64), CodeFormat::Int4 { group: 64 }, 1.0, 0);
+        // 0.5 byte/elem + 4 block scales: ~8x
+        assert_eq!(q.codes.len(), 128 * 64);
+        assert!(q.compression_ratio() > 7.9 && q.compression_ratio() <= 8.0);
+        // residual factors are counted in the footprint
+        let qr = quantize_fmt(&w, Granularity::Block(64), CodeFormat::Int4 { group: 64 }, 1.0, 2);
+        assert_eq!(qr.nbytes(), q.nbytes() + 2 * (128 + 128) * 4);
+    }
+
+    #[test]
+    fn residual_reduces_error_and_is_deterministic() {
+        let w = rand_w(40, 32, 15);
+        let mut q = quantize_fmt(&w, Granularity::PerTensor, CodeFormat::Int4 { group: 64 }, 1.0, 0);
+        let base_err: f32 = w
+            .data()
+            .iter()
+            .zip(q.dequantize().data())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        q.attach_residual(&w, 4);
+        let lr = q.residual.clone().unwrap();
+        assert_eq!(lr.k, 4);
+        assert_eq!(lr.u.len(), 40 * 4);
+        assert_eq!(lr.v.len(), 4 * 32);
+        let corr_err: f32 = w
+            .data()
+            .iter()
+            .zip(q.dequantize().data())
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum();
+        assert!(
+            corr_err < base_err * 0.9,
+            "rank-4 residual should cut error: {corr_err} vs {base_err}"
+        );
+        // re-fit is bitwise-deterministic
+        let mut q2 = quantize_fmt(&w, Granularity::PerTensor, CodeFormat::Int4 { group: 64 }, 1.0, 0);
+        q2.attach_residual(&w, 4);
+        let lr2 = q2.residual.unwrap();
+        for (a, b) in lr.u.iter().zip(&lr2.u) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in lr.v.iter().zip(&lr2.v) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn low_rank_edge_cases() {
+        // rank clamped to min(rows, cols)
+        let w = rand_w(3, 8, 16);
+        let lr = low_rank_approx(&w, 10).unwrap();
+        assert_eq!(lr.k, 3);
+        // rank 0 and empty matrices yield no residual
+        assert!(low_rank_approx(&w, 0).is_none());
+        assert!(low_rank_approx(&Tensor::zeros(vec![0, 4]), 2).is_none());
+        // an exactly rank-1 matrix is recovered (near machine precision)
+        let u = [1.0f32, -2.0, 0.5];
+        let v = [3.0f32, 0.25, -1.0, 2.0];
+        let mut m = vec![0.0f32; 12];
+        for (i, ui) in u.iter().enumerate() {
+            for (j, vj) in v.iter().enumerate() {
+                m[i * 4 + j] = ui * vj;
+            }
+        }
+        let m = Tensor::new(vec![3, 4], m);
+        let lr = low_rank_approx(&m, 1).unwrap();
+        for i in 0..3 {
+            for j in 0..4 {
+                let approx = lr.u[i] * lr.v[j];
+                assert!(
+                    (approx - m.at2(i, j)).abs() < 1e-5,
+                    "({i},{j}): {approx} vs {}",
+                    m.at2(i, j)
+                );
+            }
+        }
+        // all-zero residual: factors stay zero, correction is a no-op
+        let z = low_rank_approx(&Tensor::zeros(vec![4, 4]), 2).unwrap();
+        assert!(z.u.iter().all(|&x| x == 0.0));
     }
 
     #[test]

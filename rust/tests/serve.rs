@@ -9,7 +9,9 @@ use std::path::PathBuf;
 use daq::coordinator::stream::{run_stream, StreamConfig};
 use daq::coordinator::Method;
 use daq::eval::decode::Decoder;
-use daq::eval::model_native::{forward_native, synth_params, ModelCfg};
+use daq::eval::model_native::{
+    forward_native, synth_params, synth_quantized_fmt, ModelCfg,
+};
 use daq::eval::{
     load_params_dequant_source, NativeForward, QuantForward, QuantizedParams,
 };
@@ -17,7 +19,7 @@ use daq::experiments::quantizable_from_source;
 use daq::io::dts::{Dts, DtsTensor};
 use daq::io::shard::{ShardWriter, ShardedDts};
 use daq::io::TensorSource;
-use daq::quant::{quantize, Granularity};
+use daq::quant::{quantize, CodeFormat, Granularity};
 use daq::serve::{gen_requests, serve, serve_reforward, ServeConfig};
 use daq::tensor::Tensor;
 use daq::util::telemetry::{self, Telemetry};
@@ -238,6 +240,81 @@ fn deadline_eviction_under_multithreaded_decode() {
     for gen in &rep.completions {
         assert!(gen.is_empty(), "evicted-at-admission request decoded tokens");
     }
+}
+
+/// Acceptance: the fused dequant-matmul backend produces bitwise the same
+/// logits as the dense NativeBackend over the dequantized (plus residual)
+/// weights, for EVERY code format with and without a low-rank residual.
+/// The scratch-row decode inside the quantized GEMM keeps the accumulation
+/// order identical to a dense matmul over `dequantize()`'s output, and
+/// `dequantize()` itself applies the residual, so the two paths see the
+/// same f32 values in the same order.
+#[test]
+fn every_code_format_serves_bitwise_with_and_without_residual() {
+    let cfg = serve_cfg();
+    let params = synth_params(&cfg, 91);
+    let quantizable: Vec<String> = {
+        let mut q: Vec<String> = params
+            .keys()
+            .filter(|n| {
+                n.ends_with(".wq") || n.ends_with(".wk") || n.ends_with(".wv")
+                    || n.ends_with(".wo") || n.ends_with(".w1")
+                    || n.ends_with(".w2") || n.as_str() == "head"
+            })
+            .cloned()
+            .collect();
+        q.sort();
+        q
+    };
+    assert_eq!(quantizable.len(), 6 * cfg.n_layer + 1);
+    let tokens: Vec<i32> =
+        (0..2 * cfg.seq_len).map(|i| (i % cfg.vocab) as i32).collect();
+
+    for fmt in [
+        CodeFormat::Fp8E4m3,
+        CodeFormat::Fp8E5m2,
+        CodeFormat::Int4 { group: 16 },
+    ] {
+        for rank in [0usize, 2] {
+            let qp = synth_quantized_fmt(
+                &params,
+                &quantizable,
+                Granularity::Block(16),
+                fmt,
+                rank,
+            );
+            assert_eq!(qp.n_quantized(), quantizable.len());
+            let dense = qp.dequantize_all();
+            let native = forward_native(&dense, &cfg, 2, &tokens).unwrap();
+            let qfwd = QuantForward { params: &qp, cfg, batch: 2 };
+            let quant = daq::eval::ForwardFn::forward(&qfwd, 2, &tokens).unwrap();
+            assert_eq!(native.len(), quant.len());
+            for (i, (a, b)) in native.iter().zip(&quant).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{} rank {rank} logit {i}: {a} vs {b}",
+                    fmt.label()
+                );
+            }
+        }
+    }
+
+    // INT4 residency really is sub-byte: against the same model, the
+    // packed store resides in fewer bytes than the FP8 one
+    let qp8 = synth_quantized_fmt(
+        &params, &quantizable, Granularity::Block(16), CodeFormat::Fp8E4m3, 0,
+    );
+    let qp4 = synth_quantized_fmt(
+        &params, &quantizable, Granularity::Block(16),
+        CodeFormat::Int4 { group: 16 }, 0,
+    );
+    assert!(
+        qp4.resident_param_bytes() < qp8.resident_param_bytes(),
+        "int4 {} vs fp8 {}",
+        qp4.resident_param_bytes(),
+        qp8.resident_param_bytes()
+    );
 }
 
 /// The codes-without-`gran.<name>`-meta fallback path over a sharded

@@ -29,7 +29,7 @@ use daq::eval::trace::{stamp_model_meta, trace_checkpoint};
 use daq::experiments::quantizable_from_source;
 use daq::io::dts::{Dts, DtsReader, DtsTensor};
 use daq::io::shard::{shard_dts_file, ShardedDts};
-use daq::quant::Granularity;
+use daq::quant::{CodeFormat, Descriptor, Granularity};
 use daq::search::Objective;
 use daq::tensor::Tensor;
 use daq::util::json::Json;
@@ -211,11 +211,7 @@ fn run_both_grouped(
 ) -> (PipelineOutcome, daq::coordinator::stream::StreamOutcome, ShardedDts) {
     assert!(!quantizable.is_empty());
 
-    let cfg = PipelineConfig {
-        granularity: gran,
-        method: method.clone(),
-        engine: Engine::Native { workers: 2 },
-    };
+    let cfg = PipelineConfig::new(gran, method.clone(), Engine::Native { workers: 2 });
     let mem =
         run_pipeline_grouped(post, base, quantizable, calib, &cfg, None, &groups)
             .unwrap();
@@ -262,7 +258,6 @@ fn assert_store_matches(
     mem: &PipelineOutcome,
     streamed: &daq::coordinator::stream::StreamOutcome,
     store: &ShardedDts,
-    gran: Granularity,
 ) {
     assert_eq!(mem.layers.len(), streamed.layers.len());
     for (a, b) in mem.layers.iter().zip(&streamed.layers) {
@@ -273,13 +268,15 @@ fn assert_store_matches(
     }
     assert_eq!(mem.agg, streamed.agg);
 
-    // stored tensors identical: codes, scales, dequantized weights
+    // stored tensors identical: codes (at the format's packed shape),
+    // scales, residual sidecars, dequantized weights
     for (name, q) in &mem.quantized {
+        let fmt = q.format();
         let codes = store.read_tensor(&format!("{name}.codes")).unwrap();
         assert_bits_eq(
             &codes,
             &DtsTensor::U8 {
-                shape: vec![q.shape.0, q.shape.1],
+                shape: vec![q.shape.0, fmt.packed_row_bytes(q.shape.1)],
                 data: q.codes.clone(),
             },
             &format!("{name}.codes"),
@@ -293,6 +290,34 @@ fn assert_store_matches(
             },
             &format!("{name}.scales"),
         );
+        match &q.residual {
+            Some(lr) => {
+                let u = store.read_tensor(&format!("{name}.res_u")).unwrap();
+                assert_bits_eq(
+                    &u,
+                    &DtsTensor::F32 {
+                        shape: vec![q.shape.0, lr.k],
+                        data: lr.u.clone(),
+                    },
+                    &format!("{name}.res_u"),
+                );
+                let v = store.read_tensor(&format!("{name}.res_v")).unwrap();
+                assert_bits_eq(
+                    &v,
+                    &DtsTensor::F32 {
+                        shape: vec![lr.k, q.shape.1],
+                        data: lr.v.clone(),
+                    },
+                    &format!("{name}.res_v"),
+                );
+            }
+            None => {
+                assert!(
+                    store.entry(&format!("{name}.res_u")).is_none(),
+                    "{name}: spurious residual sidecar"
+                );
+            }
+        }
     }
     // every parameter (quantized + folded layernorms + passthrough)
     // matches the in-memory outcome via the shared sidecar dequant loader
@@ -305,8 +330,9 @@ fn assert_store_matches(
             assert_eq!(x.to_bits(), y.to_bits(), "{name}");
         }
     }
-    // metadata mirrors write_checkpoint's
-    assert_eq!(store.meta.get("quantized").map(|s| s.as_str()), Some("fp8_e4m3"));
+    // metadata mirrors write_checkpoint's: the structured fmt.<name>
+    // descriptor replaced the legacy `quantized` + gran.<name> pair
+    assert!(store.meta.get("quantized").is_none());
     for l in &mem.layers {
         assert_eq!(
             store.meta.get(&format!("alpha.{}", l.name)),
@@ -314,7 +340,18 @@ fn assert_store_matches(
             "{}",
             l.name
         );
-        assert_eq!(store.meta.get(&format!("gran.{}", l.name)), Some(&gran.label()));
+        let q = &mem.quantized[&l.name];
+        assert_eq!(
+            store.meta.get(&format!("fmt.{}", l.name)),
+            Some(&Descriptor::for_tensor(q).to_meta()),
+            "{}",
+            l.name
+        );
+        assert!(
+            store.meta.get(&format!("gran.{}", l.name)).is_none(),
+            "{}: legacy gran meta resurfaced",
+            l.name
+        );
     }
 }
 
@@ -338,7 +375,7 @@ fn streaming_matches_in_memory_pipeline_bitwise() {
             let tag = format!("eq{gi}{mi}");
             let (mem, streamed, store) =
                 run_both(&post, &base, None, gran, method, &tag);
-            assert_store_matches(&mem, &streamed, &store, gran);
+            assert_store_matches(&mem, &streamed, &store);
             drop(store);
             std::fs::remove_dir_all(tmp(&format!("{tag}_out"))).unwrap();
         }
@@ -367,7 +404,7 @@ fn group_streaming_matches_in_memory_transformed_bitwise() {
             assert!(mem.agg.is_none());
             assert!(streamed.agg.is_none());
             assert!(streamed.layers.iter().all(|l| l.stats.is_none()));
-            assert_store_matches(&mem, &streamed, &store, gran);
+            assert_store_matches(&mem, &streamed, &store);
             // the folded layernorm affines are persisted (not the
             // pre-fold post values)
             let g = store.read_tensor("l0.ln1.g").unwrap();
@@ -746,6 +783,165 @@ fn resume_with_changed_config_is_rejected() {
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
+/// Sub-8-bit tentpole: streamed INT4-with-residual stores are
+/// bitwise-identical to the in-memory pipeline for every cell of
+/// {workers: 1, 4} — packed codes, scales, residual sidecars, metadata —
+/// and the cells are byte-identical to each other.
+#[test]
+fn int4_residual_streaming_matches_in_memory_across_workers() {
+    let (post, base) = fake_ckpts(17, 5, 32);
+    let quantizable = quantizable_from_source(&post);
+    let method = Method::Search {
+        objective: Objective::SignRate,
+        range: (0.8, 1.25),
+    };
+    let fmt = CodeFormat::Int4 { group: 16 };
+
+    let mut dirs = Vec::new();
+    for workers in [1usize, 4] {
+        let mut pcfg = PipelineConfig::new(
+            Granularity::Block(16),
+            method.clone(),
+            Engine::Native { workers },
+        );
+        pcfg.format = fmt;
+        pcfg.residual_rank = 4;
+        let mem = run_pipeline_grouped(
+            &post, &base, &quantizable, None, &pcfg, None, &GroupSource::Patterns,
+        )
+        .unwrap();
+
+        let out_dir = tmp(&format!("int4res_w{workers}"));
+        let _ = std::fs::remove_dir_all(&out_dir);
+        let mut scfg =
+            StreamConfig::new(Granularity::Block(16), method.clone(), workers);
+        scfg.format = fmt;
+        scfg.residual_rank = 4;
+        scfg.shard_budget = 8192;
+        let streamed =
+            run_stream(&post, &base, &quantizable, None, &out_dir, &scfg).unwrap();
+        let store = ShardedDts::open(&out_dir).unwrap();
+        assert_store_matches(&mem, &streamed, &store);
+
+        // the residual sidecars really are on disk, at their packed names
+        for name in &quantizable {
+            assert!(store.entry(&format!("{name}.res_u")).is_some(), "{name}");
+            assert!(store.entry(&format!("{name}.res_v")).is_some(), "{name}");
+            let q = &mem.quantized[name];
+            assert_eq!(q.residual.as_ref().map(|r| r.k), Some(4), "{name}");
+        }
+        drop(store);
+        dirs.push(out_dir);
+    }
+    // worker count is unobservable in the stored bytes
+    assert_stores_identical(&dirs[0], &dirs[1]);
+    for d in dirs {
+        std::fs::remove_dir_all(&d).unwrap();
+    }
+}
+
+/// Acceptance: `--format int4:64 --residual-rank 4` on
+/// transformer-scale layers (512-wide) resides in <= 0.18x the f32
+/// bytes — through both the in-memory pipeline and a streamed store
+/// reloaded by `QuantizedParams`.
+#[test]
+fn int4_residual_store_resides_under_0p18_of_f32() {
+    let (post, base) = fake_ckpts(19, 2, 512);
+    let quantizable = quantizable_from_source(&post);
+
+    // in-memory: ratio over the quantized tensors themselves
+    let mut pcfg = PipelineConfig::new(
+        Granularity::Block(64),
+        Method::AbsMax,
+        Engine::Native { workers: 2 },
+    );
+    pcfg.format = CodeFormat::Int4 { group: 64 };
+    pcfg.residual_rank = 4;
+    let mem = run_pipeline_grouped(
+        &post, &base, &quantizable, None, &pcfg, None, &GroupSource::Patterns,
+    )
+    .unwrap();
+    let packed: usize = mem.quantized.values().map(|q| q.nbytes()).sum();
+    let dense: usize =
+        mem.quantized.values().map(|q| 4 * q.shape.0 * q.shape.1).sum();
+    assert!(
+        (packed as f64) <= 0.18 * dense as f64,
+        "in-memory: {packed} vs {dense} ({:.3}x)",
+        packed as f64 / dense as f64
+    );
+
+    // streamed: the loaded store's resident footprint, passthrough
+    // tensors (embed / layernorm gains) included
+    let out_dir = tmp("int4_ratio");
+    let _ = std::fs::remove_dir_all(&out_dir);
+    let mut cfg = StreamConfig::new(Granularity::Block(64), Method::AbsMax, 2);
+    cfg.format = CodeFormat::Int4 { group: 64 };
+    cfg.residual_rank = 4;
+    cfg.shard_budget = 1 << 20;
+    run_stream(&post, &base, &quantizable, None, &out_dir, &cfg).unwrap();
+    let store = ShardedDts::open(&out_dir).unwrap();
+    let qp = daq::eval::QuantizedParams::load(&store).unwrap();
+    assert_eq!(qp.n_quantized(), quantizable.len());
+    let ratio =
+        qp.resident_param_bytes() as f64 / qp.f32_param_bytes() as f64;
+    assert!(ratio <= 0.18, "streamed resident ratio {ratio:.4}");
+    drop(store);
+    std::fs::remove_dir_all(&out_dir).unwrap();
+}
+
+/// Resume over an interrupted INT4+residual run: the journal's written
+/// names include the residual sidecars, so completed units skip whole
+/// and the store reconverges byte-identically.
+#[test]
+fn int4_residual_resume_converges_to_identical_bytes() {
+    let (post, base) = fake_ckpts(37, 4, 32);
+    let quantizable = quantizable_from_source(&post);
+    let mut cfg = StreamConfig::new(Granularity::Block(16), Method::AbsMax, 2);
+    cfg.format = CodeFormat::Int4 { group: 16 };
+    cfg.residual_rank = 2;
+    cfg.shard_budget = 1; // one unit per shard
+
+    let ref_dir = tmp("int4_resume_ref");
+    let _ = std::fs::remove_dir_all(&ref_dir);
+    run_stream(&post, &base, &quantizable, None, &ref_dir, &cfg).unwrap();
+
+    let dir = tmp("int4_resume_cut");
+    let _ = std::fs::remove_dir_all(&dir);
+    run_stream(&post, &base, &quantizable, None, &dir, &cfg).unwrap();
+    let kept = truncate_store(&dir, 2);
+    assert_eq!(kept, 2);
+
+    let mut rcfg = cfg.clone();
+    rcfg.resume = true;
+    let resumed =
+        run_stream(&post, &base, &quantizable, None, &dir, &rcfg).unwrap();
+    assert_eq!(resumed.resumed, 2, "journaled INT4+residual units must skip");
+    assert_stores_identical(&ref_dir, &dir);
+
+    std::fs::remove_dir_all(&ref_dir).unwrap();
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+/// The resume journal records the code format and residual rank; a
+/// resume under a different format is a config mismatch, not a silent
+/// mixed-format store.
+#[test]
+fn resume_with_changed_format_is_rejected() {
+    let (post, base) = fake_ckpts(47, 3, 16);
+    let quantizable = quantizable_from_source(&post);
+    let dir = tmp("resume_fmt");
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut cfg = StreamConfig::new(Granularity::Block(16), Method::AbsMax, 1);
+    cfg.format = CodeFormat::Int4 { group: 16 };
+    run_stream(&post, &base, &quantizable, None, &dir, &cfg).unwrap();
+
+    let mut other = StreamConfig::new(Granularity::Block(16), Method::AbsMax, 1);
+    other.resume = true;
+    let err = run_stream(&post, &base, &quantizable, None, &dir, &other).unwrap_err();
+    assert!(format!("{err:#}").contains("format"), "{err:#}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
 #[test]
 fn fresh_run_refuses_existing_store() {
     let (post, base) = fake_ckpts(43, 3, 16);
@@ -904,7 +1100,7 @@ fn trace_groups_stream_renamed_checkpoint_bitwise() {
             GroupSource::Trace(graph.clone()),
         );
         assert!(mem.agg.is_none());
-        assert_store_matches(&mem, &streamed, &store, gran);
+        assert_store_matches(&mem, &streamed, &store);
         // the qkv group's affine actually absorbed the inverse smoothing
         // (SmoothQuant's factors are generically != 1; AWQ may
         // legitimately settle on alpha = 0, i.e. identity scaling)
