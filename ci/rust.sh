@@ -8,18 +8,29 @@
 #                           rust-fast matrix's second cell: fmt/clippy output
 #                           varies across versions, a type check does not)
 #   ci/rust.sh full         release build + tests
+#   ci/rust.sh simd         SIMD kernel lane: the full test suite with
+#                           dispatch forced scalar (DAQ_SIMD=off), then —
+#                           on runners whose CPU advertises AVX2 — the
+#                           same suite rebuilt with
+#                           RUSTFLAGS="-C target-feature=+avx2" so the
+#                           vector arms compile with the ISA statically
+#                           enabled as well as runtime-detected
 #   ci/rust.sh determinism  tests/streaming.rs across the CI matrix
-#                           {DAQ_TEST_WORKERS: 1, 4} x {DAQ_TEST_DEPTH: 1, 3};
+#                           {DAQ_TEST_WORKERS: 1, 4} x {DAQ_TEST_DEPTH: 1, 3}
+#                           x {DAQ_SIMD: detect, off};
 #                           every cell must produce byte-identical shards
 #                           (each asserts against the env-independent
 #                           in-memory pipeline AND the workers=1/depth=1
 #                           anchor store)
 #   ci/rust.sh chaos        tests/fault.rs across the fault matrix
 #                           {DAQ_FAULT_SEED: 0, 7, 1234} x
-#                           {DAQ_TEST_WORKERS: 1, 4}; the seed relocates
-#                           the injected faults (each test probes it into
+#                           {DAQ_TEST_WORKERS: 1, 4} plus a DAQ_SIMD=off
+#                           cell at seed 0; the seed relocates the
+#                           injected faults (each test probes it into
 #                           a usable regime), the workers axis shakes the
-#                           retry/quarantine plumbing under parallelism
+#                           retry/quarantine plumbing under parallelism,
+#                           and the forced-scalar cell proves recovery is
+#                           dispatch-independent
 #   ci/rust.sh              fast + full (the local pre-push default)
 #
 # Every cargo invocation passes --locked so drift in the vendored shims
@@ -48,12 +59,35 @@ run_full() {
   cargo test --locked -q
 }
 
+run_simd() {
+  # the whole suite with the kernel layer pinned to the scalar reference:
+  # every bitwise contract must hold no matter what the runner's CPU has
+  echo "== simd cell: DAQ_SIMD=off =="
+  DAQ_SIMD=off cargo test --locked -q
+  # rebuild with AVX2 statically enabled where the runner supports it —
+  # catches codegen differences between runtime-detected and
+  # statically-enabled vector arms (same dispatch, different baseline ISA)
+  if grep -q avx2 /proc/cpuinfo 2>/dev/null; then
+    echo "== simd cell: RUSTFLAGS=-C target-feature=+avx2 =="
+    RUSTFLAGS="-C target-feature=+avx2" cargo test --locked -q
+  else
+    echo "== simd cell: +avx2 build skipped (runner CPU has no AVX2) =="
+  fi
+}
+
 run_determinism() {
-  for workers in 1 4; do
-    for depth in 1 3; do
-      echo "== determinism cell: workers=${workers} depth=${depth} =="
-      DAQ_TEST_WORKERS="$workers" DAQ_TEST_DEPTH="$depth" \
-        cargo test --locked -q --test streaming
+  for simd in detect off; do
+    for workers in 1 4; do
+      for depth in 1 3; do
+        echo "== determinism cell: workers=${workers} depth=${depth} simd=${simd} =="
+        if [ "$simd" = off ]; then
+          DAQ_SIMD=off DAQ_TEST_WORKERS="$workers" DAQ_TEST_DEPTH="$depth" \
+            cargo test --locked -q --test streaming
+        else
+          DAQ_TEST_WORKERS="$workers" DAQ_TEST_DEPTH="$depth" \
+            cargo test --locked -q --test streaming
+        fi
+      done
     done
   done
 }
@@ -66,12 +100,17 @@ run_chaos() {
         cargo test --locked -q --test fault
     done
   done
+  # forced-scalar cell: fault recovery must not depend on dispatch mode
+  echo "== chaos cell: fault_seed=0 workers=4 simd=off =="
+  DAQ_SIMD=off DAQ_FAULT_SEED=0 DAQ_TEST_WORKERS=4 \
+    cargo test --locked -q --test fault
 }
 
 case "$mode" in
   fast) run_fast ;;
   msrv) run_msrv ;;
   full) run_full ;;
+  simd) run_simd ;;
   determinism) run_determinism ;;
   chaos) run_chaos ;;
   all)
@@ -81,7 +120,7 @@ case "$mode" in
     run_full
     ;;
   *)
-    echo "usage: ci/rust.sh [fast|msrv|full|determinism|chaos|all]" >&2
+    echo "usage: ci/rust.sh [fast|msrv|full|simd|determinism|chaos|all]" >&2
     exit 2
     ;;
 esac

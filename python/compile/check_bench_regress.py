@@ -44,6 +44,18 @@ intra-run gates it compares two rows of the same run, so runner noise
 cancels and the scaling floor is machine-independent (given the
 runner's advertised core count).
 
+`--simd-speedup X` is the intra-run gate for the SIMD kernel layer:
+`pipeline-inmemory` Melem/s must be >= X * `pipeline-scalar` (the same
+workload re-run with dispatch forced to the scalar reference), and
+`serve-quantized` tokens/s must be >= SERVE_SIMD_SCALING *
+`serve-quantized-scalar`. Rows carry the dispatched ISA in a `simd`
+field ("avx2"/"sse4.1"/"neon"/"scalar"); when the SIMD row itself
+dispatched "scalar" — the runner has no vector ISA — the pair is
+skipped with a warning rather than failed, so the gate is meaningful
+on AVX2/NEON runners and harmless elsewhere. Baselines written before
+the field existed are still accepted: `simd` is carried through
+--write-baseline when present but never required.
+
 Exit code 0 = no regression beyond the threshold.
 """
 
@@ -98,6 +110,7 @@ def write_baseline(path: str, current: dict, threshold: float) -> None:
                 "shape": r["shape"],
                 "granularity": r["granularity"],
                 "workers": r.get("workers"),
+                "simd": r.get("simd"),
                 "mean_ms": r.get("mean_ms"),
                 metric(r)[0]: metric(r)[1],
             }
@@ -238,6 +251,84 @@ def check_mt_scaling(cur_rows: dict, scaling: float) -> None:
     print(f"ok: mt scaling >= {scaling:.2f}x on {pairs} pair(s)")
 
 
+# Serve pair floor for --simd-speedup: the decode path spends a smaller
+# share of its time in the vectorized kernels than the quantize pipeline
+# (attention, KV bookkeeping and sampling are untouched scalar code), so
+# its intra-run floor is fixed lower than the pipeline one.
+SERVE_SIMD_SCALING = 1.5
+
+# (SIMD-dispatched variant, forced-scalar companion) pairs priced by the
+# --simd-speedup intra-run gate; the pipeline pair uses the flag value as
+# its floor, the serve pair uses SERVE_SIMD_SCALING.
+SIMD_PAIRS = (
+    ("pipeline-inmemory", "pipeline-scalar"),
+    ("serve-quantized", "serve-quantized-scalar"),
+)
+
+
+def check_simd_speedup(cur_rows: dict, speedup: float) -> None:
+    """Intra-run gate: SIMD-dispatched throughput at least `speedup`x
+    the forced-scalar companion for the pipeline pair (Melem/s) and at
+    least SERVE_SIMD_SCALING x for the serve pair (tokens/s). Pairs
+    whose SIMD row reports `simd: "scalar"` (the runner has no vector
+    ISA, so both rows ran the same code) are skipped with a warning.
+    Exits non-zero on breach or if no pair exists at all."""
+    pairs = 0
+    skipped = 0
+    breaches = []
+    for (simd_variant, scalar_variant), floor_ratio in zip(
+        SIMD_PAIRS, (speedup, SERVE_SIMD_SCALING)
+    ):
+        for (variant, shape, gran), fast in sorted(cur_rows.items()):
+            if variant != simd_variant:
+                continue
+            scalar = cur_rows.get((scalar_variant, shape, gran))
+            if scalar is None:
+                continue
+            isa = fast.get("simd") or "scalar"
+            if isa == "scalar":
+                skipped += 1
+                print(
+                    f"      skip: {simd_variant} {shape}/{gran} dispatched "
+                    f"scalar (no vector ISA on this runner)"
+                )
+                continue
+            pairs += 1
+            mname, mfast = metric(fast)
+            mscalar = scalar.get(mname, 0.0)
+            floor = mscalar * floor_ratio
+            ratio = mfast / mscalar if mscalar else 0.0
+            unit = "Melem/s" if mname == "melem_per_s" else "tok/s"
+            status = "ok" if mfast >= floor else "SIMD SPEEDUP"
+            print(
+                f"{status:>10}: {simd_variant} [{isa}] {shape}/{gran}  "
+                f"{mfast:.2f} vs scalar {mscalar:.2f} {unit} "
+                f"({ratio:.3f}x, floor {floor_ratio:.2f}x)"
+            )
+            if mfast < floor:
+                breaches.append((simd_variant, shape, gran))
+    if pairs == 0 and skipped == 0:
+        sys.exit(
+            "error: --simd-speedup was requested but no "
+            "(pipeline-inmemory, pipeline-scalar) or "
+            "(serve-quantized, serve-quantized-scalar) row pair exists "
+            "in the current run"
+        )
+    if pairs == 0:
+        print(
+            "warning: --simd-speedup skipped entirely — every pair "
+            "dispatched scalar on this runner"
+        )
+        return
+    if breaches:
+        names = ", ".join("/".join(b) for b in breaches)
+        sys.exit(
+            "error: SIMD dispatch speeds up less than the required "
+            f"intra-run floor over the forced-scalar companion on: {names}"
+        )
+    print(f"ok: simd speedup floors met on {pairs} pair(s)")
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--current", required=True, help="BENCH_sweep.json from this run")
@@ -273,6 +364,14 @@ def main() -> int:
         "(disabled unless given)",
     )
     ap.add_argument(
+        "--simd-speedup",
+        type=float,
+        default=None,
+        help="min required intra-run throughput ratio of the "
+        "SIMD-dispatched pipeline row vs its forced-scalar companion "
+        "(serve pair uses a fixed 1.5x floor; disabled unless given)",
+    )
+    ap.add_argument(
         "--write-baseline",
         action="store_true",
         help="regenerate the baseline from the current run instead of gating",
@@ -297,6 +396,8 @@ def main() -> int:
         check_telemetry_overhead(cur_rows, args.telemetry_overhead)
     if args.mt_scaling is not None:
         check_mt_scaling(cur_rows, args.mt_scaling)
+    if args.simd_speedup is not None:
+        check_simd_speedup(cur_rows, args.simd_speedup)
 
     compared = 0
     regressions = []

@@ -14,7 +14,7 @@ use daq::coordinator::{run_pipeline, Engine, Method, PipelineConfig};
 use daq::experiments::{quantizable_from_source, Lab};
 use daq::io::dts::Dts;
 use daq::metrics::{sweep_native, sweep_native_regions, SweepPlan};
-use daq::quant::{absmax_scales, CodeFormat, Granularity};
+use daq::quant::{absmax_scales, kernels, CodeFormat, Granularity};
 use daq::report::Table;
 use daq::search::Objective;
 use daq::tensor::Tensor;
@@ -38,6 +38,7 @@ struct Record {
     granularity: String,
     variant: String,
     workers: usize,
+    simd: String,
     mean_ms: f64,
     melem_per_s: f64,
     speedup_vs_naive: f64,
@@ -47,12 +48,13 @@ impl Record {
     fn json(&self) -> String {
         format!(
             "{{\"shape\": \"{}\", \"granularity\": \"{}\", \"variant\": \"{}\", \
-             \"workers\": {}, \"mean_ms\": {:.4}, \"melem_per_s\": {:.2}, \
-             \"speedup_vs_naive\": {:.3}}}",
+             \"workers\": {}, \"simd\": \"{}\", \"mean_ms\": {:.4}, \
+             \"melem_per_s\": {:.2}, \"speedup_vs_naive\": {:.3}}}",
             self.shape,
             self.granularity,
             self.variant,
             self.workers,
+            self.simd,
             self.mean_ms,
             self.melem_per_s,
             self.speedup_vs_naive
@@ -64,6 +66,10 @@ fn main() {
     let n_candidates = 16usize;
     let alphas: Vec<f32> = (0..n_candidates).map(|i| 0.8 + 0.028 * i as f32).collect();
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    // ISA the kernel layer dispatched to for this run (honours DAQ_SIMD);
+    // recorded per row so baselines from different runners stay comparable
+    let simd_label = kernels::label();
+    println!("simd dispatch: {simd_label}");
     let mut records: Vec<Record> = Vec::new();
     // DAQ_BENCH_FAST=1: reduced shape set for the CI bench-smoke lane —
     // every variant still emits its BENCH_sweep.json rows, just on
@@ -93,6 +99,7 @@ fn main() {
                     granularity: gran.label(),
                     variant: variant.into(),
                     workers,
+                    simd: simd_label.into(),
                     mean_ms: mean_s * 1e3,
                     melem_per_s: evals / mean_s / 1e6,
                     speedup_vs_naive: naive_mean_s / mean_s,
@@ -204,6 +211,16 @@ fn main() {
             run_pipeline(&post, &base, &quantizable, None, &pcfg, None).unwrap()
         });
 
+        // forced-scalar companion for the same workload: this pair prices
+        // the SIMD kernel layer itself, and check_bench_regress.py
+        // --simd-speedup gates the intra-run ratio (skipped with a warning
+        // when the ambient dispatch is already scalar)
+        let prev = kernels::force(kernels::SimdMode::Scalar);
+        let scalar = bench("pipeline (forced scalar)", 0, 3, || {
+            run_pipeline(&post, &base, &quantizable, None, &pcfg, None).unwrap()
+        });
+        kernels::force(prev);
+
         // sub-8-bit path: INT4 codes (group 64) + rank-4 ΔW residual —
         // same pipeline, but the sweep/quantize stages dispatch through
         // CodeFormat and the power-iteration residual rides on top
@@ -283,19 +300,21 @@ fn main() {
         let shape = format!("{n_layers}x{dim}x{dim}");
         let mut t = Table::new(
             "Full pipeline: in-memory vs streaming (synthetic 8 layers)",
-            &["variant", "workers", "mean ms", "Melem/s (xNC)", "vs in-memory"],
+            &["variant", "workers", "simd", "mean ms", "Melem/s (xNC)", "vs in-memory"],
         );
-        for (variant, mean_s) in [
-            ("pipeline-inmemory", mem.mean_s),
-            ("pipeline-streaming", stream.mean_s),
-            ("pipeline-streaming-checksum", stream_crc.mean_s),
-            ("pipeline-streaming-telemetry", stream_tel.mean_s),
+        for (variant, mean_s, simd) in [
+            ("pipeline-inmemory", mem.mean_s, simd_label),
+            ("pipeline-scalar", scalar.mean_s, "scalar"),
+            ("pipeline-streaming", stream.mean_s, simd_label),
+            ("pipeline-streaming-checksum", stream_crc.mean_s, simd_label),
+            ("pipeline-streaming-telemetry", stream_tel.mean_s, simd_label),
         ] {
             records.push(Record {
                 shape: shape.clone(),
                 granularity: gran.label(),
                 variant: variant.into(),
                 workers,
+                simd: simd.into(),
                 mean_ms: mean_s * 1e3,
                 melem_per_s: evals / mean_s / 1e6,
                 speedup_vs_naive: mem.mean_s / mean_s,
@@ -303,6 +322,7 @@ fn main() {
             t.row(vec![
                 variant.into(),
                 workers.to_string(),
+                simd.into(),
                 format!("{:.2}", mean_s * 1e3),
                 format!("{:.1}", evals / mean_s / 1e6),
                 format!("{:.2}x", mem.mean_s / mean_s),
@@ -313,6 +333,7 @@ fn main() {
             granularity: Granularity::Block(64).label(),
             variant: "pipeline-int4".into(),
             workers,
+            simd: simd_label.into(),
             mean_ms: int4.mean_s * 1e3,
             melem_per_s: evals / int4.mean_s / 1e6,
             speedup_vs_naive: mem.mean_s / int4.mean_s,
@@ -320,6 +341,7 @@ fn main() {
         t.row(vec![
             "pipeline-int4 (group 64, rank-4 residual)".into(),
             workers.to_string(),
+            simd_label.into(),
             format!("{:.2}", int4.mean_s * 1e3),
             format!("{:.1}", evals / int4.mean_s / 1e6),
             format!("{:.2}x", mem.mean_s / int4.mean_s),
@@ -411,6 +433,7 @@ fn main() {
                 granularity: gran.label(),
                 variant: variant.into(),
                 workers,
+                simd: simd_label.into(),
                 mean_ms: mean_s * 1e3,
                 melem_per_s: elems / mean_s / 1e6,
                 speedup_vs_naive: mem.mean_s / mean_s,
@@ -474,6 +497,17 @@ fn main() {
         let quant = bench("serve quantized", 0, 3, || {
             serve(&qdec, &reqs, &scfg).unwrap()
         });
+        // forced-scalar companion: same decoder and workload with the
+        // kernel layer pinned to the scalar reference. The intra-run pair
+        // is gated by check_bench_regress.py --simd-speedup, and the
+        // completions must stay bitwise-identical across dispatch modes
+        // (the serve determinism contract).
+        let prev = kernels::force(kernels::SimdMode::Scalar);
+        let quant_scalar = bench("serve quantized (forced scalar)", 0, 3, || {
+            serve(&qdec, &reqs, &scfg).unwrap()
+        });
+        let rep_scalar = serve(&qdec, &reqs, &scfg).unwrap();
+        kernels::force(prev);
         // slot-parallel decode: same quantized decoder, ticks fanned out
         // across worker threads. Completions must stay bitwise-identical
         // to the serial run (the determinism contract); tokens/s scaling
@@ -488,6 +522,10 @@ fn main() {
         assert_eq!(
             rep_serial.completions, rep_mt.completions,
             "multi-threaded serve must produce bitwise-identical completions"
+        );
+        assert_eq!(
+            rep_serial.completions, rep_scalar.completions,
+            "SIMD and forced-scalar serve must produce bitwise-identical completions"
         );
         // same quantized workload with a live registry; the Decoder
         // captures its step counter at construction, so it is rebuilt
@@ -524,19 +562,31 @@ fn main() {
         let gran = Granularity::Block(128);
         let mut t = Table::new(
             "Serving: full-reforward vs incremental vs quantized-resident",
-            &["variant", "slots", "workers", "mean ms", "tok/s", "resident MiB", "vs reforward"],
+            &[
+                "variant",
+                "slots",
+                "workers",
+                "simd",
+                "mean ms",
+                "tok/s",
+                "resident MiB",
+                "vs reforward",
+            ],
         );
-        for (variant, mean_s, resident, w) in [
-            ("serve-reforward", reforward.mean_s, params_bytes(&params), 1),
-            ("serve-inmemory", inmem.mean_s, params_bytes(&params), 1),
-            ("serve-quantized", quant.mean_s, qp.resident_param_bytes(), 1),
-            ("serve-quantized-mt", quant_mt.mean_s, qp.resident_param_bytes(), mt_workers),
-            ("serve-quantized-telemetry", quant_tel.mean_s, qp.resident_param_bytes(), 1),
+        let qbytes = qp.resident_param_bytes();
+        for (variant, mean_s, resident, w, simd) in [
+            ("serve-reforward", reforward.mean_s, params_bytes(&params), 1, simd_label),
+            ("serve-inmemory", inmem.mean_s, params_bytes(&params), 1, simd_label),
+            ("serve-quantized", quant.mean_s, qbytes, 1, simd_label),
+            ("serve-quantized-scalar", quant_scalar.mean_s, qbytes, 1, "scalar"),
+            ("serve-quantized-mt", quant_mt.mean_s, qbytes, mt_workers, simd_label),
+            ("serve-quantized-telemetry", quant_tel.mean_s, qbytes, 1, simd_label),
         ] {
             let tok_s = total_tokens / mean_s;
             serve_rows.push(format!(
                 "{{\"shape\": \"{shape}\", \"granularity\": \"{}\", \
                  \"variant\": \"{variant}\", \"workers\": {w}, \
+                 \"simd\": \"{simd}\", \
                  \"mean_ms\": {:.4}, \"tokens_per_s\": {tok_s:.2}, \
                  \"resident_param_bytes\": {resident}, \
                  \"speedup_vs_reforward\": {:.3}}}",
@@ -548,6 +598,7 @@ fn main() {
                 variant.into(),
                 slots.to_string(),
                 w.to_string(),
+                simd.into(),
                 format!("{:.2}", mean_s * 1e3),
                 format!("{tok_s:.1}"),
                 format!("{:.3}", resident as f64 / (1 << 20) as f64),
@@ -560,6 +611,7 @@ fn main() {
             serve_rows.push(format!(
                 "{{\"shape\": \"{shape}\", \"granularity\": \"{}\", \
                  \"variant\": \"serve-int4-residual\", \"workers\": 1, \
+                 \"simd\": \"{simd_label}\", \
                  \"mean_ms\": {:.4}, \"tokens_per_s\": {tok_s:.2}, \
                  \"resident_param_bytes\": {resident}, \
                  \"speedup_vs_reforward\": {:.3}}}",
@@ -571,6 +623,7 @@ fn main() {
                 "serve-int4-residual".into(),
                 slots.to_string(),
                 "1".into(),
+                simd_label.into(),
                 format!("{:.2}", quant4.mean_s * 1e3),
                 format!("{tok_s:.1}"),
                 format!("{:.3}", resident as f64 / (1 << 20) as f64),
@@ -599,9 +652,11 @@ fn main() {
     let mut body: Vec<String> = records.iter().map(|r| format!("  {}", r.json())).collect();
     body.extend(serve_rows.iter().map(|r| format!("  {r}")));
     let json = format!(
-        "{{\"bench\": \"sweep\", \"candidates\": {}, \"cores\": {}, \"rows\": [\n{}\n]}}\n",
+        "{{\"bench\": \"sweep\", \"candidates\": {}, \"cores\": {}, \
+         \"simd\": \"{}\", \"rows\": [\n{}\n]}}\n",
         n_candidates,
         cores,
+        simd_label,
         body.join(",\n")
     );
     match std::fs::write(&out_path, &json) {

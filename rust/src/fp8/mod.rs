@@ -143,12 +143,21 @@ pub fn decode_table() -> [f32; 256] {
     t
 }
 
-/// Bulk-decode a slice of E4M3 codes through the shared LUT. The workhorse
-/// of every quantized-resident read path: [`crate::quant::QuantizedTensor`]
-/// row dequantization and the fused dequant-matmul decode rows through this
-/// instead of per-element [`decode_e4m3`] calls.
+/// Bulk-decode a slice of E4M3 codes. The workhorse of every
+/// quantized-resident read path: [`crate::quant::QuantizedTensor`] row
+/// dequantization and the fused dequant-matmul decode rows through this
+/// instead of per-element [`decode_e4m3`] calls. Dispatches to the
+/// SIMD kernel layer ([`crate::quant::kernels`]); every mode is
+/// bitwise-equal to [`decode_slice_into_scalar`].
 #[inline]
 pub fn decode_slice_into(codes: &[u8], out: &mut [f32]) {
+    crate::quant::kernels::decode_e4m3_into(codes, out);
+}
+
+/// The scalar LUT walk behind [`decode_slice_into`] — the always-compiled
+/// bitwise reference the SIMD decode kernels are verified against, and
+/// the `DAQ_SIMD=off` / unsupported-ISA fallback.
+pub fn decode_slice_into_scalar(codes: &[u8], out: &mut [f32]) {
     assert_eq!(codes.len(), out.len());
     let table = decode_lut();
     for (o, &c) in out.iter_mut().zip(codes) {
@@ -182,11 +191,18 @@ pub fn decode_lut_e5m2() -> &'static [f32; 256] {
     DECODE_LUT_E5M2.get_or_init(decode_table_e5m2)
 }
 
-/// Bulk-decode a slice of E5M2 codes through the shared E5M2 LUT — the
-/// E5M2 twin of [`decode_slice_into`], used by the quantized-resident
-/// read paths when a tensor's `CodeFormat` is `fp8-e5m2`.
+/// Bulk-decode a slice of E5M2 codes — the E5M2 twin of
+/// [`decode_slice_into`] (same SIMD dispatch, same bitwise contract),
+/// used by the quantized-resident read paths when a tensor's
+/// `CodeFormat` is `fp8-e5m2`.
 #[inline]
 pub fn decode_slice_into_e5m2(codes: &[u8], out: &mut [f32]) {
+    crate::quant::kernels::decode_e5m2_into(codes, out);
+}
+
+/// The scalar LUT walk behind [`decode_slice_into_e5m2`] (see
+/// [`decode_slice_into_scalar`]).
+pub fn decode_slice_into_e5m2_scalar(codes: &[u8], out: &mut [f32]) {
     assert_eq!(codes.len(), out.len());
     let table = decode_lut_e5m2();
     for (o, &c) in out.iter_mut().zip(codes) {

@@ -20,7 +20,7 @@
 //! fixed tile order, making the result bitwise-identical for every worker
 //! count.
 
-use super::tile::{self, eval_tile, sign_i8, TileView};
+use super::tile::{self, sign_i8, TileView};
 use super::DeltaStats;
 use crate::quant::{CodeFormat, ScaleGrid};
 use crate::tensor::Tensor;
@@ -129,29 +129,15 @@ impl SweepPlan {
     ///
     /// Bitwise-deterministic across `workers`: tiles are fixed by the
     /// plan, each tile's partial is computed independently, and partials
-    /// merge in tile order regardless of which thread ran them. The qdq
-    /// projection dispatches on the plan's [`CodeFormat`] — the same fn
-    /// items the pointwise `sweep_native` reference uses, so every format
-    /// keeps the planned/native agreement the E4M3 path has always had.
+    /// merge in tile order regardless of which thread ran them. Each tile
+    /// evaluates through [`tile::eval_tile_fmt`], which dispatches on the
+    /// plan's [`CodeFormat`] and on the active SIMD mode: the scalar path
+    /// uses the same qdq fn items the pointwise `sweep_native` reference
+    /// uses, and the SIMD tile kernel keeps every per-element projection
+    /// bitwise-equal while summing in per-ISA fixed-order lane partials —
+    /// within the 1e-9 planned/native agreement bar, and still bitwise
+    /// identical across worker counts on a fixed ISA.
     pub fn eval_with_workers(&self, alphas: &[f32], workers: usize) -> Vec<DeltaStats> {
-        match self.format {
-            CodeFormat::Fp8E4m3 => {
-                self.eval_impl(alphas, workers, crate::fp8::qdq_e4m3_scaled)
-            }
-            CodeFormat::Fp8E5m2 => {
-                self.eval_impl(alphas, workers, crate::fp8::qdq_e5m2_scaled)
-            }
-            CodeFormat::Int4 { .. } => {
-                self.eval_impl(alphas, workers, crate::quant::format::qdq_int4_scaled)
-            }
-        }
-    }
-
-    /// Monomorphized evaluation body (see [`Self::eval_with_workers`]).
-    fn eval_impl<F>(&self, alphas: &[f32], workers: usize, qdq: F) -> Vec<DeltaStats>
-    where
-        F: Fn(f32, f32, f32) -> f32 + Sync,
-    {
         let nc = alphas.len();
         if nc == 0 {
             return Vec::new();
@@ -186,7 +172,7 @@ impl SweepPlan {
         let parts = par_map_slice(workers, &tiles, |&(lo, hi)| {
             let _t = tile_hist.start_timer();
             cand_hist.observe(nc as f64);
-            eval_tile(
+            tile::eval_tile_fmt(
                 &TileView {
                     p: &self.p[lo..hi],
                     b: &self.b[lo..hi],
@@ -198,7 +184,7 @@ impl SweepPlan {
                 &inv_tab,
                 nr,
                 nc,
-                &qdq,
+                self.format,
             )
         });
 

@@ -110,6 +110,51 @@ pub fn eval_tile<F: Fn(f32, f32, f32) -> f32>(
     st
 }
 
+/// Format-dispatching tile evaluation: runs the SIMD tile kernel
+/// ([`crate::quant::kernels::eval_tile_simd`]) when the active dispatch
+/// mode has one, else [`eval_tile`] with the format's scalar scaled
+/// projection. Per element the two produce bitwise-equal projections;
+/// only the f64 accumulation order differs (per-ISA fixed lane partials
+/// vs element order), which is covered by the sweep's 1e-9 agreement
+/// bar and stays invariant across worker counts on a fixed ISA.
+pub fn eval_tile_fmt(
+    v: &TileView,
+    s_tab: &[f32],
+    inv_tab: &[f32],
+    n_regions: usize,
+    n_candidates: usize,
+    format: crate::quant::CodeFormat,
+) -> TileStats {
+    let simd = crate::quant::kernels::eval_tile_simd(
+        format,
+        v.p,
+        v.b,
+        v.dp,
+        v.sp,
+        v.scale_idx,
+        s_tab,
+        inv_tab,
+        n_regions,
+        n_candidates,
+    );
+    if let Some(p) = simd {
+        return TileStats { agree: p.agree, dot: p.dot, nq: p.nq, sq: p.sq };
+    }
+    use crate::quant::CodeFormat;
+    match format {
+        CodeFormat::Fp8E4m3 => {
+            eval_tile(v, s_tab, inv_tab, n_regions, n_candidates, crate::fp8::qdq_e4m3_scaled)
+        }
+        CodeFormat::Fp8E5m2 => {
+            eval_tile(v, s_tab, inv_tab, n_regions, n_candidates, crate::fp8::qdq_e5m2_scaled)
+        }
+        CodeFormat::Int4 { .. } => {
+            let qdq = crate::quant::format::qdq_int4_scaled;
+            eval_tile(v, s_tab, inv_tab, n_regions, n_candidates, qdq)
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -231,9 +231,18 @@ pub fn unpack_int4(packed: &[u8], n: usize) -> Vec<u8> {
     out
 }
 
-/// Bulk-decode a packed INT4 row into f32 values through [`INT4_DECODE`].
+/// Bulk-decode a packed INT4 row into f32 values. Dispatches to the
+/// SIMD kernel layer ([`super::kernels`]); every mode is bitwise-equal
+/// to [`decode_int4_slice_into_scalar`].
 #[inline]
 pub fn decode_int4_slice_into(packed: &[u8], out: &mut [f32]) {
+    super::kernels::decode_int4_into(packed, out);
+}
+
+/// The scalar [`INT4_DECODE`] walk behind [`decode_int4_slice_into`] —
+/// the always-compiled bitwise reference the SIMD nibble-unpack kernels
+/// are verified against, and the `DAQ_SIMD=off` fallback.
+pub fn decode_int4_slice_into_scalar(packed: &[u8], out: &mut [f32]) {
     assert_eq!(packed.len(), out.len().div_ceil(2), "packed row len");
     for (i, o) in out.iter_mut().enumerate() {
         let b = packed[i / 2];

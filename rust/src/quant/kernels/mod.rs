@@ -1,0 +1,628 @@
+//! Runtime-dispatched SIMD kernels for the pipeline's hot inner loops.
+//!
+//! Four loop families burn nearly all the cycles of quantize-and-serve,
+//! and each has exactly one accumulation/decode body that lives here:
+//!
+//! 1. **Code decode** — FP8 byte decode and packed-INT4 nibble unpack
+//!    into `QuantizedTensor::dequant_row_into`, plus the per-granularity
+//!    scale multiply ([`scale_mul`], [`mul_slice`]) and the rank-K
+//!    `res_u·res_v` residual add ([`axpy`]).
+//! 2. **Fused GEMM/GEMV accumulation** — the single [`axpy`] body under
+//!    `matmul_quant`, `matvec_quant_into` and `matmul_quant_rows_into`.
+//! 3. **The sweep tile kernel** — [`eval_tile_simd`], the vectorized twin
+//!    of `metrics::tile::eval_tile` (sign agreement in integer lanes,
+//!    dot/norm accumulation in fixed-order f64 lane partials).
+//! 4. **Bulk FP8 dequant** — [`decode_e4m3_into`] / [`decode_e5m2_into`]
+//!    behind `fp8::decode_slice_into`, the dequantizing-loader path.
+//!
+//! The dispatch mode is decided once per process ([`active`]) from the
+//! `DAQ_SIMD` environment variable plus runtime feature detection:
+//! AVX2 or SSE4.1 on x86_64 (the SSE4.1 tier covers the decode and axpy
+//! families and falls back to scalar for the sweep tile), NEON on
+//! aarch64, scalar everywhere else. `DAQ_SIMD=off` (or `scalar`) forces
+//! the always-compiled scalar reference; naming a specific ISA
+//! (`avx2`/`sse4.1`/`neon`) selects it when the machine supports it and
+//! falls back to scalar — never to a different ISA — when it does not.
+//! The bench overrides the cached mode with [`force`] so it can price
+//! SIMD against scalar inside one run.
+//!
+//! ## Determinism contract
+//!
+//! Families 1, 2 and 4 are **bitwise-equal** to the scalar reference:
+//! every lane performs the same single-rounding f32 ops on the same
+//! element (decode bit-twiddles are exact, the axpy uses separate
+//! multiply and add — never FMA, which would round once where the scalar
+//! reference rounds twice), and lanes map to independent elements, so
+//! vector width never reorders a dependent reduction. Fused-GEMM logits
+//! are therefore bit-identical in every dispatch mode.
+//!
+//! Family 3 keeps each per-element projection `q` bitwise-equal but sums
+//! tile statistics in per-ISA fixed-order f64 lane partials (lane
+//! partials merge low-to-high, then the scalar tail appends in element
+//! order), so sweep objectives agree with scalar at ≤1e-9 relative
+//! tolerance and remain bitwise-identical across worker counts and
+//! across runs on a fixed ISA — the reduction order depends only on the
+//! dispatched ISA, never on thread scheduling.
+//!
+//! See `docs/KERNELS.md` for the operational guide (forcing modes,
+//! reading the bench's `simd` column, CI lanes).
+
+#[cfg(target_arch = "aarch64")]
+mod neon;
+#[cfg(target_arch = "x86_64")]
+mod x86;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use super::format::CodeFormat;
+use crate::fp8;
+
+/// The dispatch tiers, from portable to widest.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdMode {
+    /// The always-compiled scalar reference paths.
+    Scalar,
+    /// x86_64 SSE4.1: decode + axpy families only (sweep tile stays
+    /// scalar — 128-bit f64 lanes do not pay for the extra code).
+    Sse41,
+    /// x86_64 AVX2: all four families.
+    Avx2,
+    /// aarch64 NEON: all four families.
+    Neon,
+}
+
+impl SimdMode {
+    fn to_u8(self) -> u8 {
+        match self {
+            SimdMode::Scalar => 1,
+            SimdMode::Sse41 => 2,
+            SimdMode::Avx2 => 3,
+            SimdMode::Neon => 4,
+        }
+    }
+
+    fn from_u8(v: u8) -> SimdMode {
+        match v {
+            2 => SimdMode::Sse41,
+            3 => SimdMode::Avx2,
+            4 => SimdMode::Neon,
+            _ => SimdMode::Scalar,
+        }
+    }
+}
+
+/// Cached dispatch decision; 0 = not yet initialized.
+static MODE: AtomicU8 = AtomicU8::new(0);
+
+#[cfg(target_arch = "x86_64")]
+fn cpu_has_avx2() -> bool {
+    std::arch::is_x86_feature_detected!("avx2")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn cpu_has_avx2() -> bool {
+    false
+}
+
+#[cfg(target_arch = "x86_64")]
+fn cpu_has_sse41() -> bool {
+    std::arch::is_x86_feature_detected!("sse4.1")
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn cpu_has_sse41() -> bool {
+    false
+}
+
+/// Whether `mode`'s instructions can execute on this machine.
+pub fn supported(mode: SimdMode) -> bool {
+    match mode {
+        SimdMode::Scalar => true,
+        SimdMode::Sse41 => cpu_has_sse41(),
+        SimdMode::Avx2 => cpu_has_avx2(),
+        SimdMode::Neon => cfg!(target_arch = "aarch64"),
+    }
+}
+
+/// Best mode the machine supports (the `DAQ_SIMD`-unset default).
+fn detect() -> SimdMode {
+    if supported(SimdMode::Avx2) {
+        SimdMode::Avx2
+    } else if supported(SimdMode::Neon) {
+        SimdMode::Neon
+    } else if supported(SimdMode::Sse41) {
+        SimdMode::Sse41
+    } else {
+        SimdMode::Scalar
+    }
+}
+
+/// Resolve a `DAQ_SIMD` value: `off`/`scalar`/`0` force scalar; a named
+/// ISA selects it if supported (scalar otherwise — never a silent
+/// upgrade to a different ISA); anything else (including `auto`)
+/// auto-detects. Pure given the machine, so the grammar is testable
+/// without touching the process environment.
+pub fn parse_mode(requested: &str) -> SimdMode {
+    match requested.to_ascii_lowercase().as_str() {
+        "off" | "scalar" | "0" => SimdMode::Scalar,
+        "sse4.1" | "sse41" => {
+            if supported(SimdMode::Sse41) {
+                SimdMode::Sse41
+            } else {
+                SimdMode::Scalar
+            }
+        }
+        "avx2" => {
+            if supported(SimdMode::Avx2) {
+                SimdMode::Avx2
+            } else {
+                SimdMode::Scalar
+            }
+        }
+        "neon" => {
+            if supported(SimdMode::Neon) {
+                SimdMode::Neon
+            } else {
+                SimdMode::Scalar
+            }
+        }
+        _ => detect(),
+    }
+}
+
+/// Resolve the `DAQ_SIMD` environment variable via [`parse_mode`],
+/// auto-detecting when unset.
+fn init_mode() -> SimdMode {
+    match std::env::var("DAQ_SIMD") {
+        Ok(v) => parse_mode(&v),
+        Err(_) => detect(),
+    }
+}
+
+/// The mode every kernel in this module dispatches on. Resolved once
+/// from `DAQ_SIMD` + feature detection, then cached for the process
+/// (unless overridden by [`force`]).
+#[inline]
+pub fn active() -> SimdMode {
+    let m = MODE.load(Ordering::Relaxed);
+    if m != 0 {
+        return SimdMode::from_u8(m);
+    }
+    let mode = init_mode();
+    MODE.store(mode.to_u8(), Ordering::Relaxed);
+    mode
+}
+
+/// Override the cached dispatch mode, returning the previous one — the
+/// bench's hook for emitting forced-scalar companion rows in the same
+/// run. Unsupported modes clamp to scalar, so a forced mode can never
+/// make a kernel execute instructions the machine lacks.
+pub fn force(mode: SimdMode) -> SimdMode {
+    let prev = active();
+    let next = if supported(mode) { mode } else { SimdMode::Scalar };
+    MODE.store(next.to_u8(), Ordering::Relaxed);
+    prev
+}
+
+/// Stable label for a mode (`BENCH_sweep.json`'s `simd` column values).
+pub fn mode_label(mode: SimdMode) -> &'static str {
+    match mode {
+        SimdMode::Scalar => "scalar",
+        SimdMode::Sse41 => "sse4.1",
+        SimdMode::Avx2 => "avx2",
+        SimdMode::Neon => "neon",
+    }
+}
+
+/// Label of the currently [`active`] mode.
+pub fn label() -> &'static str {
+    mode_label(active())
+}
+
+/// Format tag the per-ISA tile kernels switch their vector qdq on.
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+#[derive(Clone, Copy)]
+pub(crate) enum KernelFormat {
+    E4m3,
+    E5m2,
+    Int4,
+}
+
+#[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+impl KernelFormat {
+    fn of(fmt: CodeFormat) -> KernelFormat {
+        match fmt {
+            CodeFormat::Fp8E4m3 => KernelFormat::E4m3,
+            CodeFormat::Fp8E5m2 => KernelFormat::E5m2,
+            CodeFormat::Int4 { .. } => KernelFormat::Int4,
+        }
+    }
+}
+
+/// Bulk-decode E4M3 codes (family 4). Bitwise-equal to the scalar LUT
+/// walk in every mode: the vector path rebuilds each value exactly from
+/// the code bits (exponent rebias by 2¹²⁰ is a lossless power-of-two
+/// multiply, NaN codes blend in the same `f32::NAN` the LUT holds).
+#[inline]
+pub fn decode_e4m3_into(codes: &[u8], out: &mut [f32]) {
+    assert_eq!(codes.len(), out.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active() returns Avx2/Sse41 only when detection passed.
+        SimdMode::Avx2 => unsafe { x86::decode_e4m3_avx2(codes, out) },
+        #[cfg(target_arch = "x86_64")]
+        SimdMode::Sse41 => unsafe { x86::decode_e4m3_sse41(codes, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64 targets.
+        SimdMode::Neon => unsafe { neon::decode_e4m3_neon(codes, out) },
+        _ => fp8::decode_slice_into_scalar(codes, out),
+    }
+}
+
+/// Bulk-decode E5M2 codes — the E5M2 twin of [`decode_e4m3_into`]
+/// (rebias 2¹¹², and every exponent-31 code decodes to NaN, matching
+/// `fp8::decode_e5m2`'s no-infinity convention).
+#[inline]
+pub fn decode_e5m2_into(codes: &[u8], out: &mut [f32]) {
+    assert_eq!(codes.len(), out.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active() returns Avx2/Sse41 only when detection passed.
+        SimdMode::Avx2 => unsafe { x86::decode_e5m2_avx2(codes, out) },
+        #[cfg(target_arch = "x86_64")]
+        SimdMode::Sse41 => unsafe { x86::decode_e5m2_sse41(codes, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64 targets.
+        SimdMode::Neon => unsafe { neon::decode_e5m2_neon(codes, out) },
+        _ => fp8::decode_slice_into_e5m2_scalar(codes, out),
+    }
+}
+
+/// Unpack + decode a packed-INT4 row (two codes per byte, low nibble
+/// first; `out.len()` is the logical width, odd widths leave a pad
+/// nibble unread). Bitwise-equal to the 16-entry LUT walk: nibble → f32
+/// conversion and the bias subtraction are exact on small integers.
+#[inline]
+pub fn decode_int4_into(packed: &[u8], out: &mut [f32]) {
+    assert_eq!(packed.len(), out.len().div_ceil(2), "packed row len");
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active() returns Avx2/Sse41 only when detection passed.
+        SimdMode::Avx2 => unsafe { x86::decode_int4_avx2(packed, out) },
+        #[cfg(target_arch = "x86_64")]
+        SimdMode::Sse41 => unsafe { x86::decode_int4_sse41(packed, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64 targets.
+        SimdMode::Neon => unsafe { neon::decode_int4_neon(packed, out) },
+        _ => super::format::decode_int4_slice_into_scalar(packed, out),
+    }
+}
+
+/// `out[j] += a · x[j]` — the one fused-GEMM accumulation body (family
+/// 2) and the residual add of family 1. Lanes map to independent output
+/// columns and use separate multiply + add (no FMA), so every dispatch
+/// mode is bitwise-equal to the scalar loop and the caller's ascending-k
+/// accumulation order per output element is preserved by construction.
+#[inline]
+pub fn axpy(out: &mut [f32], a: f32, x: &[f32]) {
+    assert_eq!(out.len(), x.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active() returns Avx2/Sse41 only when detection passed.
+        SimdMode::Avx2 => unsafe { x86::axpy_avx2(out, a, x) },
+        #[cfg(target_arch = "x86_64")]
+        SimdMode::Sse41 => unsafe { x86::axpy_sse41(out, a, x) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64 targets.
+        SimdMode::Neon => unsafe { neon::axpy_neon(out, a, x) },
+        _ => {
+            for (o, xv) in out.iter_mut().zip(x) {
+                *o += a * xv;
+            }
+        }
+    }
+}
+
+/// `out[j] *= s` — the per-block/per-tensor scale multiply of the
+/// dequant row path. Elementwise, so bitwise-equal in every mode.
+#[inline]
+pub fn scale_mul(out: &mut [f32], s: f32) {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active() returns Avx2/Sse41 only when detection passed.
+        SimdMode::Avx2 => unsafe { x86::scale_mul_avx2(out, s) },
+        #[cfg(target_arch = "x86_64")]
+        SimdMode::Sse41 => unsafe { x86::scale_mul_sse41(out, s) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64 targets.
+        SimdMode::Neon => unsafe { neon::scale_mul_neon(out, s) },
+        _ => {
+            for o in out.iter_mut() {
+                *o *= s;
+            }
+        }
+    }
+}
+
+/// `out[j] *= s[j]` — the per-channel scale multiply of the dequant row
+/// path. Elementwise, so bitwise-equal in every mode.
+#[inline]
+pub fn mul_slice(out: &mut [f32], s: &[f32]) {
+    assert_eq!(out.len(), s.len());
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active() returns Avx2/Sse41 only when detection passed.
+        SimdMode::Avx2 => unsafe { x86::mul_slice_avx2(out, s) },
+        #[cfg(target_arch = "x86_64")]
+        SimdMode::Sse41 => unsafe { x86::mul_slice_sse41(out, s) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64 targets.
+        SimdMode::Neon => unsafe { neon::mul_slice_neon(out, s) },
+        _ => {
+            for (o, sv) in out.iter_mut().zip(s) {
+                *o *= sv;
+            }
+        }
+    }
+}
+
+/// Per-candidate partial statistics of one tile, as produced by the
+/// SIMD tile kernels (the shape `metrics::tile::TileStats` is built
+/// from).
+pub struct TilePartials {
+    /// Per-candidate sign-agreement counts.
+    pub agree: Vec<u64>,
+    /// Per-candidate Σ dq·Δp.
+    pub dot: Vec<f64>,
+    /// Per-candidate Σ dq².
+    pub nq: Vec<f64>,
+    /// Per-candidate Σ err².
+    pub sq: Vec<f64>,
+}
+
+/// Vectorized sweep tile evaluation (family 3), or `None` when the
+/// active mode has no tile kernel (scalar and SSE4.1 — callers fall
+/// back to `metrics::tile::eval_tile`).
+///
+/// Every per-element projection `q = qdq(p·s⁻¹)·s` is bitwise-equal to
+/// the scalar kernel's (the vector qdq clamps, extracts the exponent
+/// and rounds with the exact same single-rounding semantics); only the
+/// f64 accumulation order differs — fixed low-to-high lane partials
+/// plus an element-order scalar tail, a function of the ISA alone. See
+/// the module docs for the resulting determinism contract.
+///
+/// `s_tab`/`inv_tab` are `[candidate][region]` tables with `n_regions`
+/// columns; every `scale_idx` entry must be `< n_regions`.
+#[allow(clippy::too_many_arguments)]
+pub fn eval_tile_simd(
+    format: CodeFormat,
+    p: &[f32],
+    b: &[f32],
+    dp: &[f32],
+    sp: &[i8],
+    scale_idx: &[u32],
+    s_tab: &[f32],
+    inv_tab: &[f32],
+    n_regions: usize,
+    n_candidates: usize,
+) -> Option<TilePartials> {
+    let len = p.len();
+    assert_eq!(b.len(), len);
+    assert_eq!(dp.len(), len);
+    assert_eq!(sp.len(), len);
+    assert_eq!(scale_idx.len(), len);
+    assert_eq!(s_tab.len(), n_regions * n_candidates);
+    assert_eq!(inv_tab.len(), n_regions * n_candidates);
+    debug_assert!(scale_idx.iter().all(|&i| (i as usize) < n_regions));
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: active() returns Avx2 only when detection passed; the
+        // slice lengths were just checked and the gather indexes are the
+        // caller-validated scale_idx entries.
+        SimdMode::Avx2 => Some(unsafe {
+            x86::eval_tile_avx2(
+                KernelFormat::of(format),
+                p,
+                b,
+                dp,
+                sp,
+                scale_idx,
+                s_tab,
+                inv_tab,
+                n_regions,
+                n_candidates,
+            )
+        }),
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is baseline on aarch64; lengths checked above.
+        SimdMode::Neon => Some(unsafe {
+            neon::eval_tile_neon(
+                KernelFormat::of(format),
+                p,
+                b,
+                dp,
+                sp,
+                scale_idx,
+                s_tab,
+                inv_tab,
+                n_regions,
+                n_candidates,
+            )
+        }),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_roundtrip_and_labels() {
+        for m in [SimdMode::Scalar, SimdMode::Sse41, SimdMode::Avx2, SimdMode::Neon] {
+            assert_eq!(SimdMode::from_u8(m.to_u8()), m);
+            assert!(!mode_label(m).is_empty());
+        }
+        assert_eq!(SimdMode::from_u8(0), SimdMode::Scalar);
+        assert!(supported(SimdMode::Scalar));
+        // whatever is active must be supported and labeled
+        assert!(supported(active()));
+        assert_eq!(label(), mode_label(active()));
+    }
+
+    // The dispatch-level SIMD-vs-scalar equality suite lives in
+    // tests/simd.rs (it forces modes process-globally, which unit tests
+    // running in parallel threads must not). The tests below call the
+    // per-ISA bodies directly, so they are safe at any dispatch mode.
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn x86_decode_kernels_match_luts_on_all_codes() {
+        let codes: Vec<u8> = (0..=255).collect();
+        for n in [0usize, 1, 3, 7, 8, 9, 15, 16, 17, 64, 255, 256] {
+            let mut want = vec![0.0f32; n];
+            let mut got = vec![0.0f32; n];
+            fp8::decode_slice_into_scalar(&codes[..n], &mut want);
+            if supported(SimdMode::Avx2) {
+                got.fill(-1.0);
+                unsafe { x86::decode_e4m3_avx2(&codes[..n], &mut got) };
+                assert_bits(&got, &want, "avx2 e4m3");
+            }
+            if supported(SimdMode::Sse41) {
+                got.fill(-1.0);
+                unsafe { x86::decode_e4m3_sse41(&codes[..n], &mut got) };
+                assert_bits(&got, &want, "sse4.1 e4m3");
+            }
+            fp8::decode_slice_into_e5m2_scalar(&codes[..n], &mut want);
+            if supported(SimdMode::Avx2) {
+                got.fill(-1.0);
+                unsafe { x86::decode_e5m2_avx2(&codes[..n], &mut got) };
+                assert_bits(&got, &want, "avx2 e5m2");
+            }
+            if supported(SimdMode::Sse41) {
+                got.fill(-1.0);
+                unsafe { x86::decode_e5m2_sse41(&codes[..n], &mut got) };
+                assert_bits(&got, &want, "sse4.1 e5m2");
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn x86_int4_kernels_match_lut_at_odd_widths() {
+        let mut rng = crate::util::rng::XorShift::new(41);
+        for n in [1usize, 2, 7, 15, 16, 17, 31, 32, 33, 129] {
+            let nibbles: Vec<u8> = (0..n).map(|_| rng.below(16) as u8).collect();
+            let packed = super::super::format::pack_int4(&nibbles);
+            let mut want = vec![0.0f32; n];
+            super::super::format::decode_int4_slice_into_scalar(&packed, &mut want);
+            let mut got = vec![0.0f32; n];
+            if supported(SimdMode::Avx2) {
+                got.fill(-1.0);
+                unsafe { x86::decode_int4_avx2(&packed, &mut got) };
+                assert_bits(&got, &want, "avx2 int4");
+            }
+            if supported(SimdMode::Sse41) {
+                got.fill(-1.0);
+                unsafe { x86::decode_int4_sse41(&packed, &mut got) };
+                assert_bits(&got, &want, "sse4.1 int4");
+            }
+        }
+    }
+
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn x86_axpy_and_scale_kernels_are_bitwise_scalar() {
+        let mut rng = crate::util::rng::XorShift::new(43);
+        for n in [0usize, 1, 3, 4, 7, 8, 9, 16, 23, 64, 101] {
+            let x = rng.normal_vec(n, 1.0);
+            let s = rng.normal_vec(n, 1.0);
+            let base = rng.normal_vec(n, 1.0);
+            let a = rng.normal() * 0.7;
+            let mut want = base.clone();
+            for (o, xv) in want.iter_mut().zip(&x) {
+                *o += a * xv;
+            }
+            if supported(SimdMode::Avx2) {
+                let mut got = base.clone();
+                unsafe { x86::axpy_avx2(&mut got, a, &x) };
+                assert_bits(&got, &want, "avx2 axpy");
+            }
+            if supported(SimdMode::Sse41) {
+                let mut got = base.clone();
+                unsafe { x86::axpy_sse41(&mut got, a, &x) };
+                assert_bits(&got, &want, "sse4.1 axpy");
+            }
+            let mut want_s = base.clone();
+            for o in want_s.iter_mut() {
+                *o *= a;
+            }
+            let mut want_m = base.clone();
+            for (o, sv) in want_m.iter_mut().zip(&s) {
+                *o *= sv;
+            }
+            if supported(SimdMode::Avx2) {
+                let mut got = base.clone();
+                unsafe { x86::scale_mul_avx2(&mut got, a) };
+                assert_bits(&got, &want_s, "avx2 scale_mul");
+                let mut got = base.clone();
+                unsafe { x86::mul_slice_avx2(&mut got, &s) };
+                assert_bits(&got, &want_m, "avx2 mul_slice");
+            }
+            if supported(SimdMode::Sse41) {
+                let mut got = base.clone();
+                unsafe { x86::scale_mul_sse41(&mut got, a) };
+                assert_bits(&got, &want_s, "sse4.1 scale_mul");
+                let mut got = base.clone();
+                unsafe { x86::mul_slice_sse41(&mut got, &s) };
+                assert_bits(&got, &want_m, "sse4.1 mul_slice");
+            }
+        }
+    }
+
+    #[cfg(target_arch = "aarch64")]
+    #[test]
+    fn neon_kernels_match_scalar_references() {
+        let codes: Vec<u8> = (0..=255).collect();
+        for n in [0usize, 1, 3, 7, 8, 9, 64, 256] {
+            let mut want = vec![0.0f32; n];
+            let mut got = vec![0.0f32; n];
+            fp8::decode_slice_into_scalar(&codes[..n], &mut want);
+            got.fill(-1.0);
+            unsafe { neon::decode_e4m3_neon(&codes[..n], &mut got) };
+            assert_bits(&got, &want, "neon e4m3");
+            fp8::decode_slice_into_e5m2_scalar(&codes[..n], &mut want);
+            got.fill(-1.0);
+            unsafe { neon::decode_e5m2_neon(&codes[..n], &mut got) };
+            assert_bits(&got, &want, "neon e5m2");
+        }
+        let mut rng = crate::util::rng::XorShift::new(47);
+        for n in [1usize, 7, 16, 17, 33] {
+            let nibbles: Vec<u8> = (0..n).map(|_| rng.below(16) as u8).collect();
+            let packed = super::super::format::pack_int4(&nibbles);
+            let mut want = vec![0.0f32; n];
+            super::super::format::decode_int4_slice_into_scalar(&packed, &mut want);
+            let mut got = vec![-1.0f32; n];
+            unsafe { neon::decode_int4_neon(&packed, &mut got) };
+            assert_bits(&got, &want, "neon int4");
+            let x = rng.normal_vec(n, 1.0);
+            let base = rng.normal_vec(n, 1.0);
+            let a = rng.normal();
+            let mut want = base.clone();
+            for (o, xv) in want.iter_mut().zip(&x) {
+                *o += a * xv;
+            }
+            let mut gota = base.clone();
+            unsafe { neon::axpy_neon(&mut gota, a, &x) };
+            assert_bits(&gota, &want, "neon axpy");
+        }
+    }
+
+    #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+    fn assert_bits(got: &[f32], want: &[f32], what: &str) {
+        assert_eq!(got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(want).enumerate() {
+            assert_eq!(g.to_bits(), w.to_bits(), "{what} [{i}]: {g} vs {w}");
+        }
+    }
+}

@@ -1,0 +1,289 @@
+//! aarch64 NEON kernel bodies — the 128-bit mirror of `x86.rs`, covering
+//! all four loop families.
+//!
+//! The same bitwise rules apply: decode rebuilds FP8 values exactly from
+//! their bits, axpy uses separate `vmulq`/`vaddq` (never `vmlaq`, which
+//! compiles to fused `fmla` on aarch64 and would round once where the
+//! scalar reference rounds twice), and the tile kernel's vector qdq
+//! matches the scalar `fp8::qdq_*` per element (`vrndnq` is
+//! round-to-nearest-even; `vminq`/`vmaxq` propagate NaN in any operand
+//! order). Tile reductions use two f64 lane partials per statistic,
+//! merged low-to-high — NEON's fixed reduction order.
+
+use std::arch::aarch64::*;
+
+use super::{KernelFormat, TilePartials};
+
+#[inline]
+fn exp2f(e: i32) -> f32 {
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn axpy_neon(out: &mut [f32], a: f32, x: &[f32]) {
+    let n = out.len();
+    let av = vdupq_n_f32(a);
+    let mut i = 0;
+    while i + 4 <= n {
+        let xv = vld1q_f32(x.as_ptr().add(i));
+        let ov = vld1q_f32(out.as_ptr().add(i));
+        vst1q_f32(out.as_mut_ptr().add(i), vaddq_f32(ov, vmulq_f32(av, xv)));
+        i += 4;
+    }
+    while i < n {
+        out[i] += a * x[i];
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn scale_mul_neon(out: &mut [f32], s: f32) {
+    let n = out.len();
+    let sv = vdupq_n_f32(s);
+    let mut i = 0;
+    while i + 4 <= n {
+        let ov = vld1q_f32(out.as_ptr().add(i));
+        vst1q_f32(out.as_mut_ptr().add(i), vmulq_f32(ov, sv));
+        i += 4;
+    }
+    while i < n {
+        out[i] *= s;
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn mul_slice_neon(out: &mut [f32], s: &[f32]) {
+    let n = out.len();
+    let mut i = 0;
+    while i + 4 <= n {
+        let ov = vld1q_f32(out.as_ptr().add(i));
+        let sv = vld1q_f32(s.as_ptr().add(i));
+        vst1q_f32(out.as_mut_ptr().add(i), vmulq_f32(ov, sv));
+        i += 4;
+    }
+    while i < n {
+        out[i] *= s[i];
+        i += 1;
+    }
+}
+
+/// Shared FP8 byte-decode body; see `x86::decode_fp8_avx2` for the
+/// `SHIFT`/`rebias`/`nan_mask` contract. Returns the vector-covered
+/// prefix length.
+#[target_feature(enable = "neon")]
+unsafe fn decode_fp8_neon<const SHIFT: i32>(
+    codes: &[u8],
+    out: &mut [f32],
+    rebias: f32,
+    nan_mask: u32,
+) -> usize {
+    let n = codes.len();
+    let rb = vdupq_n_f32(rebias);
+    let nanv = vdupq_n_f32(f32::NAN);
+    let payload_mask = vdupq_n_u32(0x7F);
+    let sign_mask = vdupq_n_u32(0x80);
+    let nm = vdupq_n_u32(nan_mask);
+    let mut i = 0;
+    while i + 4 <= n {
+        let b32 = (codes.as_ptr().add(i) as *const u32).read_unaligned();
+        let bytes = vreinterpret_u8_u32(vdup_n_u32(b32));
+        let v = vmovl_u16(vget_low_u16(vmovl_u8(bytes)));
+        let payload = vandq_u32(v, payload_mask);
+        let sign = vshlq_n_u32::<24>(vandq_u32(v, sign_mask));
+        let bits = vorrq_u32(vshlq_n_u32::<SHIFT>(payload), sign);
+        let val = vmulq_f32(vreinterpretq_f32_u32(bits), rb);
+        let isnan = vceqq_u32(vandq_u32(payload, nm), nm);
+        vst1q_f32(out.as_mut_ptr().add(i), vbslq_f32(isnan, nanv, val));
+        i += 4;
+    }
+    i
+}
+
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn decode_e4m3_neon(codes: &[u8], out: &mut [f32]) {
+    let main = decode_fp8_neon::<20>(codes, out, exp2f(120), 0x7F);
+    crate::fp8::decode_slice_into_scalar(&codes[main..], &mut out[main..]);
+}
+
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn decode_e5m2_neon(codes: &[u8], out: &mut [f32]) {
+    let main = decode_fp8_neon::<21>(codes, out, exp2f(112), 0x7C);
+    crate::fp8::decode_slice_into_e5m2_scalar(&codes[main..], &mut out[main..]);
+}
+
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn decode_int4_neon(packed: &[u8], out: &mut [f32]) {
+    let n = out.len();
+    let main = n - n % 16;
+    let nibble = vdup_n_u8(0x0F);
+    let eight = vdupq_n_f32(8.0);
+    let mut i = 0;
+    // 16 outputs per step from 8 packed bytes; `i` stays even, so the
+    // byte cursor `i / 2` never straddles a code pair.
+    while i < main {
+        let v8 = vld1_u8(packed.as_ptr().add(i / 2));
+        let lo = vand_u8(v8, nibble);
+        let hi = vshr_n_u8::<4>(v8);
+        let z = vzip_u8(lo, hi);
+        let w0 = vmovl_u8(z.0);
+        let w1 = vmovl_u8(z.1);
+        let c0 = vmovl_u16(vget_low_u16(w0));
+        let c1 = vmovl_u16(vget_high_u16(w0));
+        let c2 = vmovl_u16(vget_low_u16(w1));
+        let c3 = vmovl_u16(vget_high_u16(w1));
+        vst1q_f32(out.as_mut_ptr().add(i), vsubq_f32(vcvtq_f32_u32(c0), eight));
+        vst1q_f32(out.as_mut_ptr().add(i + 4), vsubq_f32(vcvtq_f32_u32(c1), eight));
+        vst1q_f32(out.as_mut_ptr().add(i + 8), vsubq_f32(vcvtq_f32_u32(c2), eight));
+        vst1q_f32(out.as_mut_ptr().add(i + 12), vsubq_f32(vcvtq_f32_u32(c3), eight));
+        i += 16;
+    }
+    crate::quant::format::decode_int4_slice_into_scalar(&packed[main / 2..], &mut out[main..]);
+}
+
+/// Vector FP8 quantize–dequantize; same per-lane contract as
+/// `x86::qdq8_avx2` (bitwise-equal to the scalar `fp8::qdq_*`).
+#[target_feature(enable = "neon")]
+unsafe fn qdq4_fp8_neon(
+    x: float32x4_t,
+    max: f32,
+    e_min: i32,
+    step_bias: i32,
+    inv_bias: i32,
+) -> float32x4_t {
+    let a = vminq_f32(vdupq_n_f32(max), vmaxq_f32(vdupq_n_f32(-max), x));
+    let magbits = vandq_u32(vreinterpretq_u32_f32(a), vdupq_n_u32(0x7FFF_FFFF));
+    let is_zero = vceqq_u32(magbits, vdupq_n_u32(0));
+    let exp_field = vreinterpretq_s32_u32(vshrq_n_u32::<23>(magbits));
+    let e = vmaxq_s32(vsubq_s32(exp_field, vdupq_n_s32(127)), vdupq_n_s32(e_min));
+    let step = vreinterpretq_f32_s32(vshlq_n_s32::<23>(vaddq_s32(e, vdupq_n_s32(step_bias))));
+    let inv = vreinterpretq_f32_s32(vshlq_n_s32::<23>(vsubq_s32(vdupq_n_s32(inv_bias), e)));
+    let g = vrndnq_f32(vmulq_f32(a, inv));
+    vbslq_f32(is_zero, vdupq_n_f32(0.0), vmulq_f32(g, step))
+}
+
+/// Vector INT4 quantize–dequantize (clamp ±7 then round-to-nearest-even).
+#[target_feature(enable = "neon")]
+unsafe fn qdq4_int4_neon(x: float32x4_t) -> float32x4_t {
+    let a = vminq_f32(vdupq_n_f32(7.0), vmaxq_f32(vdupq_n_f32(-7.0), x));
+    vrndnq_f32(a)
+}
+
+/// Fixed-order horizontal sum of four f64 lane partials: `a` lanes 0→1,
+/// then `b` lanes 0→1. Part of the per-ISA reduction-order contract.
+#[target_feature(enable = "neon")]
+unsafe fn hsum4_f64(a: float64x2_t, b: float64x2_t) -> f64 {
+    let mut acc = vgetq_lane_f64::<0>(a);
+    acc += vgetq_lane_f64::<1>(a);
+    acc += vgetq_lane_f64::<0>(b);
+    acc += vgetq_lane_f64::<1>(b);
+    acc
+}
+
+/// NEON sweep tile kernel (family 3) — the 4-wide mirror of
+/// `x86::eval_tile_avx2`: per-element `q` bitwise-equal to scalar,
+/// branchless {-1, 0, +1} sign lanes, agreement counts widened into u64
+/// lanes, f64 stats in two lane-partial registers each merged in fixed
+/// order before the element-order scalar tail.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+pub(super) unsafe fn eval_tile_neon(
+    fmt: KernelFormat,
+    p: &[f32],
+    b: &[f32],
+    dp: &[f32],
+    sp: &[i8],
+    scale_idx: &[u32],
+    s_tab: &[f32],
+    inv_tab: &[f32],
+    n_regions: usize,
+    n_candidates: usize,
+) -> TilePartials {
+    let len = p.len();
+    let main = len - len % 4;
+    let zero = vdupq_n_f32(0.0);
+    let mut agree = Vec::with_capacity(n_candidates);
+    let mut dot = Vec::with_capacity(n_candidates);
+    let mut nq = Vec::with_capacity(n_candidates);
+    let mut sq = Vec::with_capacity(n_candidates);
+    for k in 0..n_candidates {
+        let s_row = &s_tab[k * n_regions..(k + 1) * n_regions];
+        let inv_row = &inv_tab[k * n_regions..(k + 1) * n_regions];
+        let mut agree_acc = vdupq_n_u64(0);
+        let mut dot_a = vdupq_n_f64(0.0);
+        let mut dot_b = vdupq_n_f64(0.0);
+        let mut nq_a = vdupq_n_f64(0.0);
+        let mut nq_b = vdupq_n_f64(0.0);
+        let mut sq_a = vdupq_n_f64(0.0);
+        let mut sq_b = vdupq_n_f64(0.0);
+        let mut i = 0;
+        while i + 4 <= len {
+            let i0 = scale_idx[i] as usize;
+            let i1 = scale_idx[i + 1] as usize;
+            let i2 = scale_idx[i + 2] as usize;
+            let i3 = scale_idx[i + 3] as usize;
+            let s_arr = [s_row[i0], s_row[i1], s_row[i2], s_row[i3]];
+            let inv_arr = [inv_row[i0], inv_row[i1], inv_row[i2], inv_row[i3]];
+            let sv = vld1q_f32(s_arr.as_ptr());
+            let iv = vld1q_f32(inv_arr.as_ptr());
+            let pv = vld1q_f32(p.as_ptr().add(i));
+            let bv = vld1q_f32(b.as_ptr().add(i));
+            let dpv = vld1q_f32(dp.as_ptr().add(i));
+            let x = vmulq_f32(pv, iv);
+            let q0 = match fmt {
+                KernelFormat::E4m3 => qdq4_fp8_neon(x, 448.0, -6, 124, 130),
+                KernelFormat::E5m2 => qdq4_fp8_neon(x, 57344.0, -14, 125, 129),
+                KernelFormat::Int4 => qdq4_int4_neon(x),
+            };
+            let q = vmulq_f32(q0, sv);
+            let dq = vsubq_f32(q, bv);
+            let err = vsubq_f32(q, pv);
+            let neg = vreinterpretq_s32_u32(vcltq_f32(dq, zero));
+            let pos = vreinterpretq_s32_u32(vcgtq_f32(dq, zero));
+            let sgn = vsubq_s32(neg, pos);
+            let sp_arr = [sp[i] as i32, sp[i + 1] as i32, sp[i + 2] as i32, sp[i + 3] as i32];
+            let spv = vld1q_s32(sp_arr.as_ptr());
+            let eq_ones = vshrq_n_u32::<31>(vceqq_s32(sgn, spv));
+            agree_acc = vaddw_u32(agree_acc, vget_low_u32(eq_ones));
+            agree_acc = vaddw_u32(agree_acc, vget_high_u32(eq_ones));
+            let dq_lo = vcvt_f64_f32(vget_low_f32(dq));
+            let dq_hi = vcvt_f64_f32(vget_high_f32(dq));
+            let dp_lo = vcvt_f64_f32(vget_low_f32(dpv));
+            let dp_hi = vcvt_f64_f32(vget_high_f32(dpv));
+            dot_a = vaddq_f64(dot_a, vmulq_f64(dq_lo, dp_lo));
+            dot_b = vaddq_f64(dot_b, vmulq_f64(dq_hi, dp_hi));
+            let nq_f = vmulq_f32(dq, dq);
+            nq_a = vaddq_f64(nq_a, vcvt_f64_f32(vget_low_f32(nq_f)));
+            nq_b = vaddq_f64(nq_b, vcvt_f64_f32(vget_high_f32(nq_f)));
+            let sq_f = vmulq_f32(err, err);
+            sq_a = vaddq_f64(sq_a, vcvt_f64_f32(vget_low_f32(sq_f)));
+            sq_b = vaddq_f64(sq_b, vcvt_f64_f32(vget_high_f32(sq_f)));
+            i += 4;
+        }
+        let mut agree_k = vgetq_lane_u64::<0>(agree_acc) + vgetq_lane_u64::<1>(agree_acc);
+        let mut dot_k = hsum4_f64(dot_a, dot_b);
+        let mut nq_k = hsum4_f64(nq_a, nq_b);
+        let mut sq_k = hsum4_f64(sq_a, sq_b);
+        for j in main..len {
+            let si = scale_idx[j] as usize;
+            let x = p[j] * inv_row[si];
+            let q0 = match fmt {
+                KernelFormat::E4m3 => crate::fp8::qdq_e4m3(x),
+                KernelFormat::E5m2 => crate::fp8::qdq_e5m2(x),
+                KernelFormat::Int4 => crate::quant::format::qdq_int4(x),
+            };
+            let q = q0 * s_row[si];
+            let dq = q - b[j];
+            let err = q - p[j];
+            agree_k += (crate::metrics::tile::sign_i8(dq) == sp[j]) as u64;
+            dot_k += dq as f64 * dp[j] as f64;
+            nq_k += (dq * dq) as f64;
+            sq_k += (err * err) as f64;
+        }
+        agree.push(agree_k);
+        dot.push(dot_k);
+        nq.push(nq_k);
+        sq.push(sq_k);
+    }
+    TilePartials { agree, dot, nq, sq }
+}

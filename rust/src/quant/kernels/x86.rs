@@ -1,0 +1,424 @@
+//! x86_64 kernel bodies: the AVX2 tier (all four loop families) and the
+//! SSE4.1 tier (decode + axpy families; the sweep tile stays scalar).
+//!
+//! Every function is `unsafe` because of its `#[target_feature]`
+//! attribute; the dispatcher in the parent module only calls a body
+//! after runtime detection proved the feature present. Bitwise
+//! contracts are documented on the safe entry points — the short
+//! version: decode rebuilds each FP8 value exactly from its bits
+//! (power-of-two exponent rebias), axpy uses separate multiply and add
+//! (never FMA), and the tile kernel's vector qdq performs the same
+//! single-rounding ops as the scalar `fp8::qdq_*` per element.
+
+use std::arch::x86_64::*;
+
+use super::{KernelFormat, TilePartials};
+
+#[inline]
+fn exp2f(e: i32) -> f32 {
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn axpy_avx2(out: &mut [f32], a: f32, x: &[f32]) {
+    let n = out.len();
+    let av = _mm256_set1_ps(a);
+    let mut i = 0;
+    while i + 8 <= n {
+        let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+        let ov = _mm256_loadu_ps(out.as_ptr().add(i));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_add_ps(ov, _mm256_mul_ps(av, xv)));
+        i += 8;
+    }
+    while i < n {
+        out[i] += a * x[i];
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "sse4.1")]
+pub(super) unsafe fn axpy_sse41(out: &mut [f32], a: f32, x: &[f32]) {
+    let n = out.len();
+    let av = _mm_set1_ps(a);
+    let mut i = 0;
+    while i + 4 <= n {
+        let xv = _mm_loadu_ps(x.as_ptr().add(i));
+        let ov = _mm_loadu_ps(out.as_ptr().add(i));
+        _mm_storeu_ps(out.as_mut_ptr().add(i), _mm_add_ps(ov, _mm_mul_ps(av, xv)));
+        i += 4;
+    }
+    while i < n {
+        out[i] += a * x[i];
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn scale_mul_avx2(out: &mut [f32], s: f32) {
+    let n = out.len();
+    let sv = _mm256_set1_ps(s);
+    let mut i = 0;
+    while i + 8 <= n {
+        let ov = _mm256_loadu_ps(out.as_ptr().add(i));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(ov, sv));
+        i += 8;
+    }
+    while i < n {
+        out[i] *= s;
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "sse4.1")]
+pub(super) unsafe fn scale_mul_sse41(out: &mut [f32], s: f32) {
+    let n = out.len();
+    let sv = _mm_set1_ps(s);
+    let mut i = 0;
+    while i + 4 <= n {
+        let ov = _mm_loadu_ps(out.as_ptr().add(i));
+        _mm_storeu_ps(out.as_mut_ptr().add(i), _mm_mul_ps(ov, sv));
+        i += 4;
+    }
+    while i < n {
+        out[i] *= s;
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn mul_slice_avx2(out: &mut [f32], s: &[f32]) {
+    let n = out.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let ov = _mm256_loadu_ps(out.as_ptr().add(i));
+        let sv = _mm256_loadu_ps(s.as_ptr().add(i));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(ov, sv));
+        i += 8;
+    }
+    while i < n {
+        out[i] *= s[i];
+        i += 1;
+    }
+}
+
+#[target_feature(enable = "sse4.1")]
+pub(super) unsafe fn mul_slice_sse41(out: &mut [f32], s: &[f32]) {
+    let n = out.len();
+    let mut i = 0;
+    while i + 4 <= n {
+        let ov = _mm_loadu_ps(out.as_ptr().add(i));
+        let sv = _mm_loadu_ps(s.as_ptr().add(i));
+        _mm_storeu_ps(out.as_mut_ptr().add(i), _mm_mul_ps(ov, sv));
+        i += 4;
+    }
+    while i < n {
+        out[i] *= s[i];
+        i += 1;
+    }
+}
+
+/// Shared FP8 byte-decode body. `SHIFT` places the 7-bit exp+mantissa
+/// payload at the f32 exponent/mantissa boundary (20 for E4M3's 4-bit
+/// exponent, 21 for E5M2's 5-bit one), `rebias` is the exact
+/// power-of-two ratio between the f32 reinterpretation and the true
+/// value (2¹²⁰ / 2¹¹²), and codes whose payload satisfies
+/// `payload & nan_mask == nan_mask` blend to `f32::NAN` — the same NaN
+/// the scalar LUT stores. Returns the vector-covered prefix length.
+#[target_feature(enable = "avx2")]
+unsafe fn decode_fp8_avx2<const SHIFT: i32>(
+    codes: &[u8],
+    out: &mut [f32],
+    rebias: f32,
+    nan_mask: i32,
+) -> usize {
+    let n = codes.len();
+    let rb = _mm256_set1_ps(rebias);
+    let nanv = _mm256_set1_ps(f32::NAN);
+    let payload_mask = _mm256_set1_epi32(0x7F);
+    let sign_mask = _mm256_set1_epi32(0x80);
+    let nm = _mm256_set1_epi32(nan_mask);
+    let mut i = 0;
+    while i + 8 <= n {
+        let b64 = (codes.as_ptr().add(i) as *const i64).read_unaligned();
+        let v = _mm256_cvtepu8_epi32(_mm_set_epi64x(0, b64));
+        let payload = _mm256_and_si256(v, payload_mask);
+        let sign = _mm256_slli_epi32::<24>(_mm256_and_si256(v, sign_mask));
+        let bits = _mm256_or_si256(_mm256_slli_epi32::<SHIFT>(payload), sign);
+        let val = _mm256_mul_ps(_mm256_castsi256_ps(bits), rb);
+        let isnan = _mm256_cmpeq_epi32(_mm256_and_si256(payload, nm), nm);
+        let dec = _mm256_blendv_ps(val, nanv, _mm256_castsi256_ps(isnan));
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), dec);
+        i += 8;
+    }
+    i
+}
+
+/// The SSE4.1 variant of [`decode_fp8_avx2`] (4 codes per step).
+#[target_feature(enable = "sse4.1")]
+unsafe fn decode_fp8_sse41<const SHIFT: i32>(
+    codes: &[u8],
+    out: &mut [f32],
+    rebias: f32,
+    nan_mask: i32,
+) -> usize {
+    let n = codes.len();
+    let rb = _mm_set1_ps(rebias);
+    let nanv = _mm_set1_ps(f32::NAN);
+    let payload_mask = _mm_set1_epi32(0x7F);
+    let sign_mask = _mm_set1_epi32(0x80);
+    let nm = _mm_set1_epi32(nan_mask);
+    let mut i = 0;
+    while i + 4 <= n {
+        let b32 = (codes.as_ptr().add(i) as *const i32).read_unaligned();
+        let v = _mm_cvtepu8_epi32(_mm_cvtsi32_si128(b32));
+        let payload = _mm_and_si128(v, payload_mask);
+        let sign = _mm_slli_epi32::<24>(_mm_and_si128(v, sign_mask));
+        let bits = _mm_or_si128(_mm_slli_epi32::<SHIFT>(payload), sign);
+        let val = _mm_mul_ps(_mm_castsi128_ps(bits), rb);
+        let isnan = _mm_cmpeq_epi32(_mm_and_si128(payload, nm), nm);
+        let dec = _mm_blendv_ps(val, nanv, _mm_castsi128_ps(isnan));
+        _mm_storeu_ps(out.as_mut_ptr().add(i), dec);
+        i += 4;
+    }
+    i
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn decode_e4m3_avx2(codes: &[u8], out: &mut [f32]) {
+    let main = decode_fp8_avx2::<20>(codes, out, exp2f(120), 0x7F);
+    crate::fp8::decode_slice_into_scalar(&codes[main..], &mut out[main..]);
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn decode_e5m2_avx2(codes: &[u8], out: &mut [f32]) {
+    let main = decode_fp8_avx2::<21>(codes, out, exp2f(112), 0x7C);
+    crate::fp8::decode_slice_into_e5m2_scalar(&codes[main..], &mut out[main..]);
+}
+
+#[target_feature(enable = "sse4.1")]
+pub(super) unsafe fn decode_e4m3_sse41(codes: &[u8], out: &mut [f32]) {
+    let main = decode_fp8_sse41::<20>(codes, out, exp2f(120), 0x7F);
+    crate::fp8::decode_slice_into_scalar(&codes[main..], &mut out[main..]);
+}
+
+#[target_feature(enable = "sse4.1")]
+pub(super) unsafe fn decode_e5m2_sse41(codes: &[u8], out: &mut [f32]) {
+    let main = decode_fp8_sse41::<21>(codes, out, exp2f(112), 0x7C);
+    crate::fp8::decode_slice_into_e5m2_scalar(&codes[main..], &mut out[main..]);
+}
+
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn decode_int4_avx2(packed: &[u8], out: &mut [f32]) {
+    let n = out.len();
+    let main = n - n % 16;
+    let nibble = _mm_set1_epi8(0x0F);
+    let eight = _mm256_set1_ps(8.0);
+    let mut i = 0;
+    // 16 outputs per step from 8 packed bytes; `i` stays even, so the
+    // byte cursor `i / 2` never straddles a code pair.
+    while i < main {
+        let b64 = (packed.as_ptr().add(i / 2) as *const i64).read_unaligned();
+        let v = _mm_set_epi64x(0, b64);
+        let lo = _mm_and_si128(v, nibble);
+        let hi = _mm_and_si128(_mm_srli_epi16::<4>(v), nibble);
+        let inter = _mm_unpacklo_epi8(lo, hi);
+        let c0 = _mm256_cvtepu8_epi32(inter);
+        let c1 = _mm256_cvtepu8_epi32(_mm_srli_si128::<8>(inter));
+        let f0 = _mm256_sub_ps(_mm256_cvtepi32_ps(c0), eight);
+        let f1 = _mm256_sub_ps(_mm256_cvtepi32_ps(c1), eight);
+        _mm256_storeu_ps(out.as_mut_ptr().add(i), f0);
+        _mm256_storeu_ps(out.as_mut_ptr().add(i + 8), f1);
+        i += 16;
+    }
+    crate::quant::format::decode_int4_slice_into_scalar(&packed[main / 2..], &mut out[main..]);
+}
+
+#[target_feature(enable = "sse4.1")]
+pub(super) unsafe fn decode_int4_sse41(packed: &[u8], out: &mut [f32]) {
+    let n = out.len();
+    let main = n - n % 8;
+    let nibble = _mm_set1_epi8(0x0F);
+    let eight = _mm_set1_ps(8.0);
+    let mut i = 0;
+    while i < main {
+        let b32 = (packed.as_ptr().add(i / 2) as *const i32).read_unaligned();
+        let v = _mm_cvtsi32_si128(b32);
+        let lo = _mm_and_si128(v, nibble);
+        let hi = _mm_and_si128(_mm_srli_epi16::<4>(v), nibble);
+        let inter = _mm_unpacklo_epi8(lo, hi);
+        let c0 = _mm_cvtepu8_epi32(inter);
+        let c1 = _mm_cvtepu8_epi32(_mm_srli_si128::<4>(inter));
+        let f0 = _mm_sub_ps(_mm_cvtepi32_ps(c0), eight);
+        let f1 = _mm_sub_ps(_mm_cvtepi32_ps(c1), eight);
+        _mm_storeu_ps(out.as_mut_ptr().add(i), f0);
+        _mm_storeu_ps(out.as_mut_ptr().add(i + 4), f1);
+        i += 8;
+    }
+    crate::quant::format::decode_int4_slice_into_scalar(&packed[main / 2..], &mut out[main..]);
+}
+
+const RNE: i32 = _MM_FROUND_TO_NEAREST_INT | _MM_FROUND_NO_EXC;
+
+/// Vector FP8 quantize–dequantize, bitwise-equal to `fp8::qdq_e4m3` /
+/// `qdq_e5m2` per lane: NaN-propagating clamp (operand order makes
+/// MINPS/MAXPS return the input when it is NaN, like `f32::clamp`),
+/// exponent extraction from the magnitude bits, exact power-of-two
+/// `step`/`step⁻¹` built in the exponent field (`a · step⁻¹ ≡ a / step`
+/// bitwise for powers of two in range), round-to-nearest-even, and a
+/// `+0.0` blend where the clamped magnitude is zero (the scalar early
+/// return).
+#[target_feature(enable = "avx2")]
+unsafe fn qdq8_avx2(x: __m256, max: f32, e_min: i32, step_bias: i32, inv_bias: i32) -> __m256 {
+    let a = _mm256_min_ps(_mm256_set1_ps(max), _mm256_max_ps(_mm256_set1_ps(-max), x));
+    let magbits = _mm256_and_si256(_mm256_castps_si256(a), _mm256_set1_epi32(0x7FFF_FFFF));
+    let zero = _mm256_setzero_ps();
+    let is_zero = _mm256_cmp_ps::<_CMP_EQ_OQ>(_mm256_castsi256_ps(magbits), zero);
+    let e_raw = _mm256_sub_epi32(_mm256_srli_epi32::<23>(magbits), _mm256_set1_epi32(127));
+    let e = _mm256_max_epi32(e_raw, _mm256_set1_epi32(e_min));
+    let step_e = _mm256_add_epi32(e, _mm256_set1_epi32(step_bias));
+    let step = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(step_e));
+    let inv_e = _mm256_sub_epi32(_mm256_set1_epi32(inv_bias), e);
+    let inv = _mm256_castsi256_ps(_mm256_slli_epi32::<23>(inv_e));
+    let g = _mm256_round_ps::<RNE>(_mm256_mul_ps(a, inv));
+    _mm256_blendv_ps(_mm256_mul_ps(g, step), zero, is_zero)
+}
+
+/// Vector INT4 quantize–dequantize: clamp to ±7 (NaN-propagating, same
+/// operand order as [`qdq8_avx2`]) then round-to-nearest-even —
+/// bitwise-equal to `format::qdq_int4` per lane.
+#[target_feature(enable = "avx2")]
+unsafe fn qdq4_avx2(x: __m256) -> __m256 {
+    let a = _mm256_min_ps(_mm256_set1_ps(7.0), _mm256_max_ps(_mm256_set1_ps(-7.0), x));
+    _mm256_round_ps::<RNE>(a)
+}
+
+/// Fixed-order horizontal sum of eight f64 lane partials: low register
+/// lanes 0→3, then high register lanes 0→3. Part of the per-ISA
+/// reduction-order contract.
+#[target_feature(enable = "avx2")]
+unsafe fn hsum8_pd(lo: __m256d, hi: __m256d) -> f64 {
+    let mut lanes = [0.0f64; 8];
+    _mm256_storeu_pd(lanes.as_mut_ptr(), lo);
+    _mm256_storeu_pd(lanes.as_mut_ptr().add(4), hi);
+    let mut acc = 0.0;
+    for l in lanes {
+        acc += l;
+    }
+    acc
+}
+
+/// Horizontal sum of four non-negative i64 lane counts.
+#[target_feature(enable = "avx2")]
+unsafe fn hsum4_epi64(v: __m256i) -> u64 {
+    let mut lanes = [0i64; 4];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, v);
+    lanes.iter().map(|&x| x as u64).sum()
+}
+
+/// AVX2 sweep tile kernel (family 3). Per element, `q` is bitwise-equal
+/// to the scalar kernel's; the sign comparison runs branchless in
+/// integer lanes ({-1, 0, +1} built from two ordered compares, NaN → 0
+/// like `sign_i8`); agreement counts accumulate in i64 lanes; dot/norm
+/// stats accumulate in two f64 lane-partial registers each and merge in
+/// a fixed order ([`hsum8_pd`]) before the scalar tail appends in
+/// element order.
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+pub(super) unsafe fn eval_tile_avx2(
+    fmt: KernelFormat,
+    p: &[f32],
+    b: &[f32],
+    dp: &[f32],
+    sp: &[i8],
+    scale_idx: &[u32],
+    s_tab: &[f32],
+    inv_tab: &[f32],
+    n_regions: usize,
+    n_candidates: usize,
+) -> TilePartials {
+    let len = p.len();
+    let main = len - len % 8;
+    let zero = _mm256_setzero_ps();
+    let mut agree = Vec::with_capacity(n_candidates);
+    let mut dot = Vec::with_capacity(n_candidates);
+    let mut nq = Vec::with_capacity(n_candidates);
+    let mut sq = Vec::with_capacity(n_candidates);
+    for k in 0..n_candidates {
+        let s_row = &s_tab[k * n_regions..(k + 1) * n_regions];
+        let inv_row = &inv_tab[k * n_regions..(k + 1) * n_regions];
+        let mut agree_lo = _mm256_setzero_si256();
+        let mut agree_hi = _mm256_setzero_si256();
+        let mut dot_lo = _mm256_setzero_pd();
+        let mut dot_hi = _mm256_setzero_pd();
+        let mut nq_lo = _mm256_setzero_pd();
+        let mut nq_hi = _mm256_setzero_pd();
+        let mut sq_lo = _mm256_setzero_pd();
+        let mut sq_hi = _mm256_setzero_pd();
+        let mut i = 0;
+        while i + 8 <= len {
+            let idx = _mm256_loadu_si256(scale_idx.as_ptr().add(i) as *const __m256i);
+            let sv = _mm256_i32gather_ps::<4>(s_row.as_ptr(), idx);
+            let iv = _mm256_i32gather_ps::<4>(inv_row.as_ptr(), idx);
+            let pv = _mm256_loadu_ps(p.as_ptr().add(i));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(i));
+            let dpv = _mm256_loadu_ps(dp.as_ptr().add(i));
+            let x = _mm256_mul_ps(pv, iv);
+            let q0 = match fmt {
+                KernelFormat::E4m3 => qdq8_avx2(x, 448.0, -6, 124, 130),
+                KernelFormat::E5m2 => qdq8_avx2(x, 57344.0, -14, 125, 129),
+                KernelFormat::Int4 => qdq4_avx2(x),
+            };
+            let q = _mm256_mul_ps(q0, sv);
+            let dq = _mm256_sub_ps(q, bv);
+            let err = _mm256_sub_ps(q, pv);
+            let neg = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_LT_OQ>(dq, zero));
+            let pos = _mm256_castps_si256(_mm256_cmp_ps::<_CMP_GT_OQ>(dq, zero));
+            let sgn = _mm256_sub_epi32(neg, pos);
+            let s64 = (sp.as_ptr().add(i) as *const i64).read_unaligned();
+            let spv = _mm256_cvtepi8_epi32(_mm_set_epi64x(0, s64));
+            let eq = _mm256_cmpeq_epi32(sgn, spv);
+            let eq_lo = _mm256_cvtepi32_epi64(_mm256_castsi256_si128(eq));
+            let eq_hi = _mm256_cvtepi32_epi64(_mm256_extracti128_si256::<1>(eq));
+            agree_lo = _mm256_sub_epi64(agree_lo, eq_lo);
+            agree_hi = _mm256_sub_epi64(agree_hi, eq_hi);
+            let dq_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(dq));
+            let dq_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(dq));
+            let dp_lo = _mm256_cvtps_pd(_mm256_castps256_ps128(dpv));
+            let dp_hi = _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(dpv));
+            dot_lo = _mm256_add_pd(dot_lo, _mm256_mul_pd(dq_lo, dp_lo));
+            dot_hi = _mm256_add_pd(dot_hi, _mm256_mul_pd(dq_hi, dp_hi));
+            let nq_f = _mm256_mul_ps(dq, dq);
+            nq_lo = _mm256_add_pd(nq_lo, _mm256_cvtps_pd(_mm256_castps256_ps128(nq_f)));
+            nq_hi = _mm256_add_pd(nq_hi, _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(nq_f)));
+            let sq_f = _mm256_mul_ps(err, err);
+            sq_lo = _mm256_add_pd(sq_lo, _mm256_cvtps_pd(_mm256_castps256_ps128(sq_f)));
+            sq_hi = _mm256_add_pd(sq_hi, _mm256_cvtps_pd(_mm256_extractf128_ps::<1>(sq_f)));
+            i += 8;
+        }
+        let mut agree_k = hsum4_epi64(agree_lo) + hsum4_epi64(agree_hi);
+        let mut dot_k = hsum8_pd(dot_lo, dot_hi);
+        let mut nq_k = hsum8_pd(nq_lo, nq_hi);
+        let mut sq_k = hsum8_pd(sq_lo, sq_hi);
+        for j in main..len {
+            let si = scale_idx[j] as usize;
+            let x = p[j] * inv_row[si];
+            let q0 = match fmt {
+                KernelFormat::E4m3 => crate::fp8::qdq_e4m3(x),
+                KernelFormat::E5m2 => crate::fp8::qdq_e5m2(x),
+                KernelFormat::Int4 => crate::quant::format::qdq_int4(x),
+            };
+            let q = q0 * s_row[si];
+            let dq = q - b[j];
+            let err = q - p[j];
+            agree_k += (crate::metrics::tile::sign_i8(dq) == sp[j]) as u64;
+            dot_k += dq as f64 * dp[j] as f64;
+            nq_k += (dq * dq) as f64;
+            sq_k += (err * err) as f64;
+        }
+        agree.push(agree_k);
+        dot.push(dot_k);
+        nq.push(nq_k);
+        sq.push(sq_k);
+    }
+    TilePartials { agree, dot, nq, sq }
+}

@@ -14,6 +14,7 @@ use crate::fp8;
 use crate::tensor::Tensor;
 
 pub mod format;
+pub mod kernels;
 
 pub use format::{CodeFormat, Descriptor};
 
@@ -155,6 +156,32 @@ impl ScaleGrid {
     pub fn with_format(mut self, format: CodeFormat) -> ScaleGrid {
         self.format = format;
         self
+    }
+
+    /// Multiply a decoded row by its scales in place — the scale-multiply
+    /// stage of [`QuantizedTensor::dequant_row_into`]. The scalar
+    /// dispatch mode keeps the legacy per-element [`Self::at`] loop (the
+    /// bitwise and bench reference); SIMD modes walk the row's
+    /// constant-scale runs instead, which is bitwise-equal because the
+    /// multiply itself is elementwise either way.
+    pub fn apply_row(&self, r: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.cols);
+        if kernels::active() == kernels::SimdMode::Scalar {
+            for (c, o) in out.iter_mut().enumerate() {
+                *o *= self.at(r, c);
+            }
+            return;
+        }
+        match self.granularity {
+            Granularity::PerTensor => kernels::scale_mul(out, self.scales[0]),
+            Granularity::PerChannel => kernels::mul_slice(out, &self.scales[..out.len()]),
+            Granularity::Block(b) => {
+                let base = (r / b) * self.grid_cols;
+                for (gc, chunk) in out.chunks_mut(b).enumerate() {
+                    kernels::scale_mul(chunk, self.scales[base + gc]);
+                }
+            }
+        }
     }
 }
 
@@ -371,16 +398,12 @@ impl QuantizedTensor {
         let fmt = self.scales.format;
         let rb = fmt.packed_row_bytes(cols);
         fmt.decode_row_into(&self.codes[r * rb..(r + 1) * rb], out);
-        for (c, o) in out.iter_mut().enumerate() {
-            *o *= self.scales.at(r, c);
-        }
+        self.scales.apply_row(r, out);
         if let Some(lr) = &self.residual {
             let urow = &lr.u[r * lr.k..(r + 1) * lr.k];
-            for (t, ut) in urow.iter().enumerate() {
+            for (t, &ut) in urow.iter().enumerate() {
                 let vrow = &lr.v[t * cols..(t + 1) * cols];
-                for (o, vj) in out.iter_mut().zip(vrow) {
-                    *o += ut * vj;
-                }
+                kernels::axpy(out, ut, vrow);
             }
         }
     }
@@ -514,27 +537,18 @@ pub fn qdq(w: &Tensor, s0: &ScaleGrid, alpha: f32) -> Tensor {
 /// element the contributions accumulate in the same ascending-k order,
 /// the decoded row values are the exact `dequantize` values, and the
 /// `aik == 0` skip matches the dense kernel's.
+///
+/// A thin allocating wrapper over [`matmul_quant_rows_into`] — the SIMD
+/// kernel layer has exactly one fused accumulation body
+/// ([`kernels::axpy`]) behind all three GEMM/GEMV entry points.
 pub fn matmul_quant(x: &Tensor, q: &QuantizedTensor) -> Tensor {
     assert_eq!(x.ndim(), 2);
     let (m, k) = (x.rows(), x.cols());
     let (k2, n) = q.shape;
     assert_eq!(k, k2, "matmul_quant inner dims: {k} vs {k2}");
     let mut c = vec![0.0f32; m * n];
-    let xd = x.data();
-    let mut wrow = vec![0.0f32; n];
-    for kk in 0..k {
-        q.dequant_row_into(kk, &mut wrow);
-        for i in 0..m {
-            let aik = xd[i * k + kk];
-            if aik == 0.0 {
-                continue;
-            }
-            let crow = &mut c[i * n..(i + 1) * n];
-            for (cj, wj) in crow.iter_mut().zip(&wrow) {
-                *cj += aik * wj;
-            }
-        }
-    }
+    let mut scratch = vec![0.0f32; n];
+    matmul_quant_rows_into(x.data(), m, q, &mut c, &mut scratch);
     Tensor::new(vec![m, n], c)
 }
 
@@ -558,9 +572,7 @@ pub fn matvec_quant_into(
             continue;
         }
         q.dequant_row_into(kk, row_scratch);
-        for (oj, wj) in out.iter_mut().zip(row_scratch.iter()) {
-            *oj += aik * wj;
-        }
+        kernels::axpy(out, aik, row_scratch);
     }
 }
 
@@ -595,9 +607,7 @@ pub fn matmul_quant_rows_into(
                 continue;
             }
             let orow = &mut out[i * n..(i + 1) * n];
-            for (oj, wj) in orow.iter_mut().zip(row_scratch.iter()) {
-                *oj += aik * wj;
-            }
+            kernels::axpy(orow, aik, row_scratch);
         }
     }
 }

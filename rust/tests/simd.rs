@@ -1,0 +1,263 @@
+//! Dispatch-level contracts of the SIMD kernel layer
+//! (`daq::quant::kernels`): bitwise decode/GEMV/GEMM equality between
+//! every vector mode this machine supports and the always-compiled
+//! scalar reference, the 1e-9 sweep-objective bar plus worker-count
+//! invariance on a fixed ISA, serve-completion stability across
+//! dispatch modes, and the `DAQ_SIMD`/`force` semantics themselves.
+//!
+//! The dispatch mode is process-global state, so every test that forces
+//! it serializes behind [`DISPATCH`]; the library's own unit tests never
+//! call `force` (they invoke the per-ISA kernel bodies directly), which
+//! keeps `cargo test`'s parallel suites race-free.
+
+use std::sync::{Mutex, MutexGuard};
+
+use daq::metrics::SweepPlan;
+use daq::quant::kernels::{self, SimdMode};
+use daq::quant::{
+    absmax_scales_fmt, matmul_quant, matvec_quant_into, quantize_fmt, CodeFormat, Granularity,
+};
+use daq::tensor::Tensor;
+use daq::util::proptest::{run, Config};
+use daq::util::rng::XorShift;
+
+static DISPATCH: Mutex<()> = Mutex::new(());
+
+fn lock() -> MutexGuard<'static, ()> {
+    // a panic inside one test (e.g. a shrinking proptest case) must not
+    // poison the dispatch lock for the rest of the binary
+    DISPATCH.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Every non-scalar mode this machine can execute.
+fn vector_modes() -> Vec<SimdMode> {
+    [SimdMode::Sse41, SimdMode::Avx2, SimdMode::Neon]
+        .into_iter()
+        .filter(|&m| kernels::supported(m))
+        .collect()
+}
+
+fn with_mode<T>(mode: SimdMode, f: impl FnOnce() -> T) -> T {
+    let prev = kernels::force(mode);
+    let out = f();
+    kernels::force(prev);
+    out
+}
+
+const FORMATS: [CodeFormat; 3] =
+    [CodeFormat::Fp8E4m3, CodeFormat::Fp8E5m2, CodeFormat::Int4 { group: 64 }];
+
+fn assert_bits(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what} length");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what}[{i}]: {g} vs {w}");
+    }
+}
+
+/// The sweep's planned-vs-native agreement bar, reused for SIMD-vs-scalar.
+fn assert_close(x: f64, y: f64, what: &str) {
+    assert!((x - y).abs() <= 1e-9 * x.abs().max(1e-9), "{what}: {x} vs {y}");
+}
+
+#[test]
+fn force_returns_previous_and_clamps_unsupported() {
+    let _g = lock();
+    let prev = kernels::force(SimdMode::Scalar);
+    assert_eq!(kernels::active(), SimdMode::Scalar);
+    assert_eq!(kernels::label(), "scalar");
+    for mode in [SimdMode::Sse41, SimdMode::Avx2, SimdMode::Neon] {
+        let before = kernels::active();
+        let got = kernels::force(mode);
+        assert_eq!(got, before, "force must return the mode it replaced");
+        if kernels::supported(mode) {
+            assert_eq!(kernels::active(), mode);
+            assert_eq!(kernels::label(), kernels::mode_label(mode));
+        } else {
+            // forcing an ISA the machine lacks must clamp to scalar, not
+            // dispatch into instructions that would fault
+            assert_eq!(kernels::active(), SimdMode::Scalar);
+        }
+        kernels::force(SimdMode::Scalar);
+    }
+    kernels::force(prev);
+}
+
+#[test]
+fn daq_simd_env_grammar() {
+    for off in ["off", "OFF", "scalar", "0"] {
+        assert_eq!(kernels::parse_mode(off), SimdMode::Scalar, "{off}");
+    }
+    for (name, mode) in [
+        ("sse4.1", SimdMode::Sse41),
+        ("sse41", SimdMode::Sse41),
+        ("avx2", SimdMode::Avx2),
+        ("neon", SimdMode::Neon),
+    ] {
+        // a named ISA resolves to itself where supported and degrades to
+        // scalar elsewhere — never a silent upgrade to a different ISA
+        let want = if kernels::supported(mode) { mode } else { SimdMode::Scalar };
+        assert_eq!(kernels::parse_mode(name), want, "{name}");
+    }
+    // anything else auto-detects: always a supported mode, and stable
+    let auto = kernels::parse_mode("auto");
+    assert!(kernels::supported(auto));
+    assert_eq!(kernels::parse_mode("definitely-not-an-isa"), auto);
+}
+
+#[test]
+fn proptest_decode_kernels_bitwise_equal_across_modes() {
+    let _g = lock();
+    run("simd decode bitwise", Config { cases: 48, ..Config::default() }, |g| {
+        // widths cover empty, sub-lane, non-multiple-of-lane tails, and
+        // multiple full vectors for every ISA's lane count
+        let n = g.usize_range(0, 70);
+        let codes: Vec<u8> = (0..n).map(|_| g.u64() as u8).collect();
+        let mut want = vec![0.0f32; n];
+        let mut got = vec![0.0f32; n];
+        daq::fp8::decode_slice_into_scalar(&codes, &mut want);
+        for mode in vector_modes() {
+            got.fill(0.0);
+            with_mode(mode, || kernels::decode_e4m3_into(&codes, &mut got));
+            assert_bits(&got, &want, "e4m3");
+        }
+        daq::fp8::decode_slice_into_e5m2_scalar(&codes, &mut want);
+        for mode in vector_modes() {
+            got.fill(0.0);
+            with_mode(mode, || kernels::decode_e5m2_into(&codes, &mut got));
+            assert_bits(&got, &want, "e5m2");
+        }
+        // packed INT4 at odd element counts: the last byte is half-used
+        let n4 = g.usize_range(0, 70);
+        let nibbles: Vec<u8> = (0..n4).map(|_| (g.u64() % 16) as u8).collect();
+        let packed = daq::quant::format::pack_int4(&nibbles);
+        let mut want4 = vec![0.0f32; n4];
+        let mut got4 = vec![0.0f32; n4];
+        daq::quant::format::decode_int4_slice_into_scalar(&packed, &mut want4);
+        for mode in vector_modes() {
+            got4.fill(0.0);
+            with_mode(mode, || kernels::decode_int4_into(&packed, &mut got4));
+            assert_bits(&got4, &want4, "int4");
+        }
+    });
+}
+
+#[test]
+fn proptest_dequant_and_gemm_bitwise_equal_across_modes() {
+    let _g = lock();
+    run("simd dequant/gemm bitwise", Config { cases: 16, ..Config::default() }, |g| {
+        let k = g.usize_range(1, 24);
+        let n = g.usize_range(1, 70);
+        let m = g.usize_range(1, 4);
+        let w = Tensor::new(vec![k, n], g.normal_vec(k * n, 0.3));
+        let fmt = *g.pick(&FORMATS);
+        // rank-0 (no residual) and rank-4 low-rank correction both ride
+        // through kernels::axpy in dequant_row_into
+        let rank = *g.pick(&[0usize, 4]);
+        let gran = *g.pick(&[
+            Granularity::PerTensor,
+            Granularity::PerChannel,
+            Granularity::Block(16),
+        ]);
+        let q = quantize_fmt(&w, gran, fmt, 1.0, rank);
+        let x = Tensor::new(vec![m, k], g.normal_vec(m * k, 1.0));
+
+        let run_all = || {
+            let mut rows = vec![0.0f32; k * n];
+            for (r, chunk) in rows.chunks_mut(n).enumerate() {
+                q.dequant_row_into(r, chunk);
+            }
+            let mut mv = vec![0.0f32; n];
+            let mut scratch = vec![0.0f32; n];
+            matvec_quant_into(&x.data()[..k], &q, &mut mv, &mut scratch);
+            let mm = matmul_quant(&x, &q);
+            (rows, mv, mm.data().to_vec())
+        };
+        let want = with_mode(SimdMode::Scalar, &run_all);
+        for mode in vector_modes() {
+            let got = with_mode(mode, &run_all);
+            let tag = format!("{fmt:?} rank {rank} {gran:?} {mode:?}");
+            assert_bits(&got.0, &want.0, &format!("dequant rows ({tag})"));
+            assert_bits(&got.1, &want.1, &format!("matvec ({tag})"));
+            assert_bits(&got.2, &want.2, &format!("matmul ({tag})"));
+        }
+    });
+}
+
+#[test]
+fn sweep_objectives_simd_vs_scalar_within_1e9_and_worker_invariant() {
+    let _g = lock();
+    let mut rng = XorShift::new(0x51D);
+    let alphas: Vec<f32> = (0..16).map(|i| 0.8 + 0.028 * i as f32).collect();
+    // 37x133 spans multiple tiles at the default tile size's divisors and
+    // makes Block(16) ragged on both axes
+    let (r, c) = (37usize, 133usize);
+    for fmt in FORMATS {
+        let wb = Tensor::new(vec![r, c], rng.normal_vec(r * c, 0.1));
+        let wp = Tensor::new(
+            vec![r, c],
+            wb.data().iter().map(|&b| b + rng.normal() * 0.002).collect(),
+        );
+        let s0 = absmax_scales_fmt(&wp, Granularity::Block(16), fmt);
+        let plan = SweepPlan::new(&wp, &wb, &s0);
+        let want = with_mode(SimdMode::Scalar, || plan.eval_with_workers(&alphas, 1));
+        for mode in vector_modes() {
+            let got = with_mode(mode, || plan.eval_with_workers(&alphas, 1));
+            assert_eq!(got.len(), want.len());
+            for (cand, (g, w)) in got.iter().zip(&want).enumerate() {
+                let tag = format!("{fmt:?} cand {cand} {mode:?}");
+                // the per-element projection is bitwise-equal, so the
+                // integer agreement count matches exactly; only the f64
+                // reduction order differs, bounded by the sweep's bar
+                assert_eq!(g.agree, w.agree, "{tag} agree");
+                assert_eq!(g.n, w.n, "{tag} n");
+                assert_eq!(g.npost.to_bits(), w.npost.to_bits(), "{tag} npost");
+                assert_close(g.dot, w.dot, &format!("{tag} dot"));
+                assert_close(g.nq, w.nq, &format!("{tag} nq"));
+                assert_close(g.sq, w.sq, &format!("{tag} sq"));
+                assert_close(g.sign_rate(), w.sign_rate(), &format!("{tag} sign_rate"));
+                assert_close(g.cos_sim(), w.cos_sim(), &format!("{tag} cos_sim"));
+            }
+            // on a fixed ISA the reduction order is worker-invariant:
+            // bitwise-identical objectives no matter the thread count
+            let w1 = with_mode(mode, || plan.eval_with_workers(&alphas, 1));
+            let w3 = with_mode(mode, || plan.eval_with_workers(&alphas, 3));
+            for (cand, (a, b)) in w1.iter().zip(&w3).enumerate() {
+                let tag = format!("{fmt:?} cand {cand} {mode:?} workers 1 vs 3");
+                assert_eq!(a.agree, b.agree, "{tag} agree");
+                assert_eq!(a.dot.to_bits(), b.dot.to_bits(), "{tag} dot");
+                assert_eq!(a.nq.to_bits(), b.nq.to_bits(), "{tag} nq");
+                assert_eq!(a.sq.to_bits(), b.sq.to_bits(), "{tag} sq");
+            }
+        }
+    }
+}
+
+#[test]
+fn serve_completions_bitwise_identical_across_modes() {
+    let _g = lock();
+    use daq::eval::decode::Decoder;
+    use daq::eval::model_native::{synth_params, synth_quantized, ModelCfg};
+    use daq::serve::{gen_requests, serve, ServeConfig};
+
+    let cfg = ModelCfg { vocab: 64, d_model: 48, n_layer: 2, n_head: 4, d_ff: 96, seq_len: 24 };
+    let params = synth_params(&cfg, 2024);
+    let mut quantizable: Vec<String> = Vec::new();
+    for l in 0..cfg.n_layer {
+        for w in ["wq", "wk", "wv", "wo", "w1", "w2"] {
+            quantizable.push(format!("l{l}.{w}"));
+        }
+    }
+    quantizable.push("head".into());
+    let qp = synth_quantized(&params, &quantizable, Granularity::Block(128));
+    let dec = Decoder::new(&qp, cfg);
+    let reqs = gen_requests(6, 42);
+    let scfg = ServeConfig { slots: 4, new_tokens: 4, ..Default::default() };
+    let want = with_mode(SimdMode::Scalar, || serve(&dec, &reqs, &scfg).unwrap());
+    for mode in vector_modes() {
+        let got = with_mode(mode, || serve(&dec, &reqs, &scfg).unwrap());
+        assert_eq!(
+            got.completions, want.completions,
+            "quantized-serve completions must be bitwise-identical under {mode:?} and scalar"
+        );
+    }
+}
